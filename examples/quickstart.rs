@@ -1,0 +1,62 @@
+//! Quickstart: the 60-second tour of the s4 crate.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Shows the three things a downstream user does most: inspect the chip,
+//! prune into the hardware format, and simulate a model at a sparsity
+//! level against the T4 baseline — the minimal path to Fig. 2's numbers.
+
+use s4::arch::AntoumConfig;
+use s4::graph::models;
+use s4::sim::{report, simulate, Target};
+use s4::sparse::format::BlockBalanced;
+use s4::sparse::matmul::{spmm, Act};
+use s4::sparse::tensor::{DType, Dense2};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The chip (paper §2's parameters, validated).
+    let chip = AntoumConfig::s4();
+    chip.validate()?;
+    println!(
+        "Antoum: {} subsystems, {:.0} sparse-equivalent INT8 TOPS @ {} W\n",
+        chip.subsystems,
+        chip.equivalent_tops(DType::Int8, 32),
+        chip.tdp_w
+    );
+
+    // 2. Sparse tensor substrate: prune a weight matrix into the hardware
+    //    format and run the reference sparse matmul.
+    let w = Dense2::randn(256, 64, 42);
+    let sparse_w = BlockBalanced::from_dense(&w, 8)?;
+    println!(
+        "block-balanced 8x: {} → {} bytes ({}x smaller)",
+        sparse_w.dense_bytes(DType::Bf16),
+        sparse_w.bytes(DType::Bf16),
+        sparse_w.dense_bytes(DType::Bf16) / sparse_w.bytes(DType::Bf16)
+    );
+    let x = Dense2::randn(4, 256, 43);
+    let y = spmm(&x, &sparse_w, None, Act::Gelu);
+    println!("spmm output: {}x{} (first = {:.4})\n", y.rows, y.cols, y.at(0, 0));
+
+    // 3. Simulate BERT-base on S4 at increasing sparsity vs the T4 model.
+    let g = models::bert(models::BERT_BASE, 16, 128);
+    let t4 = simulate(&g, Target::t4());
+    println!("bert_base batch=16, seq=128:");
+    println!("  T4 dense       : {:>8.0} seq/s", t4.throughput);
+    for s in [1usize, 8, 32] {
+        let r = simulate(&g, Target::antoum(&chip, s));
+        println!(
+            "  S4 sparsity {s:>2} : {:>8.0} seq/s  ({:.2}x vs T4)",
+            r.throughput,
+            r.throughput / t4.throughput
+        );
+    }
+    println!();
+
+    // 4. Engine-time breakdown of one configuration.
+    let r = simulate(&g, Target::antoum(&chip, 8));
+    print!("{}", report::breakdown_table(&r));
+    Ok(())
+}

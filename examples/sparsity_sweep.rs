@@ -1,0 +1,67 @@
+//! Figure 2 driver: speedup vs sparsity for ResNet-50 and BERT-base on the
+//! Antoum model, with the T4 dense reference line — prints the same series
+//! the paper plots and optionally writes JSON for plotting.
+//!
+//! ```bash
+//! cargo run --release --example sparsity_sweep -- --batch 16 [--json out.json] [--event]
+//! ```
+
+use s4::arch::AntoumConfig;
+use s4::graph::models;
+use s4::sim::{report, simulate, simulate_event, Parallelism, Target};
+use s4::sparse::tensor::DType;
+use s4::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let batch = args.get_usize("batch", 16)?;
+    let sparsities = args.get_usize_list("sparsities", &[1, 2, 4, 8, 16, 32])?;
+    let cfg = AntoumConfig::s4();
+
+    let resnet = models::resnet50(batch, 224);
+    let bert = models::bert(models::BERT_BASE, batch, 128);
+
+    let tput = |g: &s4::graph::Graph, s: usize| -> f64 {
+        if args.has("event") {
+            simulate_event(g, &cfg, s, DType::Int8, Parallelism::DataParallel).throughput
+        } else {
+            simulate(g, Target::antoum(&cfg, s)).throughput
+        }
+    };
+
+    let base_r = tput(&resnet, 1);
+    let base_b = tput(&bert, 1);
+    let mut rows = Vec::new();
+    for &s in &sparsities {
+        let tr = tput(&resnet, s);
+        let tb = tput(&bert, s);
+        rows.push(report::Fig2Row {
+            sparsity: s,
+            resnet50_tput: tr,
+            resnet50_speedup: tr / base_r,
+            bert_tput: tb,
+            bert_speedup: tb / base_b,
+        });
+    }
+    let t4r = simulate(&resnet, Target::t4()).throughput;
+    let t4b = simulate(&bert, Target::t4()).throughput;
+    print!("{}", report::fig2_table(&rows, t4r, t4b));
+
+    // the paper's prose claims, checked at runtime:
+    let last = rows.last().unwrap();
+    println!();
+    println!(
+        "ResNet50 @32x: {:.1}x ({} almost linear)   BERT @32x: {:.1}x (sublinear — \
+         {:.1}% of FLOPs are non-sparsifiable)",
+        last.resnet50_speedup,
+        if last.resnet50_speedup > 22.0 { "✓" } else { "✗" },
+        last.bert_speedup,
+        100.0 * (1.0 - bert.sparsifiable_fraction()),
+    );
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report::fig2_json(&rows, t4r, t4b).to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT compile path: lower each (model, sparsity, batch) variant to HLO text.
+
+This is the ONLY bridge between Python and the rust runtime.  It runs once
+(`make artifacts`); afterwards the rust binary is self-contained.
+
+Interchange format is **HLO text**, never a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  Lowering goes through
+``return_tuple=True`` so the rust side unwraps with ``to_tuple1()``.
+
+Weights are embedded as HLO constants: one executable per model variant,
+fed only runtime inputs (token ids / images).  A pleasant side effect is
+that the artifact *file size* scales ~1/s with sparsity — the paper's
+memory-footprint claim, checked by ``tests/test_aot.py`` and reported in
+the manifest.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DTYPE_NAMES = {np.dtype(np.int32): "s32", np.dtype(np.float32): "f32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the embedded weights ARE the model — without it
+    # the text elides them as `constant({...})` and the rust parser fails.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+@dataclasses.dataclass
+class Variant:
+    """One compiled model variant = one artifact = one rust executable."""
+
+    name: str
+    family: str  # "bert" | "resnet"
+    model: str
+    sparsity: int
+    batch: int
+    seq: int = 0  # bert only
+    image: int = 0  # resnet only
+
+
+def default_variants() -> list[Variant]:
+    """The artifact set the rust examples/benches/tests expect.
+
+    bert_tiny covers the full sparsity sweep (the serving e2e executes it
+    on the CPU interpret path, so it must run in milliseconds); bert_mini
+    at two sparsities exercises a second size point.
+    """
+    vs: list[Variant] = []
+    for s in (1, 2, 8, 32):
+        vs.append(Variant(f"bert_tiny_s{s}_b1", "bert", "bert_tiny", s, 1, seq=128))
+    for s in (1, 8):
+        vs.append(Variant(f"bert_tiny_s{s}_b8", "bert", "bert_tiny", s, 8, seq=128))
+    for s in (1, 8):
+        vs.append(Variant(f"resnet_mini_s{s}_b1", "resnet", "resnet_mini", s, 1, image=32))
+    return vs
+
+
+def lower_variant(v: Variant, seed: int = 0):
+    """Build params, close over them, lower. Returns (hlo_text, meta)."""
+    if v.family == "bert":
+        cfg = M.BERT_CONFIGS[v.model]
+        params = M.bert_params(cfg, v.sparsity, seed=seed)
+
+        def fn(token_ids):
+            return (M.bert_forward(params, token_ids, cfg),)
+
+        spec = jax.ShapeDtypeStruct((v.batch, v.seq), jnp.int32)
+        inputs = [{"name": "token_ids", "shape": [v.batch, v.seq], "dtype": "s32"}]
+        outputs = [{"shape": [v.batch, cfg.classes], "dtype": "f32"}]
+        flops = M.bert_flops(cfg, v.batch, v.seq, v.sparsity)
+        dense_params = cfg.param_count()
+    elif v.family == "resnet":
+        cfg = M.RESNET_CONFIGS[v.model]
+        params = M.resnet_params(cfg, v.sparsity, seed=seed)
+
+        def fn(images):
+            return (M.resnet_forward(params, images, cfg),)
+
+        spec = jax.ShapeDtypeStruct((v.batch, cfg.image, cfg.image, 3), jnp.float32)
+        inputs = [{
+            "name": "images",
+            "shape": [v.batch, cfg.image, cfg.image, 3],
+            "dtype": "f32",
+        }]
+        outputs = [{"shape": [v.batch, cfg.classes], "dtype": "f32"}]
+        flops = {}
+        dense_params = 0
+    else:
+        raise ValueError(f"unknown family {v.family!r}")
+
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    meta = {
+        "name": v.name, "file": f"{v.name}.hlo.txt",
+        "family": v.family, "model": v.model,
+        "sparsity": v.sparsity, "batch": v.batch,
+        "seq": v.seq, "image": v.image,
+        "inputs": inputs, "outputs": outputs,
+        "flops": flops, "dense_params": dense_params,
+        "hlo_bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def golden_outputs(v: Variant, seed: int = 0) -> dict:
+    """Reference outputs for the rust integration tests: run the same jitted
+    function on a deterministic input and record input + output values."""
+    rng = np.random.default_rng(42)
+    if v.family == "bert":
+        cfg = M.BERT_CONFIGS[v.model]
+        params = M.bert_params(cfg, v.sparsity, seed=seed)
+        x = rng.integers(0, cfg.vocab, size=(v.batch, v.seq), dtype=np.int32)
+        y = np.asarray(M.bert_forward(params, jnp.asarray(x), cfg))
+        return {"input": x.reshape(-1).tolist(), "output": y.reshape(-1).tolist()}
+    cfg = M.RESNET_CONFIGS[v.model]
+    params = M.resnet_params(cfg, v.sparsity, seed=seed)
+    x = rng.standard_normal((v.batch, cfg.image, cfg.image, 3)).astype(np.float32)
+    y = np.asarray(M.resnet_forward(params, jnp.asarray(x), cfg))
+    return {"input": x.reshape(-1).tolist(), "output": y.reshape(-1).tolist()}
+
+
+def build_all(outdir: pathlib.Path, with_golden: bool = True,
+              variants: list[Variant] | None = None) -> dict:
+    outdir.mkdir(parents=True, exist_ok=True)
+    variants = variants if variants is not None else default_variants()
+    manifest = {"version": 1, "built_unix": int(time.time()), "artifacts": []}
+    for v in variants:
+        t0 = time.time()
+        text, meta = lower_variant(v)
+        (outdir / meta["file"]).write_text(text)
+        if with_golden:
+            golden = golden_outputs(v)
+            gfile = f"{v.name}.golden.json"
+            (outdir / gfile).write_text(json.dumps(golden))
+            meta["golden"] = gfile
+        meta["lower_seconds"] = round(time.time() - t0, 2)
+        manifest["artifacts"].append(meta)
+        print(f"  {v.name}: {meta['hlo_bytes']/1e6:.2f} MB HLO, "
+              f"{meta['lower_seconds']}s")
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--no-golden", action="store_true",
+                    help="skip executing golden-output reference runs")
+    args = ap.parse_args()
+    out = pathlib.Path(args.outdir)
+    print(f"AOT-lowering {len(default_variants())} variants -> {out}")
+    manifest = build_all(out, with_golden=not args.no_golden)
+    total = sum(a["hlo_bytes"] for a in manifest["artifacts"])
+    print(f"done: {len(manifest['artifacts'])} artifacts, {total/1e6:.1f} MB total")
+
+
+if __name__ == "__main__":
+    main()

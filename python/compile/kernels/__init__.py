@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the S4/Antoum compute hot-spots.
+from . import pack, ref  # noqa: F401
+from .act import ENGINE_OPS, act_engine, softmax_engine  # noqa: F401
+from .sparse_conv import pack_conv_weight, sparse_conv2d  # noqa: F401
+from .sparse_matmul import sparse_matmul, vmem_footprint  # noqa: F401

@@ -1,0 +1,95 @@
+"""Activation-engine kernel — the paper's §2 item (ii).
+
+Antoum ships a dedicated activation engine that evaluates "complex
+activation functions such as GELU, and basic mathematic operators such as
+exponential, log, reciprocal".  This Pallas kernel is that engine: a tiled
+elementwise unit evaluating any of the supported ops, used by the L2 model
+for the pieces that do NOT fuse into a matmul epilogue (e.g. softmax's exp,
+layernorm's reciprocal-sqrt path when run on-engine).
+
+The simulator twin is ``rust/src/arch/activation.rs`` — keep the op list
+in sync with `arch::activation::ActOp`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ENGINE_OPS = ("gelu", "relu", "exp", "log", "reciprocal", "sigmoid", "tanh", "sqrt", "rsqrt")
+
+# Engine lane width: one VPU/ActEngine vector register worth of lanes.
+TILE = 512
+
+
+def _engine_fn(x: jax.Array, op: str) -> jax.Array:
+    if op == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+    if op == "relu":
+        return jnp.maximum(x, 0.0)
+    if op == "exp":
+        return jnp.exp(x)
+    if op == "log":
+        return jnp.log(x)
+    if op == "reciprocal":
+        return 1.0 / x
+    if op == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if op == "tanh":
+        return jnp.tanh(x)
+    if op == "sqrt":
+        return jnp.sqrt(x)
+    if op == "rsqrt":
+        return jax.lax.rsqrt(x)
+    raise ValueError(f"activation engine has no op {op!r}; supports {ENGINE_OPS}")
+
+
+def _act_kernel(x_ref, o_ref, *, op: str):
+    o_ref[...] = _engine_fn(x_ref[...], op)
+
+
+@functools.partial(jax.jit, static_argnames=("op", "tile"))
+def act_engine(x: jax.Array, *, op: str, tile: int = TILE) -> jax.Array:
+    """Apply one activation-engine op elementwise over a flat-tileable array.
+
+    Works on any shape; internally flattens, pads to the lane width, tiles.
+    """
+    if op not in ENGINE_OPS:
+        raise ValueError(f"activation engine has no op {op!r}; supports {ENGINE_OPS}")
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = (-n) % tile
+    if npad:
+        # Pad with ones: valid input for every engine op incl. log/recip.
+        flat = jnp.concatenate([flat, jnp.ones((npad,), dtype=flat.dtype)])
+    total = flat.shape[0]
+    y = pl.pallas_call(
+        functools.partial(_act_kernel, op=op),
+        grid=(total // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), x.dtype),
+        interpret=True,
+    )(flat)
+    if npad:
+        y = y[:n]
+    return y.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def softmax_engine(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Softmax routed through the activation engine's exp + reciprocal ops.
+
+    The max-subtract and the row-sum run on the VPU (plain vector ops); the
+    transcendentals hit the engine — matching how the simulator costs it.
+    """
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=axis, keepdims=True)
+    e = act_engine(x32 - m, op="exp")
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return (e * act_engine(s, op="reciprocal")).astype(x.dtype)

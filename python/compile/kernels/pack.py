@@ -1,0 +1,131 @@
+"""Block-balanced sparse weight packing.
+
+This module defines the compressed weight layout shared by every layer of
+the stack: the Pallas kernels (L1), the JAX models (L2), the pruning code,
+and the rust substrate (``rust/src/sparse/format.rs`` mirrors it exactly —
+keep the two in sync).
+
+Layout
+------
+A dense weight matrix ``W`` of shape ``[K, N]`` (``K`` = reduction dim) is
+*block-balanced sparse* with factor ``s`` and block size ``B`` when every
+contiguous block of ``B`` rows keeps exactly ``B // s`` non-zeros per
+column.  The compressed representation is two ``[K // s, N]`` arrays:
+
+* ``values`` — the kept weights, in block order (block 0's kept rows first,
+  then block 1's, ...), sorted by row index inside each block;
+* ``indices`` — the **absolute** row index in ``[0, K)`` of each kept
+  weight (int32).  Absolute rather than block-relative indices keep the
+  kernel's gather addressing trivial; the rust side stores block-relative
+  u8 offsets for footprint accounting and converts on load.
+
+``s = 1`` degenerates to dense (indices are just ``arange(K)`` broadcast),
+so a single kernel serves the whole sparsity sweep ``s ∈ {1,2,4,8,16,32}``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default hardware block size: one SPU weight-buffer row.  32 admits every
+# sparsity factor the paper claims (up to 32x => 1 non-zero per block).
+BLOCK = 32
+
+SUPPORTED_SPARSITIES = (1, 2, 4, 8, 16, 32)
+
+
+def check_pack_args(k: int, sparsity: int, block: int = BLOCK) -> None:
+    """Validate (K, s, B) before packing; raises ValueError on misuse."""
+    if sparsity not in SUPPORTED_SPARSITIES:
+        raise ValueError(
+            f"sparsity {sparsity} unsupported; SPU supports {SUPPORTED_SPARSITIES}"
+        )
+    if block % sparsity != 0:
+        raise ValueError(f"block {block} not divisible by sparsity {sparsity}")
+    if k % block != 0:
+        raise ValueError(f"reduction dim {k} not divisible by block {block}")
+
+
+def pack_dense(w: np.ndarray, sparsity: int, block: int = BLOCK):
+    """Prune ``w`` [K, N] to block-balanced sparsity and pack it.
+
+    Keeps the ``block // sparsity`` largest-magnitude entries of every
+    (block, column) group — magnitude pruning straight into the hardware
+    pattern, the paper's §4 "training from scratch" projection step.
+
+    Returns ``(values, indices)``, both ``[K // sparsity, N]``; ``indices``
+    is int32 with absolute row ids, ascending within each block.
+    """
+    w = np.asarray(w)
+    if w.ndim != 2:
+        raise ValueError(f"expected 2-D weight, got shape {w.shape}")
+    k, n = w.shape
+    check_pack_args(k, sparsity, block)
+    keep = block // sparsity
+    nblocks = k // block
+    # [nblocks, block, N] view of the rows.
+    wb = w.reshape(nblocks, block, n)
+    # Top-`keep` magnitude rows per (block, col). argsort ascending =>
+    # take the last `keep`, then re-sort by row index for coalesced loads.
+    order = np.argsort(np.abs(wb), axis=1)  # [nblocks, block, n]
+    kept = np.sort(order[:, block - keep :, :], axis=1)  # [nblocks, keep, n]
+    values = np.take_along_axis(wb, kept, axis=1)  # [nblocks, keep, n]
+    base = (np.arange(nblocks, dtype=np.int32) * block)[:, None, None]
+    indices = kept.astype(np.int32) + base
+    return (
+        values.reshape(k // sparsity, n).astype(w.dtype),
+        indices.reshape(k // sparsity, n),
+    )
+
+
+def unpack(values: np.ndarray, indices: np.ndarray, k: int) -> np.ndarray:
+    """Decompress ``(values, indices)`` back to a dense ``[K, N]`` matrix."""
+    values = np.asarray(values)
+    indices = np.asarray(indices)
+    if values.shape != indices.shape:
+        raise ValueError(f"shape mismatch {values.shape} vs {indices.shape}")
+    kc, n = values.shape
+    dense = np.zeros((k, n), dtype=values.dtype)
+    np.put_along_axis(dense, indices.astype(np.int64), values, axis=0)
+    return dense
+
+
+@partial(jax.jit, static_argnames=("sparsity", "block"))
+def pack_dense_jax(w: jax.Array, sparsity: int, block: int = BLOCK):
+    """JAX (differentiable-input, jit-able) variant of :func:`pack_dense`.
+
+    Used inside the pruning training loop (straight-through projection);
+    numerics match ``pack_dense`` except for tie-breaking on equal
+    magnitudes.
+    """
+    k, n = w.shape
+    check_pack_args(k, sparsity, block)
+    keep = block // sparsity
+    nblocks = k // block
+    wb = w.reshape(nblocks, block, n)
+    order = jnp.argsort(jnp.abs(wb), axis=1)
+    kept = jnp.sort(order[:, block - keep :, :], axis=1)
+    values = jnp.take_along_axis(wb, kept, axis=1)
+    base = (jnp.arange(nblocks, dtype=jnp.int32) * block)[:, None, None]
+    indices = kept.astype(jnp.int32) + base
+    return values.reshape(k // sparsity, n), indices.reshape(k // sparsity, n)
+
+
+def block_balanced_mask(w: np.ndarray, sparsity: int, block: int = BLOCK) -> np.ndarray:
+    """Boolean keep-mask of the block-balanced pattern for ``w`` [K, N]."""
+    values, indices = pack_dense(w, sparsity, block)
+    mask = np.zeros(w.shape, dtype=bool)
+    np.put_along_axis(mask, indices.astype(np.int64), True, axis=0)
+    return mask
+
+
+def is_block_balanced(w: np.ndarray, sparsity: int, block: int = BLOCK) -> bool:
+    """True iff every (block, column) group of ``w`` has ≤ B/s non-zeros."""
+    k, n = w.shape
+    check_pack_args(k, sparsity, block)
+    nz = (w.reshape(k // block, block, n) != 0).sum(axis=1)
+    return bool((nz <= block // sparsity).all())

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+Nothing here touches Pallas; these are the ground truth the pytest suite
+(`python/tests/`) compares the kernels against, and the numerics the rust
+integration tests assert on (golden values are generated from these).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def unpack_jnp(values: jax.Array, indices: jax.Array, k: int) -> jax.Array:
+    """Dense [K, N] from compressed (values, indices) — jnp twin of pack.unpack."""
+    kc, n = values.shape
+    dense = jnp.zeros((k, n), dtype=values.dtype)
+    cols = jnp.broadcast_to(jnp.arange(n), (kc, n))
+    return dense.at[indices, cols].set(values)
+
+
+def gelu_ref(x: jax.Array) -> jax.Array:
+    """tanh-approximation GELU, matching the kernel's activation engine."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def apply_act_ref(y: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return gelu_ref(y)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def sparse_matmul_ref(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    act: str = "none",
+) -> jax.Array:
+    """Oracle for kernels.sparse_matmul: decompress then dense matmul in f32."""
+    k = x.shape[1]
+    w = unpack_jnp(values.astype(jnp.float32), indices, k)
+    y = x.astype(jnp.float32) @ w
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[None, :]
+    return apply_act_ref(y, act).astype(x.dtype)
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, bias: jax.Array | None = None,
+    *, stride: int = 1, padding: int = 0, act: str = "none",
+) -> jax.Array:
+    """NHWC/HWIO conv oracle (dense) for kernels.sparse_conv."""
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return apply_act_ref(y, act).astype(x.dtype)
+
+
+def softmax_ref(x: jax.Array, axis: int = -1) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    m = jnp.max(x32, axis=axis, keepdims=True)
+    e = jnp.exp(x32 - m)
+    return (e / jnp.sum(e, axis=axis, keepdims=True)).astype(x.dtype)
+
+
+def layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,105 @@
+"""Sparse 2-D convolution on the SPU — im2col onto the sparse matmul kernel.
+
+The paper (§2, item iii) says the SPU "natively supports convolution and
+matrix multiplication"; architecturally Antoum's conv path is the same
+sparse MAC array fed by an address generator that walks input patches.  We
+express that exactly: an im2col patch extraction (the address generator,
+plain jnp data movement that XLA fuses) feeding `sparse_matmul` (the MAC
+array).  The weight tensor is packed along its *flattened reduction dim*
+``kh·kw·Cin``, so the same block-balanced format covers conv and matmul —
+one compressed layout for the whole chip, as the paper claims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import pack
+from .sparse_matmul import sparse_matmul
+
+
+def conv_reduction_dim(kh: int, kw: int, cin: int) -> int:
+    """The packed reduction dim of a conv weight (must tile by pack.BLOCK)."""
+    return kh * kw * cin
+
+
+def pack_conv_weight(w, sparsity: int, block: int = pack.BLOCK):
+    """Pack an HWIO conv weight [kh, kw, Cin, Cout] to block-balanced form.
+
+    Returns (values, indices) of shape [kh·kw·Cin / s, Cout].
+    """
+    kh, kw, cin, cout = w.shape
+    return pack.pack_dense(
+        jnp.asarray(w).reshape(kh * kw * cin, cout), sparsity, block
+    )
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int):
+    """Extract patches: NHWC [B,H,W,C] → [B·Ho·Wo, kh·kw·C] (+ out spatial).
+
+    This is the SPU's address-generator stage; XLA lowers it to strided
+    slices/pads that fuse with the surrounding program.
+    """
+    b, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    # Gather kh·kw shifted views; cheaper to trace than conv_general_dilated
+    # patch extraction and keeps the reduction-dim order (kh, kw, C) aligned
+    # with pack_conv_weight's flattening.
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            v = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (b, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )  # [B, Ho, Wo, C]
+            cols.append(v)
+    patches = jnp.stack(cols, axis=3)  # [B, Ho, Wo, kh·kw, C]
+    return patches.reshape(b * ho * wo, kh * kw * c), ho, wo
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "act", "tile_m", "tile_n"),
+)
+def sparse_conv2d(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    padding: int = 0,
+    act: str = "none",
+    tile_m: int = 128,
+    tile_n: int = 128,
+):
+    """Sparse conv: act(conv2d(x, unpack(w)) + bias), NHWC in/out.
+
+    x: [B, H, W, Cin]; (values, indices): packed [kh·kw·Cin/s, Cout].
+    B·Ho·Wo must tile by tile_m and Cout by tile_n (model.py pads batch).
+    """
+    b = x.shape[0]
+    cout = values.shape[1]
+    patches, ho, wo = _im2col(x, kh, kw, stride, padding)
+    m = patches.shape[0]
+    # Pad the GEMM M-dim up to the tile; sliced away after.
+    m_pad = (-m) % tile_m
+    if m_pad:
+        patches = jnp.pad(patches, ((0, m_pad), (0, 0)))
+    y = sparse_matmul(
+        patches, values, indices, bias,
+        act=act, tile_m=tile_m, tile_n=tile_n,
+    )
+    if m_pad:
+        y = y[:m]
+    return y.reshape(b, ho, wo, cout)

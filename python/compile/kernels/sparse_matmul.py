@@ -1,0 +1,174 @@
+"""Pallas block-balanced sparse matmul — the SPU hot path (Layer 1).
+
+Computes ``y = act(x @ W + b)`` where ``W`` [K, N] is stored compressed as
+``(values, indices)`` per ``pack.py``.  The kernel only touches the stored
+non-zeros, so compute *and* weight traffic scale ~``1/s`` — the property
+the S4 paper's Fig. 2 measures.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation)
+-------------------------------------------------
+The paper's SPU is a systolic array whose weight buffer holds only
+non-zeros plus in-block offsets; each MAC lane gathers the activation
+operand through a small crossbar indexed by the offset.  On TPU we express
+the same schedule as:
+
+* grid = (M/TM, N/TN): one program instance per output tile — the
+  HBM↔VMEM schedule the GPU/ASIC design did with threadblocks/banks is a
+  BlockSpec here;
+* per instance, the ``[TM, K]`` activation slab and the ``[K/s, TN]``
+  compressed weight slab are VMEM-resident;
+* the inner ``fori_loop`` over the ``K/s`` non-zero slots performs a
+  row-gather of ``x`` (the crossbar) and a rank-1-style multiply-accumulate
+  (the MAC lanes) — ``K/s`` iterations of O(TM·TN) work = exactly the
+  sparse FLOP count.
+
+``interpret=True`` always (CPU PJRT cannot run Mosaic custom-calls); the
+kernel still lowers into the surrounding jax program's HLO so the rust
+runtime executes one fused module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output tile. TM×TN accumulator (f32) = 128·128·4 = 64 KiB, far
+# under VMEM; the dominant VMEM tenant is the x slab (TM×K) — see
+# vmem_footprint() which aot.py checks per variant.
+TILE_M = 128
+TILE_N = 128
+
+ACTIVATIONS = ("none", "relu", "gelu")
+
+
+def _apply_act(y: jax.Array, act: str) -> jax.Array:
+    """Fused activation-engine epilogue (paper §2 item iii)."""
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        # tanh approximation — what a LUT-based activation engine evaluates.
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y * y * y)))
+    raise ValueError(f"unknown activation {act!r}; expected one of {ACTIVATIONS}")
+
+
+def _spmm_kernel(x_ref, vals_ref, idx_ref, b_ref, o_ref, *, act: str):
+    """One (TM, TN) output tile.
+
+    x_ref:    [TM, K]    activations (VMEM slab)
+    vals_ref: [Kc, TN]   compressed weights, Kc = K/s
+    idx_ref:  [Kc, TN]   absolute K-row index of each weight (int32)
+    b_ref:    [1, TN]    bias
+    o_ref:    [TM, TN]   output tile
+    """
+    x = x_ref[...]  # load the slab once; gathers below hit VMEM
+    vals = vals_ref[...]
+    idx = idx_ref[...]
+    kc = vals.shape[0]
+
+    def body(r, acc):
+        cols = idx[r, :]  # [TN] — per-output-column gather addresses
+        xg = jnp.take(x, cols, axis=1)  # [TM, TN] activation crossbar
+        return acc + xg * vals[r, :][None, :]  # MAC lanes
+
+    acc = jax.lax.fori_loop(
+        0, kc, body, jnp.zeros(o_ref.shape, dtype=jnp.float32)
+    )
+    acc = acc + b_ref[0, :][None, :].astype(jnp.float32)
+    o_ref[...] = _apply_act(acc, act).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("act", "tile_m", "tile_n", "out_dtype")
+)
+def sparse_matmul(
+    x: jax.Array,
+    values: jax.Array,
+    indices: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    act: str = "none",
+    tile_m: int = TILE_M,
+    tile_n: int = TILE_N,
+    out_dtype=None,
+):
+    """``act(x @ unpack(values, indices) + bias)`` touching only non-zeros.
+
+    Args:
+      x:       [M, K] activations (any float dtype).
+      values:  [Kc, N] kept weights (Kc = K/s).
+      indices: [Kc, N] absolute row ids into K (int32).
+      bias:    [N] or None.
+      act:     "none" | "relu" | "gelu" — fused epilogue.
+
+    Shapes must tile evenly: M % tile_m == 0, N % tile_n == 0 (callers pad;
+    `model.py` sizes everything to multiples of 128).
+    """
+    m, k = x.shape
+    kc, n = values.shape
+    if indices.shape != (kc, n):
+        raise ValueError(f"indices {indices.shape} != values {values.shape}")
+    # Clamp tiles to the problem (small conv channel counts, tiny heads);
+    # divisibility is still required after clamping.
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    if m % tile_m or n % tile_n:
+        raise ValueError(f"M={m}, N={n} must tile by ({tile_m}, {tile_n})")
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}")
+    if bias is None:
+        bias = jnp.zeros((n,), dtype=x.dtype)
+    out_dtype = out_dtype or x.dtype
+    bias2d = bias.reshape(1, n)
+    indices = indices.astype(jnp.int32)
+
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),  # x slab
+            pl.BlockSpec((kc, tile_n), lambda i, j: (0, j)),  # weights
+            pl.BlockSpec((kc, tile_n), lambda i, j: (0, j)),  # indices
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, j)),  # bias
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, values, indices, bias2d)
+
+
+def vmem_footprint(
+    m: int, k: int, n: int, sparsity: int, *,
+    tile_m: int = TILE_M, tile_n: int = TILE_N,
+    act_bytes: int = 2, weight_bytes: int = 2,
+) -> dict:
+    """Static VMEM budget of one grid step (bytes) — the L1 perf metric.
+
+    interpret=True gives no hardware timing, so the perf pass analyses the
+    kernel structurally: slab sizes per program instance and the MXU-work
+    estimate. Mirrored by rust `arch::spu` for the simulator's tile model.
+    """
+    kc = k // sparsity
+    x_slab = tile_m * k * act_bytes
+    w_slab = kc * tile_n * weight_bytes
+    i_slab = kc * tile_n * 4  # int32 on TPU; ASIC stores u8 offsets
+    acc = tile_m * tile_n * 4
+    out = tile_m * tile_n * act_bytes
+    total = x_slab + w_slab + i_slab + acc + out
+    return {
+        "x_slab": x_slab,
+        "w_slab": w_slab,
+        "idx_slab": i_slab,
+        "acc": acc,
+        "out": out,
+        "total": total,
+        "fits_16mb": total <= 16 * 1024 * 1024,
+        "sparse_macs_per_tile": tile_m * tile_n * kc,
+        "dense_macs_per_tile": tile_m * tile_n * k,
+    }

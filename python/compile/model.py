@@ -1,0 +1,248 @@
+"""Layer-2: JAX model definitions built on the L1 sparse kernels.
+
+Two model families, matching the paper's two benchmark workloads:
+
+* **BERT-style transformer encoder** (`bert_forward`) — every weighted
+  projection (QKV, attention output, FFN up/down, classifier) runs through
+  the Pallas block-balanced `sparse_matmul`; softmax runs through the
+  activation engine; embedding lookup models the dedicated
+  embedding-lookup unit (a gather).
+* **ResNet-style CNN** (`resnet_forward`) — every conv runs through
+  `sparse_conv2d` (same SPU kernel via im2col).
+
+These functions are *build-time only*: `aot.py` lowers them to HLO text
+once per (model, sparsity, batch) variant; the rust runtime executes the
+artifacts. They are also the training graph for the sparsification
+experiments (`train.py`), where the packed weights are re-projected every
+step (straight-through magnitude pruning).
+
+Sizing note: `sparse_matmul` tiles at 128×128, so every matmul dim here is
+a multiple of 128 (seq·batch included). Tiny configs exist for artifacts
+that must *execute* fast on the CPU interpret path; base/large configs are
+for shape/workload accounting and lowering tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import pack
+from .kernels.act import softmax_engine
+from .kernels.ref import layernorm_ref
+from .kernels.sparse_conv import sparse_conv2d
+from .kernels.sparse_matmul import sparse_matmul
+
+
+# =========================== configurations ===============================
+
+@dataclasses.dataclass(frozen=True)
+class BertConfig:
+    """Transformer encoder hyperparameters (paper: BERT-base / BERT-large)."""
+
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    ffn: int
+    max_seq: int = 128
+    classes: int = 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    def param_count(self) -> int:
+        """Dense (unpruned) weight parameter count of the encoder stack."""
+        per_layer = 4 * self.hidden * self.hidden + 2 * self.hidden * self.ffn
+        return self.layers * per_layer + self.vocab * self.hidden
+
+
+BERT_TINY = BertConfig("bert_tiny", vocab=1024, hidden=128, layers=2, heads=2, ffn=512)
+BERT_MINI = BertConfig("bert_mini", vocab=2048, hidden=256, layers=4, heads=4, ffn=1024)
+BERT_BASE = BertConfig("bert_base", vocab=30522, hidden=768, layers=12, heads=12, ffn=3072)
+BERT_LARGE = BertConfig("bert_large", vocab=30522, hidden=1024, layers=24, heads=16, ffn=4096)
+
+BERT_CONFIGS = {c.name: c for c in (BERT_TINY, BERT_MINI, BERT_BASE, BERT_LARGE)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    """A small ResNet-ish stack: stem + N sparse residual blocks.
+
+    Full ResNet-50/152 *workload accounting* lives in the rust graph IR
+    (`graph/models.rs`); this JAX model is the executable kernel-level
+    equivalent, sized so the interpret-mode artifact runs in seconds.
+    """
+
+    name: str
+    channels: int
+    blocks: int
+    image: int = 32
+    classes: int = 10
+
+
+RESNET_MINI = ResNetConfig("resnet_mini", channels=64, blocks=3)
+RESNET_CONFIGS = {RESNET_MINI.name: RESNET_MINI}
+
+
+# ============================ BERT encoder =================================
+
+def _pack_linear(rng: np.random.Generator, k: int, n: int, sparsity: int,
+                 scale: float | None = None) -> dict[str, np.ndarray]:
+    """Init a dense [k, n] projection and pack it block-balanced."""
+    scale = scale if scale is not None else 1.0 / np.sqrt(k)
+    w = (rng.standard_normal((k, n)) * scale).astype(np.float32)
+    v, i = pack.pack_dense(w, sparsity)
+    return {"values": v, "indices": i, "bias": np.zeros((n,), np.float32)}
+
+
+def bert_params(cfg: BertConfig, sparsity: int, seed: int = 0) -> dict[str, Any]:
+    """Random-init BERT parameters with every projection packed at `sparsity`."""
+    rng = np.random.default_rng(seed)
+    h, f = cfg.hidden, cfg.ffn
+    params: dict[str, Any] = {
+        "embed": (rng.standard_normal((cfg.vocab, h)) * 0.02).astype(np.float32),
+        "pos": (rng.standard_normal((cfg.max_seq, h)) * 0.02).astype(np.float32),
+        "cls_w": (rng.standard_normal((h, cfg.classes)) * 0.02).astype(np.float32),
+        "cls_b": np.zeros((cfg.classes,), np.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.layers):
+        params["layers"].append({
+            "q": _pack_linear(rng, h, h, sparsity),
+            "k": _pack_linear(rng, h, h, sparsity),
+            "v": _pack_linear(rng, h, h, sparsity),
+            "o": _pack_linear(rng, h, h, sparsity),
+            "ffn_up": _pack_linear(rng, h, f, sparsity),
+            "ffn_down": _pack_linear(rng, f, h, sparsity),
+            "ln1_g": np.ones((h,), np.float32), "ln1_b": np.zeros((h,), np.float32),
+            "ln2_g": np.ones((h,), np.float32), "ln2_b": np.zeros((h,), np.float32),
+        })
+    return params
+
+
+def _proj(x2d: jax.Array, p: dict, act: str = "none") -> jax.Array:
+    """One packed projection through the SPU kernel. x2d: [M, K]."""
+    return sparse_matmul(x2d, jnp.asarray(p["values"]), jnp.asarray(p["indices"]),
+                         jnp.asarray(p["bias"]), act=act)
+
+
+def bert_encoder_layer(x: jax.Array, lp: dict, cfg: BertConfig) -> jax.Array:
+    """One post-LN encoder layer. x: [B, S, H] → [B, S, H].
+
+    SPU: q/k/v/o + FFN projections (sparse). VPU: attention einsums,
+    residual adds, layernorm moments. Activation engine: softmax, GELU
+    (GELU fused into the FFN-up matmul epilogue — paper §2 item iii).
+    """
+    b, s, h = x.shape
+    x2 = x.reshape(b * s, h)
+    q = _proj(x2, lp["q"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    k = _proj(x2, lp["k"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    v = _proj(x2, lp["v"]).reshape(b, s, cfg.heads, cfg.head_dim)
+    # activation×activation matmuls: dense work (no weights to prune) — the
+    # paper's source of sublinear BERT scaling.
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+    probs = softmax_engine(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, v).reshape(b * s, h)
+    attn = _proj(ctx, lp["o"])
+    x = layernorm_ref((x2 + attn).reshape(b, s, h), lp["ln1_g"], lp["ln1_b"])
+    x2 = x.reshape(b * s, h)
+    ff = _proj(_proj(x2, lp["ffn_up"], act="gelu"), lp["ffn_down"])
+    return layernorm_ref((x2 + ff).reshape(b, s, h), lp["ln2_g"], lp["ln2_b"])
+
+
+def bert_forward(params: dict, token_ids: jax.Array, cfg: BertConfig) -> jax.Array:
+    """Full encoder: token ids [B, S] → classifier logits [B, classes].
+
+    The embedding gather is the paper's dedicated embedding-lookup engine.
+    """
+    b, s = token_ids.shape
+    x = jnp.take(jnp.asarray(params["embed"]), token_ids, axis=0)
+    x = x + jnp.asarray(params["pos"])[None, :s, :]
+    for lp in params["layers"]:
+        x = bert_encoder_layer(x, lp, cfg)
+    pooled = x[:, 0, :]  # [CLS]
+    return pooled @ jnp.asarray(params["cls_w"]) + jnp.asarray(params["cls_b"])
+
+
+def bert_hidden_states(params: dict, token_ids: jax.Array, cfg: BertConfig):
+    """Per-layer hidden states — used by the distillation pruning objective."""
+    b, s = token_ids.shape
+    x = jnp.take(jnp.asarray(params["embed"]), token_ids, axis=0)
+    x = x + jnp.asarray(params["pos"])[None, :s, :]
+    hs = [x]
+    for lp in params["layers"]:
+        x = bert_encoder_layer(x, lp, cfg)
+        hs.append(x)
+    logits = x[:, 0, :] @ jnp.asarray(params["cls_w"]) + jnp.asarray(params["cls_b"])
+    return logits, hs
+
+
+# ============================ ResNet stack =================================
+
+def resnet_params(cfg: ResNetConfig, sparsity: int, seed: int = 0) -> dict[str, Any]:
+    """Random-init the mini ResNet with every conv packed at `sparsity`."""
+    rng = np.random.default_rng(seed)
+    c = cfg.channels
+
+    def conv(kh, kw, cin, cout):
+        w = (rng.standard_normal((kh, kw, cin, cout)) / np.sqrt(kh * kw * cin)
+             ).astype(np.float32)
+        v, i = pack.pack_dense(w.reshape(kh * kw * cin, cout), sparsity)
+        return {"values": v, "indices": i, "bias": np.zeros((cout,), np.float32),
+                "kh": kh, "kw": kw}
+
+    return {
+        # stem reduction dim = 3·3·32 after channel-pad of RGB to 32 (=BLOCK)
+        "stem": conv(3, 3, 32, c),
+        "blocks": [
+            {"c1": conv(3, 3, c, c), "c2": conv(3, 3, c, c)}
+            for _ in range(cfg.blocks)
+        ],
+        "head_w": (rng.standard_normal((c, cfg.classes)) * 0.05).astype(np.float32),
+        "head_b": np.zeros((cfg.classes,), np.float32),
+    }
+
+
+def _conv(x: jax.Array, p: dict, stride: int = 1, act: str = "none") -> jax.Array:
+    return sparse_conv2d(x, jnp.asarray(p["values"]), jnp.asarray(p["indices"]),
+                         jnp.asarray(p["bias"]), kh=p["kh"], kw=p["kw"],
+                         stride=stride, padding=p["kh"] // 2, act=act)
+
+
+def resnet_forward(params: dict, images: jax.Array, cfg: ResNetConfig) -> jax.Array:
+    """images [B, H, W, 3] → logits [B, classes]; channel-pads RGB to 32."""
+    b, h, w, cin = images.shape
+    x = jnp.pad(images, ((0, 0), (0, 0), (0, 0), (0, 32 - cin)))
+    x = _conv(x, params["stem"], act="relu")
+    for blk in params["blocks"]:
+        y = _conv(x, blk["c1"], act="relu")
+        y = _conv(y, blk["c2"])
+        x = jnp.maximum(x + y, 0.0)  # residual + relu (VPU elementwise)
+    pooled = jnp.mean(x, axis=(1, 2))  # global average pool
+    return pooled @ jnp.asarray(params["head_w"]) + jnp.asarray(params["head_b"])
+
+
+# ======================= workload accounting ==============================
+
+def bert_flops(cfg: BertConfig, batch: int, seq: int, sparsity: int) -> dict[str, float]:
+    """FLOPs of one forward pass, split by engine — mirrored in rust
+    `graph::models` (keep in sync; asserted equal in integration tests)."""
+    h, f, l = cfg.hidden, cfg.ffn, cfg.layers
+    m = batch * seq
+    proj = 2 * m * h * h * 4 / sparsity          # q,k,v,o
+    ffn = 2 * m * h * f * 2 / sparsity           # up, down
+    attn = 2 * batch * cfg.heads * seq * seq * cfg.head_dim * 2  # qk^T, pv
+    other = m * h * 20.0                          # LN, residual, softmax misc
+    return {
+        "spu_sparse": l * (proj + ffn),
+        "spu_dense": l * attn,
+        "vpu": l * other,
+        "total": l * (proj + ffn + attn + other),
+    }

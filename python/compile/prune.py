@@ -1,0 +1,114 @@
+"""Sparsification methods (paper §4).
+
+Two regimes, matching the paper's taxonomy:
+
+* **training from scratch** — magnitude projection onto the hardware
+  pattern with a gradual (Zhu & Gupta) sparsity schedule: the optimizer
+  solves the task under a sparsity constraint, using the dense model only
+  as initialization (straight-through projection each step);
+* **pretrain–finetune** — prune while distilling both logits and
+  intermediate feature maps from the dense teacher (the method of Xu et
+  al. [17] the paper adopts for SparseBERT), which preserves "transferred
+  knowledge" and resolves the overfit-vs-underfit tension of §4.
+
+Training differentiates through *masked dense* ops (mathematically
+identical to the compressed kernel; see tests) — the Pallas kernel is the
+inference path, packed from the trained masks at export time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pack
+
+
+def block_balanced_mask_jax(w: jax.Array, sparsity: int) -> jax.Array:
+    """0/1 keep-mask of the block-balanced top-|w| pattern (jit-able)."""
+    if sparsity <= 1:
+        return jnp.ones_like(w)
+    k, n = w.shape
+    values, indices = pack.pack_dense_jax(w, sparsity)
+    mask = jnp.zeros((k, n), dtype=w.dtype)
+    cols = jnp.broadcast_to(jnp.arange(n), indices.shape)
+    return mask.at[indices, cols].set(1.0)
+
+
+def gradual_fraction(step: int, begin: int, end: int, target: float) -> float:
+    """Zhu–Gupta cubic ramp (python mirror of rust `PruneSchedule`)."""
+    if step <= begin:
+        return 0.0
+    if step >= end:
+        return target
+    p = (step - begin) / (end - begin)
+    return target + (0.0 - target) * (1.0 - p) ** 3
+
+
+def factor_at(step: int, begin: int, end: int, final_factor: int) -> int:
+    """Largest supported hardware factor whose fraction ≤ the ramp value."""
+    f = gradual_fraction(step, begin, end, 1.0 - 1.0 / final_factor)
+    best = 1
+    for s in pack.SUPPORTED_SPARSITIES:
+        if s <= final_factor and 1.0 - 1.0 / s <= f + 1e-12:
+            best = s
+    return best
+
+
+def prunable_keys(params: dict) -> list[tuple]:
+    """Paths of weight matrices that get pruned (encoder projections only —
+    embeddings and the tiny classifier head stay dense, like the paper)."""
+    keys = []
+    for li, _ in enumerate(params["layers"]):
+        for name in ("q", "k", "v", "o", "ffn_up", "ffn_down"):
+            keys.append(("layers", li, name))
+    return keys
+
+
+def get_path(params: dict, path: tuple):
+    x = params
+    for p in path:
+        x = x[p]
+    return x
+
+
+def compute_masks(params: dict, sparsity: int) -> dict[tuple, jax.Array]:
+    """Fresh block-balanced masks for every prunable weight at `sparsity`."""
+    return {
+        path: block_balanced_mask_jax(get_path(params, path), sparsity)
+        for path in prunable_keys(params)
+    }
+
+
+def apply_masks(params: dict, masks: dict[tuple, jax.Array] | None) -> dict:
+    """Return params with masked weights (non-destructive)."""
+    if not masks:
+        return params
+    import copy
+
+    out = copy.copy(params)
+    out["layers"] = [dict(l) for l in params["layers"]]
+    for (root, li, name), m in masks.items():
+        assert root == "layers"
+        out["layers"][li] = dict(out["layers"][li])
+        out["layers"][li][name] = out["layers"][li][name] * m
+    return out
+
+
+def sparsity_achieved(params: dict, masks: dict[tuple, jax.Array]) -> float:
+    """Fraction of pruned weights across all prunable matrices."""
+    kept = sum(float(m.sum()) for m in masks.values())
+    total = sum(m.size for m in masks.values())
+    return 1.0 - kept / total
+
+
+def encoder_params_count(params: dict, masks: dict | None = None) -> int:
+    """Non-zero encoder weights (the Table 1 'size reduction' basis)."""
+    n = 0
+    for path in prunable_keys(params):
+        w = get_path(params, path)
+        if masks and path in masks:
+            n += int(float(masks[path].sum()))
+        else:
+            n += w.size
+    return n

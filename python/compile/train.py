@@ -1,0 +1,359 @@
+"""Training driver for the sparsification experiments (Table 1, Fig. 3).
+
+Self-contained small-transformer trainer in pure jnp (the Pallas kernel is
+the inference path; training differentiates through masked dense ops that
+are numerically identical — asserted in tests). Reproduces:
+
+* **Table 1** (``--table1``): on five GLUE-proxy tasks, compare
+  - the dense teacher ("BERT-base" row),
+  - structured DEPTH reduction (half the layers, logit-distilled — the
+    PKD/Theseus/MiniLM/TinyBERT family's proxy),
+  - structured WIDTH reduction (half the hidden size, logit-distilled),
+  - SPARSE pruning at 16× with gradual magnitude pruning + logit AND
+    intermediate-layer distillation (SparseBERT, method of [17]).
+  The reproduced *claim* is the ranking: sparse-16× ≥ structured baselines
+  in average accuracy at far larger size reduction.
+
+* **Fig. 3 accuracy points** (``--fig3``): two model sizes trained dense,
+  then prune-finetuned at s ∈ {2,4,8,16,32}; exported to
+  ``artifacts/accuracy.json`` for the rust ``accuracy_frontier`` example
+  (which pairs them with simulated S4/T4 throughput).
+
+Budget: full run ≈ minutes on CPU; ``--quick`` cuts steps ~4× for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import prune as P
+
+
+# ----------------------------- model ---------------------------------------
+
+def init_model(seed: int, *, vocab: int, seq: int, classes: int,
+               layers: int, hidden: int, ffn: int, heads: int) -> dict:
+    rng = np.random.default_rng(seed)
+
+    def mat(k, n, scale=None):
+        s = scale if scale is not None else 1.0 / np.sqrt(k)
+        return jnp.asarray(rng.standard_normal((k, n)) * s, jnp.float32)
+
+    return {
+        "cfg": {"vocab": vocab, "seq": seq, "classes": classes,
+                "layers": layers, "hidden": hidden, "ffn": ffn, "heads": heads},
+        "embed": mat(vocab, hidden, 0.05),
+        "pos": mat(seq, hidden, 0.05),
+        "layers": [
+            {
+                "q": mat(hidden, hidden), "k": mat(hidden, hidden),
+                "v": mat(hidden, hidden), "o": mat(hidden, hidden),
+                "ffn_up": mat(hidden, ffn), "ffn_down": mat(ffn, hidden),
+                "b_q": jnp.zeros(hidden), "b_k": jnp.zeros(hidden),
+                "b_v": jnp.zeros(hidden), "b_o": jnp.zeros(hidden),
+                "b_up": jnp.zeros(ffn), "b_down": jnp.zeros(hidden),
+                "ln1_g": jnp.ones(hidden), "ln1_b": jnp.zeros(hidden),
+                "ln2_g": jnp.ones(hidden), "ln2_b": jnp.zeros(hidden),
+            }
+            for _ in range(layers)
+        ],
+        "cls_w": mat(hidden, classes, 0.05),
+        "cls_b": jnp.zeros(classes),
+    }
+
+
+def ones_masks(params: dict) -> list[dict]:
+    """Mask pytree (per layer) of ones — the dense case."""
+    return [
+        {n: jnp.ones_like(l[n]) for n in ("q", "k", "v", "o", "ffn_up", "ffn_down")}
+        for l in params["layers"]
+    ]
+
+
+def masks_at(params: dict, sparsity: int) -> list[dict]:
+    """Block-balanced masks for every prunable weight at `sparsity`."""
+    if sparsity <= 1:
+        return ones_masks(params)
+    return [
+        {n: P.block_balanced_mask_jax(l[n], sparsity)
+         for n in ("q", "k", "v", "o", "ffn_up", "ffn_down")}
+        for l in params["layers"]
+    ]
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def forward(params: dict, masks: list[dict], x: jax.Array, heads: int):
+    """Token ids [B, S] → (logits [B, C], hidden states list)."""
+    h = params["embed"][x] + params["pos"][None, : x.shape[1], :]
+    b, s, hd = h.shape
+    dh = hd // heads
+    hiddens = [h]
+    for l, m in zip(params["layers"], masks):
+        x2 = h.reshape(b * s, hd)
+        q = (x2 @ (l["q"] * m["q"]) + l["b_q"]).reshape(b, s, heads, dh)
+        k = (x2 @ (l["k"] * m["k"]) + l["b_k"]).reshape(b, s, heads, dh)
+        v = (x2 @ (l["v"] * m["v"]) + l["b_v"]).reshape(b, s, heads, dh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, hd)
+        o = ctx @ (l["o"] * m["o"]) + l["b_o"]
+        h1 = _ln((x2 + o).reshape(b, s, hd), l["ln1_g"], l["ln1_b"])
+        x3 = h1.reshape(b * s, hd)
+        up = jax.nn.gelu(x3 @ (l["ffn_up"] * m["ffn_up"]) + l["b_up"])
+        down = up @ (l["ffn_down"] * m["ffn_down"]) + l["b_down"]
+        h = _ln((x3 + down).reshape(b, s, hd), l["ln2_g"], l["ln2_b"])
+        hiddens.append(h)
+    logits = h[:, 0, :] @ params["cls_w"] + params["cls_b"]
+    return logits, hiddens
+
+
+# --------------------------- training --------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def make_step(heads: int, lr: float, distill_logits: float = 0.0,
+              distill_hidden: float = 0.0, teacher_heads: int = 0,
+              hidden_map: str = "none"):
+    """Build a jitted train step.
+
+    hidden_map: "same" when teacher/student hidden dims match (sparse
+    pruning) — enables intermediate-layer distillation; "none" otherwise.
+    """
+
+    def loss_fn(params, masks, xb, yb, teacher, tmasks):
+        logits, hiddens = forward(params, masks, xb, heads)
+        ce = -jnp.mean(
+            jax.nn.log_softmax(logits)[jnp.arange(yb.shape[0]), yb]
+        )
+        loss = ce
+        if distill_logits > 0.0 and teacher is not None:
+            tlogits, thiddens = forward(teacher, tmasks, xb, teacher_heads)
+            t = 2.0  # distillation temperature
+            kl = jnp.mean(
+                jnp.sum(
+                    jax.nn.softmax(tlogits / t)
+                    * (jax.nn.log_softmax(tlogits / t) - jax.nn.log_softmax(logits / t)),
+                    axis=-1,
+                )
+            )
+            loss = loss + distill_logits * (t * t) * kl
+            if distill_hidden > 0.0 and hidden_map == "same":
+                # intermediate feature-map distillation (method of [17]):
+                # match every layer's hidden states (dims identical).
+                hm = sum(
+                    jnp.mean((hs - ht) ** 2)
+                    for hs, ht in zip(hiddens[1:], thiddens[1:])
+                )
+                loss = loss + distill_hidden * hm / max(1, len(hiddens) - 1)
+        return loss
+
+    @jax.jit
+    def step(params, opt, masks, xb, yb, teacher, tmasks):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, masks, xb, yb, teacher, tmasks)
+        )(params)
+        t = opt["t"] + 1
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+        mh = jax.tree.map(lambda x: x / (1 - b1**t), m)
+        vh = jax.tree.map(lambda x: x / (1 - b2**t), v)
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps), params, mh, vh
+        )
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    return step
+
+
+def _strip_cfg(params):
+    out = dict(params)
+    cfg = out.pop("cfg")
+    return out, cfg
+
+
+def evaluate(params: dict, masks: list[dict], heads: int, x, y, batch=256) -> float:
+    correct = 0
+    p, _ = _strip_cfg(params) if "cfg" in params else (params, None)
+    for i in range(0, x.shape[0], batch):
+        xb = jnp.asarray(x[i : i + batch])
+        logits, _ = forward(p, masks, xb, heads)
+        correct += int((np.asarray(jnp.argmax(logits, -1)) == y[i : i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train_model(
+    spec: D.TaskSpec,
+    arch: dict,
+    *,
+    steps: int,
+    lr: float = 3e-4,
+    batch: int = 64,
+    sparsity: int = 1,
+    gradual_end: float = 0.6,
+    teacher: dict | None = None,
+    distill_logits: float = 0.0,
+    distill_hidden: float = 0.0,
+    seed: int = 0,
+) -> tuple[dict, list[dict], float]:
+    """Train one model; returns (params, final masks, test accuracy)."""
+    x_tr, y_tr, x_te, y_te = D.make_task(spec)
+    params = init_model(seed, vocab=spec.vocab, seq=spec.seq,
+                        classes=spec.classes, **arch)
+    p, cfg = _strip_cfg(params)
+    heads = cfg["heads"]
+    tp, tcfg = (None, None)
+    tmasks = None
+    hidden_map = "none"
+    if teacher is not None:
+        tp, tcfg = _strip_cfg(teacher)
+        tmasks = ones_masks(teacher)
+        if tcfg["hidden"] == cfg["hidden"] and tcfg["layers"] == cfg["layers"]:
+            hidden_map = "same"
+    step_fn = make_step(heads, lr, distill_logits, distill_hidden,
+                        teacher_heads=tcfg["heads"] if tcfg else 0,
+                        hidden_map=hidden_map)
+    opt = adam_init(p)
+    masks = masks_at({"layers": p["layers"]}, 1 if sparsity > 1 else sparsity)
+    # epochs to cover `steps`
+    epochs = max(1, (steps * batch) // max(1, x_tr.shape[0]) + 1)
+    it = D.batches(x_tr, y_tr, batch, seed=seed + 1, epochs=epochs)
+    prune_begin, prune_end = int(steps * 0.1), int(steps * gradual_end)
+    for t, (xb, yb) in enumerate(it):
+        if t >= steps:
+            break
+        if sparsity > 1 and t % 20 == 0:
+            f = P.factor_at(t, prune_begin, prune_end, sparsity)
+            masks = masks_at({"layers": p["layers"]}, f)
+        p, opt, _ = step_fn(p, opt, masks, jnp.asarray(xb), jnp.asarray(yb),
+                            tp, tmasks)
+    if sparsity > 1:
+        masks = masks_at({"layers": p["layers"]}, sparsity)
+    acc = evaluate(p, masks, heads, x_te, y_te)
+    p["cfg"] = cfg
+    return p, masks, acc
+
+
+# ------------------------------ experiments --------------------------------
+
+TEACHER_ARCH = {"layers": 4, "hidden": 128, "ffn": 512, "heads": 4}
+DEPTH_ARCH = {"layers": 2, "hidden": 128, "ffn": 512, "heads": 4}   # 2x
+WIDTH_ARCH = {"layers": 4, "hidden": 64, "ffn": 256, "heads": 4}    # 4x
+
+
+def encoder_size(arch: dict) -> int:
+    h, f, l = arch["hidden"], arch["ffn"], arch["layers"]
+    return l * (4 * h * h + 2 * h * f)
+
+
+def run_table1(outdir: pathlib.Path, quick: bool = False) -> dict:
+    steps = 150 if quick else 500
+    rows = {}
+    t_size = encoder_size(TEACHER_ARCH)
+    methods = {}
+    for spec in D.TASKS:
+        print(f"[table1] task {spec.name} ({spec.glue_analog})")
+        t0 = time.time()
+        teacher, _, t_acc = train_model(spec, TEACHER_ARCH, steps=steps, seed=1)
+        depth, _, d_acc = train_model(
+            spec, DEPTH_ARCH, steps=steps, teacher=teacher,
+            distill_logits=1.0, seed=2)
+        width, _, w_acc = train_model(
+            spec, WIDTH_ARCH, steps=steps, teacher=teacher,
+            distill_logits=1.0, seed=3)
+        sparse, smasks, s_acc = train_model(
+            spec, TEACHER_ARCH, steps=steps, sparsity=16, teacher=teacher,
+            distill_logits=1.0, distill_hidden=0.5, seed=4)
+        frac = P.sparsity_achieved({"layers": sparse["layers"]},
+                                   {("layers", i, n): smasks[i][n]
+                                    for i in range(len(smasks))
+                                    for n in smasks[i]})
+        rows[spec.name] = {
+            "glue_analog": spec.glue_analog,
+            "teacher": t_acc, "depth2x": d_acc, "width4x": w_acc,
+            "sparse16x": s_acc, "sparse_fraction": frac,
+            "seconds": round(time.time() - t0, 1),
+        }
+        print(f"  teacher {t_acc:.3f} | depth2x {d_acc:.3f} | "
+              f"width4x {w_acc:.3f} | sparse16x {s_acc:.3f} "
+              f"({time.time()-t0:.0f}s)")
+    methods = {
+        "teacher": {"size_reduction": 1.0},
+        "depth2x": {"size_reduction": t_size / encoder_size(DEPTH_ARCH)},
+        "width4x": {"size_reduction": t_size / encoder_size(WIDTH_ARCH)},
+        "sparse16x": {"size_reduction": 16.0},
+    }
+    avg = {m: float(np.mean([rows[t][m] for t in rows]))
+           for m in ("teacher", "depth2x", "width4x", "sparse16x")}
+    out = {"experiment": "table1", "tasks": rows, "methods": methods, "avg": avg}
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "table1.json").write_text(json.dumps(out, indent=1))
+    print("\nTable 1 (proxy) — average accuracy:")
+    for m, a in avg.items():
+        print(f"  {m:<10} {a:.3f}  (size reduction "
+              f"{methods[m]['size_reduction']:.1f}x)")
+    return out
+
+
+FIG3_SIZES = {
+    "bert_proxy_small": {"layers": 2, "hidden": 128, "ffn": 512, "heads": 4},
+    "bert_proxy_large": {"layers": 4, "hidden": 256, "ffn": 1024, "heads": 4},
+}
+FIG3_SPARSITIES = [1, 2, 4, 8, 16]
+
+
+def run_fig3(outdir: pathlib.Path, quick: bool = False) -> dict:
+    steps = 150 if quick else 500
+    spec = D.TASK_BY_NAME["proxy_mnli"]
+    points = []
+    for name, arch in FIG3_SIZES.items():
+        teacher, _, dense_acc = train_model(spec, arch, steps=steps, seed=5)
+        points.append({"model": name, "sparsity": 1, "accuracy": dense_acc})
+        print(f"[fig3] {name} dense: {dense_acc:.3f}")
+        for s in FIG3_SPARSITIES[1:]:
+            _, _, acc = train_model(
+                spec, arch, steps=steps, sparsity=s, teacher=teacher,
+                distill_logits=1.0, distill_hidden=0.5, seed=6 + s)
+            points.append({"model": name, "sparsity": s, "accuracy": acc})
+            print(f"[fig3] {name} s={s}: {acc:.3f}")
+    out = {"experiment": "fig3_accuracy", "task": spec.name, "points": points}
+    outdir.mkdir(parents=True, exist_ok=True)
+    (outdir / "accuracy.json").write_text(json.dumps(out, indent=1))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--table1", action="store_true")
+    ap.add_argument("--fig3", action="store_true")
+    ap.add_argument("--quick", action="store_true", help="~4x fewer steps")
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.outdir)
+    if not (args.table1 or args.fig3):
+        ap.error("pick --table1 and/or --fig3")
+    if args.table1:
+        run_table1(out, quick=args.quick)
+    if args.fig3:
+        run_fig3(out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""AOT pipeline tests: HLO text validity, manifest schema, size scaling.
+
+These run the lowering in-process on the tiniest variants (no artifact
+directory needed) and, when ``artifacts/manifest.json`` exists from a
+``make artifacts`` run, validate the shipped artifact set too.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+from compile.aot import Variant, lower_variant
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_lower_bert_tiny_has_full_constants():
+    text, meta = lower_variant(Variant("t", "bert", "bert_tiny", 8, 1, seq=128))
+    assert "ENTRY" in text
+    # weights must be materialized, not elided
+    assert "constant({...})" not in text
+    assert meta["hlo_bytes"] == len(text)
+    assert meta["inputs"][0]["shape"] == [1, 128]
+    assert meta["inputs"][0]["dtype"] == "s32"
+
+
+def test_lower_size_scales_with_sparsity():
+    t1, _ = lower_variant(Variant("a", "bert", "bert_tiny", 1, 1, seq=128))
+    t8, _ = lower_variant(Variant("b", "bert", "bert_tiny", 8, 1, seq=128))
+    # compressed weights shrink the artifact; embeddings are a fixed floor
+    assert len(t8) < 0.6 * len(t1)
+
+
+def test_lower_rejects_unknown_family():
+    with pytest.raises(ValueError, match="family"):
+        lower_variant(Variant("x", "mlp", "bert_tiny", 1, 1))
+
+
+def test_golden_outputs_deterministic():
+    v = Variant("t", "bert", "bert_tiny", 8, 1, seq=128)
+    a = aot.golden_outputs(v)
+    b = aot.golden_outputs(v)
+    assert a == b
+    assert len(a["input"]) == 128
+    assert len(a["output"]) == 2
+
+
+def test_default_variant_names_unique():
+    names = [v.name for v in aot.default_variants()]
+    assert len(names) == len(set(names))
+    assert any(v.family == "resnet" for v in aot.default_variants())
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(),
+                    reason="run `make artifacts` first")
+class TestShippedArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        return json.loads((ARTIFACTS / "manifest.json").read_text())
+
+    def test_all_files_exist(self, manifest):
+        for a in manifest["artifacts"]:
+            f = ARTIFACTS / a["file"]
+            assert f.exists(), a["file"]
+            assert f.stat().st_size == a["hlo_bytes"]
+
+    def test_goldens_exist(self, manifest):
+        for a in manifest["artifacts"]:
+            g = json.loads((ARTIFACTS / a["golden"]).read_text())
+            n_in = 1
+            for d in a["inputs"][0]["shape"]:
+                n_in *= d
+            assert len(g["input"]) == n_in
+
+    def test_sparsity_footprint_ordering(self, manifest):
+        """Fig. 2's memory-footprint premise: artifact bytes fall with s."""
+        bert_b1 = {a["sparsity"]: a["hlo_bytes"] for a in manifest["artifacts"]
+                   if a["model"] == "bert_tiny" and a["batch"] == 1}
+        ss = sorted(bert_b1)
+        for lo, hi in zip(ss, ss[1:]):
+            assert bert_b1[hi] < bert_b1[lo]

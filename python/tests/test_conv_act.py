@@ -1,0 +1,143 @@
+"""Layer-1 correctness: sparse conv and the activation-engine kernels."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    act_engine,
+    pack,
+    pack_conv_weight,
+    softmax_engine,
+    sparse_conv2d,
+)
+from compile.kernels.act import ENGINE_OPS
+from compile.kernels.ref import apply_act_ref, conv2d_ref, softmax_ref
+from compile.kernels.sparse_conv import conv_reduction_dim
+
+
+def make_conv_case(b, h, w, cin, cout, kh, kw, sparsity, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, h, w, cin)).astype(np.float32)
+    wt = rng.standard_normal((kh, kw, cin, cout)).astype(np.float32)
+    bias = rng.standard_normal((cout,)).astype(np.float32)
+    v, i = pack_conv_weight(wt, sparsity)
+    # oracle runs the *pruned* dense weight
+    dense = pack.unpack(np.asarray(v), np.asarray(i), kh * kw * cin)
+    return x, v, i, bias, dense.reshape(kh, kw, cin, cout)
+
+
+@pytest.mark.parametrize("sparsity", [1, 2, 4, 8])
+def test_conv3x3_sparsities(sparsity):
+    x, v, i, bias, wd = make_conv_case(2, 8, 8, 32, 128, 3, 3, sparsity)
+    y = sparse_conv2d(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(bias), kh=3, kw=3, padding=1)
+    yr = conv2d_ref(jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias), padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+def test_conv1x1_is_pointwise_matmul():
+    x, v, i, bias, wd = make_conv_case(1, 8, 8, 64, 128, 1, 1, 4, seed=2)
+    y = sparse_conv2d(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(bias), kh=1, kw=1)
+    yr = conv2d_ref(jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_strided():
+    x, v, i, bias, wd = make_conv_case(1, 16, 16, 32, 128, 3, 3, 2, seed=3)
+    y = sparse_conv2d(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(bias), kh=3, kw=3, stride=2, padding=1)
+    yr = conv2d_ref(jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias),
+                    stride=2, padding=1)
+    assert y.shape == (1, 8, 8, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_fused_relu():
+    x, v, i, bias, wd = make_conv_case(1, 8, 8, 32, 128, 3, 3, 4, seed=4)
+    y = sparse_conv2d(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(bias), kh=3, kw=3, padding=1, act="relu")
+    yr = conv2d_ref(jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias),
+                    padding=1, act="relu")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    assert (np.asarray(y) >= 0).all()
+
+
+def test_conv_odd_spatial_padding_of_gemm_m():
+    # 7x7 output → M = 49, not a tile multiple; kernel pads internally.
+    x, v, i, bias, wd = make_conv_case(1, 7, 7, 32, 128, 3, 3, 2, seed=5)
+    y = sparse_conv2d(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(bias), kh=3, kw=3, padding=1)
+    yr = conv2d_ref(jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias), padding=1)
+    assert y.shape == (1, 7, 7, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+
+def test_conv_reduction_dim_helper():
+    assert conv_reduction_dim(3, 3, 64) == 576
+    assert conv_reduction_dim(1, 1, 32) == 32
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    cin=st.sampled_from([32, 64]),
+    sparsity=st.sampled_from([1, 2, 4, 8]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_property_sweep(cin, sparsity, stride, seed):
+    x, v, i, bias, wd = make_conv_case(1, 8, 8, cin, 64, 3, 3, sparsity, seed=seed)
+    y = sparse_conv2d(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(bias), kh=3, kw=3, stride=stride, padding=1,
+                      tile_m=32, tile_n=32)
+    yr = conv2d_ref(jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias),
+                    stride=stride, padding=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=2e-4)
+
+
+# --------------------------- activation engine ----------------------------
+
+@pytest.mark.parametrize("op", ENGINE_OPS)
+def test_act_engine_ops(op):
+    rng = np.random.default_rng(6)
+    # positive domain so log/sqrt/rsqrt/reciprocal are well-defined
+    x = (rng.random((5, 333)) + 0.1).astype(np.float32)
+    y = np.asarray(act_engine(jnp.asarray(x), op=op))
+    import jax
+    ref = {
+        "gelu": lambda t: apply_act_ref(t, "gelu"),
+        "relu": lambda t: apply_act_ref(t, "relu"),
+        "exp": jnp.exp, "log": jnp.log, "reciprocal": lambda t: 1.0 / t,
+        "sigmoid": lambda t: 1 / (1 + jnp.exp(-t)), "tanh": jnp.tanh,
+        "sqrt": jnp.sqrt, "rsqrt": jax.lax.rsqrt,
+    }[op](jnp.asarray(x))
+    np.testing.assert_allclose(y, np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_act_engine_preserves_shape_and_pads():
+    x = np.linspace(-2, 2, 1000, dtype=np.float32).reshape(10, 100)
+    y = act_engine(jnp.asarray(x), op="gelu")
+    assert y.shape == x.shape
+
+
+def test_act_engine_rejects_unknown_op():
+    with pytest.raises(ValueError, match="engine"):
+        act_engine(jnp.zeros((4,)), op="selu")
+
+
+def test_softmax_engine_matches_ref():
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((4, 128)).astype(np.float32) * 5
+    y = np.asarray(softmax_engine(jnp.asarray(x)))
+    yr = np.asarray(softmax_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(y.sum(-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_engine_translation_invariant():
+    x = jnp.asarray(np.random.default_rng(9).standard_normal((2, 64)), jnp.float32)
+    a = np.asarray(softmax_engine(x))
+    b = np.asarray(softmax_engine(x + 100.0))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,200 @@
+"""Layer-1 correctness: Pallas sparse matmul vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the stack: everything above (the L2
+models, the AOT artifacts, the rust runtime) computes through this kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack, sparse_matmul, vmem_footprint
+from compile.kernels.ref import sparse_matmul_ref
+from compile.kernels.sparse_matmul import ACTIVATIONS
+
+RNG = np.random.default_rng(1234)
+
+
+def make_case(m, k, n, sparsity, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(dtype)
+    w = rng.standard_normal((k, n)).astype(dtype)
+    b = rng.standard_normal((n,)).astype(dtype)
+    v, i = pack.pack_dense(w, sparsity)
+    return x, v, i, b
+
+
+def run_both(x, v, i, b, act="none", **kw):
+    y = sparse_matmul(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(b), act=act, **kw)
+    yr = sparse_matmul_ref(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                           jnp.asarray(b), act=act)
+    return np.asarray(y), np.asarray(yr)
+
+
+@pytest.mark.parametrize("sparsity", pack.SUPPORTED_SPARSITIES)
+def test_matmul_all_sparsities(sparsity):
+    x, v, i, b = make_case(128, 256, 128, sparsity)
+    y, yr = run_both(x, v, i, b)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_matmul_fused_activations(act):
+    x, v, i, b = make_case(128, 128, 128, 4, seed=7)
+    y, yr = run_both(x, v, i, b, act=act)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_multi_tile_grid():
+    # M and N both larger than one tile: exercises the BlockSpec index maps.
+    x, v, i, b = make_case(384, 128, 256, 2, seed=3)
+    y, yr = run_both(x, v, i, b)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_custom_tiles():
+    x, v, i, b = make_case(64, 128, 64, 4, seed=5)
+    y, yr = run_both(x, v, i, b, tile_m=32, tile_n=64)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_degenerate_s1_matches_plain_matmul():
+    # s=1 packs every weight: kernel must equal an ordinary dense matmul.
+    x, v, i, b = make_case(128, 128, 128, 1, seed=9)
+    y, _ = run_both(x, v, i, b)
+    w = pack.unpack(v, i, 128)
+    expect = x @ w + b[None, :]
+    np.testing.assert_allclose(y, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_sparsity_reduces_nonzeros_kept():
+    _, v, i, _ = make_case(128, 256, 128, 8)
+    assert v.shape == (256 // 8, 128)
+    assert i.shape == v.shape
+    assert i.dtype == np.int32
+
+
+def test_bias_none_is_zero_bias():
+    x, v, i, b = make_case(128, 128, 128, 2)
+    y = np.asarray(sparse_matmul(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i)))
+    yr = np.asarray(sparse_matmul_ref(jnp.asarray(x), jnp.asarray(v),
+                                      jnp.asarray(i), jnp.zeros(128, np.float32)))
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_inputs():
+    x, v, i, b = make_case(128, 128, 128, 4)
+    y = sparse_matmul(jnp.asarray(x, jnp.bfloat16), jnp.asarray(v, jnp.bfloat16),
+                      jnp.asarray(i), jnp.asarray(b, jnp.bfloat16))
+    yr = sparse_matmul_ref(jnp.asarray(x, jnp.bfloat16), jnp.asarray(v, jnp.bfloat16),
+                           jnp.asarray(i), jnp.asarray(b, jnp.bfloat16))
+    # bf16 accumulate happens in f32 inside the kernel; compare loosely.
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_rejects_bad_tiling():
+    # M=100 with an explicit 40-row tile: 100 % 40 != 0 even after the
+    # clamp-to-problem step → must raise. (M smaller than the default tile
+    # is fine: the tile clamps down to M.)
+    x, v, i, b = make_case(100, 128, 128, 2)
+    with pytest.raises(ValueError, match="tile"):
+        sparse_matmul(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(b), tile_m=40)
+
+
+def test_small_m_clamps_tile_and_works():
+    x, v, i, b = make_case(100, 128, 128, 2, seed=13)
+    y, yr = run_both(x, v, i, b)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+def test_rejects_bad_activation():
+    x, v, i, b = make_case(128, 128, 128, 2)
+    with pytest.raises(ValueError, match="activation"):
+        sparse_matmul(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i),
+                      jnp.asarray(b), act="swish")
+
+
+def test_rejects_mismatched_indices():
+    x, v, i, b = make_case(128, 128, 128, 2)
+    with pytest.raises(ValueError, match="indices"):
+        sparse_matmul(jnp.asarray(x), jnp.asarray(v), jnp.asarray(i[:-1]),
+                      jnp.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep over shapes / sparsities / dtypes — the brief's required
+# property pass for L1.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 2),
+    kb=st.integers(1, 4),
+    sparsity=st.sampled_from(pack.SUPPORTED_SPARSITIES),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_property_sweep(mt, nt, kb, sparsity, act, seed):
+    m, n, k = 32 * mt, 32 * nt, 32 * kb
+    x, v, i, b = make_case(m, k, n, sparsity, seed=seed)
+    y, yr = run_both(x, v, i, b, act=act, tile_m=32, tile_n=32)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.sampled_from([32, 64, 128, 256]),
+    sparsity=st.sampled_from(pack.SUPPORTED_SPARSITIES),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_unpack_roundtrip_is_projection(k, sparsity, seed):
+    """unpack(pack(w)) == w * mask — packing is the magnitude projection."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, 64)).astype(np.float32)
+    v, i = pack.pack_dense(w, sparsity)
+    dense = pack.unpack(v, i, k)
+    mask = pack.block_balanced_mask(w, sparsity)
+    np.testing.assert_array_equal(dense, w * mask)
+    assert pack.is_block_balanced(dense, sparsity)
+    # exactly B/s kept per (block, col)
+    nz = (dense.reshape(k // pack.BLOCK, pack.BLOCK, 64) != 0).sum(axis=1)
+    # ties/zeros in w may reduce the count; never exceed.
+    assert (nz <= pack.BLOCK // sparsity).all()
+
+
+def test_pack_keeps_largest_magnitudes():
+    w = np.arange(1, 65, dtype=np.float32).reshape(64, 1)  # strictly increasing
+    v, i = pack.pack_dense(w, 4)  # keep 8 of each 32-block
+    # block 0 keeps rows 24..31 (values 25..32), block 1 rows 56..63.
+    np.testing.assert_array_equal(i[:, 0], np.r_[24:32, 56:64].astype(np.int32))
+
+
+def test_pack_jax_matches_numpy():
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((128, 64)).astype(np.float32)
+    v, i = pack.pack_dense(w, 8)
+    vj, ij = pack.pack_dense_jax(jnp.asarray(w), 8)
+    np.testing.assert_allclose(np.asarray(vj), v, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ij), i)
+
+
+def test_pack_rejects_bad_args():
+    with pytest.raises(ValueError):
+        pack.pack_dense(np.zeros((100, 8), np.float32), 8)  # K % 32 != 0
+    with pytest.raises(ValueError):
+        pack.pack_dense(np.zeros((64, 8), np.float32), 3)  # unsupported s
+    with pytest.raises(ValueError):
+        pack.pack_dense(np.zeros((64,), np.float32), 2)  # not 2-D
+
+
+def test_vmem_footprint_scales_with_sparsity():
+    d = {s: vmem_footprint(128, 4096, 4096, s)["total"] for s in (1, 8, 32)}
+    assert d[1] > d[8] > d[32]
+    f = vmem_footprint(128, 1024, 1024, 4)
+    assert f["sparse_macs_per_tile"] * 4 == f["dense_macs_per_tile"]
+    assert f["fits_16mb"]

@@ -1,0 +1,95 @@
+"""Layer-2 model tests: shapes, determinism, sparsity invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import pack
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return M.bert_params(M.BERT_TINY, sparsity=8, seed=0)
+
+
+def test_bert_forward_shape(tiny_params):
+    ids = jnp.zeros((2, 128), jnp.int32)
+    logits = M.bert_forward(tiny_params, ids, M.BERT_TINY)
+    assert logits.shape == (2, M.BERT_TINY.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_bert_forward_deterministic(tiny_params):
+    rng = np.random.default_rng(0)
+    ids = jnp.asarray(rng.integers(0, M.BERT_TINY.vocab, (1, 128)), jnp.int32)
+    a = np.asarray(M.bert_forward(tiny_params, ids, M.BERT_TINY))
+    b = np.asarray(M.bert_forward(tiny_params, ids, M.BERT_TINY))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_bert_params_are_block_balanced():
+    params = M.bert_params(M.BERT_TINY, sparsity=8, seed=1)
+    for lp in params["layers"]:
+        for key in ("q", "k", "v", "o", "ffn_up", "ffn_down"):
+            p = lp[key]
+            k = {"ffn_down": M.BERT_TINY.ffn}.get(key, M.BERT_TINY.hidden)
+            dense = pack.unpack(p["values"], p["indices"], k)
+            assert pack.is_block_balanced(dense, 8)
+
+
+def test_bert_sparsity_changes_output():
+    ids = jnp.asarray(np.random.default_rng(1).integers(0, 1024, (1, 128)), jnp.int32)
+    y1 = np.asarray(M.bert_forward(M.bert_params(M.BERT_TINY, 1), ids, M.BERT_TINY))
+    y8 = np.asarray(M.bert_forward(M.bert_params(M.BERT_TINY, 8), ids, M.BERT_TINY))
+    assert not np.allclose(y1, y8)  # pruning actually removed weights
+
+
+def test_bert_hidden_states_count(tiny_params):
+    ids = jnp.zeros((1, 128), jnp.int32)
+    logits, hs = M.bert_hidden_states(tiny_params, ids, M.BERT_TINY)
+    assert len(hs) == M.BERT_TINY.layers + 1  # embeddings + each layer
+    assert logits.shape == (1, 2)
+    for h in hs:
+        assert h.shape == (1, 128, M.BERT_TINY.hidden)
+
+
+def test_bert_param_count_formula():
+    # BERT-base ~ 85.6M encoder weights + 23.4M embeddings
+    c = M.BERT_BASE.param_count()
+    assert 100e6 < c < 115e6
+    assert M.BERT_LARGE.param_count() > 2.5 * M.BERT_BASE.param_count()
+
+
+def test_resnet_forward_shape():
+    params = M.resnet_params(M.RESNET_MINI, sparsity=8, seed=0)
+    imgs = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 32, 32, 3)), jnp.float32)
+    logits = M.resnet_forward(params, imgs, M.RESNET_MINI)
+    assert logits.shape == (2, M.RESNET_MINI.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_resnet_residual_nonnegative_prepool():
+    # final block output passes through relu → pooled mean of a relu'd map
+    # can still be any sign after the head matmul; just check finiteness
+    params = M.resnet_params(M.RESNET_MINI, sparsity=2, seed=3)
+    imgs = jnp.zeros((1, 32, 32, 3), jnp.float32)
+    logits = M.resnet_forward(params, imgs, M.RESNET_MINI)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("sparsity", [1, 4, 32])
+def test_bert_flops_scale(sparsity):
+    f = M.bert_flops(M.BERT_BASE, batch=1, seq=128, sparsity=sparsity)
+    f1 = M.bert_flops(M.BERT_BASE, batch=1, seq=128, sparsity=1)
+    # sparse part scales exactly 1/s; dense attention part constant
+    assert f["spu_sparse"] * sparsity == pytest.approx(f1["spu_sparse"])
+    assert f["spu_dense"] == f1["spu_dense"]
+    assert f["total"] < f1["total"] or sparsity == 1
+
+
+def test_bert_flops_bert_base_magnitude():
+    # ~22.5 GFLOP for dense BERT-base at seq 128 (2 * 11.2G MACs)
+    f = M.bert_flops(M.BERT_BASE, batch=1, seq=128, sparsity=1)
+    assert 15e9 < f["total"] < 30e9

@@ -1,0 +1,164 @@
+"""Tests for the sparsification stack: data generation, masks, schedules,
+distillation trainer plumbing (kept to tiny step budgets)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import prune as P
+from compile import train as T
+from compile.kernels import pack
+
+
+# ------------------------------- data --------------------------------------
+
+def test_tasks_have_unique_specs():
+    names = [t.name for t in D.TASKS]
+    assert len(names) == len(set(names)) == 5
+    analogs = {t.glue_analog for t in D.TASKS}
+    assert {"MNLI-m", "QNLI", "MRPC", "RTE", "CoLA"} == analogs
+
+
+def test_task_generation_shapes_and_balance():
+    spec = D.TASK_BY_NAME["proxy_rte"]
+    x_tr, y_tr, x_te, y_te = D.make_task(spec)
+    assert x_tr.shape == (spec.train, spec.seq)
+    assert x_te.shape == (spec.test, spec.seq)
+    assert set(np.unique(y_tr)) <= {0, 1}
+    # median split ⇒ roughly balanced labels
+    assert 0.3 < y_tr.mean() < 0.7
+    assert (x_tr >= 0).all() and (x_tr < spec.vocab).all()
+
+
+def test_task_generation_deterministic():
+    spec = D.TASK_BY_NAME["proxy_cola"]
+    a = D.make_task(spec)
+    b = D.make_task(spec)
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(xa, xb)
+
+
+def test_train_test_disjoint_generation():
+    spec = D.TASK_BY_NAME["proxy_mrpc"]
+    x_tr, _, x_te, _ = D.make_task(spec)
+    # different seeds → (overwhelmingly) different rows
+    assert not np.array_equal(x_tr[: x_te.shape[0]], x_te)
+
+
+def test_batches_cover_epoch():
+    x = np.arange(100).reshape(50, 2)
+    y = np.arange(50)
+    seen = 0
+    for xb, yb in D.batches(x, y, batch=8, seed=0, epochs=2):
+        assert xb.shape == (8, 2)
+        seen += 8
+    assert seen == 2 * (50 // 8) * 8
+
+
+# ------------------------------- prune -------------------------------------
+
+def test_mask_matches_pack_pattern():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32)
+    m = np.asarray(P.block_balanced_mask_jax(w, 8))
+    ref = pack.block_balanced_mask(np.asarray(w), 8)
+    np.testing.assert_array_equal(m.astype(bool), ref)
+
+
+def test_mask_sparsity_fractions():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+    for s in (1, 2, 4, 8, 16, 32):
+        m = np.asarray(P.block_balanced_mask_jax(w, s))
+        assert m.mean() == pytest.approx(1.0 / s)
+
+
+def test_gradual_schedule_mirror_of_rust():
+    # same cubic as rust sparse::prune::PruneSchedule (values pinned)
+    assert P.gradual_fraction(0, 100, 1000, 0.96875) == 0.0
+    assert P.gradual_fraction(1000, 100, 1000, 0.96875) == pytest.approx(0.96875)
+    mid = P.gradual_fraction(550, 100, 1000, 0.96875)
+    assert 0.5 * 0.96875 < mid < 0.96875  # cubic front-loads pruning
+
+
+def test_factor_at_progression():
+    fs = [P.factor_at(t, 0, 100, 32) for t in range(0, 101, 10)]
+    assert fs[0] == 1
+    assert fs[-1] == 32
+    assert all(b >= a for a, b in zip(fs, fs[1:]))
+    assert all(f in pack.SUPPORTED_SPARSITIES for f in fs)
+
+
+def test_apply_masks_zeroes_weights():
+    params = T.init_model(0, vocab=64, seq=16, classes=2,
+                          layers=1, hidden=32, ffn=64, heads=2)
+    p, _ = params, None
+    masks = {("layers", 0, "q"): jnp.zeros_like(params["layers"][0]["q"])}
+    out = P.apply_masks(params, masks)
+    assert float(jnp.abs(out["layers"][0]["q"]).sum()) == 0.0
+    # original untouched
+    assert float(jnp.abs(params["layers"][0]["q"]).sum()) > 0.0
+
+
+# ------------------------------- train -------------------------------------
+
+ARCH = {"layers": 1, "hidden": 32, "ffn": 64, "heads": 2}
+
+
+def test_forward_shapes():
+    params = T.init_model(0, vocab=64, seq=16, classes=2, **ARCH)
+    p, cfg = T._strip_cfg(params)
+    masks = T.ones_masks(p)
+    x = jnp.zeros((3, 16), jnp.int32)
+    logits, hiddens = T.forward(p, masks, x, heads=2)
+    assert logits.shape == (3, 2)
+    assert len(hiddens) == 2  # embedding + 1 layer
+    assert hiddens[0].shape == (3, 16, 32)
+
+
+def test_masked_forward_differs_from_dense():
+    params = T.init_model(0, vocab=64, seq=16, classes=2, **ARCH)
+    p, _ = T._strip_cfg(params)
+    x = jnp.asarray(np.random.default_rng(0).integers(0, 64, (2, 16)), jnp.int32)
+    dense, _ = T.forward(p, T.ones_masks(p), x, heads=2)
+    sparse, _ = T.forward(p, T.masks_at({"layers": p["layers"]}, 8), x, heads=2)
+    assert not np.allclose(np.asarray(dense), np.asarray(sparse))
+
+
+def test_training_reduces_loss_and_learns():
+    spec = D.TaskSpec("t", "T", vocab=128, seq=32, classes=2,
+                      train=600, test=300, noise=0.02, salient=12, seed=9)
+    _, _, acc = T.train_model(spec, ARCH, steps=120, lr=1e-3, seed=0)
+    assert acc > 0.6, f"tiny model should beat chance, got {acc}"
+
+
+def test_sparse_training_produces_hardware_pattern():
+    spec = D.TaskSpec("t2", "T", vocab=128, seq=32, classes=2,
+                      train=300, test=200, noise=0.05, salient=8, seed=10)
+    params, masks, _ = T.train_model(spec, ARCH, steps=40, sparsity=8, seed=0)
+    # every prunable weight is block-balanced at 8x after projection
+    for li, layer_masks in enumerate(masks):
+        for name, m in layer_masks.items():
+            w = np.asarray(params["layers"][li][name] * m)
+            assert pack.is_block_balanced(w, 8), f"layer {li} {name}"
+    frac = P.sparsity_achieved(
+        {"layers": params["layers"]},
+        {("layers", i, n): masks[i][n] for i in range(len(masks)) for n in masks[i]},
+    )
+    assert frac == pytest.approx(1 - 1 / 8, abs=1e-6)
+
+
+def test_distillation_plumbing_runs():
+    spec = D.TaskSpec("t3", "T", vocab=128, seq=32, classes=2,
+                      train=300, test=200, noise=0.05, salient=8, seed=11)
+    teacher, _, _ = T.train_model(spec, ARCH, steps=30, seed=1)
+    _, _, acc = T.train_model(spec, ARCH, steps=30, sparsity=16, teacher=teacher,
+                              distill_logits=1.0, distill_hidden=0.5, seed=2)
+    assert 0.0 <= acc <= 1.0
+
+
+def test_encoder_size_reduction_bookkeeping():
+    t = T.encoder_size(T.TEACHER_ARCH)
+    assert t / T.encoder_size(T.DEPTH_ARCH) == pytest.approx(2.0)
+    assert t / T.encoder_size(T.WIDTH_ARCH) == pytest.approx(4.0)

@@ -1,0 +1,72 @@
+//! Bench: regenerate paper **Figure 2** — speedup (throughput) on S4 at
+//! sparsity ∈ {1..32} for ResNet-50 and BERT-base, with the T4 reference —
+//! and time the simulator doing it (the sweep is the workload the analytic
+//! engine must sustain).
+//!
+//! `cargo bench --bench fig2_speedup` (add `-- --ablate-t4-eff` to sweep
+//! the T4 efficiency assumption, `-- --ablate-overhead` for the SPU tile
+//! overhead ablation DESIGN.md calls out).
+
+use s4::arch::AntoumConfig;
+use s4::graph::models;
+use s4::sim::t4::T4Config;
+use s4::sim::{report, simulate, Target};
+use s4::sparse::tensor::DType;
+use s4::util::bench::Bench;
+use s4::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let cfg = AntoumConfig::s4();
+    let batch = 16;
+    let resnet = models::resnet50(batch, 224);
+    let bert = models::bert(models::BERT_BASE, batch, 128);
+
+    // ---- the table itself ----
+    let base_r = simulate(&resnet, Target::antoum(&cfg, 1)).throughput;
+    let base_b = simulate(&bert, Target::antoum(&cfg, 1)).throughput;
+    let mut rows = Vec::new();
+    for &s in &s4::sparse::SUPPORTED_SPARSITIES {
+        let tr = simulate(&resnet, Target::antoum(&cfg, s)).throughput;
+        let tb = simulate(&bert, Target::antoum(&cfg, s)).throughput;
+        rows.push(report::Fig2Row {
+            sparsity: s,
+            resnet50_tput: tr,
+            resnet50_speedup: tr / base_r,
+            bert_tput: tb,
+            bert_speedup: tb / base_b,
+        });
+    }
+    let t4r = simulate(&resnet, Target::t4()).throughput;
+    let t4b = simulate(&bert, Target::t4()).throughput;
+    print!("{}", report::fig2_table(&rows, t4r, t4b));
+
+    // ---- harness timing: one full sweep ----
+    let b = Bench::default();
+    b.run("fig2_full_sweep(12 sims)", || {
+        for &s in &s4::sparse::SUPPORTED_SPARSITIES {
+            std::hint::black_box(simulate(&resnet, Target::antoum(&cfg, s)));
+            std::hint::black_box(simulate(&bert, Target::antoum(&cfg, s)));
+        }
+    });
+
+    // ---- ablations ----
+    if args.has("ablate-t4-eff") {
+        println!("\nT4 GEMM-efficiency ablation (ResNet-50 reference line):");
+        for eff in [0.25, 0.35, 0.50] {
+            let t4 = T4Config { eff_gemm: eff, ..T4Config::t4() };
+            let r = simulate(&resnet, Target::T4 { cfg: t4, dtype: DType::Int8 });
+            println!("  eff_gemm={eff:.2}: {:>8.0} img/s", r.throughput);
+        }
+    }
+    if args.has("ablate-overhead") {
+        println!("\nSPU tile-overhead ablation (ResNet-50 speedup at 32x):");
+        for ovh in [0.0, 8.0, 64.0, 256.0] {
+            let mut c = cfg.clone();
+            c.spu_tile_overhead_cycles = ovh;
+            let b1 = simulate(&resnet, Target::antoum(&c, 1)).throughput;
+            let b32 = simulate(&resnet, Target::antoum(&c, 32)).throughput;
+            println!("  overhead={ovh:>5.0} cyc: {:.1}x", b32 / b1);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Bench: the serving coordinator hot path — batcher+router+dispatch
+//! overhead with an instant backend (isolates L3 from model compute), and
+//! closed-loop throughput with the simulator-paced backend.
+//!
+//! §Perf target: coordinator overhead p50 < 200 µs/request at load.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s4::coordinator::{
+    Backend, BatcherConfig, Router, RoutingPolicy, Server, ServerConfig, SimBackend,
+};
+use s4::runtime::Manifest;
+use s4::util::stats::Summary;
+
+struct Instant0;
+impl Backend for Instant0 {
+    fn run(&self, _a: &str, capacity: usize, _t: &[i32]) -> anyhow::Result<Vec<f32>> {
+        Ok(vec![0.0; capacity * 2])
+    }
+    fn seq_len(&self, _a: &str) -> usize {
+        32
+    }
+    fn classes(&self, _a: &str) -> usize {
+        2
+    }
+}
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+fn run_closed_loop(backend: Arc<dyn Backend>, n: usize, label: &str) {
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 4,
+            max_inflight: 4096,
+        },
+        manifest(),
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .filter_map(|i| h.submit("bert_tiny", vec![i as i32; 32]).ok())
+        .map(|(_, rx)| rx)
+        .collect();
+    let mut lat_us = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(r.ok);
+        lat_us.push(r.latency_us as f64);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&lat_us);
+    println!(
+        "bench {label:<40} {:>9.0} req/s  lat p50 {:>8.0}µs p99 {:>8.0}µs  fill {:.2}",
+        lat_us.len() as f64 / wall,
+        s.p50,
+        s.p99,
+        h.metrics.mean_batch_fill(),
+    );
+    srv.shutdown();
+}
+
+fn main() {
+    // coordinator overhead: instant backend, open-loop burst
+    run_closed_loop(Arc::new(Instant0), 20_000, "coordinator_overhead(instant backend)");
+    // simulator-paced: batching actually matters
+    let m = manifest();
+    run_closed_loop(
+        Arc::new(SimBackend::from_manifest(&m, 0.05)),
+        2_000,
+        "closed_loop(sim-paced backend, 5% scale)",
+    );
+}

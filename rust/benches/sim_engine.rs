@@ -1,0 +1,78 @@
+//! Bench: the simulation engine itself — §Perf target: ≥1M processed
+//! task-events/s on the event core, and the analytic engine fast enough
+//! for thousand-point sweeps.
+
+use s4::arch::{AntoumConfig, EventSim, ResourceId};
+use s4::graph::models;
+use s4::sim::{simulate, simulate_event, Parallelism, Target};
+use s4::sparse::tensor::DType;
+use s4::util::bench::Bench;
+
+fn main() {
+    let b = Bench::default();
+    let cfg = AntoumConfig::s4();
+
+    // raw event core: layered DAG, 16 resources, 20k tasks
+    let build = || {
+        let mut sim = EventSim::new(16);
+        let mut prev = Vec::new();
+        for layer in 0..200 {
+            let mut cur = Vec::new();
+            for i in 0..100 {
+                let deps: Vec<_> = if prev.is_empty() {
+                    vec![]
+                } else {
+                    vec![prev[i % prev.len()]]
+                };
+                cur.push(sim.add_task(
+                    ResourceId((layer * 7 + i) % 16),
+                    1e-6 * ((i % 13) as f64 + 1.0),
+                    &deps,
+                    0,
+                ));
+            }
+            prev = cur;
+        }
+        sim
+    };
+    let sim = build();
+    let (_, eps) = b.run_throughput("event_core 20k tasks/16 res", || {
+        let t = sim.run();
+        std::hint::black_box(t.events_processed)
+    });
+    println!(
+        "  events/s: {:.2}M {}",
+        eps / 1e6,
+        if eps >= 1e6 { "— §Perf target met" } else { "— BELOW 1M target" }
+    );
+
+    // analytic engine on the real graphs
+    let bert = models::bert(models::BERT_BASE, 16, 128);
+    let resnet = models::resnet50(16, 224);
+    b.run("analytic bert_base", || {
+        std::hint::black_box(simulate(&bert, Target::antoum(&cfg, 8)));
+    });
+    b.run("analytic resnet50", || {
+        std::hint::black_box(simulate(&resnet, Target::antoum(&cfg, 8)));
+    });
+
+    // full event-mode model simulation (includes graph fusion + task build)
+    b.run("event bert_base data-parallel", || {
+        std::hint::black_box(simulate_event(
+            &bert,
+            &cfg,
+            8,
+            DType::Int8,
+            Parallelism::DataParallel,
+        ));
+    });
+    b.run("event bert_base 4-stage pipeline x8", || {
+        std::hint::black_box(simulate_event(
+            &bert,
+            &cfg,
+            8,
+            DType::Int8,
+            Parallelism::ModelParallel { stages: 4, inflight: 8 },
+        ));
+    });
+}

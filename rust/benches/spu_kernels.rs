@@ -1,0 +1,59 @@
+//! Bench: the sparse-matmul substrate — reference `spmm` across sparsity
+//! levels (compute scales ~1/s: the kernel-level Fig. 2 premise on the
+//! host reference implementation) plus the balanced-vs-CSR ablation the
+//! DESIGN.md calls out (why the *balanced* constraint is what the SPU
+//! needs).
+
+use s4::sparse::format::{BlockBalanced, Csr};
+use s4::sparse::matmul::{csr_mm, dense_mm, spmm, Act};
+use s4::sparse::tensor::Dense2;
+use s4::util::bench::Bench;
+
+fn main() {
+    let b = Bench::default();
+    let (m, k, n) = (64usize, 1024usize, 256usize);
+    let x = Dense2::randn(m, k, 1);
+    let wd = Dense2::randn(k, n, 2);
+
+    let dense = b.run("dense_mm 64x1024x256", || {
+        std::hint::black_box(dense_mm(&x, &wd, None, Act::None));
+    });
+
+    println!();
+    let mut last = f64::INFINITY;
+    for s in [1usize, 2, 4, 8, 16, 32] {
+        let w = BlockBalanced::from_dense(&wd, s).unwrap();
+        let r = b.run(&format!("spmm s={s:<2} 64x1024x256"), || {
+            std::hint::black_box(spmm(&x, &w, None, Act::None));
+        });
+        assert!(
+            r.summary.p50 < last * 1.15,
+            "spmm should not get slower with sparsity (s={s})"
+        );
+        last = r.summary.p50;
+    }
+    println!(
+        "\n(spmm s=32 vs dense reference: {:.1}x)",
+        dense.summary.p50 / last
+    );
+
+    // ablation: unstructured CSR at the same nnz — the irregular layout a
+    // balanced systolic array avoids
+    println!("\nbalanced vs unstructured (same nnz, s=8):");
+    let w8 = BlockBalanced::from_dense(&wd, 8).unwrap();
+    let csr = Csr::from_dense(&w8.to_dense());
+    let rb = b.run("  block-balanced spmm", || {
+        std::hint::black_box(spmm(&x, &w8, None, Act::None));
+    });
+    let rc = b.run("  csr spmm (unstructured)", || {
+        std::hint::black_box(csr_mm(&x, &csr));
+    });
+    println!(
+        "  storage: balanced {} B vs CSR {} B ({:.2}x)",
+        w8.bytes(s4::sparse::tensor::DType::Bf16),
+        csr.bytes(s4::sparse::tensor::DType::Bf16),
+        csr.bytes(s4::sparse::tensor::DType::Bf16) as f64
+            / w8.bytes(s4::sparse::tensor::DType::Bf16) as f64
+    );
+    let _ = (rb, rc);
+}

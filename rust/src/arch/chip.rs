@@ -1,0 +1,162 @@
+//! Chip assembly: subsystem/engine resource layout for the event simulator
+//! and the board-level energy/power model.
+
+use super::config::AntoumConfig;
+use super::engines::Engine;
+use super::event::ResourceId;
+
+/// Resource-id layout of one chip instance for `arch::event::EventSim`.
+///
+/// Per subsystem: SPU, VPU, ActEngine, Lookup, Reshape → 5 engines.
+/// Shared: `dram_channels` DRAM channels and `2·subsystems` ring links.
+#[derive(Clone, Debug)]
+pub struct ChipResources {
+    pub subsystems: usize,
+    pub engines_per_subsystem: usize,
+    pub dram_channels: usize,
+    pub noc_links: usize,
+}
+
+pub const ENGINE_ORDER: [Engine; 5] = [
+    Engine::Spu,
+    Engine::Vpu,
+    Engine::ActEngine,
+    Engine::Lookup,
+    Engine::Reshape,
+];
+
+impl ChipResources {
+    pub fn from_config(cfg: &AntoumConfig) -> ChipResources {
+        ChipResources {
+            subsystems: cfg.subsystems,
+            engines_per_subsystem: ENGINE_ORDER.len(),
+            dram_channels: cfg.dram_channels,
+            noc_links: 2 * cfg.subsystems,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.subsystems * self.engines_per_subsystem + self.dram_channels + self.noc_links
+    }
+
+    /// Resource id of `engine` on `subsystem`.
+    pub fn engine(&self, subsystem: usize, engine: Engine) -> ResourceId {
+        assert!(subsystem < self.subsystems, "subsystem {subsystem} out of range");
+        let e = ENGINE_ORDER
+            .iter()
+            .position(|&x| x == engine)
+            .expect("engine in ENGINE_ORDER");
+        ResourceId(subsystem * self.engines_per_subsystem + e)
+    }
+
+    /// Resource id of DRAM channel `ch`.
+    pub fn dram(&self, ch: usize) -> ResourceId {
+        assert!(ch < self.dram_channels);
+        ResourceId(self.subsystems * self.engines_per_subsystem + ch)
+    }
+
+    /// Resource id of ring link `l` (see `RingNoc::links_used`).
+    pub fn noc_link(&self, l: usize) -> ResourceId {
+        assert!(l < self.noc_links);
+        ResourceId(self.subsystems * self.engines_per_subsystem + self.dram_channels + l)
+    }
+
+    /// Human-readable resource name (reports).
+    pub fn name(&self, r: ResourceId) -> String {
+        let eng_total = self.subsystems * self.engines_per_subsystem;
+        if r.0 < eng_total {
+            let ss = r.0 / self.engines_per_subsystem;
+            let e = ENGINE_ORDER[r.0 % self.engines_per_subsystem];
+            format!("ss{}/{}", ss, e.name())
+        } else if r.0 < eng_total + self.dram_channels {
+            format!("dram{}", r.0 - eng_total)
+        } else {
+            format!("link{}", r.0 - eng_total - self.dram_channels)
+        }
+    }
+}
+
+/// Energy accounting for one graph execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyReport {
+    pub mac_joules: f64,
+    pub dram_joules: f64,
+    /// static/leakage + non-modelled logic, charged as a constant floor
+    pub static_joules: f64,
+    pub total_joules: f64,
+    pub avg_watts: f64,
+}
+
+/// Board power model: dynamic MAC + DRAM energy plus a static floor of
+/// 30% TDP; average power is checked against the 70 W envelope by tests.
+pub fn energy(cfg: &AntoumConfig, macs: f64, dram_bytes: f64, seconds: f64) -> EnergyReport {
+    let mac_j = macs * cfg.pj_per_mac_int8 * 1e-12;
+    let dram_j = dram_bytes * cfg.pj_per_dram_byte * 1e-12;
+    let static_j = 0.3 * cfg.tdp_w * seconds;
+    let total = mac_j + dram_j + static_j;
+    EnergyReport {
+        mac_joules: mac_j,
+        dram_joules: dram_j,
+        static_joules: static_j,
+        total_joules: total,
+        avg_watts: if seconds > 0.0 { total / seconds } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AntoumConfig {
+        AntoumConfig::s4()
+    }
+
+    #[test]
+    fn resource_layout_distinct() {
+        let r = ChipResources::from_config(&cfg());
+        let mut ids = std::collections::HashSet::new();
+        for ss in 0..r.subsystems {
+            for e in ENGINE_ORDER {
+                assert!(ids.insert(r.engine(ss, e).0));
+            }
+        }
+        for ch in 0..r.dram_channels {
+            assert!(ids.insert(r.dram(ch).0));
+        }
+        for l in 0..r.noc_links {
+            assert!(ids.insert(r.noc_link(l).0));
+        }
+        assert_eq!(ids.len(), r.total());
+        assert_eq!(r.total(), 4 * 5 + 4 + 8);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        let r = ChipResources::from_config(&cfg());
+        assert_eq!(r.name(r.engine(0, Engine::Spu)), "ss0/spu");
+        assert_eq!(r.name(r.engine(3, Engine::Lookup)), "ss3/lookup");
+        assert_eq!(r.name(r.dram(2)), "dram2");
+        assert_eq!(r.name(r.noc_link(7)), "link7");
+    }
+
+    #[test]
+    fn energy_within_envelope_at_peak() {
+        // full-tilt second: dense-equivalent peak MACs + full bandwidth
+        let c = cfg();
+        let macs = c.dense_macs_per_sec(crate::sparse::tensor::DType::Int8);
+        let rep = energy(&c, macs, 72e9, 1.0);
+        assert!(
+            rep.avg_watts < c.tdp_w,
+            "avg {}W exceeds {}W TDP",
+            rep.avg_watts,
+            c.tdp_w
+        );
+        assert!(rep.avg_watts > 0.3 * c.tdp_w, "static floor present");
+    }
+
+    #[test]
+    fn energy_zero_time() {
+        let rep = energy(&cfg(), 0.0, 0.0, 0.0);
+        assert_eq!(rep.avg_watts, 0.0);
+    }
+}

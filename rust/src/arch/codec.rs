@@ -1,0 +1,126 @@
+//! Video codec + JPEG decoder engine models.
+//!
+//! Paper §2: four video decoder engines + one encoder handle 64-way 1080p
+//! decoding at 30 FPS; the JPEG decoder sustains 2320 FPS at 1080p. These
+//! engines front the vision pipeline (`examples/video_pipeline.rs`):
+//! decoded frames are resized and fed to the SPU as inference batches, so
+//! end-to-end vision throughput is min(codec, inference).
+
+use super::config::AntoumConfig;
+
+/// Frame geometry (decode cost scales with pixel count relative to 1080p).
+#[derive(Clone, Copy, Debug)]
+pub struct FrameSpec {
+    pub width: usize,
+    pub height: usize,
+}
+
+impl FrameSpec {
+    pub const FHD: FrameSpec = FrameSpec { width: 1920, height: 1080 };
+    pub const UHD4K: FrameSpec = FrameSpec { width: 3840, height: 2160 };
+
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Cost multiplier vs 1080p.
+    pub fn scale_vs_fhd(&self) -> f64 {
+        self.pixels() as f64 / Self::FHD.pixels() as f64
+    }
+}
+
+/// Video decode subsystem: aggregate decode throughput in 1080p30-stream
+/// units, shared across streams (4K counts 4×).
+#[derive(Clone, Debug)]
+pub struct VideoDecoder {
+    /// total capacity, measured in 1080p frames/s
+    pub capacity_fps_fhd: f64,
+    pub engines: usize,
+}
+
+impl VideoDecoder {
+    pub fn from_config(cfg: &AntoumConfig) -> VideoDecoder {
+        VideoDecoder {
+            capacity_fps_fhd: (cfg.video_streams_1080p30 * 30) as f64,
+            engines: 4,
+        }
+    }
+
+    /// Max concurrent streams at (spec, fps) that the decoders sustain.
+    pub fn max_streams(&self, spec: FrameSpec, fps: f64) -> usize {
+        (self.capacity_fps_fhd / (fps * spec.scale_vs_fhd())).floor() as usize
+    }
+
+    /// Sustained frame rate when `streams` streams of `spec` are active
+    /// (fair-shared; capped by per-stream requested fps).
+    pub fn per_stream_fps(&self, streams: usize, spec: FrameSpec, requested_fps: f64) -> f64 {
+        if streams == 0 {
+            return 0.0;
+        }
+        let fair = self.capacity_fps_fhd / (streams as f64 * spec.scale_vs_fhd());
+        fair.min(requested_fps)
+    }
+}
+
+/// JPEG decoder: fixed-rate engine.
+#[derive(Clone, Debug)]
+pub struct JpegDecoder {
+    pub fps_fhd: f64,
+}
+
+impl JpegDecoder {
+    pub fn from_config(cfg: &AntoumConfig) -> JpegDecoder {
+        JpegDecoder { fps_fhd: cfg.jpeg_fps_1080p as f64 }
+    }
+
+    /// Seconds to decode one image of `spec`.
+    pub fn decode_secs(&self, spec: FrameSpec) -> f64 {
+        spec.scale_vs_fhd() / self.fps_fhd
+    }
+
+    /// Images/s at `spec`.
+    pub fn throughput(&self, spec: FrameSpec) -> f64 {
+        1.0 / self.decode_secs(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AntoumConfig {
+        AntoumConfig::s4()
+    }
+
+    #[test]
+    fn paper_claims_hold() {
+        let v = VideoDecoder::from_config(&cfg());
+        // 64-way 1080p30
+        assert_eq!(v.max_streams(FrameSpec::FHD, 30.0), 64);
+        let j = JpegDecoder::from_config(&cfg());
+        assert!((j.throughput(FrameSpec::FHD) - 2320.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uhd_counts_four_times() {
+        let v = VideoDecoder::from_config(&cfg());
+        assert_eq!(v.max_streams(FrameSpec::UHD4K, 30.0), 16);
+    }
+
+    #[test]
+    fn oversubscription_degrades_fairly() {
+        let v = VideoDecoder::from_config(&cfg());
+        let fps = v.per_stream_fps(128, FrameSpec::FHD, 30.0);
+        assert!((fps - 15.0).abs() < 1e-9, "128 streams → 15 fps each, got {fps}");
+        // undersubscribed: capped by request
+        assert_eq!(v.per_stream_fps(10, FrameSpec::FHD, 30.0), 30.0);
+    }
+
+    #[test]
+    fn jpeg_scales_with_pixels() {
+        let j = JpegDecoder::from_config(&cfg());
+        let t4k = j.decode_secs(FrameSpec::UHD4K);
+        let tf = j.decode_secs(FrameSpec::FHD);
+        assert!((t4k / tf - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,157 @@
+//! Auxiliary function engines: VPU, activation engine, embedding lookup,
+//! memory reshape — the heterogeneous units of paper §2 that make the
+//! non-matmul portion of a network fast (and whose finite throughput is
+//! exactly why BERT's Fig. 2 curve is sublinear).
+
+use super::config::AntoumConfig;
+use crate::graph::op::{ActFunc, OpKind};
+use crate::sparse::tensor::DType;
+
+/// Which engine an op executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Engine {
+    Spu,
+    Vpu,
+    ActEngine,
+    Lookup,
+    Reshape,
+}
+
+impl Engine {
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Spu => "spu",
+            Engine::Vpu => "vpu",
+            Engine::ActEngine => "act",
+            Engine::Lookup => "lookup",
+            Engine::Reshape => "reshape",
+        }
+    }
+}
+
+/// Map an op kind to its executing engine (the `sim::mapper` policy).
+pub fn engine_for(kind: &OpKind) -> Engine {
+    match kind {
+        OpKind::Conv2d { .. } | OpKind::MatMul { .. } | OpKind::BatchMatMul { .. } => {
+            Engine::Spu
+        }
+        OpKind::Softmax { .. } => Engine::ActEngine, // exp+recip dominate
+        OpKind::LayerNorm { .. } => Engine::Vpu,     // moments dominate
+        OpKind::Activation { .. } => Engine::ActEngine,
+        OpKind::Elementwise { .. } | OpKind::Pool { .. } => Engine::Vpu,
+        OpKind::Embed { .. } => Engine::Lookup,
+        OpKind::Reshape { .. } => Engine::Reshape,
+    }
+}
+
+/// Cycles for a non-SPU op on one subsystem's engines.
+pub fn engine_cycles(cfg: &AntoumConfig, kind: &OpKind) -> f64 {
+    match *kind {
+        OpKind::Softmax { rows, cols } => {
+            // VPU: max + sub + sum + div passes; engine: exp (+1 recip/row)
+            let elems = (rows * cols) as f64;
+            let vpu = 3.0 * elems / cfg.vpu_lanes as f64;
+            let act = (elems + rows as f64) / cfg.act_engine_lanes as f64;
+            vpu + act
+        }
+        OpKind::LayerNorm { rows, cols } => {
+            // mean+var+normalize+affine on VPU, rsqrt per row on the engine
+            let elems = (rows * cols) as f64;
+            4.0 * elems / cfg.vpu_lanes as f64
+                + rows as f64 / cfg.act_engine_lanes as f64
+        }
+        OpKind::Activation { elems, func } => {
+            let per = match func {
+                // LUT-evaluated transcendentals: 1 lane-cycle each
+                ActFunc::Gelu | ActFunc::Exp | ActFunc::Log | ActFunc::Sigmoid
+                | ActFunc::Tanh | ActFunc::Reciprocal => 1.0,
+                ActFunc::Relu => 0.25, // simple clamp, 4/lane/cycle
+            };
+            elems as f64 * per / cfg.act_engine_lanes as f64
+        }
+        OpKind::Elementwise { elems, arity } => {
+            (elems * arity.max(1)) as f64 / cfg.vpu_lanes as f64
+        }
+        OpKind::Pool { elems_in, .. } => elems_in as f64 / cfg.vpu_lanes as f64,
+        OpKind::Embed { tokens, .. } => {
+            // per-row request overhead; actual bytes are DRAM-side
+            tokens as f64 * cfg.lookup_row_overhead_cycles
+        }
+        OpKind::Reshape { bytes } => bytes as f64 / cfg.reshape_bytes_per_cycle as f64,
+        OpKind::Conv2d { .. } | OpKind::MatMul { .. } | OpKind::BatchMatMul { .. } => {
+            panic!("weighted op {kind:?} belongs to the SPU (arch::spu)")
+        }
+    }
+}
+
+/// Seconds on one subsystem for a non-SPU op.
+pub fn engine_seconds(cfg: &AntoumConfig, kind: &OpKind) -> f64 {
+    engine_cycles(cfg, kind) / (cfg.clock_ghz * 1e9)
+}
+
+/// DRAM bytes an op moves that are *not* captured by weight streaming:
+/// embedding-table rows (lookup engine reads vocab rows on demand).
+pub fn lookup_dram_bytes(kind: &OpKind, dt: DType) -> usize {
+    match *kind {
+        OpKind::Embed { tokens, dim, .. } => tokens * dim * dt.bytes(),
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AntoumConfig {
+        AntoumConfig::s4()
+    }
+
+    #[test]
+    fn mapping_covers_all_kinds() {
+        let kinds = [
+            OpKind::Conv2d { h: 8, w: 8, cin: 32, cout: 32, kh: 3, kw: 3, stride: 1, batch: 1 },
+            OpKind::MatMul { m: 1, k: 1, n: 1 },
+            OpKind::BatchMatMul { b: 1, m: 1, k: 1, n: 1 },
+            OpKind::Softmax { rows: 1, cols: 1 },
+            OpKind::LayerNorm { rows: 1, cols: 1 },
+            OpKind::Activation { elems: 1, func: ActFunc::Gelu },
+            OpKind::Elementwise { elems: 1, arity: 2 },
+            OpKind::Pool { elems_in: 1, window: 1 },
+            OpKind::Embed { tokens: 1, dim: 1, vocab: 1 },
+            OpKind::Reshape { bytes: 1 },
+        ];
+        for k in &kinds {
+            let _ = engine_for(k); // no panic
+        }
+        assert_eq!(engine_for(&kinds[0]), Engine::Spu);
+        assert_eq!(engine_for(&kinds[3]), Engine::ActEngine);
+        assert_eq!(engine_for(&kinds[8]), Engine::Lookup);
+    }
+
+    #[test]
+    fn softmax_cost_scales_with_elems() {
+        let a = engine_cycles(&cfg(), &OpKind::Softmax { rows: 128, cols: 128 });
+        let b = engine_cycles(&cfg(), &OpKind::Softmax { rows: 256, cols: 128 });
+        assert!((b / a - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn relu_cheaper_than_gelu() {
+        let relu = engine_cycles(&cfg(), &OpKind::Activation { elems: 1 << 20, func: ActFunc::Relu });
+        let gelu = engine_cycles(&cfg(), &OpKind::Activation { elems: 1 << 20, func: ActFunc::Gelu });
+        assert!(relu < gelu / 3.0);
+    }
+
+    #[test]
+    fn embed_bytes_accounted() {
+        let e = OpKind::Embed { tokens: 128, dim: 768, vocab: 30522 };
+        assert_eq!(lookup_dram_bytes(&e, DType::Bf16), 128 * 768 * 2);
+        assert_eq!(lookup_dram_bytes(&OpKind::Reshape { bytes: 10 }, DType::Bf16), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "belongs to the SPU")]
+    fn weighted_op_rejected() {
+        engine_cycles(&cfg(), &OpKind::MatMul { m: 1, k: 1, n: 1 });
+    }
+}

@@ -1,0 +1,328 @@
+//! Discrete-event simulation core.
+//!
+//! A classic event-calendar simulator: resources with FIFO queues, tasks
+//! with dependencies, time advances to the next completion. The chip model
+//! (`arch::chip`) instantiates one resource per engine per subsystem plus
+//! shared DRAM-channel and NoC-link resources; `sim::schedule` submits the
+//! mapped graph as tasks.
+//!
+//! Performance target (EXPERIMENTS.md §Perf): ≥1M processed task-events/s,
+//! since Fig. 2/3 sweeps simulate thousands of graph executions.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Resource handle (an engine, a DRAM channel, a NoC link).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ResourceId(pub usize);
+
+/// Task handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TaskId(pub usize);
+
+/// A unit of work: occupies `resource` exclusively for `service_secs` once
+/// all `deps` have completed.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub resource: ResourceId,
+    pub service_secs: f64,
+    pub deps: Vec<TaskId>,
+    /// opaque tag for reporting (op index, engine kind, ...)
+    pub tag: u64,
+    /// scheduling priority: LOWER runs first among ready tasks. The
+    /// pipeline scheduler sets this to the batch index so in-flight batches
+    /// drain forward instead of round-robining in lockstep (which would
+    /// collapse a stage pipeline into sequential stages).
+    pub priority: u32,
+}
+
+/// Completion record.
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub task: TaskId,
+    pub start: f64,
+    pub finish: f64,
+}
+
+/// Simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimTrace {
+    pub completions: Vec<Completion>,
+    pub makespan: f64,
+    /// busy seconds per resource (utilization = busy / makespan)
+    pub busy: Vec<f64>,
+    pub events_processed: u64,
+}
+
+impl SimTrace {
+    pub fn utilization(&self, r: ResourceId) -> f64 {
+        if self.makespan <= 0.0 {
+            0.0
+        } else {
+            self.busy[r.0] / self.makespan
+        }
+    }
+}
+
+/// Event-driven executor over a fixed task DAG.
+pub struct EventSim {
+    n_resources: usize,
+    tasks: Vec<Task>,
+}
+
+/// f64 ordered wrapper for the event calendar.
+#[derive(PartialEq, PartialOrd)]
+struct Time(f64);
+impl Eq for Time {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("NaN time")
+    }
+}
+
+impl EventSim {
+    pub fn new(n_resources: usize) -> EventSim {
+        EventSim { n_resources, tasks: Vec::new() }
+    }
+
+    /// Add a task; returns its id. Dependencies may be any previously added
+    /// task (forward refs are rejected to keep the DAG well-formed).
+    pub fn add_task(
+        &mut self,
+        resource: ResourceId,
+        service_secs: f64,
+        deps: &[TaskId],
+        tag: u64,
+    ) -> TaskId {
+        self.add_task_prio(resource, service_secs, deps, tag, 0)
+    }
+
+    /// Like [`add_task`](Self::add_task) with an explicit priority (lower
+    /// runs first among simultaneously-ready tasks).
+    pub fn add_task_prio(
+        &mut self,
+        resource: ResourceId,
+        service_secs: f64,
+        deps: &[TaskId],
+        tag: u64,
+        priority: u32,
+    ) -> TaskId {
+        assert!(resource.0 < self.n_resources, "unknown resource");
+        assert!(
+            service_secs.is_finite() && service_secs >= 0.0,
+            "bad service time {service_secs}"
+        );
+        for d in deps {
+            assert!(d.0 < self.tasks.len(), "dep on future task");
+        }
+        self.tasks.push(Task {
+            resource,
+            service_secs,
+            deps: deps.to_vec(),
+            tag,
+            priority,
+        });
+        TaskId(self.tasks.len() - 1)
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Run to completion. Scheduling policy per resource: non-preemptive
+    /// priority (lowest `priority` first, ties by submission order), chosen
+    /// at the moment the resource frees up — a later-arriving high-priority
+    /// task runs before an earlier-queued low-priority one.
+    pub fn run(&self) -> SimTrace {
+        let n = self.tasks.len();
+        let mut remaining_deps: Vec<u32> = vec![0; n];
+        let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, t) in self.tasks.iter().enumerate() {
+            remaining_deps[i] = t.deps.len() as u32;
+            for d in &t.deps {
+                dependents[d.0].push(i as u32);
+            }
+        }
+
+        // per-resource ready queue: (priority, submission index) — every
+        // queued task is ready *now* (it is pushed when its last dep
+        // completes), so no ready-time in the key.
+        let mut ready: Vec<BinaryHeap<Reverse<(u32, u32)>>> =
+            (0..self.n_resources).map(|_| BinaryHeap::new()).collect();
+        let mut idle = vec![true; self.n_resources];
+        let mut busy = vec![0.0f64; self.n_resources];
+        // event calendar: (finish_time, task)
+        let mut calendar: BinaryHeap<Reverse<(Time, u32)>> = BinaryHeap::new();
+        let mut completions = vec![
+            Completion { task: TaskId(0), start: 0.0, finish: 0.0 };
+            n
+        ];
+        let mut done = vec![false; n];
+        let mut events: u64 = 0;
+        let mut makespan = 0.0f64;
+
+        // start the highest-priority ready task on `r` if idle
+        macro_rules! try_start {
+            ($r:expr, $now:expr) => {
+                if idle[$r] {
+                    if let Some(Reverse((_, ti))) = ready[$r].pop() {
+                        let ti = ti as usize;
+                        let t = &self.tasks[ti];
+                        let finish = $now + t.service_secs;
+                        idle[$r] = false;
+                        busy[$r] += t.service_secs;
+                        completions[ti] =
+                            Completion { task: TaskId(ti), start: $now, finish };
+                        calendar.push(Reverse((Time(finish), ti as u32)));
+                        events += 1;
+                    }
+                }
+            };
+        }
+
+        for (i, t) in self.tasks.iter().enumerate() {
+            if t.deps.is_empty() {
+                ready[t.resource.0].push(Reverse((t.priority, i as u32)));
+            }
+        }
+        for r in 0..self.n_resources {
+            try_start!(r, 0.0);
+        }
+
+        while let Some(Reverse((Time(now), ti))) = calendar.pop() {
+            let ti = ti as usize;
+            events += 1;
+            done[ti] = true;
+            makespan = makespan.max(now);
+            let r = self.tasks[ti].resource.0;
+            idle[r] = true;
+            // release dependents that become ready now
+            for &dep in &dependents[ti] {
+                let dep = dep as usize;
+                remaining_deps[dep] -= 1;
+                if remaining_deps[dep] == 0 {
+                    let dr = self.tasks[dep].resource.0;
+                    ready[dr].push(Reverse((self.tasks[dep].priority, dep as u32)));
+                    try_start!(dr, now);
+                }
+            }
+            try_start!(r, now);
+        }
+
+        assert!(
+            done.iter().all(|&d| d),
+            "deadlock: cyclic dependencies or unreachable tasks"
+        );
+        SimTrace { completions, makespan, busy, events_processed: events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_chain_sums() {
+        let mut sim = EventSim::new(1);
+        let a = sim.add_task(ResourceId(0), 1.0, &[], 0);
+        let b = sim.add_task(ResourceId(0), 2.0, &[a], 0);
+        sim.add_task(ResourceId(0), 3.0, &[b], 0);
+        let t = sim.run();
+        assert_eq!(t.makespan, 6.0);
+        assert_eq!(t.utilization(ResourceId(0)), 1.0);
+    }
+
+    #[test]
+    fn parallel_resources_overlap() {
+        let mut sim = EventSim::new(2);
+        sim.add_task(ResourceId(0), 5.0, &[], 0);
+        sim.add_task(ResourceId(1), 3.0, &[], 0);
+        let t = sim.run();
+        assert_eq!(t.makespan, 5.0);
+        assert!((t.utilization(ResourceId(1)) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contention_serializes() {
+        let mut sim = EventSim::new(1);
+        for _ in 0..4 {
+            sim.add_task(ResourceId(0), 1.0, &[], 0);
+        }
+        assert_eq!(sim.run().makespan, 4.0);
+    }
+
+    #[test]
+    fn diamond_dependency() {
+        // a → (b, c) → d; b on r0, c on r1 → d starts at max(b,c)
+        let mut sim = EventSim::new(2);
+        let a = sim.add_task(ResourceId(0), 1.0, &[], 0);
+        let b = sim.add_task(ResourceId(0), 2.0, &[a], 0);
+        let c = sim.add_task(ResourceId(1), 5.0, &[a], 0);
+        let d = sim.add_task(ResourceId(0), 1.0, &[b, c], 0);
+        let t = sim.run();
+        assert_eq!(t.completions[d.0].start, 6.0);
+        assert_eq!(t.makespan, 7.0);
+    }
+
+    #[test]
+    fn zero_service_tasks_ok() {
+        let mut sim = EventSim::new(1);
+        let a = sim.add_task(ResourceId(0), 0.0, &[], 0);
+        sim.add_task(ResourceId(0), 1.0, &[a], 0);
+        assert_eq!(sim.run().makespan, 1.0);
+    }
+
+    #[test]
+    fn determinism() {
+        let build = || {
+            let mut sim = EventSim::new(3);
+            let mut prev: Vec<TaskId> = vec![];
+            for i in 0..50 {
+                let deps: Vec<TaskId> =
+                    prev.iter().copied().filter(|t| t.0 % 3 == i % 3).collect();
+                let id = sim.add_task(
+                    ResourceId(i % 3),
+                    (i as f64 * 0.37) % 1.0 + 0.01,
+                    &deps,
+                    i as u64,
+                );
+                prev.push(id);
+            }
+            sim.run()
+        };
+        let t1 = build();
+        let t2 = build();
+        assert_eq!(t1.makespan, t2.makespan);
+        assert_eq!(t1.events_processed, t2.events_processed);
+    }
+
+    #[test]
+    #[should_panic(expected = "dep on future task")]
+    fn forward_dep_rejected() {
+        let mut sim = EventSim::new(1);
+        sim.add_task(ResourceId(0), 1.0, &[TaskId(7)], 0);
+    }
+
+    #[test]
+    fn priority_orders_ready_tasks() {
+        // all ready at t=0 on one resource; low priority value runs first
+        let mut sim = EventSim::new(1);
+        let lo = sim.add_task_prio(ResourceId(0), 1.0, &[], 0, 9);
+        let hi = sim.add_task_prio(ResourceId(0), 1.0, &[], 0, 0);
+        let t = sim.run();
+        assert!(t.completions[hi.0].start < t.completions[lo.0].start);
+    }
+
+    #[test]
+    fn priority_enables_stage_pipelining() {
+        // 2-stage pipeline, 3 batches: with batch-index priority the
+        // makespan is (batches + stages - 1) × unit = 4, not 6.
+        let mut sim = EventSim::new(2);
+        for b in 0..3u32 {
+            let s0 = sim.add_task_prio(ResourceId(0), 1.0, &[], b as u64, b);
+            sim.add_task_prio(ResourceId(1), 1.0, &[s0], b as u64, b);
+        }
+        assert_eq!(sim.run().makespan, 4.0);
+    }
+}

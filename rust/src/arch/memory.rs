@@ -1,0 +1,144 @@
+//! LPDDR4 memory system + on-chip buffer model.
+//!
+//! Paper §2 item (iv): "Antoum moves the computation units directly
+//! adjacent to large capacity and large bandwidth memory banks." We model
+//! a channelized DRAM (total 72 GB/s over 4 channels) with a per-transfer
+//! fixed latency, plus capacity checks for model residency (20 GB means
+//! even BERT-large dense fits; sparsity buys *bandwidth*, not residency —
+//! which is why weight streaming time scales 1/s and compounds with the
+//! compute speedup).
+
+use super::config::AntoumConfig;
+use crate::graph::Graph;
+use crate::sparse::tensor::DType;
+
+/// A DRAM transfer request cost.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct XferCost {
+    pub seconds: f64,
+    pub bytes: usize,
+}
+
+/// Channelized DRAM model.
+#[derive(Clone, Debug)]
+pub struct DramModel {
+    pub channels: usize,
+    /// per-channel bandwidth, bytes/s
+    pub channel_bps: f64,
+    /// fixed per-transfer latency (row activation + controller), seconds
+    pub fixed_latency_s: f64,
+    pub capacity_bytes: usize,
+}
+
+impl DramModel {
+    pub fn from_config(cfg: &AntoumConfig) -> DramModel {
+        DramModel {
+            channels: cfg.dram_channels,
+            channel_bps: cfg.dram_gbps * 1e9 / cfg.dram_channels as f64,
+            fixed_latency_s: 100e-9,
+            capacity_bytes: cfg.dram_bytes,
+        }
+    }
+
+    /// Time to move `bytes` using `channels_used` channels in parallel.
+    pub fn transfer(&self, bytes: usize, channels_used: usize) -> XferCost {
+        let ch = channels_used.clamp(1, self.channels);
+        let bw = self.channel_bps * ch as f64;
+        XferCost { seconds: self.fixed_latency_s + bytes as f64 / bw, bytes }
+    }
+
+    /// Effective full-chip bandwidth (bytes/s).
+    pub fn total_bps(&self) -> f64 {
+        self.channel_bps * self.channels as f64
+    }
+
+    /// Does the model (weights at sparsity+dtype + workspace) fit?
+    pub fn fits(&self, g: &Graph, sparsity: usize, dt: DType) -> bool {
+        let weights: usize =
+            g.ops.iter().map(|o| o.kind.storage_bytes(sparsity, dt)).sum();
+        let workspace = g.activation_bytes(dt); // generous upper bound
+        weights + workspace <= self.capacity_bytes
+    }
+
+    /// Residency report for capacity planning.
+    pub fn residency(&self, g: &Graph, sparsity: usize, dt: DType) -> Residency {
+        let weights: usize =
+            g.ops.iter().map(|o| o.kind.storage_bytes(sparsity, dt)).sum();
+        let acts = g.activation_bytes(dt);
+        Residency {
+            weight_bytes: weights,
+            activation_bytes: acts,
+            capacity_bytes: self.capacity_bytes,
+            utilization: (weights + acts) as f64 / self.capacity_bytes as f64,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Residency {
+    pub weight_bytes: usize,
+    pub activation_bytes: usize,
+    pub capacity_bytes: usize,
+    pub utilization: f64,
+}
+
+/// On-chip double-buffered weight streaming: can tile weights hide DRAM
+/// latency behind compute? Returns the minimum compute seconds per buffer
+/// refill for full overlap — the number the §Perf analysis checks per
+/// layer.
+pub fn overlap_threshold_secs(cfg: &AntoumConfig, buffer_fill_bytes: usize) -> f64 {
+    let per_subsystem_bw = cfg.dram_gbps * 1e9 / cfg.subsystems as f64;
+    buffer_fill_bytes as f64 / per_subsystem_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    fn dram() -> DramModel {
+        DramModel::from_config(&AntoumConfig::s4())
+    }
+
+    #[test]
+    fn bandwidth_adds_up() {
+        let d = dram();
+        assert!((d.total_bps() - 72e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn transfer_time_scales() {
+        let d = dram();
+        let small = d.transfer(1 << 10, 4);
+        let big = d.transfer(1 << 30, 4);
+        assert!(big.seconds > 100.0 * small.seconds);
+        // fixed latency dominates tiny transfers
+        assert!(small.seconds < 2.0 * d.fixed_latency_s);
+    }
+
+    #[test]
+    fn channels_clamped() {
+        let d = dram();
+        assert_eq!(d.transfer(1 << 20, 99).seconds, d.transfer(1 << 20, 4).seconds);
+        assert!(d.transfer(1 << 20, 1).seconds > d.transfer(1 << 20, 4).seconds);
+    }
+
+    #[test]
+    fn bert_large_fits_dense_and_sparse() {
+        let d = dram();
+        let g = models::bert(models::BERT_LARGE, 8, 128);
+        assert!(d.fits(&g, 1, DType::Bf16));
+        assert!(d.fits(&g, 32, DType::Int8));
+        let r1 = d.residency(&g, 1, DType::Bf16);
+        let r32 = d.residency(&g, 32, DType::Bf16);
+        // encoder shrinks ~32x; the (unpruned) embedding table is a floor
+        assert!(r32.weight_bytes < r1.weight_bytes / 6);
+    }
+
+    #[test]
+    fn overlap_threshold_sane() {
+        let t = overlap_threshold_secs(&AntoumConfig::s4(), 8 << 20);
+        // 8 MB at 18 GB/s ≈ 0.47 ms
+        assert!((t - 8.0 * 1048576.0 / 18e9).abs() / t < 1e-6);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Antoum SoC model — every hardware block the paper describes.
+//!
+//! * [`config`] — chip parameter sets (the paper's §2 numbers).
+//! * [`spu`] — sparse processing unit timing (up to 32× linear speedup).
+//! * [`engines`] — VPU, activation engine, embedding lookup, reshape.
+//! * [`memory`] — LPDDR4 channels + capacity/residency model.
+//! * [`noc`] — 4-node bidirectional ring interconnect.
+//! * [`codec`] — video decoder (64×1080p30) + JPEG (2320 FPS) engines.
+//! * [`chip`] — resource assembly + energy/power model.
+//! * [`event`] — the discrete-event core everything executes on.
+
+pub mod chip;
+pub mod codec;
+pub mod config;
+pub mod engines;
+pub mod event;
+pub mod memory;
+pub mod noc;
+pub mod spu;
+
+pub use config::AntoumConfig;
+pub use engines::Engine;
+pub use event::{EventSim, ResourceId, TaskId};

@@ -1,0 +1,139 @@
+//! On-chip ring interconnect.
+//!
+//! Paper §2: "Four sparse processing subsystems form a complete chip
+//! through a high-bandwidth, on-chip ring interconnection network."
+//! Bidirectional ring: a transfer takes the shorter arc; cost = per-hop
+//! latency × hops + serialization over one link (stores-and-forwards are
+//! pipelined, so bandwidth is single-link).
+
+use super::config::AntoumConfig;
+
+#[derive(Clone, Debug)]
+pub struct RingNoc {
+    pub nodes: usize,
+    pub link_bps: f64,
+    pub hop_s: f64,
+}
+
+impl RingNoc {
+    pub fn from_config(cfg: &AntoumConfig) -> RingNoc {
+        RingNoc {
+            nodes: cfg.subsystems,
+            link_bps: cfg.noc_link_gbps * 1e9,
+            hop_s: cfg.noc_hop_ns * 1e-9,
+        }
+    }
+
+    /// Shortest hop count between subsystems on the bidirectional ring.
+    pub fn hops(&self, from: usize, to: usize) -> usize {
+        assert!(from < self.nodes && to < self.nodes, "node out of range");
+        let d = (from as isize - to as isize).unsigned_abs();
+        d.min(self.nodes - d)
+    }
+
+    /// Transfer time of `bytes` from one subsystem to another.
+    pub fn transfer_secs(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        let h = self.hops(from, to);
+        if h == 0 {
+            return 0.0; // same subsystem: through local SRAM
+        }
+        h as f64 * self.hop_s + bytes as f64 / self.link_bps
+    }
+
+    /// Time for an all-gather of `bytes` per node (ring algorithm:
+    /// (n-1) steps of `bytes` each) — the collective used when running
+    /// data-parallel with a shared classifier/reduction.
+    pub fn allgather_secs(&self, bytes_per_node: usize) -> f64 {
+        if self.nodes <= 1 {
+            return 0.0;
+        }
+        (self.nodes - 1) as f64
+            * (self.hop_s + bytes_per_node as f64 / self.link_bps)
+    }
+
+    /// Which link (by index) a hop occupies — used by the event simulator
+    /// to model link contention. Links are numbered 0..nodes clockwise;
+    /// a transfer occupies `hops` consecutive links starting at `from` in
+    /// its travel direction.
+    pub fn links_used(&self, from: usize, to: usize) -> Vec<usize> {
+        let h = self.hops(from, to);
+        if h == 0 {
+            return vec![];
+        }
+        // clockwise distance
+        let cw = (to + self.nodes - from) % self.nodes;
+        let clockwise = cw == h;
+        let mut links = Vec::with_capacity(h);
+        let mut cur = from;
+        for _ in 0..h {
+            if clockwise {
+                links.push(cur); // link cur → cur+1
+                cur = (cur + 1) % self.nodes;
+            } else {
+                cur = (cur + self.nodes - 1) % self.nodes;
+                links.push(self.nodes + cur); // counterclockwise links offset
+            }
+        }
+        links
+    }
+
+    /// Total distinct links (both directions).
+    pub fn link_count(&self) -> usize {
+        2 * self.nodes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ring() -> RingNoc {
+        RingNoc::from_config(&AntoumConfig::s4())
+    }
+
+    #[test]
+    fn hops_shortest_arc() {
+        let r = ring(); // 4 nodes
+        assert_eq!(r.hops(0, 0), 0);
+        assert_eq!(r.hops(0, 1), 1);
+        assert_eq!(r.hops(0, 2), 2);
+        assert_eq!(r.hops(0, 3), 1); // wraps
+        assert_eq!(r.hops(3, 1), 2);
+    }
+
+    #[test]
+    fn local_transfer_free() {
+        assert_eq!(ring().transfer_secs(2, 2, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn transfer_time_components() {
+        let r = ring();
+        let t = r.transfer_secs(0, 2, 128 << 20);
+        let expect = 2.0 * 10e-9 + (128 << 20) as f64 / 128e9;
+        assert!((t - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn allgather_scales_with_nodes() {
+        let r = ring();
+        let t = r.allgather_secs(1 << 20);
+        assert!(t > 0.0);
+        let solo = RingNoc { nodes: 1, ..r };
+        assert_eq!(solo.allgather_secs(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn links_used_no_overlap_between_directions() {
+        let r = ring();
+        let cw = r.links_used(0, 1);
+        let ccw = r.links_used(1, 0);
+        assert_eq!(cw.len(), 1);
+        assert_eq!(ccw.len(), 1);
+        assert_ne!(cw[0], ccw[0], "directions use distinct links");
+        assert!(r.links_used(0, 0).is_empty());
+        for l in r.links_used(0, 2) {
+            assert!(l < r.link_count());
+        }
+    }
+}

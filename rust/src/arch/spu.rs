@@ -1,0 +1,145 @@
+//! Sparse Processing Unit timing model.
+//!
+//! The SPU is a weight-stationary systolic array fed compressed
+//! block-balanced weights: each MAC lane reads a (value, offset) pair and
+//! gathers its activation operand through an in-tile crossbar — so cycles
+//! scale with *stored non-zeros*, i.e. 1/s, which is the paper's central
+//! linear-speedup claim. Two non-ideal terms keep the model honest:
+//!
+//! * a fixed per-tile dispatch overhead (`spu_tile_overhead_cycles`) that
+//!   stops scaling at very high sparsity on small tiles (visible as the
+//!   Fig. 2 curve bending at 32×);
+//! * weight-buffer streaming: compressed weights must arrive from DRAM;
+//!   the cost model (sim::cost) rooflines compute vs that traffic.
+
+use super::config::AntoumConfig;
+use crate::graph::op::OpKind;
+use crate::sparse::tensor::DType;
+
+/// Compute-side cost of one op on one subsystem's SPU.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpuCost {
+    pub cycles: f64,
+    /// MAC operations actually performed (post-sparsity)
+    pub macs: f64,
+    /// number of (tile_m × tile_n) output tiles dispatched
+    pub tiles: f64,
+}
+
+/// MACs per cycle the array sustains at a dtype (BF16 halves, F32 quarters
+/// the INT8 rate — wider accumulators occupy more lanes).
+fn macs_per_cycle(cfg: &AntoumConfig, dt: DType) -> f64 {
+    cfg.spu_int8_macs_per_cycle as f64
+        * match dt {
+            DType::Int8 => 1.0,
+            DType::Bf16 => 0.5,
+            DType::F32 | DType::Int32 => 0.25,
+        }
+}
+
+/// Cost a weighted op (Conv2d or MatMul) at sparsity `s`.
+/// `s` is clamped to the hardware max; dense BatchMatMul uses `s = 1`.
+pub fn cost(cfg: &AntoumConfig, kind: &OpKind, s: usize, dt: DType) -> SpuCost {
+    let s = s.min(cfg.max_sparsity).max(1);
+    let (macs_dense, m, n) = match *kind {
+        OpKind::Conv2d { cin, cout, kh, kw, batch, .. } => {
+            let (ho, wo) = kind.conv_out_hw().unwrap();
+            (
+                (batch * ho * wo) as f64 * (kh * kw * cin) as f64 * cout as f64,
+                batch * ho * wo,
+                cout,
+            )
+        }
+        OpKind::MatMul { m, k, n } => (m as f64 * k as f64 * n as f64, m, n),
+        OpKind::BatchMatMul { b, m, k, n } => {
+            ((b * m) as f64 * k as f64 * n as f64, b * m, n)
+        }
+        _ => panic!("SPU cannot execute {kind:?}"),
+    };
+    let eff_s = if kind.sparsifiable() { s as f64 } else { 1.0 };
+    let macs = macs_dense / eff_s;
+    let tiles = (m as f64 / cfg.spu_tile_m as f64).ceil()
+        * (n as f64 / cfg.spu_tile_n as f64).ceil();
+    let cycles = macs / macs_per_cycle(cfg, dt) + tiles * cfg.spu_tile_overhead_cycles;
+    SpuCost { cycles, macs, tiles }
+}
+
+/// Seconds for the cost on one subsystem.
+pub fn seconds(cfg: &AntoumConfig, c: &SpuCost) -> f64 {
+    c.cycles / (cfg.clock_ghz * 1e9)
+}
+
+/// Structural speedup of the SPU alone at sparsity `s` for a given matmul
+/// shape — the Fig. 2 "kernel-level" curve before memory effects.
+pub fn kernel_speedup(cfg: &AntoumConfig, m: usize, k: usize, n: usize, s: usize) -> f64 {
+    let kind = OpKind::MatMul { m, k, n };
+    let dense = cost(cfg, &kind, 1, DType::Int8);
+    let sparse = cost(cfg, &kind, s, DType::Int8);
+    dense.cycles / sparse.cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AntoumConfig {
+        AntoumConfig::s4()
+    }
+
+    #[test]
+    fn sparsity_scales_macs_linearly() {
+        let kind = OpKind::MatMul { m: 1024, k: 4096, n: 4096 };
+        let c1 = cost(&cfg(), &kind, 1, DType::Int8);
+        let c8 = cost(&cfg(), &kind, 8, DType::Int8);
+        assert!((c1.macs / c8.macs - 8.0).abs() < 1e-9);
+        assert_eq!(c1.tiles, c8.tiles); // tiling unchanged
+    }
+
+    #[test]
+    fn speedup_near_linear_on_large_tiles() {
+        // big matmul: overhead negligible → speedup ≈ s
+        for &s in &[2usize, 8, 32] {
+            let sp = kernel_speedup(&cfg(), 4096, 8192, 4096, s);
+            assert!(sp > 0.9 * s as f64 && sp <= 1.001 * s as f64, "s={s} sp={sp}");
+        }
+    }
+
+    #[test]
+    fn speedup_bends_on_small_tiles() {
+        // tiny matmul at 32×: fixed overhead dominates, speedup < 0.8·s
+        let sp = kernel_speedup(&cfg(), 128, 128, 128, 32);
+        assert!(sp < 0.8 * 32.0, "sp={sp}");
+        assert!(sp > 1.0);
+    }
+
+    #[test]
+    fn bf16_twice_the_cycles_of_int8() {
+        let kind = OpKind::MatMul { m: 2048, k: 2048, n: 2048 };
+        let i8c = cost(&cfg(), &kind, 1, DType::Int8);
+        let bfc = cost(&cfg(), &kind, 1, DType::Bf16);
+        let ratio = bfc.cycles / i8c.cycles;
+        assert!((1.8..2.05).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn batch_matmul_never_sparse() {
+        let kind = OpKind::BatchMatMul { b: 12, m: 128, k: 64, n: 128 };
+        let c1 = cost(&cfg(), &kind, 1, DType::Int8);
+        let c8 = cost(&cfg(), &kind, 8, DType::Int8);
+        assert_eq!(c1.macs, c8.macs);
+    }
+
+    #[test]
+    fn sparsity_clamped_to_hw_max() {
+        let kind = OpKind::MatMul { m: 4096, k: 4096, n: 4096 };
+        let c32 = cost(&cfg(), &kind, 32, DType::Int8);
+        let c64 = cost(&cfg(), &kind, 64, DType::Int8);
+        assert_eq!(c32.macs, c64.macs);
+    }
+
+    #[test]
+    #[should_panic(expected = "SPU cannot execute")]
+    fn rejects_non_matmul() {
+        cost(&cfg(), &OpKind::Softmax { rows: 1, cols: 1 }, 1, DType::Int8);
+    }
+}

@@ -1,0 +1,145 @@
+//! Admission control: bound the queue, shed load early.
+//!
+//! Two mechanisms compose (either can reject):
+//! * **queue depth bound** — reject when in-flight requests exceed a cap
+//!   (keeps tail latency bounded under overload);
+//! * **token bucket** — smooth sustained rate to what the backend can
+//!   actually serve (capacity = burst tolerance).
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionDecision {
+    Admit,
+    RejectQueueFull,
+    RejectRateLimited,
+}
+
+#[derive(Debug)]
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Thread-safe admission controller.
+#[derive(Debug)]
+pub struct Admission {
+    max_inflight: i64,
+    inflight: AtomicI64,
+    /// requests/second sustained; f64::INFINITY disables rate limiting
+    rate: f64,
+    burst: f64,
+    bucket: Mutex<Bucket>,
+}
+
+impl Admission {
+    pub fn new(max_inflight: usize, rate_per_sec: f64, burst: usize) -> Admission {
+        Admission {
+            max_inflight: max_inflight as i64,
+            inflight: AtomicI64::new(0),
+            rate: rate_per_sec,
+            burst: burst as f64,
+            bucket: Mutex::new(Bucket { tokens: burst as f64, last: Instant::now() }),
+        }
+    }
+
+    /// Unlimited-rate controller with only a queue bound.
+    pub fn depth_only(max_inflight: usize) -> Admission {
+        Admission::new(max_inflight, f64::INFINITY, 1)
+    }
+
+    /// Try to admit one request. On `Admit`, the caller MUST later call
+    /// [`complete`](Self::complete) exactly once.
+    pub fn try_admit(&self) -> AdmissionDecision {
+        // optimistic in-flight increment; back out on reject
+        let inflight = self.inflight.fetch_add(1, Ordering::AcqRel) + 1;
+        if inflight > self.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return AdmissionDecision::RejectQueueFull;
+        }
+        if self.rate.is_finite() {
+            let mut b = self.bucket.lock().unwrap();
+            let now = Instant::now();
+            let dt = now.duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + dt * self.rate).min(self.burst);
+            b.last = now;
+            if b.tokens < 1.0 {
+                drop(b);
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                return AdmissionDecision::RejectRateLimited;
+            }
+            b.tokens -= 1.0;
+        }
+        AdmissionDecision::Admit
+    }
+
+    /// Mark one admitted request finished.
+    pub fn complete(&self) {
+        let prev = self.inflight.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev > 0, "complete() without admit()");
+    }
+
+    pub fn inflight(&self) -> i64 {
+        self.inflight.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_bound_rejects_then_recovers() {
+        let a = Admission::depth_only(2);
+        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(), AdmissionDecision::RejectQueueFull);
+        a.complete();
+        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+        assert_eq!(a.inflight(), 2);
+    }
+
+    #[test]
+    fn rate_limit_caps_burst() {
+        // 1 req/s, burst 3: first 3 admit, 4th rejects immediately
+        let a = Admission::new(100, 1.0, 3);
+        let mut admitted = 0;
+        for _ in 0..5 {
+            if a.try_admit() == AdmissionDecision::Admit {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 3);
+    }
+
+    #[test]
+    fn rate_limit_refills_over_time() {
+        let a = Admission::new(100, 1000.0, 1);
+        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(), AdmissionDecision::RejectRateLimited);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn inflight_never_negative_under_contention() {
+        let a = std::sync::Arc::new(Admission::depth_only(8));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    if a.try_admit() == AdmissionDecision::Admit {
+                        a.complete();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.inflight(), 0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Dynamic batcher: trade a bounded wait for batch fill.
+//!
+//! The classic serving batcher (vLLM/Triton style, simplified to
+//! fixed-shape classification): block for the first request, then keep
+//! draining the queue until either `max_batch` requests are collected or
+//! `max_wait` has elapsed since the first one. Requests for different
+//! models are never mixed in one batch.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch: same-model requests, ready for routing.
+#[derive(Debug)]
+pub struct Batch {
+    pub model: String,
+    pub requests: Vec<Request>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Pulls requests off a channel, forms batches.
+pub struct DynamicBatcher {
+    cfg: BatcherConfig,
+    rx: Receiver<Request>,
+    /// same-model constraint: requests for *other* models wait here
+    stash: VecDeque<Request>,
+    /// cooperative shutdown: senders may outlive the server (cloned
+    /// handles), so channel-closure alone cannot signal exit
+    stop: Arc<AtomicBool>,
+}
+
+impl DynamicBatcher {
+    pub fn new(cfg: BatcherConfig, rx: Receiver<Request>) -> DynamicBatcher {
+        Self::with_stop(cfg, rx, Arc::new(AtomicBool::new(false)))
+    }
+
+    pub fn with_stop(
+        cfg: BatcherConfig,
+        rx: Receiver<Request>,
+        stop: Arc<AtomicBool>,
+    ) -> DynamicBatcher {
+        DynamicBatcher { cfg, rx, stash: VecDeque::new(), stop }
+    }
+
+    /// Form the next batch. `None` when shutdown is signalled (or the
+    /// channel closed) and no requests remain.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        // seed: stashed request first, else poll the channel (bounded
+        // waits so the stop flag is observed)
+        let first = match self.stash.pop_front() {
+            Some(r) => r,
+            None => loop {
+                if self.stop.load(Ordering::Acquire) {
+                    // drain anything already queued before exiting
+                    match self.rx.try_recv() {
+                        Ok(r) => break r,
+                        Err(_) => return None,
+                    }
+                }
+                match self.rx.recv_timeout(Duration::from_millis(20)) {
+                    Ok(r) => break r,
+                    Err(RecvTimeoutError::Timeout) => continue,
+                    Err(RecvTimeoutError::Disconnected) => return None,
+                }
+            },
+        };
+        let model = first.model.clone();
+        let deadline = Instant::now() + self.cfg.max_wait;
+        let mut requests = vec![first];
+
+        // keep only same-model requests; stash the rest in arrival order
+        let mut i = 0;
+        while i < self.stash.len() && requests.len() < self.cfg.max_batch {
+            if self.stash[i].model == model {
+                requests.push(self.stash.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        while requests.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) if r.model == model => requests.push(r),
+                Ok(r) => self.stash.push_back(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(Batch { model, requests, formed_at: Instant::now() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{RequestId, Response};
+    use std::sync::mpsc;
+
+    fn req(id: u64, model: &str) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id: RequestId(id),
+                model: model.to_string(),
+                tokens: vec![0; 4],
+                submitted: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn fills_to_max_batch_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for i in 0..5 {
+            let (r, resp) = req(i, "m");
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.model, "m");
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            rx,
+        );
+        let (r, _resp) = req(1, "m");
+        tx.send(r).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn models_never_mixed() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for (i, m) in [(1, "a"), (2, "b"), (3, "a"), (4, "b")] {
+            let (r, resp) = req(i, m);
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        let b1 = b.next_batch().unwrap();
+        assert_eq!(b1.model, "a");
+        assert_eq!(b1.len(), 2);
+        let b2 = b.next_batch().unwrap();
+        assert_eq!(b2.model, "b");
+        assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn shutdown_returns_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let mut b = DynamicBatcher::new(BatcherConfig::default(), rx);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn stashed_requests_preserved_across_batches() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(2) },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for (i, m) in [(1, "a"), (2, "b"), (3, "b"), (4, "b")] {
+            let (r, resp) = req(i, m);
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        drop(tx);
+        let sizes: Vec<(String, usize)> = std::iter::from_fn(|| b.next_batch())
+            .map(|batch| (batch.model.clone(), batch.len()))
+            .collect();
+        let total: usize = sizes.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, 4, "no request lost: {sizes:?}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Serving metrics: lock-free counters + histogram latencies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::LatencyHistogram;
+
+/// Shared serving metrics (cheap to record from any worker).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub padding_slots: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+    queue: Mutex<LatencyHistogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    #[inline]
+    pub fn record_completion(&self, latency_us: u64, queue_us: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.lock().unwrap().record_us(latency_us as f64);
+        self.queue.lock().unwrap().record_us(queue_us as f64);
+    }
+
+    #[inline]
+    pub fn record_batch(&self, requests: usize, padded_to: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(requests as u64, Ordering::Relaxed);
+        self.padding_slots
+            .fetch_add((padded_to - requests) as u64, Ordering::Relaxed);
+    }
+
+    pub fn latency_quantile_us(&self, q: f64) -> f64 {
+        self.latency.lock().unwrap().quantile_us(q)
+    }
+
+    pub fn queue_quantile_us(&self, q: f64) -> f64 {
+        self.queue.lock().unwrap().quantile_us(q)
+    }
+
+    /// Mean requests per executed batch (batching efficiency).
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "admitted={} rejected={} completed={} failed={} batches={} \
+             fill={:.2} pad={} p50={:.0}µs p99={:.0}µs queue_p50={:.0}µs",
+            self.admitted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_fill(),
+            self.padding_slots.load(Ordering::Relaxed),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+            self.queue_quantile_us(0.5),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let m = Metrics::new();
+        m.admitted.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(3, 8);
+        m.record_completion(1000, 100);
+        m.record_completion(2000, 200);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.padding_slots.load(Ordering::Relaxed), 5);
+        assert_eq!(m.mean_batch_fill(), 3.0);
+        let r = m.report();
+        assert!(r.contains("admitted=3"));
+        assert!(m.latency_quantile_us(0.5) > 500.0);
+    }
+
+    #[test]
+    fn empty_fill_is_zero() {
+        assert_eq!(Metrics::new().mean_batch_fill(), 0.0);
+    }
+}

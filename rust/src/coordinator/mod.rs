@@ -1,0 +1,26 @@
+//! SparseRT serving coordinator (Layer 3).
+//!
+//! The serve-time system around the runtime: requests come in, are
+//! admission-controlled, dynamically batched, routed to a compiled model
+//! variant, executed on a backend (PJRT or simulator), and answered — all
+//! on std threads + channels, Python never involved.
+//!
+//! ```text
+//! client ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ backend
+//!                                                        │
+//!                                  metrics ◀─────────────┘
+//! ```
+
+pub mod admission;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use admission::{Admission, AdmissionDecision};
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, Response};
+pub use router::{Router, RoutingPolicy};
+pub use server::{Backend, Server, ServerConfig, SimBackend};

@@ -1,0 +1,51 @@
+//! Request/response types on the serving hot path.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RequestId(pub u64);
+
+/// One inference request: a token sequence for a named model.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub model: String,
+    /// token ids, length = the model's sequence length (router pads/rejects)
+    pub tokens: Vec<i32>,
+    pub submitted: Instant,
+    /// where the response goes (per-client channel)
+    pub reply: Sender<Response>,
+}
+
+/// The answer: classifier logits plus serving telemetry.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub logits: Vec<f32>,
+    /// which artifact variant served it (e.g. "bert_tiny_s8_b8")
+    pub served_by: String,
+    /// batch size it rode in
+    pub batch_size: usize,
+    /// end-to-end latency
+    pub latency_us: u64,
+    /// time spent queued before execution started
+    pub queue_us: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn error(id: RequestId, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            logits: Vec::new(),
+            served_by: String::new(),
+            batch_size: 0,
+            latency_us: 0,
+            queue_us: 0,
+            ok: false,
+            error: Some(msg.into()),
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Router: pick the compiled variant a batch executes on.
+//!
+//! A model is served by a *set* of artifacts (sparsity × batch-size
+//! variants). Policy picks the sparsity tier; the batch planner packs the
+//! request batch into the fewest artifact executions (e.g. 5 requests with
+//! {b1, b8} variants → one padded b8 call, not five b1 calls — padding is
+//! cheaper than dispatch beyond a fill threshold).
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// highest-sparsity variant available (max throughput; the S4 pitch)
+    MaxSparsity,
+    /// dense baseline (comparison runs)
+    Dense,
+    /// a specific sparsity tier (SLA-pinned accuracy)
+    Fixed(usize),
+}
+
+/// One planned execution: an artifact plus how many real requests fill it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub artifact: String,
+    pub batch_capacity: usize,
+    pub fill: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: RoutingPolicy,
+    /// minimum fill ratio before the planner chooses a bigger batch
+    /// variant over multiple smaller ones
+    pub min_fill: f64,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Router {
+        Router { policy, min_fill: 0.5 }
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Sparsity tier for `model` under the policy, from what's available.
+    pub fn pick_sparsity(&self, m: &Manifest, model: &str) -> anyhow::Result<usize> {
+        let mut tiers: Vec<usize> = m
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model)
+            .map(|a| a.sparsity)
+            .collect();
+        tiers.sort_unstable();
+        tiers.dedup();
+        anyhow::ensure!(!tiers.is_empty(), "no artifacts for model `{model}`");
+        Ok(match self.policy {
+            RoutingPolicy::MaxSparsity => *tiers.last().unwrap(),
+            RoutingPolicy::Dense => *tiers.first().unwrap(),
+            RoutingPolicy::Fixed(s) => {
+                anyhow::ensure!(
+                    tiers.contains(&s),
+                    "model `{model}` has no sparsity-{s} artifact (have {tiers:?})"
+                );
+                s
+            }
+        })
+    }
+
+    /// Plan executions for `n` same-model requests: greedy largest-fit over
+    /// the available batch capacities at the chosen sparsity tier.
+    /// Invariants (property-tested): Σ fill == n; fill ≤ capacity; a
+    /// capacity is only padded when no exact/smaller combination covers the
+    /// remainder.
+    pub fn plan(&self, m: &Manifest, model: &str, n: usize) -> anyhow::Result<Vec<Placement>> {
+        anyhow::ensure!(n > 0, "empty batch");
+        let s = self.pick_sparsity(m, model)?;
+        let mut caps: Vec<&ArtifactMeta> = m
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.sparsity == s)
+            .collect();
+        anyhow::ensure!(!caps.is_empty(), "no artifacts for `{model}` at s={s}");
+        caps.sort_by_key(|a| a.batch); // ascending capacities
+        let mut out = Vec::new();
+        let mut left = n;
+        while left > 0 {
+            let largest = caps.last().unwrap();
+            if left >= largest.batch {
+                // fill whole large batches first
+                out.push(Placement {
+                    artifact: largest.name.clone(),
+                    batch_capacity: largest.batch,
+                    fill: largest.batch,
+                });
+                left -= largest.batch;
+                continue;
+            }
+            // remainder: smallest capacity that covers it at ≥ min_fill
+            // (padding beats extra dispatches)…
+            if let Some(a) = caps
+                .iter()
+                .find(|a| a.batch >= left && left as f64 / a.batch as f64 >= self.min_fill)
+            {
+                out.push(Placement {
+                    artifact: a.name.clone(),
+                    batch_capacity: a.batch,
+                    fill: left,
+                });
+                left = 0;
+            } else if let Some(a) = caps.iter().rev().find(|a| a.batch <= left) {
+                // …else exact-fit smaller batches…
+                out.push(Placement {
+                    artifact: a.name.clone(),
+                    batch_capacity: a.batch,
+                    fill: a.batch,
+                });
+                left -= a.batch;
+            } else {
+                // …else pad the smallest available capacity.
+                let a = caps.first().unwrap();
+                out.push(Placement {
+                    artifact: a.name.clone(),
+                    batch_capacity: a.batch,
+                    fill: left,
+                });
+                left = 0;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = r#"{"artifacts": [
+          {"name": "m_s1_b1", "file": "a", "family": "bert", "model": "m",
+           "sparsity": 1, "batch": 1, "inputs": [], "outputs": []},
+          {"name": "m_s8_b1", "file": "b", "family": "bert", "model": "m",
+           "sparsity": 8, "batch": 1, "inputs": [], "outputs": []},
+          {"name": "m_s8_b8", "file": "c", "family": "bert", "model": "m",
+           "sparsity": 8, "batch": 8, "inputs": [], "outputs": []},
+          {"name": "m_s32_b1", "file": "d", "family": "bert", "model": "m",
+           "sparsity": 32, "batch": 1, "inputs": [], "outputs": []}
+        ]}"#;
+        Manifest::parse(Path::new("/tmp"), text).unwrap()
+    }
+
+    #[test]
+    fn policy_picks_tier() {
+        let m = manifest();
+        assert_eq!(Router::new(RoutingPolicy::MaxSparsity).pick_sparsity(&m, "m").unwrap(), 32);
+        assert_eq!(Router::new(RoutingPolicy::Dense).pick_sparsity(&m, "m").unwrap(), 1);
+        assert_eq!(Router::new(RoutingPolicy::Fixed(8)).pick_sparsity(&m, "m").unwrap(), 8);
+        assert!(Router::new(RoutingPolicy::Fixed(16)).pick_sparsity(&m, "m").is_err());
+        assert!(Router::new(RoutingPolicy::Dense).pick_sparsity(&m, "zz").is_err());
+    }
+
+    #[test]
+    fn plan_exact_multiples() {
+        let m = manifest();
+        let r = Router::new(RoutingPolicy::Fixed(8));
+        let p = r.plan(&m, "m", 16).unwrap();
+        assert_eq!(p.len(), 2);
+        assert!(p.iter().all(|x| x.artifact == "m_s8_b8" && x.fill == 8));
+    }
+
+    #[test]
+    fn plan_remainder_pads_large_when_half_full() {
+        let m = manifest();
+        let r = Router::new(RoutingPolicy::Fixed(8));
+        // 13 = b8 + 5 → 5/8 = 0.625 ≥ 0.5 → padded b8
+        let p = r.plan(&m, "m", 13).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[1].fill, 5);
+        assert_eq!(p[1].batch_capacity, 8);
+    }
+
+    #[test]
+    fn plan_small_remainder_uses_b1() {
+        let m = manifest();
+        let r = Router::new(RoutingPolicy::Fixed(8));
+        // 9 = b8 + 1 → 1/8 < 0.5 → b1 exact
+        let p = r.plan(&m, "m", 9).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[1].batch_capacity, 1);
+        assert_eq!(p[1].fill, 1);
+    }
+
+    #[test]
+    fn plan_conserves_requests() {
+        let m = manifest();
+        let r = Router::new(RoutingPolicy::Fixed(8));
+        for n in 1..=40 {
+            let p = r.plan(&m, "m", n).unwrap();
+            let total: usize = p.iter().map(|x| x.fill).sum();
+            assert_eq!(total, n, "n={n}: {p:?}");
+            for x in &p {
+                assert!(x.fill <= x.batch_capacity);
+            }
+        }
+    }
+
+    #[test]
+    fn tier_without_big_batches_still_plans() {
+        let m = manifest();
+        let r = Router::new(RoutingPolicy::MaxSparsity); // s=32 only has b1
+        let p = r.plan(&m, "m", 3).unwrap();
+        assert_eq!(p.len(), 3);
+        assert!(p.iter().all(|x| x.batch_capacity == 1));
+    }
+}

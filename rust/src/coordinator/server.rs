@@ -1,0 +1,466 @@
+//! The serving loop: batcher thread + worker pool over a [`Backend`].
+//!
+//! Wire-up (std threads, no async runtime in this environment):
+//! * clients send [`Request`]s through [`ServerHandle::submit`] (admission
+//!   happens there);
+//! * one batcher thread forms [`Batch`]es;
+//! * `workers` threads pull batches from a shared channel, ask the
+//!   [`Router`] for placements, run them on the [`Backend`], and reply.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::admission::{Admission, AdmissionDecision};
+use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response};
+use super::router::Router;
+use crate::runtime::manifest::Manifest;
+
+/// Executes one planned placement. Implementations: PJRT (examples — owns
+/// the compiled executables), simulator (tests/benches), echo (unit tests).
+pub trait Backend: Send + Sync + 'static {
+    /// Run `artifact` with a token matrix of `capacity × seq` (already
+    /// padded); return per-sample logits (len = capacity × classes).
+    fn run(
+        &self,
+        artifact: &str,
+        capacity: usize,
+        tokens: &[i32],
+    ) -> anyhow::Result<Vec<f32>>;
+
+    /// Sequence length the artifact expects (for padding).
+    fn seq_len(&self, artifact: &str) -> usize;
+
+    /// Classes per sample in the output.
+    fn classes(&self, artifact: &str) -> usize;
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+    pub max_inflight: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            max_inflight: 256,
+        }
+    }
+}
+
+/// Running server; call [`shutdown`](Server::shutdown) to stop cleanly.
+pub struct Server {
+    handle: ServerHandle,
+    threads: Vec<JoinHandle<()>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+}
+
+/// Cheap-to-clone submission handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Request>,
+    admission: Arc<Admission>,
+    pub metrics: Arc<Metrics>,
+    next_id: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the receiver for its response, or an
+    /// immediate rejection.
+    pub fn submit(
+        &self,
+        model: &str,
+        tokens: Vec<i32>,
+    ) -> Result<(RequestId, Receiver<Response>), AdmissionDecision> {
+        match self.admission.try_admit() {
+            AdmissionDecision::Admit => {}
+            other => {
+                self.metrics
+                    .rejected
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                return Err(other);
+            }
+        }
+        self.metrics
+            .admitted
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = RequestId(
+            self.next_id
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        );
+        let (rtx, rrx) = channel();
+        let req = Request {
+            id,
+            model: model.to_string(),
+            tokens,
+            submitted: Instant::now(),
+            reply: rtx,
+        };
+        // channel send can only fail after shutdown; surface as queue-full
+        if self.tx.send(req).is_err() {
+            self.admission.complete();
+            return Err(AdmissionDecision::RejectQueueFull);
+        }
+        Ok((id, rrx))
+    }
+}
+
+impl Server {
+    /// Start batcher + workers.
+    pub fn start(
+        cfg: ServerConfig,
+        manifest: Manifest,
+        router: Router,
+        backend: Arc<dyn Backend>,
+    ) -> Server {
+        let (req_tx, req_rx) = channel::<Request>();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+        let metrics = Arc::new(Metrics::new());
+        let admission = Arc::new(Admission::depth_only(cfg.max_inflight));
+
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let mut threads = Vec::new();
+        // batcher thread
+        {
+            let bcfg = cfg.batcher;
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("s4-batcher".into())
+                    .spawn(move || {
+                        let mut b = DynamicBatcher::with_stop(bcfg, req_rx, stop);
+                        while let Some(batch) = b.next_batch() {
+                            if batch_tx.send(batch).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+        // workers
+        let manifest = Arc::new(manifest);
+        let router = Arc::new(router);
+        for w in 0..cfg.workers.max(1) {
+            let batch_rx = batch_rx.clone();
+            let backend = backend.clone();
+            let manifest = manifest.clone();
+            let router = router.clone();
+            let metrics = metrics.clone();
+            let admission = admission.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("s4-worker{w}"))
+                    .spawn(move || {
+                        loop {
+                            let batch = {
+                                let rx = batch_rx.lock().unwrap();
+                                rx.recv()
+                            };
+                            let Ok(batch) = batch else { break };
+                            serve_batch(&batch, &manifest, &router, &*backend, &metrics);
+                            for _ in 0..batch.len() {
+                                admission.complete();
+                            }
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Server {
+            handle: ServerHandle {
+                tx: req_tx,
+                admission,
+                metrics,
+                next_id: Arc::new(std::sync::atomic::AtomicU64::new(1)),
+            },
+            threads,
+            stop,
+        }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    /// Shut down: signal the batcher (which drains queued work), then join
+    /// all threads. Safe even while cloned handles are still alive.
+    pub fn shutdown(self) {
+        let Server { handle, threads, stop } = self;
+        stop.store(true, std::sync::atomic::Ordering::Release);
+        drop(handle);
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Execute one formed batch: plan placements, pad, run, demux responses.
+fn serve_batch(
+    batch: &Batch,
+    manifest: &Manifest,
+    router: &Router,
+    backend: &dyn Backend,
+    metrics: &Metrics,
+) {
+    let placements = match router.plan(manifest, &batch.model, batch.len()) {
+        Ok(p) => p,
+        Err(e) => {
+            for r in &batch.requests {
+                metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = r.reply.send(Response::error(r.id, format!("routing: {e}")));
+            }
+            return;
+        }
+    };
+    let mut cursor = 0usize;
+    for p in placements {
+        let reqs = &batch.requests[cursor..cursor + p.fill];
+        cursor += p.fill;
+        metrics.record_batch(p.fill, p.batch_capacity);
+        let seq = backend.seq_len(&p.artifact);
+        let classes = backend.classes(&p.artifact);
+        // pack + pad tokens (pad slots repeat the last real sample so the
+        // executable always sees valid token ids)
+        let mut tokens = Vec::with_capacity(p.batch_capacity * seq);
+        for r in reqs {
+            let mut t = r.tokens.clone();
+            t.resize(seq, 0);
+            tokens.extend_from_slice(&t[..seq]);
+        }
+        for _ in reqs.len()..p.batch_capacity {
+            let start = (reqs.len() - 1) * seq;
+            let last: Vec<i32> = tokens[start..start + seq].to_vec();
+            tokens.extend_from_slice(&last);
+        }
+        let exec_start = Instant::now();
+        match backend.run(&p.artifact, p.batch_capacity, &tokens) {
+            Ok(logits) => {
+                for (i, r) in reqs.iter().enumerate() {
+                    let latency = r.submitted.elapsed();
+                    let queue = batch
+                        .formed_at
+                        .saturating_duration_since(r.submitted)
+                        + exec_start.saturating_duration_since(batch.formed_at);
+                    metrics.record_completion(
+                        latency.as_micros() as u64,
+                        queue.as_micros() as u64,
+                    );
+                    let _ = r.reply.send(Response {
+                        id: r.id,
+                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
+                        served_by: p.artifact.clone(),
+                        batch_size: p.batch_capacity,
+                        latency_us: latency.as_micros() as u64,
+                        queue_us: queue.as_micros() as u64,
+                        ok: true,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                for r in reqs {
+                    metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let _ = r.reply.send(Response::error(r.id, format!("backend: {e}")));
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Simulator-paced backend: deterministic logits, service time from the
+/// analytic cost model (scaled down so tests run fast). Lets the full
+/// serving stack be exercised and benchmarked without PJRT artifacts.
+pub struct SimBackend {
+    /// (artifact name, batch, seq, classes, service time)
+    specs: Vec<(String, usize, usize, usize, Duration)>,
+}
+
+impl SimBackend {
+    pub fn from_manifest(m: &Manifest, time_scale: f64) -> SimBackend {
+        use crate::arch::AntoumConfig;
+        use crate::graph::models;
+        use crate::sim::{simulate, Target};
+        let cfg = AntoumConfig::s4();
+        let specs = m
+            .artifacts
+            .iter()
+            .map(|a| {
+                let g = models::by_name(&a.model, a.batch.max(1))
+                    .unwrap_or_else(|_| models::bert(models::BERT_TINY, a.batch.max(1), 128));
+                let r = simulate(&g, Target::antoum(&cfg, a.sparsity.max(1)));
+                let secs = (r.latency_ms / 1e3 * time_scale).max(1e-6);
+                let classes = a.outputs.first().map(|o| o.shape[1]).unwrap_or(2);
+                (a.name.clone(), a.batch, a.seq.max(1), classes, Duration::from_secs_f64(secs))
+            })
+            .collect();
+        SimBackend { specs }
+    }
+
+    fn spec(&self, artifact: &str) -> &(String, usize, usize, usize, Duration) {
+        self.specs
+            .iter()
+            .find(|s| s.0 == artifact)
+            .unwrap_or_else(|| panic!("SimBackend: unknown artifact {artifact}"))
+    }
+}
+
+impl Backend for SimBackend {
+    fn run(&self, artifact: &str, capacity: usize, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+        let (_, _, seq, classes, dt) = self.spec(artifact).clone();
+        anyhow::ensure!(tokens.len() == capacity * seq, "token shape");
+        std::thread::sleep(dt);
+        // deterministic pseudo-logits: hash of each sample's tokens
+        let mut out = Vec::with_capacity(capacity * classes);
+        for b in 0..capacity {
+            let h = tokens[b * seq..(b + 1) * seq]
+                .iter()
+                .fold(0u64, |acc, &t| acc.wrapping_mul(31).wrapping_add(t as u64));
+            for c in 0..classes {
+                out.push(((h >> (c % 16)) & 0xff) as f32 / 255.0);
+            }
+        }
+        Ok(out)
+    }
+
+    fn seq_len(&self, artifact: &str) -> usize {
+        self.spec(artifact).2
+    }
+
+    fn classes(&self, artifact: &str) -> usize {
+        self.spec(artifact).3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = r#"{"artifacts": [
+          {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+           "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 16,
+           "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+           "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+          {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+           "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 16,
+           "inputs": [{"name": "ids", "shape": [8, 16], "dtype": "s32"}],
+           "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+        ]}"#;
+        Manifest::parse(Path::new("/tmp"), text).unwrap()
+    }
+
+    /// Echo backend: instant, logits = [first token, batch size].
+    struct Echo;
+    impl Backend for Echo {
+        fn run(&self, _a: &str, capacity: usize, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
+            let seq = tokens.len() / capacity;
+            Ok((0..capacity)
+                .flat_map(|b| [tokens[b * seq] as f32, capacity as f32])
+                .collect())
+        }
+        fn seq_len(&self, _a: &str) -> usize {
+            16
+        }
+        fn classes(&self, _a: &str) -> usize {
+            2
+        }
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let srv = Server::start(
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+                workers: 1,
+                max_inflight: 16,
+            },
+            manifest(),
+            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
+            Arc::new(Echo),
+        );
+        let h = srv.handle();
+        let (_, rx) = h.submit("bert_tiny", vec![42; 16]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.logits[0], 42.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn batches_fill_under_load() {
+        let srv = Server::start(
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+                workers: 1,
+                max_inflight: 64,
+            },
+            manifest(),
+            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
+            Arc::new(Echo),
+        );
+        let h = srv.handle();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| h.submit("bert_tiny", vec![i; 16]).unwrap().1)
+            .collect();
+        for rx in rxs {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.ok);
+        }
+        // under instant backend + 20ms window, the 16 requests should ride
+        // few batches with strong fill
+        assert!(h.metrics.mean_batch_fill() >= 2.0, "{}", h.metrics.report());
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_errors_cleanly() {
+        let srv = Server::start(
+            ServerConfig::default(),
+            manifest(),
+            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
+            Arc::new(Echo),
+        );
+        let h = srv.handle();
+        let (_, rx) = h.submit("nonexistent", vec![1; 16]).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.unwrap().contains("routing"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn admission_rejects_over_capacity() {
+        // max_inflight 1 with a slow-ish path: second submit may reject
+        let srv = Server::start(
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(50) },
+                workers: 1,
+                max_inflight: 1,
+            },
+            manifest(),
+            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
+            Arc::new(Echo),
+        );
+        let h = srv.handle();
+        let (_, _rx1) = h.submit("bert_tiny", vec![1; 16]).unwrap();
+        // immediately after, capacity is full until the worker drains it
+        let second = h.submit("bert_tiny", vec![2; 16]);
+        if let Err(d) = second {
+            assert_eq!(d, AdmissionDecision::RejectQueueFull);
+        }
+        srv.shutdown();
+    }
+}

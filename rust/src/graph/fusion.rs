@@ -1,0 +1,189 @@
+//! Operator fusion pass — paper §2 item (iii): the SPU natively fuses
+//! "bias addition, elementwise operations, quantization, and certain
+//! activation functions" into conv/matmul.
+//!
+//! The pass rewrites   weighted-op → activation   and
+//! weighted-op → elementwise-add(residual)   chains into the weighted op's
+//! epilogue when the intermediate has exactly one consumer. The simulator
+//! costs fused epilogues at zero extra memory traffic (they happen in the
+//! SPU's output pipeline), which is precisely why fusion matters for the
+//! bandwidth-bound layers.
+
+use super::ir::{Graph, OpId};
+use super::op::{ActFunc, OpKind};
+
+/// Statistics of one fusion run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FusionStats {
+    pub fused_activations: usize,
+    pub fused_residuals: usize,
+    pub ops_before: usize,
+    pub ops_after: usize,
+}
+
+/// Apply fusion, returning the rewritten graph and statistics.
+///
+/// Correctness invariant (checked by property tests): total dense FLOPs of
+/// *weighted* ops are unchanged, and every removed op's work is
+/// representable in an epilogue (activation or 2-ary elementwise).
+pub fn fuse(g: &Graph) -> (Graph, FusionStats) {
+    let consumers = g.consumers();
+    let n = g.ops.len();
+    // ops to delete, and per-surviving-op epilogue edits
+    let mut dead = vec![false; n];
+    let mut fuse_act: Vec<Option<ActFunc>> = vec![None; n];
+    let mut fuse_res = vec![false; n];
+    // where a deleted op's output should be re-read from
+    let mut redirect: Vec<OpId> = (0..n).map(OpId).collect();
+
+    let mut stats = FusionStats { ops_before: n, ..Default::default() };
+
+    for i in 0..n {
+        let op = &g.ops[i];
+        if !op.kind.sparsifiable() || op.fused_act.is_some() {
+            // only fuse into weighted ops without an existing epilogue
+            continue;
+        }
+        // single consumer?
+        if consumers[i].len() != 1 {
+            continue;
+        }
+        let c = consumers[i][0].0;
+        if dead[c] {
+            continue;
+        }
+        match &g.ops[c].kind {
+            OpKind::Activation { func, .. } => {
+                dead[c] = true;
+                fuse_act[i] = Some(*func);
+                redirect[c] = OpId(i);
+                stats.fused_activations += 1;
+            }
+            OpKind::Elementwise { arity: 2, .. } => {
+                // residual add: fuse if the weighted op is one of the two
+                // operands and the add itself feeds ≤1 activation next
+                dead[c] = true;
+                fuse_res[i] = true;
+                redirect[c] = OpId(i);
+                stats.fused_residuals += 1;
+                // chain: add → relu with single consumer also folds in
+                if consumers[c].len() == 1 {
+                    let r = consumers[c][0].0;
+                    if let OpKind::Activation { func, .. } = &g.ops[r].kind {
+                        if !dead[r] && fuse_act[i].is_none() {
+                            dead[r] = true;
+                            fuse_act[i] = Some(*func);
+                            redirect[r] = OpId(i);
+                            stats.fused_activations += 1;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // resolve redirect chains (act fused after residual, etc.)
+    fn resolve(redirect: &[OpId], mut id: OpId) -> OpId {
+        while redirect[id.0] != id {
+            id = redirect[id.0];
+        }
+        id
+    }
+
+    // rebuild compacted graph
+    let mut out = Graph::new(g.name.clone(), g.batch);
+    let mut new_id = vec![OpId(usize::MAX); n];
+    for i in 0..n {
+        if dead[i] {
+            continue;
+        }
+        let op = &g.ops[i];
+        let inputs: Vec<OpId> = op
+            .inputs
+            .iter()
+            .map(|&inp| {
+                let r = resolve(&redirect, inp);
+                new_id[r.0]
+            })
+            .collect();
+        let id = out.add(op.name.clone(), op.kind.clone(), &inputs);
+        let new_op = &mut out.ops[id.0];
+        new_op.fused_act = op.fused_act.or(fuse_act[i]);
+        new_op.fused_bias = op.fused_bias || op.kind.sparsifiable();
+        new_op.fused_residual = op.fused_residual || fuse_res[i];
+        new_id[i] = id;
+    }
+    stats.ops_after = out.ops.len();
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn fuses_resnet_relu_chains() {
+        let g = models::resnet50(1, 224);
+        let (f, stats) = fuse(&g);
+        assert!(stats.fused_activations + stats.fused_residuals > 10);
+        assert!(f.len() < g.len());
+        // weighted work is preserved exactly
+        let wf = |gr: &Graph| -> f64 {
+            gr.ops
+                .iter()
+                .filter(|o| o.kind.sparsifiable())
+                .map(|o| o.kind.flops_dense())
+                .sum()
+        };
+        assert_eq!(wf(&g), wf(&f));
+    }
+
+    #[test]
+    fn fused_graph_still_topo_ordered() {
+        let (f, _) = fuse(&models::resnet50(1, 224));
+        for (i, op) in f.ops.iter().enumerate() {
+            for inp in &op.inputs {
+                assert!(inp.0 < i, "op {i} reads future op {}", inp.0);
+            }
+        }
+    }
+
+    #[test]
+    fn bert_gelu_prefused_not_double_counted() {
+        // bert builder already fuses GELU into ffn_up; pass must not
+        // change weighted-op count
+        let g = models::bert(models::BERT_TINY, 1, 128);
+        let (f, _) = fuse(&g);
+        let count = |gr: &Graph| gr.ops.iter().filter(|o| o.kind.sparsifiable()).count();
+        assert_eq!(count(&g), count(&f));
+    }
+
+    #[test]
+    fn fusion_idempotent() {
+        let g = models::resnet50(1, 224);
+        let (f1, _) = fuse(&g);
+        let (f2, s2) = fuse(&f1);
+        assert_eq!(f1.len(), f2.len());
+        assert_eq!(s2.fused_activations + s2.fused_residuals, 0);
+    }
+
+    #[test]
+    fn multi_consumer_not_fused() {
+        use crate::graph::op::OpKind;
+        let mut g = Graph::new("t", 1);
+        let a = g.add("mm", OpKind::MatMul { m: 32, k: 32, n: 32 }, &[]);
+        let r = g.add("relu", OpKind::Activation { elems: 1024, func: ActFunc::Relu }, &[a]);
+        // relu consumed twice → the MATMUL's consumer (relu) is single, so
+        // relu fuses; but `a` consumed twice must never fuse
+        g.add("u1", OpKind::MatMul { m: 32, k: 32, n: 32 }, &[r]);
+        g.add("u2", OpKind::MatMul { m: 32, k: 32, n: 32 }, &[r]);
+        let (f, stats) = fuse(&g);
+        assert_eq!(stats.fused_activations, 1);
+        assert_eq!(f.len(), 3);
+        // both consumers now read the fused matmul
+        assert_eq!(f.ops[1].inputs, vec![OpId(0)]);
+        assert_eq!(f.ops[2].inputs, vec![OpId(0)]);
+    }
+}

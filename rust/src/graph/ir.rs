@@ -1,0 +1,187 @@
+//! Graph container: append-only DAG with topological order by construction,
+//! plus whole-graph work accounting (the numbers Fig. 2/3 are computed
+//! from).
+
+use super::op::{ActFunc, Op, OpKind};
+use crate::sparse::tensor::DType;
+
+/// Index of an op within its graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct OpId(pub usize);
+
+/// A model as a DAG of ops. Ops are stored in topological order (builders
+/// may only reference already-added ops — enforced at `add`).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub batch: usize,
+    pub ops: Vec<Op>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>, batch: usize) -> Graph {
+        Graph { name: name.into(), batch, ops: Vec::new() }
+    }
+
+    /// Append an op; inputs must already exist (keeps ops topo-sorted).
+    pub fn add(&mut self, name: impl Into<String>, kind: OpKind, inputs: &[OpId]) -> OpId {
+        for &OpId(i) in inputs {
+            assert!(i < self.ops.len(), "input {i} not yet defined (topo order)");
+        }
+        self.ops.push(Op {
+            name: name.into(),
+            kind,
+            inputs: inputs.to_vec(),
+            fused_act: None,
+            fused_bias: false,
+            fused_residual: false,
+        });
+        OpId(self.ops.len() - 1)
+    }
+
+    /// Append a weighted op with a fused activation epilogue.
+    pub fn add_fused(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: &[OpId],
+        act: Option<ActFunc>,
+    ) -> OpId {
+        let id = self.add(name, kind, inputs);
+        let op = &mut self.ops[id.0];
+        op.fused_act = act;
+        op.fused_bias = true;
+        id
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Consumers of each op (adjacency reversed), for scheduling.
+    pub fn consumers(&self) -> Vec<Vec<OpId>> {
+        let mut out = vec![Vec::new(); self.ops.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            for &inp in &op.inputs {
+                out[inp.0].push(OpId(i));
+            }
+        }
+        out
+    }
+
+    // ------------------------- accounting ------------------------------
+
+    /// Total dense FLOPs of one forward pass.
+    pub fn flops_dense(&self) -> f64 {
+        self.ops.iter().map(|o| o.kind.flops_dense()).sum()
+    }
+
+    /// Total FLOPs executed at SPU sparsity `s`.
+    pub fn flops_at(&self, s: usize) -> f64 {
+        self.ops.iter().map(|o| o.kind.flops_at(s)).sum()
+    }
+
+    /// Fraction of dense FLOPs in sparsifiable (weighted) ops — the
+    /// Amdahl knob that separates ResNet's near-linear Fig. 2 curve from
+    /// BERT's sublinear one.
+    pub fn sparsifiable_fraction(&self) -> f64 {
+        let sp: f64 = self
+            .ops
+            .iter()
+            .filter(|o| o.kind.sparsifiable())
+            .map(|o| o.kind.flops_dense())
+            .sum();
+        sp / self.flops_dense()
+    }
+
+    /// Dense parameter count.
+    pub fn params(&self) -> usize {
+        self.ops.iter().map(|o| o.kind.params()).sum()
+    }
+
+    /// Total weight bytes streamed per pass at (sparsity, dtype).
+    pub fn weight_bytes(&self, s: usize, dt: DType) -> usize {
+        self.ops.iter().map(|o| o.kind.weight_bytes(s, dt)).sum()
+    }
+
+    /// Total activation traffic (in+out) per pass at dtype.
+    pub fn activation_bytes(&self, dt: DType) -> usize {
+        self.ops
+            .iter()
+            .map(|o| o.kind.input_bytes(dt) + o.kind.output_bytes(dt))
+            .sum()
+    }
+
+    /// Ideal speedup at sparsity `s` if compute were the only limit
+    /// (upper bound the simulator's Fig. 2 curve must stay under).
+    pub fn amdahl_speedup(&self, s: usize) -> f64 {
+        self.flops_dense() / self.flops_at(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut g = Graph::new("tiny", 1);
+        let a = g.add("mm1", OpKind::MatMul { m: 128, k: 256, n: 256 }, &[]);
+        let b = g.add("act", OpKind::Activation { elems: 128 * 256, func: ActFunc::Gelu }, &[a]);
+        g.add("mm2", OpKind::MatMul { m: 128, k: 256, n: 128 }, &[b]);
+        g
+    }
+
+    #[test]
+    fn topo_order_enforced() {
+        let g = tiny();
+        assert_eq!(g.len(), 3);
+        for (i, op) in g.ops.iter().enumerate() {
+            for inp in &op.inputs {
+                assert!(inp.0 < i);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not yet defined")]
+    fn forward_reference_panics() {
+        let mut g = Graph::new("bad", 1);
+        g.add("x", OpKind::MatMul { m: 1, k: 32, n: 32 }, &[OpId(5)]);
+    }
+
+    #[test]
+    fn consumers_reverse_edges() {
+        let g = tiny();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![OpId(1)]);
+        assert_eq!(cons[1], vec![OpId(2)]);
+        assert!(cons[2].is_empty());
+    }
+
+    #[test]
+    fn amdahl_bounds() {
+        let g = tiny();
+        let sp = g.sparsifiable_fraction();
+        assert!(sp > 0.99, "matmul-dominated: {sp}"); // activation is tiny
+        let a32 = g.amdahl_speedup(32);
+        assert!(a32 > 20.0 && a32 <= 32.0, "a32={a32}");
+        assert!(g.amdahl_speedup(1) == 1.0);
+    }
+
+    #[test]
+    fn accounting_sums() {
+        let g = tiny();
+        assert_eq!(g.params(), 256 * 256 + 256 + 256 * 128 + 128);
+        assert!(g.flops_dense() > 0.0);
+        assert!(g.weight_bytes(8, DType::Bf16) < g.weight_bytes(1, DType::Bf16));
+        assert!(g.activation_bytes(DType::Bf16) > 0);
+    }
+}

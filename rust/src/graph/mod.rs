@@ -1,0 +1,19 @@
+//! Op-graph IR with per-op work accounting.
+//!
+//! The simulator does not execute tensors; it executes *workloads*. This IR
+//! describes a model as a DAG of ops, each knowing its FLOPs, parameter
+//! count, weight bytes at a given (sparsity, dtype), and activation bytes —
+//! everything the Antoum engine models and the T4 roofline need.
+//!
+//! `models` builds the paper's four benchmark networks (ResNet-50/152,
+//! BERT-base/large) at full fidelity (layer counts, channel widths,
+//! attention shapes), cross-checked against published FLOP/param counts in
+//! unit tests.
+
+pub mod fusion;
+pub mod ir;
+pub mod models;
+pub mod op;
+
+pub use ir::{Graph, OpId};
+pub use op::{ActFunc, Op, OpKind};

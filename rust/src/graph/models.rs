@@ -1,0 +1,307 @@
+//! Builders for the paper's benchmark networks.
+//!
+//! Full-fidelity workload graphs (layer counts, widths, attention shapes)
+//! for ResNet-50/152 and BERT-base/large — the four models of Fig. 2/3 —
+//! plus the tiny variants matching the executable AOT artifacts.
+//! FLOP/param totals are asserted against published numbers in tests.
+
+use super::ir::{Graph, OpId};
+use super::op::{ActFunc, OpKind};
+
+// ------------------------------ ResNet ------------------------------------
+
+/// Bottleneck stage spec: (blocks, mid channels, out channels, first stride).
+const RESNET_STAGES: [(usize, usize, usize, usize); 4] = [
+    (3, 64, 256, 1),
+    (4, 128, 512, 2),
+    (6, 256, 1024, 2),
+    (36, 512, 2048, 2), // blocks field overridden per variant
+];
+
+fn conv(
+    g: &mut Graph,
+    name: String,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    input: &[OpId],
+    act: Option<ActFunc>,
+) -> (OpId, usize, usize) {
+    let kind = OpKind::Conv2d { h, w, cin, cout, kh: k, kw: k, stride, batch: g.batch };
+    let (ho, wo) = kind.conv_out_hw().unwrap();
+    let id = g.add_fused(name, kind, input, act);
+    (id, ho, wo)
+}
+
+fn resnet(name: &str, blocks_per_stage: [usize; 4], batch: usize, image: usize) -> Graph {
+    let mut g = Graph::new(name, batch);
+    // stem: 7x7/2 conv + 3x3/2 maxpool
+    let (stem, mut h, mut w) =
+        conv(&mut g, "stem".into(), image, image, 3, 64, 7, 2, &[], Some(ActFunc::Relu));
+    let pool = g.add(
+        "maxpool",
+        OpKind::Pool { elems_in: batch * h * w * 64, window: 4 },
+        &[stem],
+    );
+    h /= 2;
+    w /= 2;
+    let mut prev = pool;
+    let mut cin = 64usize;
+    for (si, &(_, mid, cout, stride0)) in RESNET_STAGES.iter().enumerate() {
+        let blocks = blocks_per_stage[si];
+        for b in 0..blocks {
+            let stride = if b == 0 { stride0 } else { 1 };
+            let tag = format!("s{}b{}", si + 1, b);
+            // projection shortcut on the first block of each stage
+            let shortcut = if b == 0 {
+                let (sc, _, _) = conv(
+                    &mut g,
+                    format!("{tag}.down"),
+                    h, w, cin, cout, 1, stride,
+                    &[prev],
+                    None,
+                );
+                sc
+            } else {
+                prev
+            };
+            let (c1, h1, w1) = conv(
+                &mut g, format!("{tag}.c1"), h, w, cin, mid, 1, 1, &[prev],
+                Some(ActFunc::Relu),
+            );
+            let (c2, h2, w2) = conv(
+                &mut g, format!("{tag}.c2"), h1, w1, mid, mid, 3, stride, &[c1],
+                Some(ActFunc::Relu),
+            );
+            let (c3, h3, w3) = conv(
+                &mut g, format!("{tag}.c3"), h2, w2, mid, cout, 1, 1, &[c2], None,
+            );
+            // residual add + relu (VPU elementwise)
+            let add = g.add(
+                format!("{tag}.add"),
+                OpKind::Elementwise { elems: batch * h3 * w3 * cout, arity: 2 },
+                &[c3, shortcut],
+            );
+            prev = g.add(
+                format!("{tag}.relu"),
+                OpKind::Activation { elems: batch * h3 * w3 * cout, func: ActFunc::Relu },
+                &[add],
+            );
+            h = h3;
+            w = w3;
+            cin = cout;
+        }
+    }
+    let gap = g.add(
+        "avgpool",
+        OpKind::Pool { elems_in: batch * h * w * cin, window: h * w },
+        &[prev],
+    );
+    g.add("fc", OpKind::MatMul { m: batch, k: cin, n: 1000 }, &[gap]);
+    g
+}
+
+/// ResNet-50 at `image`² input (paper Fig. 2/3 uses 224).
+pub fn resnet50(batch: usize, image: usize) -> Graph {
+    resnet("resnet50", [3, 4, 6, 3], batch, image)
+}
+
+/// ResNet-152.
+pub fn resnet152(batch: usize, image: usize) -> Graph {
+    resnet("resnet152", [3, 8, 36, 3], batch, image)
+}
+
+// ------------------------------- BERT -------------------------------------
+
+/// Transformer encoder spec (mirrors python `compile/model.py` configs).
+#[derive(Clone, Copy, Debug)]
+pub struct BertSpec {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+}
+
+pub const BERT_TINY: BertSpec =
+    BertSpec { name: "bert_tiny", vocab: 1024, hidden: 128, layers: 2, heads: 2, ffn: 512 };
+pub const BERT_MINI: BertSpec =
+    BertSpec { name: "bert_mini", vocab: 2048, hidden: 256, layers: 4, heads: 4, ffn: 1024 };
+pub const BERT_BASE: BertSpec = BertSpec {
+    name: "bert_base", vocab: 30522, hidden: 768, layers: 12, heads: 12, ffn: 3072,
+};
+pub const BERT_LARGE: BertSpec = BertSpec {
+    name: "bert_large", vocab: 30522, hidden: 1024, layers: 24, heads: 16, ffn: 4096,
+};
+
+/// Build a BERT encoder graph at (batch, seq).
+pub fn bert(spec: BertSpec, batch: usize, seq: usize) -> Graph {
+    let mut g = Graph::new(spec.name, batch);
+    let (h, f) = (spec.hidden, spec.ffn);
+    let m = batch * seq;
+    let hd = h / spec.heads;
+    let emb = g.add(
+        "embed",
+        OpKind::Embed { tokens: m, dim: h, vocab: spec.vocab },
+        &[],
+    );
+    let mut x = emb;
+    for l in 0..spec.layers {
+        let t = format!("l{l}");
+        let q = g.add_fused(format!("{t}.q"), OpKind::MatMul { m, k: h, n: h }, &[x], None);
+        let k = g.add_fused(format!("{t}.k"), OpKind::MatMul { m, k: h, n: h }, &[x], None);
+        let v = g.add_fused(format!("{t}.v"), OpKind::MatMul { m, k: h, n: h }, &[x], None);
+        // heads live in the batch dim of the activation matmuls
+        let qk = g.add(
+            format!("{t}.qk"),
+            OpKind::BatchMatMul { b: batch * spec.heads, m: seq, k: hd, n: seq },
+            &[q, k],
+        );
+        let sm = g.add(
+            format!("{t}.softmax"),
+            OpKind::Softmax { rows: batch * spec.heads * seq, cols: seq },
+            &[qk],
+        );
+        let pv = g.add(
+            format!("{t}.pv"),
+            OpKind::BatchMatMul { b: batch * spec.heads, m: seq, k: seq, n: hd },
+            &[sm, v],
+        );
+        let o = g.add_fused(format!("{t}.o"), OpKind::MatMul { m, k: h, n: h }, &[pv], None);
+        let r1 = g.add(
+            format!("{t}.res1"),
+            OpKind::Elementwise { elems: m * h, arity: 2 },
+            &[x, o],
+        );
+        let ln1 = g.add(
+            format!("{t}.ln1"),
+            OpKind::LayerNorm { rows: m, cols: h },
+            &[r1],
+        );
+        let up = g.add_fused(
+            format!("{t}.ffn_up"),
+            OpKind::MatMul { m, k: h, n: f },
+            &[ln1],
+            Some(ActFunc::Gelu),
+        );
+        let down = g.add_fused(
+            format!("{t}.ffn_down"),
+            OpKind::MatMul { m, k: f, n: h },
+            &[up],
+            None,
+        );
+        let r2 = g.add(
+            format!("{t}.res2"),
+            OpKind::Elementwise { elems: m * h, arity: 2 },
+            &[ln1, down],
+        );
+        x = g.add(format!("{t}.ln2"), OpKind::LayerNorm { rows: m, cols: h }, &[r2]);
+    }
+    g.add("cls", OpKind::MatMul { m: batch, k: h, n: 2 }, &[x]);
+    g
+}
+
+/// Graph lookup by name — CLI / bench entry point.
+pub fn by_name(name: &str, batch: usize) -> anyhow::Result<Graph> {
+    Ok(match name {
+        "resnet50" => resnet50(batch, 224),
+        "resnet152" => resnet152(batch, 224),
+        "bert_tiny" => bert(BERT_TINY, batch, 128),
+        "bert_mini" => bert(BERT_MINI, batch, 128),
+        "bert_base" => bert(BERT_BASE, batch, 128),
+        "bert_large" => bert(BERT_LARGE, batch, 128),
+        other => anyhow::bail!(
+            "unknown model {other:?} (have: resnet50, resnet152, bert_tiny, \
+             bert_mini, bert_base, bert_large)"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_flops_and_params_match_published() {
+        let g = resnet50(1, 224);
+        let gf = g.flops_dense() / 1e9;
+        // published: ~4.1 GMACs ⇒ ~8.2 GFLOPs (2/MAC); tolerate ±15%
+        assert!((7.0..9.5).contains(&gf), "resnet50 GFLOPs={gf}");
+        let p = g.params() as f64 / 1e6;
+        assert!((23.0..28.0).contains(&p), "resnet50 Mparams={p}");
+    }
+
+    #[test]
+    fn resnet152_roughly_3x_resnet50() {
+        let g50 = resnet50(1, 224);
+        let g152 = resnet152(1, 224);
+        let ratio = g152.flops_dense() / g50.flops_dense();
+        assert!((2.5..3.2).contains(&ratio), "ratio={ratio}");
+        let p = g152.params() as f64 / 1e6;
+        assert!((55.0..65.0).contains(&p), "resnet152 Mparams={p}");
+    }
+
+    #[test]
+    fn bert_base_params_match_published() {
+        let g = bert(BERT_BASE, 1, 128);
+        let p = g.params() as f64 / 1e6;
+        // 110M total (85.6M encoder + 23.4M embed + heads)
+        assert!((105.0..115.0).contains(&p), "bert_base Mparams={p}");
+    }
+
+    #[test]
+    fn bert_base_flops_seq128() {
+        let g = bert(BERT_BASE, 1, 128);
+        let gf = g.flops_dense() / 1e9;
+        // ≈ 2·85.6M·128 + attention ≈ 22.6 GFLOPs
+        assert!((19.0..26.0).contains(&gf), "bert_base GFLOPs={gf}");
+    }
+
+    #[test]
+    fn bert_large_vs_base() {
+        let b = bert(BERT_BASE, 1, 128);
+        let l = bert(BERT_LARGE, 1, 128);
+        let r = l.flops_dense() / b.flops_dense();
+        assert!((3.0..4.0).contains(&r), "large/base flops ratio={r}");
+        assert!((l.params() as f64 / 1e6) > 320.0);
+    }
+
+    #[test]
+    fn resnet_more_sparsifiable_than_bert() {
+        // the paper's Fig. 2 asymmetry: ResNet ≈ all conv; BERT has big
+        // attention+LN+softmax tails.
+        let r = resnet50(1, 224).sparsifiable_fraction();
+        let b = bert(BERT_BASE, 1, 128).sparsifiable_fraction();
+        assert!(r > 0.99, "resnet sparsifiable={r}");
+        assert!(b < 0.98, "bert sparsifiable={b}");
+        assert!(r > b);
+    }
+
+    #[test]
+    fn batch_scales_flops_linearly() {
+        let a = resnet50(1, 224).flops_dense();
+        let b = resnet50(8, 224).flops_dense();
+        assert!((b / a - 8.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["resnet50", "resnet152", "bert_base", "bert_large", "bert_tiny"] {
+            assert_eq!(by_name(n, 2).unwrap().batch, 2);
+        }
+        assert!(by_name("vgg", 1).is_err());
+    }
+
+    #[test]
+    fn graphs_are_connected_chains() {
+        // every op except sources must have at least one input
+        for g in [resnet50(1, 224), bert(BERT_TINY, 1, 128)] {
+            let sources = g.ops.iter().filter(|o| o.inputs.is_empty()).count();
+            assert!(sources <= 2, "{}: {} sources", g.name, sources);
+        }
+    }
+}

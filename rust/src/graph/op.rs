@@ -1,0 +1,258 @@
+//! Op kinds and their work accounting.
+
+use crate::sparse::format::BLOCK;
+use crate::sparse::tensor::DType;
+
+/// Activation functions (the activation engine's op set + None).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActFunc {
+    Relu,
+    Gelu,
+    Exp,
+    Log,
+    Reciprocal,
+    Sigmoid,
+    Tanh,
+}
+
+/// The op vocabulary. Every shape is *per forward pass* at the graph's
+/// batch size (builders bake the batch in).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Weighted conv (SPU, sparsifiable). Input spatial h×w, NHWC.
+    Conv2d {
+        h: usize,
+        w: usize,
+        cin: usize,
+        cout: usize,
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        batch: usize,
+    },
+    /// Weighted matmul `[m,k]@[k,n]` (SPU, sparsifiable). `m` includes batch.
+    MatMul { m: usize, k: usize, n: usize },
+    /// Activation×activation batched matmul (SPU, dense — no weights).
+    BatchMatMul { b: usize, m: usize, k: usize, n: usize },
+    /// Softmax over `rows` rows of `cols` (activation engine + VPU).
+    Softmax { rows: usize, cols: usize },
+    /// LayerNorm over `rows` rows of `cols` (VPU + activation engine rsqrt).
+    LayerNorm { rows: usize, cols: usize },
+    /// Standalone elementwise activation (activation engine).
+    Activation { elems: usize, func: ActFunc },
+    /// Elementwise arithmetic of `arity` inputs (VPU): residual adds etc.
+    Elementwise { elems: usize, arity: usize },
+    /// Pooling window reduce (VPU).
+    Pool { elems_in: usize, window: usize },
+    /// Embedding gather (embedding-lookup engine).
+    Embed { tokens: usize, dim: usize, vocab: usize },
+    /// Layout change (memory-reshape engine): pure data movement.
+    Reshape { bytes: usize },
+}
+
+/// A node in the graph.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<super::ir::OpId>,
+    /// Epilogue fused into a Conv2d/MatMul by the fusion pass (paper §2
+    /// item iii: "fused ... bias addition, elementwise, activation").
+    pub fused_act: Option<ActFunc>,
+    pub fused_bias: bool,
+    pub fused_residual: bool,
+}
+
+impl OpKind {
+    /// Is this a weighted op the SPU can exploit sparsity on?
+    pub fn sparsifiable(&self) -> bool {
+        matches!(self, OpKind::Conv2d { .. } | OpKind::MatMul { .. })
+    }
+
+    /// Output spatial dims of a conv.
+    pub fn conv_out_hw(&self) -> Option<(usize, usize)> {
+        match *self {
+            OpKind::Conv2d { h, w, kh, kw, stride, .. } => {
+                let pad = kh / 2; // builders use same-ish padding
+                Some((
+                    (h + 2 * pad - kh) / stride + 1,
+                    (w + 2 * pad - kw) / stride + 1,
+                ))
+            }
+            _ => None,
+        }
+    }
+
+    /// Dense FLOPs (mul+add = 2 FLOPs per MAC).
+    pub fn flops_dense(&self) -> f64 {
+        match *self {
+            OpKind::Conv2d { cin, cout, kh, kw, batch, .. } => {
+                let (ho, wo) = self.conv_out_hw().unwrap();
+                2.0 * (batch * ho * wo * cout) as f64 * (kh * kw * cin) as f64
+            }
+            OpKind::MatMul { m, k, n } => 2.0 * m as f64 * k as f64 * n as f64,
+            OpKind::BatchMatMul { b, m, k, n } => {
+                2.0 * b as f64 * m as f64 * k as f64 * n as f64
+            }
+            // softmax: max, sub, exp, sum, div ≈ 5 passes
+            OpKind::Softmax { rows, cols } => 5.0 * (rows * cols) as f64,
+            // mean, var, normalize, scale+shift ≈ 6 passes
+            OpKind::LayerNorm { rows, cols } => 6.0 * (rows * cols) as f64,
+            OpKind::Activation { elems, .. } => elems as f64,
+            OpKind::Elementwise { elems, arity } => (elems * arity) as f64,
+            OpKind::Pool { elems_in, .. } => elems_in as f64,
+            OpKind::Embed { tokens, dim, .. } => (tokens * dim) as f64,
+            OpKind::Reshape { .. } => 0.0,
+        }
+    }
+
+    /// FLOPs actually executed at SPU sparsity factor `s` (weighted ops
+    /// scale 1/s; everything else is unchanged — the Amdahl term behind
+    /// BERT's sublinear Fig. 2 curve).
+    pub fn flops_at(&self, s: usize) -> f64 {
+        if self.sparsifiable() {
+            self.flops_dense() / s as f64
+        } else {
+            self.flops_dense()
+        }
+    }
+
+    /// Dense parameter count (weights only; biases folded in as +n).
+    pub fn params(&self) -> usize {
+        match *self {
+            OpKind::Conv2d { cin, cout, kh, kw, .. } => kh * kw * cin * cout + cout,
+            OpKind::MatMul { k, n, .. } => k * n + n,
+            OpKind::Embed { dim, vocab, .. } => vocab * dim,
+            OpKind::LayerNorm { cols, .. } => 2 * cols,
+            _ => 0,
+        }
+    }
+
+    /// Weight bytes *streamed per pass* at sparsity `s` and dtype `dt`
+    /// (block-balanced encoding: values + u8 offsets for sparsifiable ops;
+    /// dense layout otherwise). Embedding tables are NOT streamed — the
+    /// lookup engine reads only the requested rows (counted as DRAM
+    /// traffic in `arch::engines::lookup_dram_bytes`); their residency is
+    /// in `storage_bytes`.
+    pub fn weight_bytes(&self, s: usize, dt: DType) -> usize {
+        if matches!(self, OpKind::Embed { .. }) {
+            return 0;
+        }
+        let p = self.params();
+        if p == 0 {
+            return 0;
+        }
+        if self.sparsifiable() && s > 1 {
+            // block-balanced encoding: kept values + u8 in-block offsets;
+            // per-block headers are amortized below 1% and ignored.
+            let kept = p / s;
+            let _ = BLOCK; // format constant documented via sparse::format
+            kept * dt.bytes() + kept
+        } else {
+            p * dt.bytes()
+        }
+    }
+
+    /// DRAM-resident weight storage at (s, dt) — includes embedding tables
+    /// (capacity planning, `arch::memory::DramModel::fits`).
+    pub fn storage_bytes(&self, s: usize, dt: DType) -> usize {
+        if let OpKind::Embed { dim, vocab, .. } = *self {
+            return vocab * dim * dt.bytes();
+        }
+        self.weight_bytes(s, dt)
+    }
+
+    /// Activation bytes read per pass at dtype `dt`.
+    pub fn input_bytes(&self, dt: DType) -> usize {
+        let elems = match *self {
+            OpKind::Conv2d { h, w, cin, batch, .. } => batch * h * w * cin,
+            OpKind::MatMul { m, k, .. } => m * k,
+            OpKind::BatchMatMul { b, m, k, n } => b * (m * k + k * n),
+            OpKind::Softmax { rows, cols } | OpKind::LayerNorm { rows, cols } => {
+                rows * cols
+            }
+            OpKind::Activation { elems, .. } => elems,
+            OpKind::Elementwise { elems, arity } => elems * arity,
+            OpKind::Pool { elems_in, .. } => elems_in,
+            OpKind::Embed { tokens, .. } => tokens, // indices (4B each, but dt ok)
+            OpKind::Reshape { bytes } => return bytes,
+        };
+        elems * dt.bytes()
+    }
+
+    /// Activation bytes written per pass at dtype `dt`.
+    pub fn output_bytes(&self, dt: DType) -> usize {
+        let elems = match *self {
+            OpKind::Conv2d { cout, batch, .. } => {
+                let (ho, wo) = self.conv_out_hw().unwrap();
+                batch * ho * wo * cout
+            }
+            OpKind::MatMul { m, n, .. } => m * n,
+            OpKind::BatchMatMul { b, m, n, .. } => b * m * n,
+            OpKind::Softmax { rows, cols } | OpKind::LayerNorm { rows, cols } => {
+                rows * cols
+            }
+            OpKind::Activation { elems, .. } => elems,
+            OpKind::Elementwise { elems, .. } => elems,
+            OpKind::Pool { elems_in, window } => elems_in / window.max(1),
+            OpKind::Embed { tokens, dim, .. } => tokens * dim,
+            OpKind::Reshape { bytes } => return bytes,
+        };
+        elems * dt.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_resnet_stem() {
+        // ResNet stem: 7x7/2, 3→64 on 224² ≈ 236 MFLOPs·... known value:
+        // 2 * 112*112*64 * 7*7*3 = 236 MFLOPs (per image)
+        let k = OpKind::Conv2d {
+            h: 224, w: 224, cin: 3, cout: 64, kh: 7, kw: 7, stride: 2, batch: 1,
+        };
+        let f = k.flops_dense();
+        assert!((f - 2.0 * 112.0 * 112.0 * 64.0 * 147.0).abs() / f < 1e-9);
+    }
+
+    #[test]
+    fn sparsity_scales_weighted_ops_only() {
+        let mm = OpKind::MatMul { m: 128, k: 768, n: 768 };
+        assert_eq!(mm.flops_at(8), mm.flops_dense() / 8.0);
+        let sm = OpKind::Softmax { rows: 128, cols: 128 };
+        assert_eq!(sm.flops_at(8), sm.flops_dense());
+    }
+
+    #[test]
+    fn weight_bytes_shrink_with_sparsity() {
+        let mm = OpKind::MatMul { m: 128, k: 1024, n: 1024 };
+        let d = mm.weight_bytes(1, DType::Bf16);
+        let s8 = mm.weight_bytes(8, DType::Bf16);
+        let s32 = mm.weight_bytes(32, DType::Bf16);
+        assert!(s8 < d / 5, "s8={s8} d={d}");
+        assert!(s32 < s8, "s32={s32}");
+    }
+
+    #[test]
+    fn embed_not_sparsified() {
+        let e = OpKind::Embed { tokens: 128, dim: 768, vocab: 30522 };
+        assert!(!e.sparsifiable());
+        assert_eq!(e.weight_bytes(8, DType::Bf16), e.weight_bytes(1, DType::Bf16));
+    }
+
+    #[test]
+    fn matmul_params_includes_bias() {
+        let mm = OpKind::MatMul { m: 1, k: 10, n: 20 };
+        assert_eq!(mm.params(), 10 * 20 + 20);
+    }
+
+    #[test]
+    fn reshape_moves_bytes_computes_nothing() {
+        let r = OpKind::Reshape { bytes: 4096 };
+        assert_eq!(r.flops_dense(), 0.0);
+        assert_eq!(r.input_bytes(DType::Bf16), 4096);
+        assert_eq!(r.output_bytes(DType::Bf16), 4096);
+    }
+}

@@ -1,0 +1,55 @@
+//! # s4 — High-sparsity AI accelerator stack (S4/Antoum reproduction)
+//!
+//! Reproduction of *"S4: a High-sparsity, High-performance AI Accelerator"*
+//! (Yen, Xiao, Xu — Moffett AI, 2022): the Antoum chip model, the SparseRT
+//! serving runtime, the sparse-tensor substrate, and the evaluation harness
+//! that regenerates every table and figure in the paper on a simulated
+//! testbed (the silicon itself is the one thing we cannot ship).
+//!
+//! ## Layer map
+//!
+//! * [`sparse`] — block-balanced sparse tensor formats, pruning, and
+//!   reference sparse ops (the numerics the simulator is validated against).
+//! * [`graph`] — an op-graph IR with per-op FLOPs/bytes accounting plus
+//!   builders for the paper's benchmark models (ResNet-50/152,
+//!   BERT-base/large).
+//! * [`arch`] — the Antoum SoC model: SPUs (up to 32× sparse speedup), VPU,
+//!   activation engine, embedding-lookup / memory-reshape units, video &
+//!   JPEG codecs, LPDDR4 memory system, and the 4-subsystem ring NoC, glued
+//!   together by a discrete-event simulation core.
+//! * [`sim`] — maps graphs onto the chip, schedules them, and produces
+//!   latency/throughput/energy reports; includes the Nvidia T4 dense
+//!   baseline the paper compares against.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` (AOT-lowered
+//!   JAX models whose matmuls/convs run the Pallas sparse kernel) and
+//!   executes them on the CPU client. Python never runs at serve time.
+//! * [`coordinator`] — the SparseRT serving layer: request router, dynamic
+//!   batcher, admission control, worker pool, metrics.
+//! * [`util`] — in-repo substrates this environment lacks crates for:
+//!   JSON, deterministic RNG, stats, CLI parsing, a bench harness, and a
+//!   mini property-testing runner.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use s4::arch::AntoumConfig;
+//! use s4::graph::models;
+//! use s4::sim::{simulate, Target};
+//!
+//! let chip = AntoumConfig::s4();
+//! let g = models::resnet50(1, 224);
+//! let r = simulate(&g, Target::antoum(&chip, 8)); // sparsity 8x
+//! println!("latency: {:.3} ms, throughput: {:.0} img/s",
+//!          r.latency_ms, r.throughput);
+//! ```
+
+pub mod arch;
+pub mod coordinator;
+pub mod graph;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed).
+pub type Result<T> = anyhow::Result<T>;

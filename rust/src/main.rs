@@ -1,0 +1,200 @@
+//! `s4` CLI — the SparseRT command-line front end.
+//!
+//! Subcommands:
+//! * `chip-info`                         — print the Antoum configuration and derived numbers
+//! * `simulate --model M [--sparsity S]` — one simulation, with engine breakdown
+//! * `sweep`                             — Fig. 2 (speedup vs sparsity + T4 reference)
+//! * `serve`                             — run the serving stack on the AOT artifacts
+//! * `residency --model M`               — memory-capacity report
+//!
+//! The richer experiment drivers live in `examples/` (quickstart,
+//! serve_bert, sparsity_sweep, accuracy_frontier, video_pipeline).
+
+use s4::arch::AntoumConfig;
+use s4::graph::models;
+use s4::sim::{report, simulate, Target};
+use s4::sparse::tensor::DType;
+use s4::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "chip-info" => chip_info(),
+        "simulate" => cmd_simulate(args),
+        "sweep" => cmd_sweep(args),
+        "residency" => cmd_residency(args),
+        "serve" => cmd_serve(args),
+        "help" | _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "s4 — SparseRT: high-sparsity accelerator stack (S4/Antoum reproduction)\n\
+         \n\
+         USAGE: s4 <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+           chip-info                          chip parameters + derived TOPS\n\
+           simulate  --model M [--sparsity S] [--batch B] [--event]\n\
+           sweep     [--batch B] [--models resnet50,bert_base]\n\
+           residency --model M [--sparsity S]\n\
+           serve     [--requests N] [--rate R] [--policy max|dense|fixed:S]\n\
+           help\n\
+         \n\
+         MODELS: resnet50 resnet152 bert_tiny bert_mini bert_base bert_large"
+    );
+}
+
+fn chip_info() -> anyhow::Result<()> {
+    let c = AntoumConfig::s4();
+    c.validate()?;
+    println!("chip: {}", c.name);
+    println!("  subsystems:        {}", c.subsystems);
+    println!("  clock:             {:.2} GHz", c.clock_ghz);
+    println!(
+        "  INT8 dense:        {:.1} TOPS  (sparse-equivalent @32x: {:.0} TOPS)",
+        c.equivalent_tops(DType::Int8, 1),
+        c.equivalent_tops(DType::Int8, 32)
+    );
+    println!(
+        "  BF16 dense:        {:.1} TFLOPS (sparse-equivalent @32x: {:.0} TFLOPS)",
+        c.equivalent_tops(DType::Bf16, 1),
+        c.equivalent_tops(DType::Bf16, 32)
+    );
+    println!("  LPDDR4:            {} GB @ {} GB/s", c.dram_bytes >> 30, c.dram_gbps);
+    println!("  ring NoC:          {} nodes, {} GB/s/link", c.subsystems, c.noc_link_gbps);
+    println!("  video decode:      {}x 1080p30", c.video_streams_1080p30);
+    println!("  JPEG decode:       {} FPS @1080p", c.jpeg_fps_1080p);
+    println!("  TDP:               {} W", c.tdp_w);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "bert_base").to_string();
+    let sparsity = args.get_usize("sparsity", 8)?;
+    let batch = args.get_usize("batch", 8)?;
+    let g = models::by_name(&model, batch)?;
+    let cfg = AntoumConfig::s4();
+    let r = if args.has("event") {
+        s4::sim::simulate_event(
+            &g,
+            &cfg,
+            sparsity,
+            DType::Int8,
+            s4::sim::Parallelism::DataParallel,
+        )
+    } else {
+        simulate(&g, Target::antoum(&cfg, sparsity))
+    };
+    print!("{}", report::breakdown_table(&r));
+    let t4 = simulate(&g, Target::t4());
+    println!(
+        "T4 dense reference: {:.3} ms/batch, {:.0} samples/s  (S4 is {:.2}x)",
+        t4.latency_ms,
+        t4.throughput,
+        r.throughput / t4.throughput
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let batch = args.get_usize("batch", 16)?;
+    let cfg = AntoumConfig::s4();
+    let resnet = models::resnet50(batch, 224);
+    let bert = models::bert(models::BERT_BASE, batch, 128);
+    let mut rows = Vec::new();
+    let base_r = simulate(&resnet, Target::antoum(&cfg, 1)).throughput;
+    let base_b = simulate(&bert, Target::antoum(&cfg, 1)).throughput;
+    for &s in &s4::sparse::SUPPORTED_SPARSITIES {
+        let tr = simulate(&resnet, Target::antoum(&cfg, s)).throughput;
+        let tb = simulate(&bert, Target::antoum(&cfg, s)).throughput;
+        rows.push(report::Fig2Row {
+            sparsity: s,
+            resnet50_tput: tr,
+            resnet50_speedup: tr / base_r,
+            bert_tput: tb,
+            bert_speedup: tb / base_b,
+        });
+    }
+    let t4r = simulate(&resnet, Target::t4()).throughput;
+    let t4b = simulate(&bert, Target::t4()).throughput;
+    print!("{}", report::fig2_table(&rows, t4r, t4b));
+    if args.has("json") {
+        println!("{}", report::fig2_json(&rows, t4r, t4b));
+    }
+    Ok(())
+}
+
+fn cmd_residency(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "bert_large").to_string();
+    let sparsity = args.get_usize("sparsity", 8)?;
+    let g = models::by_name(&model, args.get_usize("batch", 8)?)?;
+    let cfg = AntoumConfig::s4();
+    let dram = s4::arch::memory::DramModel::from_config(&cfg);
+    let r = dram.residency(&g, sparsity, DType::Int8);
+    println!(
+        "{model} @ s={sparsity}: weights {:.1} MB, activations {:.1} MB, \
+         capacity {:.1} GB ({:.2}% used)",
+        r.weight_bytes as f64 / 1e6,
+        r.activation_bytes as f64 / 1e6,
+        r.capacity_bytes as f64 / 1e9,
+        100.0 * r.utilization
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use s4::coordinator::{Router, RoutingPolicy, Server, ServerConfig, SimBackend};
+    use s4::runtime::{default_artifact_dir, Manifest};
+    use std::sync::Arc;
+
+    let n = args.get_usize("requests", 64)?;
+    let rate = args.get_f64("rate", 200.0)?;
+    let policy = match args.get_or("policy", "max") {
+        "max" => RoutingPolicy::MaxSparsity,
+        "dense" => RoutingPolicy::Dense,
+        p if p.starts_with("fixed:") => RoutingPolicy::Fixed(p[6..].parse()?),
+        p => anyhow::bail!("unknown policy {p:?}"),
+    };
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let backend = Arc::new(SimBackend::from_manifest(&manifest, 1.0));
+    let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
+    let h = srv.handle();
+    let mut rng = s4::util::rng::Xoshiro256::seed_from_u64(7);
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        std::thread::sleep(std::time::Duration::from_secs_f64(rng.next_exp(rate)));
+        let tokens: Vec<i32> = (0..128).map(|_| rng.next_below(1000) as i32).collect();
+        match h.submit("bert_tiny", tokens) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(d) => println!("rejected: {d:?}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv_timeout(std::time::Duration::from_secs(30)).map(|r| r.ok).unwrap_or(false)
+        {
+            ok += 1;
+        }
+    }
+    println!("served {ok}/{n} requests");
+    println!("{}", h.metrics.report());
+    srv.shutdown();
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! PJRT executor: load AOT-lowered HLO text, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API). One [`Executor`] owns the CPU
+//! client and a cache of compiled executables keyed by artifact name —
+//! compilation happens once per variant at load (or first use), never on
+//! the request path.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+/// Runtime input values (matching the artifact's `TensorSpec` order).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::I32(v) => v.len(),
+            Value::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A compiled model variant ready to execute.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with positional inputs; returns the flattened f32 outputs
+    /// (one vec per output tensor; our artifacts have exactly one).
+    pub fn run(&self, inputs: &[Value]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (v, spec) in inputs.iter().zip(&self.meta.inputs) {
+            anyhow::ensure!(
+                v.len() == spec.elems(),
+                "{}: input `{}` needs {} elems, got {}",
+                self.meta.name,
+                spec.name,
+                spec.elems(),
+                v.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (v, spec.dtype.as_str()) {
+                (Value::I32(x), "s32") => xla::Literal::vec1(x).reshape(&dims)?,
+                (Value::F32(x), "f32") => xla::Literal::vec1(x).reshape(&dims)?,
+                (v, dt) => anyhow::bail!(
+                    "{}: input `{}` dtype mismatch (artifact {dt}, value {:?})",
+                    self.meta.name,
+                    spec.name,
+                    std::mem::discriminant(v)
+                ),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(vec![out.to_vec::<f32>()?])
+    }
+}
+
+/// The PJRT client + compiled-executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    cache: HashMap<String, LoadedModel>,
+}
+
+impl Executor {
+    /// Create a CPU-PJRT executor.
+    pub fn cpu() -> anyhow::Result<Executor> {
+        Ok(Executor { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text file (no manifest needed — tests/tools).
+    pub fn compile_file(
+        &self,
+        meta: &ArtifactMeta,
+        path: &Path,
+    ) -> anyhow::Result<LoadedModel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(LoadedModel { meta: meta.clone(), exe })
+    }
+
+    /// Load (compile + cache) an artifact from a manifest.
+    pub fn load(&mut self, m: &Manifest, name: &str) -> anyhow::Result<&LoadedModel> {
+        if !self.cache.contains_key(name) {
+            let meta = m
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact `{name}` not in manifest"))?;
+            let lm = self.compile_file(meta, &m.hlo_path(meta))?;
+            self.cache.insert(name.to_string(), lm);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Load every artifact in the manifest (serve-time warmup).
+    pub fn load_all(&mut self, m: &Manifest) -> anyhow::Result<usize> {
+        for a in &m.artifacts {
+            let name = a.name.clone();
+            self.load(m, &name)?;
+        }
+        Ok(self.cache.len())
+    }
+
+    pub fn loaded(&self, name: &str) -> Option<&LoadedModel> {
+        self.cache.get(name)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}

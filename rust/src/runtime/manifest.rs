@@ -1,0 +1,211 @@
+//! Artifact manifest: what `python/compile/aot.py` built.
+//!
+//! `artifacts/manifest.json` is the contract between the build-time Python
+//! world and the serve-time rust world; this module parses and validates
+//! it (and the per-artifact golden files used by the integration tests).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Tensor spec of a runtime input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "s32" | "f32"
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as usize))
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow::anyhow!("bad shape"))?;
+        Ok(TensorSpec {
+            name: j.get("name").as_str().unwrap_or("").to_string(),
+            shape,
+            dtype: j
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("tensor spec missing dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+/// One compiled model variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub family: String,
+    pub model: String,
+    pub sparsity: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_bytes: usize,
+    pub golden: Option<String>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let arts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: req_str(a, "name")?,
+                file: req_str(a, "file")?,
+                family: req_str(a, "family")?,
+                model: req_str(a, "model")?,
+                sparsity: a.get("sparsity").as_u64().unwrap_or(1) as usize,
+                batch: a.get("batch").as_u64().unwrap_or(1) as usize,
+                seq: a.get("seq").as_u64().unwrap_or(0) as usize,
+                inputs,
+                outputs,
+                hlo_bytes: a.get("hlo_bytes").as_u64().unwrap_or(0) as usize,
+                golden: a.get("golden").as_str().map(String::from),
+            });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest has no artifacts");
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Variants of a model sorted by sparsity ascending (router policy
+    /// input).
+    pub fn variants_of(&self, model: &str, batch: usize) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.batch == batch)
+            .collect();
+        v.sort_by_key(|a| a.sparsity);
+        v
+    }
+
+    pub fn hlo_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+
+    /// Golden (input, output) for an artifact, if recorded.
+    pub fn golden(&self, a: &ArtifactMeta) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+        let g = a
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("{} has no golden", a.name))?;
+        let j = Json::parse(&std::fs::read_to_string(self.dir.join(g))?)
+            .map_err(|e| anyhow::anyhow!("golden: {e}"))?;
+        let vec = |key: &str| -> anyhow::Result<Vec<f64>> {
+            j.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("golden missing {key}"))?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric")))
+                .collect()
+        };
+        Ok((vec("input")?, vec("output")?))
+    }
+}
+
+fn req_str(j: &Json, key: &str) -> anyhow::Result<String> {
+    j.get(key)
+        .as_str()
+        .map(String::from)
+        .ok_or_else(|| anyhow::anyhow!("manifest artifact missing `{key}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "m_s8_b1", "file": "m.hlo.txt", "family": "bert",
+         "model": "m", "sparsity": 8, "batch": 1, "seq": 128,
+         "inputs": [{"name": "ids", "shape": [1, 128], "dtype": "s32"}],
+         "outputs": [{"shape": [1, 2], "dtype": "f32"}],
+         "hlo_bytes": 123},
+        {"name": "m_s1_b1", "file": "m1.hlo.txt", "family": "bert",
+         "model": "m", "sparsity": 1, "batch": 1, "seq": 128,
+         "inputs": [], "outputs": [], "hlo_bytes": 456}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("m_s8_b1").unwrap();
+        assert_eq!(a.sparsity, 8);
+        assert_eq!(a.inputs[0].elems(), 128);
+        assert_eq!(a.inputs[0].dtype, "s32");
+    }
+
+    #[test]
+    fn variants_sorted_by_sparsity() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let v = m.variants_of("m", 1);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].sparsity, 1);
+        assert_eq!(v[1].sparsity, 8);
+        assert!(m.variants_of("nope", 1).is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), r#"{"artifacts": []}"#).is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+        // missing required name
+        let bad = r#"{"artifacts": [{"file": "x", "family": "f", "model": "m"}]}"#;
+        assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+    }
+}

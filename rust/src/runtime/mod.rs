@@ -1,0 +1,29 @@
+//! The PJRT runtime bridge: Python lowers models once (`make artifacts`);
+//! this module loads the HLO-text artifacts and executes them. No Python
+//! on the request path.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::{Executor, LoadedModel, Value};
+pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$S4_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("S4_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    // relative to the crate root when run via cargo, else cwd
+    let candidates = [
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        PathBuf::from("artifacts"),
+    ];
+    for c in &candidates {
+        if c.join("manifest.json").exists() {
+            return c.clone();
+        }
+    }
+    candidates[0].clone()
+}

@@ -1,0 +1,20 @@
+//! Graph → chip simulation: mapping, scheduling, cost, baselines, reports.
+//!
+//! Two fidelity levels, cross-checked against each other in tests:
+//!
+//! * **analytic** ([`cost`]): per-op roofline (compute vs weight/activation
+//!   traffic) summed along the graph — fast enough for the Fig. 2/3
+//!   parameter sweeps (thousands of points);
+//! * **event-driven** ([`schedule`]): the same per-op costs executed on
+//!   `arch::event::EventSim` with real engine/DRAM-channel/NoC-link
+//!   contention and cross-subsystem pipelining.
+//!
+//! [`t4`] is the dense-GPU comparison the paper plots against.
+
+pub mod cost;
+pub mod report;
+pub mod schedule;
+pub mod t4;
+
+pub use cost::{simulate, SimResult, Target};
+pub use schedule::{simulate_event, Parallelism};

@@ -1,0 +1,185 @@
+//! Table/figure emitters: the exact rows/series the paper reports, as
+//! aligned text tables plus JSON export for plotting.
+
+use crate::util::json::Json;
+
+use super::cost::SimResult;
+
+/// One Fig. 2 row: speedup (and absolute throughput) at a sparsity level.
+#[derive(Clone, Debug)]
+pub struct Fig2Row {
+    pub sparsity: usize,
+    pub resnet50_tput: f64,
+    pub resnet50_speedup: f64,
+    pub bert_tput: f64,
+    pub bert_speedup: f64,
+}
+
+/// Fig. 2: "Speedup (throughput) achieved on Moffett S4 at different levels
+/// of sparsity, and a reference throughput of Nvidia T4".
+pub fn fig2_table(rows: &[Fig2Row], t4_resnet: f64, t4_bert: f64) -> String {
+    let mut s = String::new();
+    s.push_str("Figure 2 — S4 speedup vs sparsity (T4 dense reference)\n");
+    s.push_str(&format!(
+        "{:>8} | {:>16} {:>9} | {:>16} {:>9}\n",
+        "sparsity", "ResNet50 img/s", "speedup", "BERT seq/s", "speedup"
+    ));
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!(
+            "{:>8} | {:>16.0} {:>8.2}x | {:>16.0} {:>8.2}x\n",
+            r.sparsity, r.resnet50_tput, r.resnet50_speedup, r.bert_tput, r.bert_speedup
+        ));
+    }
+    s.push_str(&"-".repeat(70));
+    s.push('\n');
+    s.push_str(&format!(
+        "{:>8} | {:>16.0} {:>9} | {:>16.0} {:>9}\n",
+        "T4 ref", t4_resnet, "", t4_bert, ""
+    ));
+    s
+}
+
+pub fn fig2_json(rows: &[Fig2Row], t4_resnet: f64, t4_bert: f64) -> Json {
+    Json::obj(vec![
+        ("figure", Json::Str("fig2".into())),
+        ("t4_resnet50", Json::Num(t4_resnet)),
+        ("t4_bert", Json::Num(t4_bert)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("sparsity", Json::Num(r.sparsity as f64)),
+                            ("resnet50_tput", Json::Num(r.resnet50_tput)),
+                            ("resnet50_speedup", Json::Num(r.resnet50_speedup)),
+                            ("bert_tput", Json::Num(r.bert_tput)),
+                            ("bert_speedup", Json::Num(r.bert_speedup)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// One Fig. 3 point: a (model, platform, sparsity) with accuracy+speed.
+#[derive(Clone, Debug)]
+pub struct Fig3Point {
+    pub model: String,
+    pub platform: String,
+    pub sparsity: usize,
+    pub accuracy: f64,
+    pub throughput: f64,
+}
+
+/// Fig. 3: accuracy & throughput of dense models on T4 vs their sparse
+/// equivalents on S4. The insight the table must show: a larger sparse
+/// model dominates a smaller dense one on BOTH axes.
+pub fn fig3_table(points: &[Fig3Point]) -> String {
+    let mut s = String::new();
+    s.push_str("Figure 3 — accuracy & throughput: dense-on-T4 vs sparse-on-S4\n");
+    s.push_str(&format!(
+        "{:<12} {:<12} {:>8} {:>10} {:>14}\n",
+        "model", "platform", "sparsity", "accuracy", "throughput/s"
+    ));
+    s.push_str(&"-".repeat(60));
+    s.push('\n');
+    for p in points {
+        s.push_str(&format!(
+            "{:<12} {:<12} {:>8} {:>9.2}% {:>14.0}\n",
+            p.model, p.platform, p.sparsity, 100.0 * p.accuracy, p.throughput
+        ));
+    }
+    s
+}
+
+pub fn fig3_json(points: &[Fig3Point]) -> Json {
+    Json::obj(vec![
+        ("figure", Json::Str("fig3".into())),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("model", Json::Str(p.model.clone())),
+                            ("platform", Json::Str(p.platform.clone())),
+                            ("sparsity", Json::Num(p.sparsity as f64)),
+                            ("accuracy", Json::Num(p.accuracy)),
+                            ("throughput", Json::Num(p.throughput)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Pareto check used by tests and the frontier example: does `a` dominate
+/// `b` (≥ accuracy AND ≥ throughput, one strictly)?
+pub fn dominates(a: &Fig3Point, b: &Fig3Point) -> bool {
+    a.accuracy >= b.accuracy
+        && a.throughput >= b.throughput
+        && (a.accuracy > b.accuracy || a.throughput > b.throughput)
+}
+
+/// Engine-time breakdown of a `SimResult` (diagnostics in examples/CLI).
+pub fn breakdown_table(r: &SimResult) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{} on {}: {:.3} ms/batch, {:.0} samples/s, {:.1} W avg\n",
+        r.model, r.target, r.latency_ms, r.throughput, r.energy.avg_watts
+    ));
+    let total: f64 = r.engine_seconds.iter().map(|(_, t)| t).sum();
+    for (e, t) in &r.engine_seconds {
+        s.push_str(&format!(
+            "  {:<8} {:>10.3} ms  {:>5.1}%\n",
+            e.name(),
+            t * 1e3,
+            100.0 * t / total.max(1e-12)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_table_contains_all_rows() {
+        let rows = vec![
+            Fig2Row { sparsity: 1, resnet50_tput: 1000.0, resnet50_speedup: 1.0, bert_tput: 100.0, bert_speedup: 1.0 },
+            Fig2Row { sparsity: 8, resnet50_tput: 7800.0, resnet50_speedup: 7.8, bert_tput: 520.0, bert_speedup: 5.2 },
+        ];
+        let t = fig2_table(&rows, 4000.0, 400.0);
+        assert!(t.contains("7.80x"));
+        assert!(t.contains("T4 ref"));
+        assert!(t.lines().count() >= 6);
+    }
+
+    #[test]
+    fn fig2_json_parses_back() {
+        let rows = vec![Fig2Row {
+            sparsity: 4, resnet50_tput: 1.0, resnet50_speedup: 1.0,
+            bert_tput: 1.0, bert_speedup: 1.0,
+        }];
+        let j = fig2_json(&rows, 2.0, 3.0);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("t4_resnet50").as_f64(), Some(2.0));
+        assert_eq!(parsed.get("rows").as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn dominance() {
+        let a = Fig3Point { model: "r152".into(), platform: "s4".into(), sparsity: 8, accuracy: 0.78, throughput: 5000.0 };
+        let b = Fig3Point { model: "r50".into(), platform: "t4".into(), sparsity: 1, accuracy: 0.76, throughput: 4000.0 };
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a), "no self-domination");
+    }
+}

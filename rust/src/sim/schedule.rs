@@ -1,0 +1,270 @@
+//! Event-driven scheduling of a graph onto the chip.
+//!
+//! Builds an `arch::event::EventSim` task DAG from a graph: one engine
+//! task per op (on the op's mapped engine in its assigned subsystem), one
+//! DRAM task per op's weight stream (round-robined over channels, overlap-
+//! able with the *previous* op's compute — double buffering), and NoC-link
+//! tasks for cross-subsystem activations under model parallelism.
+//!
+//! Parallelism modes (paper §2: "flexibly supports model parallelism and
+//! data parallelism"):
+//! * [`Parallelism::DataParallel`] — batch split across subsystems,
+//!   weights replicated (each subsystem streams its own copy).
+//! * [`Parallelism::ModelParallel`] — graph partitioned into contiguous
+//!   stages by FLOPs, one subsystem per stage, activations ride the ring;
+//!   with multiple in-flight batches this pipelines.
+
+use crate::arch::chip::{energy, ChipResources};
+use crate::arch::engines::{self, Engine};
+use crate::arch::memory::DramModel;
+use crate::arch::noc::RingNoc;
+use crate::arch::{spu, AntoumConfig, EventSim, TaskId};
+use crate::graph::{Graph, OpId};
+use crate::sparse::tensor::DType;
+
+use super::cost::SimResult;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// batch split across all subsystems
+    DataParallel,
+    /// graph split into `stages` contiguous stages (≤ subsystems),
+    /// `inflight` batches pipelined through them
+    ModelParallel { stages: usize, inflight: usize },
+}
+
+/// Build + run the event simulation. Returns (result, events/sec processed)
+/// — the latter is the §Perf metric for the simulator itself.
+pub fn simulate_event(
+    g0: &Graph,
+    cfg: &AntoumConfig,
+    sparsity: usize,
+    dt: DType,
+    par: Parallelism,
+) -> SimResult {
+    let (g, _) = crate::graph::fusion::fuse(g0);
+    let g = &g;
+    let res = ChipResources::from_config(cfg);
+    let dram = DramModel::from_config(cfg);
+    let noc = RingNoc::from_config(cfg);
+    let mut sim = EventSim::new(res.total());
+
+    let mut total_macs = 0.0;
+    let mut total_dram = 0.0;
+
+    // engine service time of one op at a batch fraction `frac`
+    let op_secs = |kind: &crate::graph::OpKind, frac: f64| -> (f64, f64) {
+        match engines::engine_for(kind) {
+            Engine::Spu => {
+                let c = spu::cost(cfg, kind, sparsity, dt);
+                (spu::seconds(cfg, &c) * frac, c.macs * frac)
+            }
+            _ => (engines::engine_seconds(cfg, kind) * frac, 0.0),
+        }
+    };
+
+    match par {
+        Parallelism::DataParallel => {
+            let replicas = g.batch.min(cfg.subsystems).max(1);
+            let frac = 1.0 / replicas as f64;
+            for ss in 0..replicas {
+                let mut op_task: Vec<Option<TaskId>> = vec![None; g.len()];
+                let mut ch = ss; // round-robin DRAM channel start per replica
+                for (i, op) in g.ops.iter().enumerate() {
+                    let deps: Vec<TaskId> = op
+                        .inputs
+                        .iter()
+                        .filter_map(|&OpId(j)| op_task[j])
+                        .collect();
+                    // weight stream task (channel resource); depends on
+                    // nothing (prefetch) — double buffering means it only
+                    // gates the op itself.
+                    let wbytes = op.kind.weight_bytes(sparsity, dt);
+                    let mut all_deps = deps;
+                    if wbytes > 0 {
+                        let t = dram.transfer(wbytes, 1).seconds;
+                        let wtask =
+                            sim.add_task(res.dram(ch % res.dram_channels), t, &[], i as u64);
+                        ch += 1;
+                        all_deps.push(wtask);
+                        total_dram += wbytes as f64;
+                    }
+                    let (secs, macs) = op_secs(&op.kind, frac);
+                    total_macs += macs;
+                    let lookup = engines::lookup_dram_bytes(&op.kind, dt) as f64 * frac;
+                    total_dram += lookup;
+                    let engine = res.engine(ss, engines::engine_for(&op.kind));
+                    let t = sim.add_task(engine, secs, &all_deps, i as u64);
+                    op_task[i] = Some(t);
+                }
+            }
+        }
+        Parallelism::ModelParallel { stages, inflight } => {
+            let stages = stages.clamp(1, cfg.subsystems);
+            let assign = partition_by_flops(g, stages);
+            for b in 0..inflight.max(1) {
+                let mut op_task: Vec<Option<TaskId>> = vec![None; g.len()];
+                let mut ch = b;
+                for (i, op) in g.ops.iter().enumerate() {
+                    let ss = assign[i];
+                    let mut deps: Vec<TaskId> = Vec::new();
+                    for &OpId(j) in &op.inputs {
+                        let Some(dep_task) = op_task[j] else { continue };
+                        if assign[j] != ss {
+                            // activation crosses the ring: one task per link
+                            let bytes = g.ops[j].kind.output_bytes(dt);
+                            let links = noc.links_used(assign[j], ss);
+                            let mut prev = dep_task;
+                            for l in links {
+                                let t = bytes as f64 / (cfg.noc_link_gbps * 1e9)
+                                    + cfg.noc_hop_ns * 1e-9;
+                                prev = sim.add_task_prio(res.noc_link(l), t, &[prev], i as u64, b as u32);
+                            }
+                            deps.push(prev);
+                        } else {
+                            deps.push(dep_task);
+                        }
+                    }
+                    let wbytes = op.kind.weight_bytes(sparsity, dt);
+                    if wbytes > 0 && b == 0 {
+                        // weights stream once (stay resident per stage)
+                        let t = dram.transfer(wbytes, 1).seconds;
+                        let wtask =
+                            sim.add_task(res.dram(ch % res.dram_channels), t, &[], i as u64);
+                        ch += 1;
+                        deps.push(wtask);
+                        total_dram += wbytes as f64;
+                    }
+                    let (secs, macs) = op_secs(&op.kind, 1.0);
+                    total_macs += macs;
+                    total_dram += engines::lookup_dram_bytes(&op.kind, dt) as f64;
+                    let engine = res.engine(ss, engines::engine_for(&op.kind));
+                    let t = sim.add_task_prio(engine, secs, &deps, i as u64, b as u32);
+                    op_task[i] = Some(t);
+                }
+            }
+        }
+    }
+
+    let trace = sim.run();
+    let total_s = trace.makespan;
+    let batches = match par {
+        Parallelism::DataParallel => 1,
+        Parallelism::ModelParallel { inflight, .. } => inflight.max(1),
+    };
+    let samples = (g.batch * batches) as f64;
+    let mut engine_secs: Vec<(Engine, f64)> = Vec::new();
+    for ss in 0..cfg.subsystems {
+        for e in crate::arch::chip::ENGINE_ORDER {
+            let busy = trace.busy[res.engine(ss, e).0];
+            if busy > 0.0 {
+                match engine_secs.iter_mut().find(|(k, _)| *k == e) {
+                    Some((_, v)) => *v += busy,
+                    None => engine_secs.push((e, busy)),
+                }
+            }
+        }
+    }
+    SimResult {
+        target: format!("{} s={} {} event/{:?}", cfg.name, sparsity, dt.name(), par),
+        model: g.name.clone(),
+        batch: g.batch,
+        sparsity,
+        latency_ms: total_s * 1e3 / batches as f64,
+        throughput: samples / total_s,
+        engine_seconds: engine_secs,
+        weighted_fraction: f64::NAN, // not decomposed in event mode
+        energy: energy(cfg, total_macs, total_dram, total_s),
+        per_op: Vec::new(),
+    }
+}
+
+/// Contiguous FLOPs-balanced partition of ops into `stages` groups.
+pub fn partition_by_flops(g: &Graph, stages: usize) -> Vec<usize> {
+    let total = g.flops_dense().max(1.0);
+    let per_stage = total / stages as f64;
+    let mut assign = vec![0usize; g.len()];
+    let mut acc = 0.0;
+    let mut stage = 0usize;
+    for (i, op) in g.ops.iter().enumerate() {
+        assign[i] = stage;
+        acc += op.kind.flops_dense();
+        if acc > per_stage * (stage + 1) as f64 && stage + 1 < stages {
+            stage += 1;
+        }
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::sim::cost::{simulate, Target};
+
+    fn s4() -> AntoumConfig {
+        AntoumConfig::s4()
+    }
+
+    #[test]
+    fn event_close_to_analytic_data_parallel() {
+        // the two fidelity levels must agree within 2x (event adds
+        // contention; analytic adds none)
+        let g = models::bert(models::BERT_BASE, 8, 128);
+        let a = simulate(&g, Target::antoum(&s4(), 8));
+        let e = simulate_event(&g, &s4(), 8, DType::Int8, Parallelism::DataParallel);
+        let ratio = e.latency_ms / a.latency_ms;
+        assert!((0.5..2.0).contains(&ratio), "event/analytic latency ratio {ratio}");
+    }
+
+    #[test]
+    fn pipelining_beats_single_stage_on_throughput() {
+        let g = models::bert(models::BERT_BASE, 4, 128);
+        let one = simulate_event(
+            &g, &s4(), 8, DType::Int8,
+            Parallelism::ModelParallel { stages: 1, inflight: 8 },
+        );
+        let four = simulate_event(
+            &g, &s4(), 8, DType::Int8,
+            Parallelism::ModelParallel { stages: 4, inflight: 8 },
+        );
+        assert!(
+            four.throughput > 1.5 * one.throughput,
+            "4-stage {} vs 1-stage {}",
+            four.throughput,
+            one.throughput
+        );
+    }
+
+    #[test]
+    fn partition_contiguous_and_balanced() {
+        let g = models::resnet50(1, 224);
+        let a = partition_by_flops(&g, 4);
+        // contiguous + uses all stages
+        for w in a.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1);
+        }
+        assert_eq!(*a.last().unwrap(), 3);
+        // each stage gets 10–40% of FLOPs
+        let total = g.flops_dense();
+        for s in 0..4 {
+            let f: f64 = g
+                .ops
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| a[*i] == s)
+                .map(|(_, o)| o.kind.flops_dense())
+                .sum();
+            assert!((0.1..0.4).contains(&(f / total)), "stage {s}: {}", f / total);
+        }
+    }
+
+    #[test]
+    fn event_sim_sparsity_still_speeds_up() {
+        let g = models::resnet50(8, 224);
+        let t1 = simulate_event(&g, &s4(), 1, DType::Int8, Parallelism::DataParallel);
+        let t8 = simulate_event(&g, &s4(), 8, DType::Int8, Parallelism::DataParallel);
+        let sp = t8.throughput / t1.throughput;
+        assert!(sp > 4.0, "event-mode 8x sparsity speedup {sp}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Nvidia T4 dense baseline (analytic roofline).
+//!
+//! The paper compares S4 against *published* T4 throughput (its ref [11],
+//! the NVIDIA inference performance page) rather than measurements, so an
+//! analytic model calibrated to the same public datasheet is a faithful
+//! substitute (DESIGN.md §Substitutions item 2).
+//!
+//! Datasheet: 65 TFLOPS FP16, 130 TOPS INT8 (tensor cores), 320 GB/s
+//! GDDR6, 70 W. Sustained efficiency on real graphs is far below peak; the
+//! per-op-class efficiency factors below are set so the model lands in the
+//! ballpark of NVIDIA's published ResNet-50 (~4–5k img/s INT8) and
+//! BERT-base (~400–900 seq/s) numbers, and are ablated in
+//! `benches/fig2_speedup.rs --ablate-t4-eff`.
+
+use crate::arch::chip::EnergyReport;
+use crate::arch::engines::{self, Engine};
+use crate::graph::{Graph, OpKind};
+use crate::sparse::tensor::DType;
+
+use super::cost::{OpCost, SimResult};
+
+#[derive(Clone, Debug)]
+pub struct T4Config {
+    pub name: &'static str,
+    pub fp16_tflops: f64,
+    pub int8_tops: f64,
+    pub dram_gbps: f64,
+    pub tdp_w: f64,
+    /// sustained fraction of peak for dense conv/matmul (tensor cores)
+    pub eff_gemm: f64,
+    /// sustained fraction for attention-style batched matmul
+    pub eff_batched: f64,
+    /// elementwise/normalization ops run on CUDA cores, bandwidth-bound:
+    /// fraction of peak DRAM bandwidth they sustain
+    pub eff_mem: f64,
+}
+
+impl T4Config {
+    pub fn t4() -> T4Config {
+        T4Config {
+            name: "nvidia-t4",
+            fp16_tflops: 65.0,
+            int8_tops: 130.0,
+            dram_gbps: 320.0,
+            tdp_w: 70.0,
+            eff_gemm: 0.35,
+            eff_batched: 0.20,
+            eff_mem: 0.60,
+        }
+    }
+
+    fn peak_flops(&self, dt: DType) -> f64 {
+        match dt {
+            DType::Int8 => self.int8_tops * 1e12,
+            DType::Bf16 => self.fp16_tflops * 1e12,
+            DType::F32 | DType::Int32 => self.fp16_tflops * 1e12 / 4.0,
+        }
+    }
+}
+
+/// Cost one op on the T4 model: max(compute at class efficiency, memory).
+pub fn t4_op_cost(cfg: &T4Config, kind: &OpKind, dt: DType) -> OpCost {
+    let flops = kind.flops_dense();
+    let eff = match kind {
+        OpKind::Conv2d { .. } | OpKind::MatMul { .. } => cfg.eff_gemm,
+        OpKind::BatchMatMul { .. } => cfg.eff_batched,
+        _ => 1.0, // non-GEMM ops are costed by memory below
+    };
+    let compute_s = match kind {
+        OpKind::Conv2d { .. } | OpKind::MatMul { .. } | OpKind::BatchMatMul { .. } => {
+            flops / (cfg.peak_flops(dt) * eff)
+        }
+        // CUDA-core elementwise: ~2 FLOPs/B at peak bw → memory dominates
+        _ => 0.0,
+    };
+    let bytes = (kind.weight_bytes(1, dt)
+        + kind.input_bytes(dt)
+        + kind.output_bytes(dt)) as f64;
+    let mem_s = bytes / (cfg.dram_gbps * 1e9 * cfg.eff_mem);
+    OpCost {
+        compute_s,
+        weight_stream_s: 0.0,
+        act_traffic_s: mem_s,
+        total_s: compute_s.max(mem_s),
+        macs: flops / 2.0,
+        dram_bytes: bytes,
+    }
+}
+
+/// Simulate a graph on the T4 model. Dense only: the T4 has no sparse
+/// tensor path (the paper's premise — only A100 began 2:4 support).
+pub fn simulate_t4(g: &Graph, cfg: &T4Config, dt: DType) -> SimResult {
+    let mut total_s = 0.0;
+    let mut per_op = Vec::with_capacity(g.len());
+    let mut engine_secs: Vec<(Engine, f64)> = Vec::new();
+    let mut weighted_s = 0.0;
+    for op in &g.ops {
+        let c = t4_op_cost(cfg, &op.kind, dt);
+        total_s += c.total_s;
+        if op.kind.sparsifiable() {
+            weighted_s += c.total_s;
+        }
+        let e = engines::engine_for(&op.kind);
+        match engine_secs.iter_mut().find(|(k, _)| *k == e) {
+            Some((_, v)) => *v += c.total_s,
+            None => engine_secs.push((e, c.total_s)),
+        }
+        per_op.push(c);
+    }
+    // GPU energy: sustained near TDP under inference load
+    let joules = 0.85 * cfg.tdp_w * total_s;
+    SimResult {
+        target: format!("{} dense {}", cfg.name, dt.name()),
+        model: g.name.clone(),
+        batch: g.batch,
+        sparsity: 1,
+        latency_ms: total_s * 1e3,
+        throughput: g.batch as f64 / total_s,
+        engine_seconds: engine_secs,
+        weighted_fraction: if total_s > 0.0 { weighted_s / total_s } else { 0.0 },
+        energy: EnergyReport {
+            mac_joules: 0.0,
+            dram_joules: 0.0,
+            static_joules: joules,
+            total_joules: joules,
+            avg_watts: 0.85 * cfg.tdp_w,
+        },
+        per_op,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+
+    #[test]
+    fn t4_resnet50_in_published_ballpark() {
+        // NVIDIA's public page: ResNet-50 v1.5 INT8 ≈ 4–6k img/s
+        let g = models::resnet50(32, 224);
+        let r = simulate_t4(&g, &T4Config::t4(), DType::Int8);
+        assert!(
+            (2_500.0..8_000.0).contains(&r.throughput),
+            "T4 resnet50: {:.0} img/s",
+            r.throughput
+        );
+    }
+
+    #[test]
+    fn t4_bert_base_in_published_ballpark() {
+        // published BERT-base seq128: several hundred seq/s
+        let g = models::bert(models::BERT_BASE, 32, 128);
+        let r = simulate_t4(&g, &T4Config::t4(), DType::Int8);
+        assert!(
+            (300.0..2_500.0).contains(&r.throughput),
+            "T4 bert_base: {:.0} seq/s",
+            r.throughput
+        );
+    }
+
+    #[test]
+    fn fp16_slower_than_int8() {
+        let g = models::resnet50(32, 224);
+        let i8 = simulate_t4(&g, &T4Config::t4(), DType::Int8).throughput;
+        let fp = simulate_t4(&g, &T4Config::t4(), DType::Bf16).throughput;
+        assert!(i8 > fp);
+    }
+
+    #[test]
+    fn larger_model_slower() {
+        let r50 = simulate_t4(&models::resnet50(32, 224), &T4Config::t4(), DType::Int8);
+        let r152 = simulate_t4(&models::resnet152(32, 224), &T4Config::t4(), DType::Int8);
+        let ratio = r50.throughput / r152.throughput;
+        assert!((2.0..3.5).contains(&ratio), "ratio={ratio}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Reference sparse convolution (im2col onto `spmm`) — numerical twin of
+//! the Pallas `sparse_conv2d` kernel and the conv path the simulator costs.
+
+use super::format::BlockBalanced;
+use super::matmul::{spmm, Act};
+use super::tensor::Dense2;
+
+/// NHWC activation tensor (f32 host buffer).
+#[derive(Clone, Debug)]
+pub struct Nhwc {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Nhwc {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Nhwc {
+        Nhwc { n, h, w, c, data: vec![0.0; n * h * w * c] }
+    }
+
+    pub fn randn(n: usize, h: usize, w: usize, c: usize, seed: u64) -> Nhwc {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+        Nhwc {
+            n,
+            h,
+            w,
+            c,
+            data: (0..n * h * w * c).map(|_| rng.next_gaussian() as f32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, y: usize, x: usize, c: usize) -> f32 {
+        self.data[((n * self.h + y) * self.w + x) * self.c + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, n: usize, y: usize, x: usize, c: usize) -> &mut f32 {
+        &mut self.data[((n * self.h + y) * self.w + x) * self.c + c]
+    }
+}
+
+/// Conv hyperparameters (square kernel, symmetric padding).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvSpec {
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub padding: usize,
+}
+
+impl ConvSpec {
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.padding - self.kh) / self.stride + 1,
+            (w + 2 * self.padding - self.kw) / self.stride + 1,
+        )
+    }
+}
+
+/// im2col: NHWC input → [N·Ho·Wo, kh·kw·C] patch matrix; reduction-dim
+/// order (kh, kw, C) matches `pack_conv_weight` on the Python side.
+pub fn im2col(x: &Nhwc, spec: &ConvSpec) -> (Dense2, usize, usize) {
+    let (ho, wo) = spec.out_hw(x.h, x.w);
+    let kdim = spec.kh * spec.kw * x.c;
+    let mut out = Dense2::zeros(x.n * ho * wo, kdim);
+    for n in 0..x.n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = (n * ho + oy) * wo + ox;
+                let orow = &mut out.data[row * kdim..(row + 1) * kdim];
+                let mut idx = 0;
+                for ky in 0..spec.kh {
+                    for kx in 0..spec.kw {
+                        let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+                        let ix = (ox * spec.stride + kx) as isize - spec.padding as isize;
+                        if iy >= 0 && ix >= 0 && (iy as usize) < x.h && (ix as usize) < x.w
+                        {
+                            for c in 0..x.c {
+                                orow[idx + c] = x.at(n, iy as usize, ix as usize, c);
+                            }
+                        }
+                        // else: zero padding (already zero)
+                        idx += x.c;
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// Sparse conv: `act(conv(x, W) + b)` with `W` block-balanced over the
+/// flattened [kh·kw·Cin, Cout] reduction. Returns NHWC.
+pub fn sparse_conv2d(
+    x: &Nhwc,
+    w: &BlockBalanced,
+    bias: Option<&[f32]>,
+    spec: &ConvSpec,
+    act: Act,
+) -> Nhwc {
+    assert_eq!(w.k, spec.kh * spec.kw * x.c, "weight reduction dim");
+    let (patches, ho, wo) = im2col(x, spec);
+    let y = spmm(&patches, w, bias, act);
+    Nhwc { n: x.n, h: ho, w: wo, c: w.n, data: y.data }
+}
+
+/// Dense direct conv reference (validates the im2col path).
+pub fn dense_conv2d(
+    x: &Nhwc,
+    w: &Dense2, // [kh·kw·Cin, Cout]
+    bias: Option<&[f32]>,
+    spec: &ConvSpec,
+    act: Act,
+) -> Nhwc {
+    let (ho, wo) = spec.out_hw(x.h, x.w);
+    let cout = w.cols;
+    let mut out = Nhwc::zeros(x.n, ho, wo, cout);
+    for n in 0..x.n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                for co in 0..cout {
+                    let mut acc = bias.map(|b| b[co]).unwrap_or(0.0);
+                    let mut kidx = 0;
+                    for ky in 0..spec.kh {
+                        for kx in 0..spec.kw {
+                            let iy =
+                                (oy * spec.stride + ky) as isize - spec.padding as isize;
+                            let ix =
+                                (ox * spec.stride + kx) as isize - spec.padding as isize;
+                            if iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < x.h
+                                && (ix as usize) < x.w
+                            {
+                                for c in 0..x.c {
+                                    acc += x.at(n, iy as usize, ix as usize, c)
+                                        * w.at(kidx + c, co);
+                                }
+                            }
+                            kidx += x.c;
+                        }
+                    }
+                    *out.at_mut(n, oy, ox, co) = act.apply(acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_diff(a: &Nhwc, b: &Nhwc) -> f32 {
+        a.data
+            .iter()
+            .zip(&b.data)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn sparse_conv_matches_dense_direct() {
+        let x = Nhwc::randn(1, 6, 6, 32, 50);
+        let spec = ConvSpec { kh: 3, kw: 3, stride: 1, padding: 1 };
+        for &s in &[1usize, 2, 8] {
+            let w =
+                BlockBalanced::from_dense(&Dense2::randn(9 * 32, 16, 51), s).unwrap();
+            let ys = sparse_conv2d(&x, &w, None, &spec, Act::None);
+            let yd = dense_conv2d(&x, &w.to_dense(), None, &spec, Act::None);
+            assert_eq!((ys.h, ys.w, ys.c), (6, 6, 16));
+            assert!(max_diff(&ys, &yd) < 1e-3, "s={s}");
+        }
+    }
+
+    #[test]
+    fn strided_output_shape() {
+        let spec = ConvSpec { kh: 3, kw: 3, stride: 2, padding: 1 };
+        assert_eq!(spec.out_hw(8, 8), (4, 4));
+        let x = Nhwc::randn(2, 8, 8, 32, 52);
+        let w = BlockBalanced::from_dense(&Dense2::randn(9 * 32, 8, 53), 2).unwrap();
+        let y = sparse_conv2d(&x, &w, None, &spec, Act::None);
+        assert_eq!((y.n, y.h, y.w, y.c), (2, 4, 4, 8));
+    }
+
+    #[test]
+    fn conv1x1_equals_pointwise_matmul() {
+        let x = Nhwc::randn(1, 4, 4, 32, 54);
+        let spec = ConvSpec { kh: 1, kw: 1, stride: 1, padding: 0 };
+        let w = BlockBalanced::from_dense(&Dense2::randn(32, 8, 55), 4).unwrap();
+        let y = sparse_conv2d(&x, &w, None, &spec, Act::None);
+        let (patches, _, _) = im2col(&x, &spec);
+        let ym = spmm(&patches, &w, None, Act::None);
+        assert_eq!(y.data, ym.data);
+    }
+
+    #[test]
+    fn bias_and_relu_fused() {
+        let x = Nhwc::randn(1, 4, 4, 32, 56);
+        let spec = ConvSpec { kh: 3, kw: 3, stride: 1, padding: 1 };
+        let w = BlockBalanced::from_dense(&Dense2::randn(9 * 32, 8, 57), 2).unwrap();
+        let bias = vec![0.5f32; 8];
+        let y = sparse_conv2d(&x, &w, Some(&bias), &spec, Act::Relu);
+        assert!(y.data.iter().all(|&v| v >= 0.0));
+        let yd = dense_conv2d(&x, &w.to_dense(), Some(&bias), &spec, Act::Relu);
+        assert!(max_diff(&y, &yd) < 1e-3);
+    }
+
+    #[test]
+    fn im2col_zero_padding_rows() {
+        // all-ones input: corner patch rows contain zeros from padding
+        let mut x = Nhwc::zeros(1, 3, 3, 32);
+        x.data.iter_mut().for_each(|v| *v = 1.0);
+        let spec = ConvSpec { kh: 3, kw: 3, stride: 1, padding: 1 };
+        let (p, ho, wo) = im2col(&x, &spec);
+        assert_eq!((ho, wo), (3, 3));
+        // center patch fully inside → all ones; corner patch has 5 zero taps
+        let center = p.row(4);
+        assert!(center.iter().all(|&v| v == 1.0));
+        let corner = p.row(0);
+        let zeros = corner.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 5 * 32);
+    }
+}

@@ -1,0 +1,310 @@
+//! Compressed sparse formats.
+//!
+//! [`BlockBalanced`] is the hardware format (mirrors
+//! `python/compile/kernels/pack.py` — keep in sync): along the reduction
+//! dim every block of `BLOCK` weights keeps exactly `BLOCK/s` non-zeros
+//! per output column, stored as values + *block-relative u8 offsets*
+//! (the on-chip encoding; Python uses absolute i32 for kernel addressing).
+//! [`Csr`] is the general-purpose comparison format used by the ablation
+//! benches to show why the balanced constraint is what buys linear
+//! speedup.
+
+use super::tensor::{DType, Dense2};
+
+/// Hardware block size along the reduction dimension (one SPU weight-buffer
+/// row). 32 admits every supported sparsity factor up to 32×.
+pub const BLOCK: usize = 32;
+
+/// Block-balanced compressed matrix. Logical shape `[k, n]`, reduction dim
+/// `k`; physically `[k/s, n]` values + offsets, column-major-by-block like
+/// the SPU weight buffer streams them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockBalanced {
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: usize,
+    /// `[k/s * n]`, laid out row-major over `[k/s, n]` (same as Python).
+    pub values: Vec<f32>,
+    /// block-relative offsets in `[0, BLOCK)`, same layout as `values`.
+    pub offsets: Vec<u8>,
+}
+
+impl BlockBalanced {
+    /// Rows kept per block per column.
+    pub fn keep(&self) -> usize {
+        BLOCK / self.sparsity
+    }
+
+    /// Compressed row count `k/s`.
+    pub fn kc(&self) -> usize {
+        self.k / self.sparsity
+    }
+
+    /// Prune `w` ([k, n] dense) to block-balanced sparsity `s` by magnitude
+    /// — keeps the `BLOCK/s` largest-|w| rows of every (block, column).
+    /// Ties break toward the lower row index (matches numpy argsort
+    /// stability in `pack.py`).
+    pub fn from_dense(w: &Dense2, sparsity: usize) -> anyhow::Result<BlockBalanced> {
+        anyhow::ensure!(
+            super::is_supported_sparsity(sparsity),
+            "sparsity {sparsity} unsupported (SPU supports {:?})",
+            super::SUPPORTED_SPARSITIES
+        );
+        anyhow::ensure!(
+            w.rows % BLOCK == 0,
+            "reduction dim {} not divisible by block {BLOCK}",
+            w.rows
+        );
+        let (k, n) = (w.rows, w.cols);
+        let keep = BLOCK / sparsity;
+        let nblocks = k / BLOCK;
+        let kc = k / sparsity;
+        let mut values = vec![0.0f32; kc * n];
+        let mut offsets = vec![0u8; kc * n];
+        // scratch: (|w|, row-in-block) pairs for one (block, col)
+        let mut cand: Vec<(f32, usize)> = Vec::with_capacity(BLOCK);
+        for b in 0..nblocks {
+            for c in 0..n {
+                cand.clear();
+                for r in 0..BLOCK {
+                    cand.push((w.at(b * BLOCK + r, c).abs(), r));
+                }
+                // top-`keep` by magnitude; stable tie-break on row index.
+                cand.sort_by(|x, y| {
+                    y.0.partial_cmp(&x.0)
+                        .unwrap()
+                        .then(x.1.cmp(&y.1))
+                });
+                let mut kept: Vec<usize> =
+                    cand[..keep].iter().map(|&(_, r)| r).collect();
+                kept.sort_unstable();
+                for (slot, &r) in kept.iter().enumerate() {
+                    let out_row = b * keep + slot;
+                    values[out_row * n + c] = w.at(b * BLOCK + r, c);
+                    offsets[out_row * n + c] = r as u8;
+                }
+            }
+        }
+        Ok(BlockBalanced { k, n, sparsity, values, offsets })
+    }
+
+    /// Decompress to dense `[k, n]`.
+    pub fn to_dense(&self) -> Dense2 {
+        let keep = self.keep();
+        let mut out = Dense2::zeros(self.k, self.n);
+        for cr in 0..self.kc() {
+            let block = cr / keep;
+            for c in 0..self.n {
+                let off = self.offsets[cr * self.n + c] as usize;
+                let v = self.values[cr * self.n + c];
+                if v != 0.0 {
+                    *out.at_mut(block * BLOCK + off, c) = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Absolute reduction row of compressed slot `(cr, c)`.
+    #[inline]
+    pub fn abs_row(&self, cr: usize, c: usize) -> usize {
+        let block = cr / self.keep();
+        block * BLOCK + self.offsets[cr * self.n + c] as usize
+    }
+
+    /// Storage footprint in bytes at the given weight dtype
+    /// (values at `dtype` + 1 byte/offset + per-block bookkeeping).
+    /// This is what the paper's "sparsity directly reduces memory
+    /// footprint and I/O" claim quantifies.
+    pub fn bytes(&self, dtype: DType) -> usize {
+        let slots = self.kc() * self.n;
+        slots * dtype.bytes() + slots + (self.k / BLOCK) * 8
+    }
+
+    /// Dense footprint of the same logical matrix.
+    pub fn dense_bytes(&self, dtype: DType) -> usize {
+        self.k * self.n * dtype.bytes()
+    }
+
+    /// Validate structural invariants (offset ranges, ascending in block).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.values.len() == self.kc() * self.n, "values len");
+        anyhow::ensure!(self.offsets.len() == self.kc() * self.n, "offsets len");
+        let keep = self.keep();
+        for cr in 0..self.kc() {
+            for c in 0..self.n {
+                let off = self.offsets[cr * self.n + c] as usize;
+                anyhow::ensure!(off < BLOCK, "offset {off} out of block");
+                if cr % keep > 0 {
+                    let prev = self.offsets[(cr - 1) * self.n + c] as usize;
+                    anyhow::ensure!(
+                        prev < off || self.values[cr * self.n + c] == 0.0,
+                        "offsets not ascending within block (col {c}, row {cr})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compressed sparse row — the unstructured-comparison format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    pub fn from_dense(w: &Dense2) -> Csr {
+        let mut row_ptr = Vec::with_capacity(w.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for r in 0..w.rows {
+            for c in 0..w.cols {
+                let v = w.at(r, c);
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len());
+        }
+        Csr { rows: w.rows, cols: w.cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Dense2 {
+        let mut out = Dense2::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for i in self.row_ptr[r]..self.row_ptr[r + 1] {
+                *out.at_mut(r, self.col_idx[i] as usize) = self.values[i];
+            }
+        }
+        out
+    }
+
+    /// Storage bytes: values + 4-byte col ids + row pointers.
+    pub fn bytes(&self, dtype: DType) -> usize {
+        self.nnz() * (dtype.bytes() + 4) + (self.rows + 1) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randw(k: usize, n: usize, seed: u64) -> Dense2 {
+        Dense2::randn(k, n, seed)
+    }
+
+    #[test]
+    fn roundtrip_preserves_kept_weights() {
+        let w = randw(64, 16, 1);
+        for &s in &super::super::SUPPORTED_SPARSITIES {
+            let bb = BlockBalanced::from_dense(&w, s).unwrap();
+            bb.validate().unwrap();
+            let d = bb.to_dense();
+            // every kept entry equals the original; kept count per block/col
+            let keep = BLOCK / s;
+            for blk in 0..64 / BLOCK {
+                for c in 0..16 {
+                    let nz = (0..BLOCK)
+                        .filter(|&r| d.at(blk * BLOCK + r, c) != 0.0)
+                        .count();
+                    assert!(nz <= keep, "s={s} blk={blk} col={c}: {nz} > {keep}");
+                }
+            }
+            for r in 0..64 {
+                for c in 0..16 {
+                    let v = d.at(r, c);
+                    if v != 0.0 {
+                        assert_eq!(v, w.at(r, c));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn s1_is_lossless() {
+        let w = randw(96, 8, 2);
+        let bb = BlockBalanced::from_dense(&w, 1).unwrap();
+        assert_eq!(bb.to_dense(), w);
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        // strictly increasing magnitude → top rows of each block survive
+        let mut w = Dense2::zeros(64, 1);
+        for r in 0..64 {
+            *w.at_mut(r, 0) = (r + 1) as f32;
+        }
+        let bb = BlockBalanced::from_dense(&w, 4).unwrap(); // keep 8/32
+        let d = bb.to_dense();
+        for r in 0..64 {
+            let kept = d.at(r, 0) != 0.0;
+            let expect = (24..32).contains(&(r % 32));
+            assert_eq!(kept, expect, "row {r}");
+        }
+    }
+
+    #[test]
+    fn bytes_scale_with_sparsity() {
+        let w = randw(1024, 256, 3);
+        let b1 = BlockBalanced::from_dense(&w, 1).unwrap().bytes(DType::Bf16);
+        let b8 = BlockBalanced::from_dense(&w, 8).unwrap().bytes(DType::Bf16);
+        let b32 = BlockBalanced::from_dense(&w, 32).unwrap().bytes(DType::Bf16);
+        assert!(b8 < b1 / 6, "b8={b8} b1={b1}");
+        assert!(b32 < b8 / 3, "b32={b32} b8={b8}");
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let w = randw(60, 4, 4); // 60 % 32 != 0
+        assert!(BlockBalanced::from_dense(&w, 2).is_err());
+        let w2 = randw(64, 4, 5);
+        assert!(BlockBalanced::from_dense(&w2, 3).is_err());
+    }
+
+    #[test]
+    fn abs_row_matches_dense_position() {
+        let w = randw(64, 8, 6);
+        let bb = BlockBalanced::from_dense(&w, 8).unwrap();
+        let d = bb.to_dense();
+        for cr in 0..bb.kc() {
+            for c in 0..bb.n {
+                let v = bb.values[cr * bb.n + c];
+                if v != 0.0 {
+                    assert_eq!(d.at(bb.abs_row(cr, c), c), v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csr_roundtrip_and_nnz() {
+        let w = randw(32, 32, 7);
+        let bb = BlockBalanced::from_dense(&w, 4).unwrap();
+        let pruned = bb.to_dense();
+        let csr = Csr::from_dense(&pruned);
+        assert_eq!(csr.to_dense(), pruned);
+        assert_eq!(csr.nnz(), 32 * 32 / 4);
+    }
+
+    #[test]
+    fn balanced_beats_csr_storage() {
+        // the structured format stores u8 offsets vs CSR's u32 col ids
+        let w = randw(1024, 512, 8);
+        let bb = BlockBalanced::from_dense(&w, 8).unwrap();
+        let csr = Csr::from_dense(&bb.to_dense());
+        assert!(bb.bytes(DType::Bf16) < csr.bytes(DType::Bf16));
+    }
+}

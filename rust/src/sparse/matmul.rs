@@ -1,0 +1,178 @@
+//! Reference sparse matmul over the hardware format.
+//!
+//! This is the *numerical twin* of the Pallas SPU kernel: gather-based,
+//! touching only stored non-zeros, with a fused bias + activation epilogue.
+//! It serves three roles: (1) golden numerics for simulator validation,
+//! (2) the CPU fallback path of the coordinator when no PJRT artifact
+//! exists for a model variant, and (3) the operand of the ablation bench
+//! comparing balanced vs unstructured (CSR) execution.
+
+use super::format::{BlockBalanced, Csr};
+use super::tensor::Dense2;
+
+/// Fused epilogue activations (subset the SPU fuses; the full engine list
+/// lives in `arch::activation`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Gelu,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Act::None => x,
+            Act::Relu => x.max(0.0),
+            Act::Gelu => {
+                // tanh approximation, same constants as the Pallas kernel
+                let c = (2.0f32 / std::f32::consts::PI).sqrt();
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            }
+        }
+    }
+}
+
+/// `y = act(x @ W + b)` with `W` block-balanced compressed.
+/// `x`: [m, k]; returns [m, n]. Accumulates in f32.
+pub fn spmm(x: &Dense2, w: &BlockBalanced, bias: Option<&[f32]>, act: Act) -> Dense2 {
+    assert_eq!(x.cols, w.k, "reduction dim mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.n, "bias length");
+    }
+    let (m, n, kc) = (x.rows, w.n, w.kc());
+    let keep = w.keep();
+    let mut out = Dense2::zeros(m, n);
+    // Per compressed slot: out[i, c] += x[i, abs_row(cr, c)] * v
+    // Loop order (i, cr, c) keeps out-row and weight-row accesses
+    // streaming; the inner loop is written as a fused slice zip so the
+    // compiler elides bounds checks (see EXPERIMENTS.md §Perf: 2.6x).
+    for i in 0..m {
+        let xrow = x.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for cr in 0..kc {
+            let vrow = &w.values[cr * n..(cr + 1) * n];
+            let offs = &w.offsets[cr * n..(cr + 1) * n];
+            let xblock: &[f32; super::format::BLOCK] = xrow
+                [(cr / keep) * super::format::BLOCK..][..super::format::BLOCK]
+                .try_into()
+                .unwrap();
+            for ((o, &v), &off) in orow.iter_mut().zip(vrow).zip(offs) {
+                // gather through the in-block crossbar; the fixed-size
+                // block slice + `off & 31` make the access provably in
+                // bounds, so the loop vectorizes without panicking paths
+                // (offsets are validated < BLOCK at construction).
+                *o += xblock[(off & 31) as usize] * v;
+            }
+        }
+        if let Some(b) = bias {
+            for (o, &bv) in orow.iter_mut().zip(b) {
+                *o += bv;
+            }
+        }
+        for o in orow.iter_mut() {
+            *o = act.apply(*o);
+        }
+    }
+    out
+}
+
+/// Dense reference: `y = act(x @ W_dense + b)` — used to validate `spmm`.
+pub fn dense_mm(x: &Dense2, w: &Dense2, bias: Option<&[f32]>, act: Act) -> Dense2 {
+    let mut y = x.matmul(w);
+    for i in 0..y.rows {
+        for c in 0..y.cols {
+            let mut v = y.at(i, c);
+            if let Some(b) = bias {
+                v += b[c];
+            }
+            *y.at_mut(i, c) = act.apply(v);
+        }
+    }
+    y
+}
+
+/// CSR-based `x @ W` (W as CSR over [k, n]): the unstructured comparison.
+/// Irregular inner length per row — the memory-access pattern a
+/// load-balanced systolic array cannot exploit; the ablation bench
+/// measures the throughput gap vs `spmm`.
+pub fn csr_mm(x: &Dense2, w: &Csr) -> Dense2 {
+    assert_eq!(x.cols, w.rows, "reduction dim mismatch");
+    let (m, n) = (x.rows, w.cols);
+    let mut out = Dense2::zeros(m, n);
+    for i in 0..m {
+        let xrow = x.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for r in 0..w.rows {
+            let xv = xrow[r];
+            if xv == 0.0 {
+                continue;
+            }
+            for j in w.row_ptr[r]..w.row_ptr[r + 1] {
+                orow[w.col_idx[j] as usize] += xv * w.values[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn case(m: usize, k: usize, n: usize, s: usize, seed: u64) -> (Dense2, BlockBalanced) {
+        let x = Dense2::randn(m, k, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(k, n, seed + 1), s).unwrap();
+        (x, w)
+    }
+
+    #[test]
+    fn spmm_matches_dense_on_pruned_weights() {
+        for &s in &[1usize, 2, 4, 8, 16, 32] {
+            let (x, w) = case(8, 64, 16, s, 10 + s as u64);
+            let y = spmm(&x, &w, None, Act::None);
+            let yd = dense_mm(&x, &w.to_dense(), None, Act::None);
+            assert!(y.max_abs_diff(&yd) < 1e-4, "s={s}");
+        }
+    }
+
+    #[test]
+    fn spmm_bias_and_act() {
+        let (x, w) = case(4, 32, 8, 4, 20);
+        let bias: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        for act in [Act::None, Act::Relu, Act::Gelu] {
+            let y = spmm(&x, &w, Some(&bias), act);
+            let yd = dense_mm(&x, &w.to_dense(), Some(&bias), act);
+            assert!(y.max_abs_diff(&yd) < 1e-4, "{act:?}");
+        }
+        let yr = spmm(&x, &w, Some(&bias), Act::Relu);
+        assert!(yr.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn csr_matches_dense() {
+        let (x, w) = case(4, 64, 8, 8, 30);
+        let pruned = w.to_dense();
+        let csr = Csr::from_dense(&pruned);
+        let y = csr_mm(&x, &csr);
+        let yd = dense_mm(&x, &pruned, None, Act::None);
+        assert!(y.max_abs_diff(&yd) < 1e-4);
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // gelu(0) = 0, gelu(large) ≈ identity, gelu(-large) ≈ 0
+        assert_eq!(Act::Gelu.apply(0.0), 0.0);
+        assert!((Act::Gelu.apply(10.0) - 10.0).abs() < 1e-3);
+        assert!(Act::Gelu.apply(-10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "reduction dim mismatch")]
+    fn spmm_shape_checked() {
+        let (x, _) = case(2, 32, 4, 2, 40);
+        let w = BlockBalanced::from_dense(&Dense2::randn(64, 4, 41), 2).unwrap();
+        spmm(&x, &w, None, Act::None);
+    }
+}

@@ -1,0 +1,25 @@
+//! Sparse tensor substrate — formats, pruning, and reference sparse ops.
+//!
+//! This mirrors the Python-side `compile/kernels/pack.py` layout exactly
+//! (the two are cross-validated by `rust/tests/integration.rs` against
+//! goldens) and additionally provides the storage-accounting the Antoum
+//! simulator and the paper's memory-footprint claims are computed from.
+
+pub mod conv;
+pub mod format;
+pub mod matmul;
+pub mod prune;
+pub mod quant;
+pub mod tensor;
+
+pub use format::{BlockBalanced, Csr, BLOCK};
+pub use prune::{magnitude_prune, PruneSchedule};
+pub use tensor::{DType, Dense2};
+
+/// Sparsity factors the SPU natively supports (paper: "up to 32x").
+pub const SUPPORTED_SPARSITIES: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// True iff `s` is a hardware-supported sparsity factor.
+pub fn is_supported_sparsity(s: usize) -> bool {
+    SUPPORTED_SPARSITIES.contains(&s)
+}

@@ -1,0 +1,126 @@
+//! Pruning on the rust side: magnitude projection into the hardware
+//! pattern, and the gradual (Zhu–Gupta) sparsity schedule used by the
+//! workload generators. The *training-time* pruning experiments (Table 1)
+//! live in `python/compile/prune.py`; this module covers what the serving
+//! stack needs — projecting externally-supplied dense weights onto the SPU
+//! format and reasoning about schedules.
+
+use super::format::BlockBalanced;
+use super::tensor::Dense2;
+
+/// Project a dense matrix to block-balanced sparsity `s` (magnitude).
+/// Thin named wrapper so call sites read as intent.
+pub fn magnitude_prune(w: &Dense2, sparsity: usize) -> anyhow::Result<BlockBalanced> {
+    BlockBalanced::from_dense(w, sparsity)
+}
+
+/// Gradual pruning schedule from Zhu & Gupta (2017), eq. (1):
+/// `s_t = s_f + (s_i - s_f) * (1 - (t - t0)/(n*Δt))^3` — the paper's §4
+/// "training from scratch" option uses this family.
+#[derive(Clone, Copy, Debug)]
+pub struct PruneSchedule {
+    /// initial sparsity FRACTION (0.0 = dense)
+    pub initial: f64,
+    /// final sparsity fraction, e.g. 0.96875 for 32×
+    pub target: f64,
+    /// step pruning starts
+    pub begin_step: usize,
+    /// step target is reached
+    pub end_step: usize,
+}
+
+impl PruneSchedule {
+    /// Schedule reaching hardware factor `s` (fraction `1 - 1/s`).
+    pub fn to_factor(s: usize, begin_step: usize, end_step: usize) -> PruneSchedule {
+        assert!(s >= 1);
+        PruneSchedule {
+            initial: 0.0,
+            target: 1.0 - 1.0 / s as f64,
+            begin_step,
+            end_step,
+        }
+    }
+
+    /// Sparsity fraction at step `t` (clamped outside the ramp).
+    pub fn fraction_at(&self, t: usize) -> f64 {
+        if t <= self.begin_step {
+            return self.initial;
+        }
+        if t >= self.end_step {
+            return self.target;
+        }
+        let p = (t - self.begin_step) as f64 / (self.end_step - self.begin_step) as f64;
+        self.target + (self.initial - self.target) * (1.0 - p).powi(3)
+    }
+
+    /// Largest supported hardware factor whose fraction ≤ `fraction_at(t)`,
+    /// i.e. the factor the projection uses at step `t`.
+    pub fn factor_at(&self, t: usize) -> usize {
+        let f = self.fraction_at(t);
+        let mut best = 1;
+        for &s in &super::SUPPORTED_SPARSITIES {
+            if 1.0 - 1.0 / s as f64 <= f + 1e-12 {
+                best = s;
+            }
+        }
+        best
+    }
+}
+
+/// Fraction of exactly-zero weights after projecting `w` at factor `s`.
+pub fn measured_sparsity(w: &Dense2, s: usize) -> anyhow::Result<f64> {
+    let pruned = magnitude_prune(w, s)?.to_dense();
+    Ok(pruned.zeros_count() as f64 / (pruned.rows * pruned.cols) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_endpoints() {
+        let sch = PruneSchedule::to_factor(32, 100, 1000);
+        assert_eq!(sch.fraction_at(0), 0.0);
+        assert_eq!(sch.fraction_at(100), 0.0);
+        assert!((sch.fraction_at(1000) - 0.96875).abs() < 1e-12);
+        assert!((sch.fraction_at(5000) - 0.96875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_monotone() {
+        let sch = PruneSchedule::to_factor(16, 0, 1000);
+        let mut prev = -1.0;
+        for t in (0..=1000).step_by(50) {
+            let f = sch.fraction_at(t);
+            assert!(f >= prev, "t={t}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn schedule_cubic_shape() {
+        // cubic ramp: most pruning happens early
+        let sch = PruneSchedule::to_factor(2, 0, 1000);
+        assert!(sch.fraction_at(500) > 0.5 * sch.target);
+    }
+
+    #[test]
+    fn factor_at_steps_through_supported_set() {
+        let sch = PruneSchedule::to_factor(32, 0, 1000);
+        assert_eq!(sch.factor_at(0), 1);
+        assert_eq!(sch.factor_at(1000), 32);
+        let mid = sch.factor_at(500);
+        assert!(super::super::is_supported_sparsity(mid));
+        assert!((1..=32).contains(&mid));
+    }
+
+    #[test]
+    fn measured_sparsity_matches_factor() {
+        let w = Dense2::randn(256, 64, 60);
+        for &s in &[2usize, 8, 32] {
+            let f = measured_sparsity(&w, s).unwrap();
+            // gaussian weights ⇒ no exact-zero ties; fraction is exact
+            assert!((f - (1.0 - 1.0 / s as f64)).abs() < 1e-9, "s={s} f={f}");
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Dense tensor types and element dtypes.
+//!
+//! The simulator does byte/FLOP accounting per dtype; the runtime moves
+//! f32/i32 host buffers. Only what the stack needs — this is not an
+//! ndarray clone.
+
+use std::fmt;
+
+/// Element types the S4 datapath supports (paper §2: 944 TOPS INT8,
+/// 472 TFLOPS BF16; f32 is the host/reference type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    Int8,
+    Bf16,
+    F32,
+    Int32,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::Int8 => 1,
+            DType::Bf16 => 2,
+            DType::F32 | DType::Int32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Int8 => "int8",
+            DType::Bf16 => "bf16",
+            DType::F32 => "f32",
+            DType::Int32 => "int32",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Row-major dense matrix of f32 — the reference numeric type on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense2 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense2 {
+    pub fn zeros(rows: usize, cols: usize) -> Dense2 {
+        Dense2 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Dense2 {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Dense2 { rows, cols, data }
+    }
+
+    /// Gaussian-random matrix (deterministic from seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Dense2 {
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+        Dense2 {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.next_gaussian() as f32).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Count of exact-zero entries.
+    pub fn zeros_count(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    /// Plain dense matmul (reference; not a BLAS).
+    pub fn matmul(&self, rhs: &Dense2) -> Dense2 {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = Dense2::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let rrow = rhs.row(k);
+                let orow =
+                    &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(rrow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Dense2) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::Int8.bytes(), 1);
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut i2 = Dense2::zeros(2, 2);
+        *i2.at_mut(0, 0) = 1.0;
+        *i2.at_mut(1, 1) = 1.0;
+        let a = Dense2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(a.matmul(&i2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Dense2::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let ones = Dense2::from_vec(2, 2, vec![1.0; 4]);
+        let y = a.matmul(&ones);
+        assert_eq!(y.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(Dense2::randn(4, 4, 9).data, Dense2::randn(4, 4, 9).data);
+        assert_ne!(Dense2::randn(4, 4, 9).data, Dense2::randn(4, 4, 10).data);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn matmul_shape_checked() {
+        Dense2::zeros(2, 3).matmul(&Dense2::zeros(2, 3));
+    }
+}

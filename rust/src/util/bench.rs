@@ -1,0 +1,153 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup, calibrated iteration counts, outlier-robust summaries
+//! and a stable text format the `rust/benches/*.rs` binaries (registered
+//! with `harness = false`) print. Paper-table benches additionally emit the
+//! rows the paper reports via [`crate::sim::report`].
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// per-iteration wall time, seconds
+    pub summary: Summary,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let s = &self.summary;
+        println!(
+            "bench {:<44} {:>12}/iter  p50 {:>12}  p99 {:>12}  (n={}, k={})",
+            self.name,
+            fmt_time(s.mean),
+            fmt_time(s.p50),
+            fmt_time(s.p99),
+            self.samples,
+            self.iters_per_sample,
+        );
+    }
+}
+
+/// Human time formatting: 1.234 µs / 12.3 ms / 1.2 s.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// minimum wall time to spend per sample (drives iteration calibration)
+    pub min_sample_secs: f64,
+    pub samples: usize,
+    pub warmup_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { min_sample_secs: 0.05, samples: 12, warmup_secs: 0.2 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { min_sample_secs: 0.02, samples: 6, warmup_secs: 0.05 }
+    }
+
+    /// Measure `f`, which must perform ONE logical iteration per call.
+    /// A `std::hint::black_box` around inputs/outputs is the caller's job.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup until the clock says so (fills caches, JITs nothing here
+        // but stabilizes frequency scaling).
+        let w0 = Instant::now();
+        while w0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+        }
+        // Calibrate iterations per sample.
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt >= self.min_sample_secs || iters >= 1 << 24 {
+                break;
+            }
+            let scale = (self.min_sample_secs / dt.max(1e-9) * 1.2).ceil();
+            iters = (iters as f64 * scale.clamp(2.0, 100.0)) as u64;
+        }
+        // Measure.
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&per_iter),
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        r.print();
+        r
+    }
+
+    /// Measure a function that reports its own units of work per call
+    /// (e.g. simulated events); returns (result, units/sec at p50).
+    pub fn run_throughput<F: FnMut() -> u64>(
+        &self,
+        name: &str,
+        mut f: F,
+    ) -> (BenchResult, f64) {
+        let mut units = 0u64;
+        let r = self.run(name, || {
+            units = f();
+        });
+        let ups = units as f64 / r.summary.p50;
+        println!("      {:<44} {:>14.0} units/s", "", ups);
+        (r, ups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench { min_sample_secs: 0.001, samples: 3, warmup_secs: 0.0 };
+        let mut x = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..100 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+        });
+        assert!(r.summary.mean > 0.0);
+        assert!(r.iters_per_sample >= 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(3e-9).ends_with("ns"));
+        assert!(fmt_time(3e-6).ends_with("µs"));
+        assert!(fmt_time(3e-3).ends_with("ms"));
+        assert!(fmt_time(3.0).ends_with('s'));
+    }
+}

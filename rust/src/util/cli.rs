@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `argv[0]` must be skipped
+    /// by the caller.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), String::from("true"));
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skips argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    /// Comma-separated integer list, e.g. `--sparsities 1,2,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{key}: bad integer {t:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse("serve --batch 8 --verbose --rate=100.5 input.txt");
+        assert_eq!(a.positional(), &["serve".to_string(), "input.txt".to_string()]);
+        assert_eq!(a.get_usize("batch", 1).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 100.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn integer_list() {
+        let a = parse("--sparsities 1,2,8,32");
+        assert_eq!(a.get_usize_list("sparsities", &[]).unwrap(), vec![1, 2, 8, 32]);
+        let b = parse("");
+        assert_eq!(b.get_usize_list("sparsities", &[4]).unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let a = parse("--batch eight");
+        assert!(a.get_usize("batch", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--x --y 3");
+        assert!(a.has("x"));
+        assert_eq!(a.get_usize("y", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! In-repo substrates: JSON, RNG, stats, CLI, bench harness, property tests.
+//!
+//! This build environment ships no serde/clap/criterion/proptest/rand, so
+//! the pieces of those the stack needs are implemented here from scratch
+//! (per the reproduction brief's "build every substrate" rule). Each module
+//! is deliberately small, dependency-free and unit-tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,132 @@
+//! Mini property-based testing runner (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` generated cases with naive input
+//! shrinking via re-generation at smaller "size" budgets; on failure it
+//! reports the seed so the case replays deterministically. Used by
+//! `rust/tests/properties.rs` for the coordinator and sparse-format
+//! invariants the brief calls out.
+
+use super::rng::Xoshiro256;
+
+/// Per-case generation context: an RNG plus a size budget generators scale
+/// their outputs by (vector lengths, value magnitudes, ...).
+pub struct Gen {
+    pub rng: Xoshiro256,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector with length scaled by the current size budget (0..=size).
+    pub fn vec_f32(&mut self, max_len: usize) -> Vec<f32> {
+        let len = self.usize_in(0, max_len.min(self.size.max(1)));
+        (0..len).map(|_| self.rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of a property over one case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs. Panics with a replayable
+/// diagnostic on the first failure (after attempting smaller sizes).
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base_seed = match std::env::var("S4_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("S4_PROP_SEED must be u64"),
+        Err(_) => 0x5EED_0000,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        let size = 4 + case * 96 / cases.max(1); // ramp sizes up over the run
+        let mut g = Gen { rng: Xoshiro256::seed_from_u64(seed), size };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink attempt: replay the same seed at smaller size budgets
+            // and report the smallest size that still fails.
+            let mut min_fail = (size, msg.clone());
+            for s in (1..size).rev() {
+                let mut g2 = Gen { rng: Xoshiro256::seed_from_u64(seed), size: s };
+                if let Err(m2) = prop(&mut g2) {
+                    min_fail = (s, m2);
+                }
+            }
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed}, \
+                 minimal size {}): {}\nreplay: S4_PROP_SEED={base_seed}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check("trivial", 50, |g| {
+            ran += 1;
+            let x = g.usize_in(0, 10);
+            if x <= 10 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let v = g.vec_f32(100);
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err(format!("len {} >= 5", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: Xoshiro256::seed_from_u64(1), size: 10 };
+        for _ in 0..1000 {
+            let x = g.usize_in(3, 7);
+            assert!((3..=7).contains(&x));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Cross-module integration tests: the paper's claims as assertions over
+//! the composed system (graph IR + simulator + baseline + coordinator).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use s4::arch::AntoumConfig;
+use s4::coordinator::{
+    BatcherConfig, Router, RoutingPolicy, Server, ServerConfig, SimBackend,
+};
+use s4::graph::models;
+use s4::sim::report::{dominates, Fig3Point};
+use s4::sim::{simulate, simulate_event, Parallelism, Target};
+use s4::sparse::tensor::DType;
+
+fn s4cfg() -> AntoumConfig {
+    AntoumConfig::s4()
+}
+
+// ------------------------------ Fig. 2 ------------------------------------
+
+#[test]
+fn fig2_shape_resnet_nearly_linear_bert_sublinear() {
+    let resnet = models::resnet50(16, 224);
+    let bert = models::bert(models::BERT_BASE, 16, 128);
+    let base_r = simulate(&resnet, Target::antoum(&s4cfg(), 1)).throughput;
+    let base_b = simulate(&bert, Target::antoum(&s4cfg(), 1)).throughput;
+    let mut prev_r = 0.0;
+    let mut prev_b = 0.0;
+    for &s in &[2usize, 4, 8, 16, 32] {
+        let sp_r = simulate(&resnet, Target::antoum(&s4cfg(), s)).throughput / base_r;
+        let sp_b = simulate(&bert, Target::antoum(&s4cfg(), s)).throughput / base_b;
+        // both monotone; resnet closer to ideal than bert at every s
+        assert!(sp_r > prev_r && sp_b > prev_b, "monotonicity at s={s}");
+        assert!(sp_r > sp_b, "resnet {sp_r:.1} vs bert {sp_b:.1} at s={s}");
+        // resnet "almost linear" (≥70% of ideal)
+        assert!(sp_r >= 0.7 * s as f64, "resnet s={s}: {sp_r:.1}");
+        prev_r = sp_r;
+        prev_b = sp_b;
+    }
+    assert!(prev_b < 24.0, "bert at 32x must bend: {prev_b:.1}");
+}
+
+#[test]
+fn fig2_s4_beats_t4_at_high_sparsity() {
+    // the paper's headline: several-times speedup over T4 with sparsity
+    for (g, factor) in [
+        (models::resnet50(16, 224), 16usize),
+        (models::bert(models::BERT_BASE, 16, 128), 16),
+    ] {
+        let t4 = simulate(&g, Target::t4()).throughput;
+        let s4_dense = simulate(&g, Target::antoum(&s4cfg(), 1)).throughput;
+        let s4_sparse = simulate(&g, Target::antoum(&s4cfg(), factor)).throughput;
+        assert!(
+            s4_dense < t4,
+            "{}: dense S4 ({s4_dense:.0}) should NOT beat T4 ({t4:.0}) — \
+             sparsity is the whole point",
+            g.name
+        );
+        assert!(
+            s4_sparse > 1.5 * t4,
+            "{}: sparse-{factor} S4 {s4_sparse:.0} vs T4 {t4:.0}",
+            g.name
+        );
+    }
+}
+
+// ------------------------------ Fig. 3 ------------------------------------
+
+#[test]
+fn fig3_larger_sparse_dominates_smaller_dense() {
+    // throughput side of the Fig. 3 insight, with the published top-1
+    // accuracies as the accuracy side (the paper's premise: larger models
+    // keep higher accuracy under sparsity).
+    let r152_s4 = simulate(&models::resnet152(16, 224), Target::antoum(&s4cfg(), 8));
+    let r50_t4 = simulate(&models::resnet50(16, 224), Target::t4());
+    let a = Fig3Point {
+        model: "resnet152".into(),
+        platform: "s4".into(),
+        sparsity: 8,
+        accuracy: 0.782,
+        throughput: r152_s4.throughput,
+    };
+    let b = Fig3Point {
+        model: "resnet50".into(),
+        platform: "t4".into(),
+        sparsity: 1,
+        accuracy: 0.761,
+        throughput: r50_t4.throughput,
+    };
+    assert!(
+        dominates(&a, &b),
+        "sparse-large {:.0}/s vs dense-small {:.0}/s",
+        a.throughput,
+        b.throughput
+    );
+}
+
+// --------------------------- event vs analytic -----------------------------
+
+#[test]
+fn event_and_analytic_agree_across_models_and_sparsities() {
+    for g in [
+        models::resnet50(8, 224),
+        models::bert(models::BERT_BASE, 8, 128),
+        models::bert(models::BERT_TINY, 8, 128),
+    ] {
+        for &s in &[1usize, 8, 32] {
+            let a = simulate(&g, Target::antoum(&s4cfg(), s));
+            let e = simulate_event(&g, &s4cfg(), s, DType::Int8, Parallelism::DataParallel);
+            let ratio = e.latency_ms / a.latency_ms;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "{} s={s}: event {:.3}ms vs analytic {:.3}ms",
+                g.name,
+                e.latency_ms,
+                a.latency_ms
+            );
+        }
+    }
+}
+
+// ------------------------- python/rust consistency -------------------------
+
+#[test]
+fn bert_flops_match_python_accounting() {
+    // python compile/model.py::bert_flops(BERT_BASE, 1, 128, 1) computes the
+    // same decomposition; this pins the two within 15% so neither drifts.
+    let g = models::bert(models::BERT_BASE, 1, 128);
+    let rust_total = g.flops_dense();
+    let (h, f, l, heads, seq) = (768.0f64, 3072.0, 12.0, 12.0, 128.0);
+    let m = seq;
+    let proj = 2.0 * m * h * h * 4.0;
+    let ffn = 2.0 * m * h * f * 2.0;
+    let attn = 2.0 * heads * seq * seq * (h / heads) * 2.0;
+    let other = m * h * 20.0;
+    let py_total = l * (proj + ffn + attn + other);
+    let ratio = rust_total / py_total;
+    assert!((0.85..1.15).contains(&ratio), "rust/python FLOPs ratio {ratio}");
+}
+
+// ------------------------------ serving -----------------------------------
+
+#[test]
+fn serving_stack_under_simulated_load() {
+    use s4::runtime::Manifest;
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s1_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 1, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+    let manifest = Manifest::parse(std::path::Path::new("/tmp"), text).unwrap();
+    // time_scale tiny so the test is fast but ordering still holds
+    let backend = Arc::new(SimBackend::from_manifest(&manifest, 0.01));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            workers: 2,
+            max_inflight: 128,
+        },
+        manifest,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let rxs: Vec<_> = (0..48)
+        .filter_map(|i| h.submit("bert_tiny", vec![i as i32; 32]).ok())
+        .map(|(_, rx)| rx)
+        .collect();
+    assert!(rxs.len() >= 40, "most requests admitted");
+    let mut served_by_sparse = 0;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.ok, "{:?}", r.error);
+        if r.served_by == "bert_tiny_s8_b8" {
+            served_by_sparse += 1;
+        }
+    }
+    assert!(served_by_sparse > 0, "MaxSparsity policy must route to s=8");
+    assert!(h.metrics.mean_batch_fill() > 1.0, "{}", h.metrics.report());
+    srv.shutdown();
+}
+
+#[test]
+fn dense_policy_routes_dense() {
+    use s4::runtime::Manifest;
+    let text = r#"{"artifacts": [
+      {"name": "m_s1_b1", "file": "x", "family": "bert", "model": "bert_tiny",
+       "sparsity": 1, "batch": 1, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "m_s32_b1", "file": "y", "family": "bert", "model": "bert_tiny",
+       "sparsity": 32, "batch": 1, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]}
+    ]}"#;
+    let manifest = Manifest::parse(std::path::Path::new("/tmp"), text).unwrap();
+    let backend = Arc::new(SimBackend::from_manifest(&manifest, 0.001));
+    let srv = Server::start(
+        ServerConfig::default(),
+        manifest,
+        Router::new(RoutingPolicy::Dense),
+        backend,
+    );
+    let h = srv.handle();
+    let (_, rx) = h.submit("bert_tiny", vec![1; 16]).unwrap();
+    let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(r.ok);
+    assert_eq!(r.served_by, "m_s1_b1");
+    srv.shutdown();
+}
+
+// ----------------------------- energy/TCO ---------------------------------
+
+#[test]
+fn samples_per_joule_improves_with_sparsity() {
+    let g = models::resnet50(16, 224);
+    let e1 = simulate(&g, Target::antoum(&s4cfg(), 1)).samples_per_joule();
+    let e16 = simulate(&g, Target::antoum(&s4cfg(), 16)).samples_per_joule();
+    assert!(e16 > 3.0 * e1, "energy efficiency must scale: {e1} → {e16}");
+    let t4 = simulate(&g, Target::t4()).samples_per_joule();
+    assert!(e16 > t4, "S4 sparse {e16} vs T4 {t4} samples/J");
+}

@@ -1,0 +1,221 @@
+//! Property-based tests (in-repo `util::prop` runner) over the coordinator
+//! and substrate invariants the brief calls out: routing conservation,
+//! batching non-loss, sparse-format structure, event-sim sanity.
+
+use s4::coordinator::{Router, RoutingPolicy};
+use s4::prop_assert;
+use s4::runtime::Manifest;
+use s4::sparse::format::{BlockBalanced, BLOCK};
+use s4::sparse::matmul::{dense_mm, spmm, Act};
+use s4::sparse::tensor::Dense2;
+use s4::util::prop::{check, Gen};
+
+fn manifest_with_batches(batches: &[usize], sparsity: usize) -> Manifest {
+    let arts: Vec<String> = batches
+        .iter()
+        .map(|b| {
+            format!(
+                r#"{{"name": "m_s{s}_b{b}", "file": "f", "family": "bert",
+                     "model": "m", "sparsity": {s}, "batch": {b},
+                     "inputs": [], "outputs": []}}"#,
+                s = sparsity,
+                b = b
+            )
+        })
+        .collect();
+    Manifest::parse(
+        std::path::Path::new("/tmp"),
+        &format!(r#"{{"artifacts": [{}]}}"#, arts.join(",")),
+    )
+    .unwrap()
+}
+
+#[test]
+fn prop_router_plan_conserves_requests() {
+    check("router conservation", 200, |g: &mut Gen| {
+        // random capacity set (1 plus up to 3 others), random batch size
+        let mut caps = vec![1usize];
+        for _ in 0..g.usize_in(0, 3) {
+            caps.push(*g.pick(&[2usize, 4, 8, 16, 32]));
+        }
+        caps.sort_unstable();
+        caps.dedup();
+        let m = manifest_with_batches(&caps, 8);
+        let n = g.usize_in(1, 100);
+        let r = Router::new(RoutingPolicy::Fixed(8));
+        let plan = r.plan(&m, "m", n).map_err(|e| e.to_string())?;
+        let total: usize = plan.iter().map(|p| p.fill).sum();
+        prop_assert!(total == n, "plan covers {total} of {n}: {plan:?}");
+        for p in &plan {
+            prop_assert!(p.fill <= p.batch_capacity, "overfill {p:?}");
+            prop_assert!(p.fill > 0, "empty placement {p:?}");
+        }
+        // padding never exceeds one placement's worth
+        let padded: usize = plan.iter().map(|p| p.batch_capacity - p.fill).sum();
+        let max_cap = *caps.last().unwrap();
+        prop_assert!(padded < max_cap, "padding {padded} ≥ largest cap {max_cap}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_block_balanced_structure_holds() {
+    check("block-balanced invariants", 100, |g: &mut Gen| {
+        let kb = g.usize_in(1, 4);
+        let n = g.usize_in(1, 24);
+        let s = *g.pick(&[1usize, 2, 4, 8, 16, 32]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let w = Dense2::randn(kb * BLOCK, n, seed);
+        let bb = BlockBalanced::from_dense(&w, s).map_err(|e| e.to_string())?;
+        bb.validate().map_err(|e| e.to_string())?;
+        let d = bb.to_dense();
+        // per (block, col) non-zero budget
+        let keep = BLOCK / s;
+        for blk in 0..kb {
+            for c in 0..n {
+                let nz = (0..BLOCK)
+                    .filter(|&r| d.at(blk * BLOCK + r, c) != 0.0)
+                    .count();
+                prop_assert!(nz <= keep, "blk {blk} col {c}: {nz} > {keep}");
+            }
+        }
+        // kept values preserved exactly
+        for r in 0..d.rows {
+            for c in 0..n {
+                let v = d.at(r, c);
+                prop_assert!(
+                    v == 0.0 || v == w.at(r, c),
+                    "mutated value at ({r},{c})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_matches_dense_reference() {
+    check("spmm numerics", 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 12);
+        let kb = g.usize_in(1, 3);
+        let n = g.usize_in(1, 12);
+        let s = *g.pick(&[1usize, 4, 16]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let x = Dense2::randn(m, kb * BLOCK, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(kb * BLOCK, n, seed + 1), s)
+            .map_err(|e| e.to_string())?;
+        let act = *g.pick(&[Act::None, Act::Relu, Act::Gelu]);
+        let y = spmm(&x, &w, None, act);
+        let yd = dense_mm(&x, &w.to_dense(), None, act);
+        let diff = y.max_abs_diff(&yd);
+        prop_assert!(diff < 1e-3, "diff {diff} (m={m} k={} n={n} s={s})", kb * BLOCK);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_event_sim_bounds() {
+    use s4::arch::{EventSim, ResourceId, TaskId};
+    check("event sim bounds", 60, |g: &mut Gen| {
+        let nres = g.usize_in(1, 4);
+        let ntasks = g.usize_in(1, 40);
+        let mut sim = EventSim::new(nres);
+        let mut ids: Vec<TaskId> = Vec::new();
+        let mut total = vec![0.0f64; nres];
+        let mut critical_sum = 0.0;
+        for i in 0..ntasks {
+            let r = g.usize_in(0, nres - 1);
+            let secs = g.f64_in(0.0, 1.0);
+            // random deps among earlier tasks (keeps the DAG acyclic)
+            let mut deps = Vec::new();
+            for &prev in ids.iter() {
+                if g.usize_in(0, 9) == 0 {
+                    deps.push(prev);
+                }
+            }
+            ids.push(sim.add_task(ResourceId(r), secs, &deps, i as u64));
+            total[r] += secs;
+            critical_sum += secs;
+        }
+        let tr = sim.run();
+        // makespan ≥ busiest resource (work conservation lower bound)
+        let busiest = total.iter().cloned().fold(0.0, f64::max);
+        prop_assert!(
+            tr.makespan >= busiest - 1e-9,
+            "makespan {} < busiest {}",
+            tr.makespan,
+            busiest
+        );
+        // makespan ≤ serializing everything
+        prop_assert!(
+            tr.makespan <= critical_sum + 1e-9,
+            "makespan {} > total {}",
+            tr.makespan,
+            critical_sum
+        );
+        // busy accounting exact
+        for r in 0..nres {
+            prop_assert!(
+                (tr.busy[r] - total[r]).abs() < 1e-9,
+                "busy mismatch on {r}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prune_schedule_monotone_and_bounded() {
+    use s4::sparse::prune::PruneSchedule;
+    check("prune schedule", 80, |g: &mut Gen| {
+        let s = *g.pick(&[2usize, 4, 8, 16, 32]);
+        let begin = g.usize_in(0, 100);
+        let end = begin + 1 + g.usize_in(1, 1000);
+        let sch = PruneSchedule::to_factor(s, begin, end);
+        let mut prev = -1.0;
+        for t in (0..=end + 100).step_by((end / 20).max(1)) {
+            let f = sch.fraction_at(t);
+            prop_assert!(f >= prev - 1e-12, "not monotone at t={t}");
+            prop_assert!((0.0..=1.0).contains(&f), "fraction {f} out of range");
+            let factor = sch.factor_at(t);
+            prop_assert!(factor <= s, "factor {factor} exceeds target {s}");
+            prev = f;
+        }
+        prop_assert!(
+            (sch.fraction_at(end) - (1.0 - 1.0 / s as f64)).abs() < 1e-9,
+            "target not reached"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fusion_preserves_weighted_work() {
+    use s4::graph::fusion::fuse;
+    use s4::graph::models;
+    check("fusion invariants", 12, |g: &mut Gen| {
+        let batch = g.usize_in(1, 8);
+        let graph = match g.usize_in(0, 2) {
+            0 => models::resnet50(batch, 224),
+            1 => models::bert(models::BERT_TINY, batch, 128),
+            _ => models::bert(models::BERT_MINI, batch, 128),
+        };
+        let (fused, stats) = fuse(&graph);
+        prop_assert!(stats.ops_after <= stats.ops_before, "fusion grew graph");
+        let weighted = |gr: &s4::graph::Graph| -> f64 {
+            gr.ops
+                .iter()
+                .filter(|o| o.kind.sparsifiable())
+                .map(|o| o.kind.flops_dense())
+                .sum()
+        };
+        let (a, b) = (weighted(&graph), weighted(&fused));
+        prop_assert!((a - b).abs() < 1e-6 * a.max(1.0), "weighted work changed");
+        for (i, op) in fused.ops.iter().enumerate() {
+            for inp in &op.inputs {
+                prop_assert!(inp.0 < i, "topo violated at {i}");
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,113 @@
+//! End-to-end runtime tests: load real AOT artifacts (built by
+//! `make artifacts`), compile them on the PJRT CPU client, execute, and
+//! compare against the golden outputs recorded by the Python side.
+//!
+//! This is the proof that all three layers compose: the Pallas sparse
+//! kernel (L1) lowered inside the JAX model (L2) executes under the rust
+//! runtime (L3) with matching numerics.
+//!
+//! Tests are skipped (not failed) when artifacts are absent so `cargo
+//! test` works pre-`make artifacts`; `make test` builds them first.
+
+use s4::runtime::{default_artifact_dir, Executor, Manifest, Value};
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = default_artifact_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime_e2e: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn load_and_execute_bert_tiny_matches_golden() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut ex = Executor::cpu().expect("pjrt cpu client");
+    let name = "bert_tiny_s8_b1";
+    let model = ex.load(&m, name).expect("compile artifact");
+    let meta = m.get(name).unwrap().clone();
+    let (input, expect) = m.golden(&meta).expect("golden");
+    let tokens: Vec<i32> = input.iter().map(|&x| x as i32).collect();
+    let out = model.run(&[Value::I32(tokens)]).expect("execute");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), expect.len());
+    for (i, (&got, &want)) in out[0].iter().zip(&expect).enumerate() {
+        assert!(
+            (got as f64 - want).abs() < 1e-3 * want.abs().max(1.0),
+            "logit {i}: rust={got} python={want}"
+        );
+    }
+}
+
+#[test]
+fn all_artifacts_compile_and_match_goldens() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut ex = Executor::cpu().unwrap();
+    for a in m.artifacts.clone() {
+        ex.load(&m, &a.name).unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        let model = ex.loaded(&a.name).unwrap();
+        let (input, expect) = m.golden(&a).unwrap();
+        let val = match a.inputs[0].dtype.as_str() {
+            "s32" => Value::I32(input.iter().map(|&x| x as i32).collect()),
+            "f32" => Value::F32(input.iter().map(|&x| x as f32).collect()),
+            other => panic!("dtype {other}"),
+        };
+        let out = model.run(&[val]).unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        let max_rel = out[0]
+            .iter()
+            .zip(&expect)
+            .map(|(&g, &w)| (g as f64 - w).abs() / w.abs().max(1.0))
+            .fold(0.0f64, f64::max);
+        assert!(max_rel < 1e-3, "{}: max rel err {max_rel}", a.name);
+        println!("{}: OK (max rel err {max_rel:.2e})", a.name);
+    }
+}
+
+#[test]
+fn executor_caches_compilations() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut ex = Executor::cpu().unwrap();
+    let name = "bert_tiny_s32_b1";
+    ex.load(&m, name).unwrap();
+    assert_eq!(ex.loaded_count(), 1);
+    ex.load(&m, name).unwrap(); // cache hit
+    assert_eq!(ex.loaded_count(), 1);
+    assert!(ex.loaded(name).is_some());
+    assert!(ex.loaded("nope").is_none());
+}
+
+#[test]
+fn wrong_input_shape_rejected() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut ex = Executor::cpu().unwrap();
+    let model = ex.load(&m, "bert_tiny_s8_b1").unwrap();
+    let err = model.run(&[Value::I32(vec![1, 2, 3])]).unwrap_err();
+    assert!(err.to_string().contains("elems"), "{err}");
+    let err2 = model.run(&[]).unwrap_err();
+    assert!(err2.to_string().contains("inputs"), "{err2}");
+}
+
+#[test]
+fn batch8_variant_runs_eight_samples() {
+    let Some(m) = manifest_or_skip() else { return };
+    let mut ex = Executor::cpu().unwrap();
+    let name = "bert_tiny_s8_b8";
+    let Some(meta) = m.get(name).cloned() else {
+        eprintln!("SKIP: {name} not built");
+        return;
+    };
+    let elems = meta.inputs[0].elems();
+    let model = ex.load(&m, name).unwrap();
+    let out = model.run(&[Value::I32(vec![7; elems])]).unwrap();
+    assert_eq!(out[0].len(), meta.outputs[0].elems());
+    // identical rows in → identical logits out (batch independence)
+    let c = meta.outputs[0].shape[1];
+    for b in 1..meta.outputs[0].shape[0] {
+        for k in 0..c {
+            assert!((out[0][b * c + k] - out[0][k]).abs() < 1e-4);
+        }
+    }
+}
