@@ -1,106 +1,27 @@
-//! END-TO-END serving driver — the repo's required full-stack proof.
+//! END-TO-END serving driver (feature `pjrt`) — the repo's required
+//! full-stack proof on the text workload.
 //!
 //! Loads the real AOT artifacts (`make artifacts`), compiles them on the
-//! PJRT CPU client, and serves Poisson-arriving classification requests
-//! through the full SparseRT stack (admission → dynamic batcher → router →
-//! PJRT execution), reporting latency percentiles and throughput per
-//! routing policy. Recorded in EXPERIMENTS.md §E2E.
+//! PJRT CPU client via [`PjrtServingBackend`] (the unified
+//! `InferenceBackend` implementation owning the executor thread), and
+//! serves Poisson-arriving classification requests through the full
+//! SparseRT stack (admission → dynamic batcher → router → PJRT
+//! execution), reporting latency percentiles and throughput per routing
+//! policy. Recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_bert -- \
+//! make artifacts && cargo run --release --features pjrt --example serve_bert -- \
 //!     --requests 64 --rate 50 --policy max
 //! ```
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use s4::coordinator::{
-    Backend, BatcherConfig, Router, RoutingPolicy, Server, ServerConfig,
-};
-use s4::runtime::{default_artifact_dir, Executor, Manifest, Value};
+use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
+use s4::runtime::{default_artifact_dir, Manifest, PjrtServingBackend};
 use s4::util::cli::Args;
 use s4::util::rng::Xoshiro256;
 use s4::util::stats::Summary;
-
-/// PJRT-backed serving backend. The PJRT client is not `Send`/`Sync`
-/// (Rc-based internals), so a dedicated executor thread owns it; workers
-/// submit execution jobs over a channel. All artifacts are precompiled at
-/// startup — the request path is pure execution.
-struct PjrtBackend {
-    tx: std::sync::Mutex<std::sync::mpsc::Sender<Job>>,
-    /// artifact → (seq, classes), snapshotted from the manifest
-    meta: std::collections::HashMap<String, (usize, usize)>,
-}
-
-type Job = (String, Vec<i32>, std::sync::mpsc::Sender<anyhow::Result<Vec<f32>>>);
-
-impl PjrtBackend {
-    fn new(m: &Manifest) -> anyhow::Result<PjrtBackend> {
-        let meta = m
-            .artifacts
-            .iter()
-            .map(|a| {
-                let classes = a.outputs.first().map(|o| o.shape[1]).unwrap_or(2);
-                (a.name.clone(), (a.seq.max(1), classes))
-            })
-            .collect();
-        let (tx, rx) = std::sync::mpsc::channel::<Job>();
-        let m2 = m.clone();
-        // readiness signal: compilation happens before serving starts
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<usize>>();
-        std::thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || {
-                let mut ex = match Executor::cpu() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                match ex.load_all(&m2) {
-                    Ok(n) => {
-                        let _ = ready_tx.send(Ok(n));
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                }
-                while let Ok((artifact, tokens, resp)) = rx.recv() {
-                    let result = ex
-                        .loaded(&artifact)
-                        .ok_or_else(|| anyhow::anyhow!("artifact {artifact} not loaded"))
-                        .and_then(|model| model.run(&[Value::I32(tokens)]))
-                        .map(|out| out.into_iter().next().unwrap());
-                    let _ = resp.send(result);
-                }
-            })?;
-        let n = ready_rx.recv()??;
-        eprintln!("compiled {n} artifacts on the PJRT executor thread");
-        Ok(PjrtBackend { tx: std::sync::Mutex::new(tx), meta })
-    }
-}
-
-impl Backend for PjrtBackend {
-    fn run(&self, artifact: &str, _capacity: usize, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
-        let (rtx, rrx) = std::sync::mpsc::channel();
-        self.tx
-            .lock()
-            .unwrap()
-            .send((artifact.to_string(), tokens.to_vec(), rtx))
-            .map_err(|_| anyhow::anyhow!("pjrt executor thread gone"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("pjrt executor thread gone"))?
-    }
-
-    fn seq_len(&self, artifact: &str) -> usize {
-        self.meta.get(artifact).map(|&(s, _)| s).unwrap_or(128)
-    }
-
-    fn classes(&self, artifact: &str) -> usize {
-        self.meta.get(artifact).map(|&(_, c)| c).unwrap_or(2)
-    }
-}
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
@@ -114,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let manifest = Manifest::load(&default_artifact_dir())?;
-    let backend = Arc::new(PjrtBackend::new(&manifest)?);
+    let backend = Arc::new(PjrtServingBackend::new(&manifest)?);
     let vocab = 1024i32; // bert_tiny vocab (see python/compile/model.py)
 
     let srv = Server::start(
@@ -140,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     for _ in 0..n {
         std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
         let tokens: Vec<i32> = (0..128).map(|_| rng.next_below(vocab as u64) as i32).collect();
-        match h.submit("bert_tiny", tokens) {
+        match h.submit_tokens("bert_tiny", tokens) {
             Ok((_, rx)) => rxs.push(rx),
             Err(_) => rejected += 1,
         }

@@ -1,30 +1,17 @@
 //! Bench: the serving coordinator hot path — batcher+router+dispatch
 //! overhead with an instant backend (isolates L3 from model compute), and
-//! closed-loop throughput with the simulator-paced backend.
+//! closed-loop throughput with the simulator-paced backend. Both run
+//! through the unified `InferenceBackend` trait.
 //!
 //! §Perf target: coordinator overhead p50 < 200 µs/request at load.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use s4::coordinator::{
-    Backend, BatcherConfig, Router, RoutingPolicy, Server, ServerConfig, SimBackend,
-};
+use s4::backend::{EchoBackend, InferenceBackend, SimBackend};
+use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
 use s4::runtime::Manifest;
 use s4::util::stats::Summary;
-
-struct Instant0;
-impl Backend for Instant0 {
-    fn run(&self, _a: &str, capacity: usize, _t: &[i32]) -> anyhow::Result<Vec<f32>> {
-        Ok(vec![0.0; capacity * 2])
-    }
-    fn seq_len(&self, _a: &str) -> usize {
-        32
-    }
-    fn classes(&self, _a: &str) -> usize {
-        2
-    }
-}
 
 fn manifest() -> Manifest {
     let text = r#"{"artifacts": [
@@ -40,7 +27,7 @@ fn manifest() -> Manifest {
     Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
 }
 
-fn run_closed_loop(backend: Arc<dyn Backend>, n: usize, label: &str) {
+fn run_closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) {
     let srv = Server::start(
         ServerConfig {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
@@ -54,7 +41,7 @@ fn run_closed_loop(backend: Arc<dyn Backend>, n: usize, label: &str) {
     let h = srv.handle();
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n)
-        .filter_map(|i| h.submit("bert_tiny", vec![i as i32; 32]).ok())
+        .filter_map(|i| h.submit_tokens("bert_tiny", vec![i as i32; 32]).ok())
         .map(|(_, rx)| rx)
         .collect();
     let mut lat_us = Vec::with_capacity(rxs.len());
@@ -76,10 +63,14 @@ fn run_closed_loop(backend: Arc<dyn Backend>, n: usize, label: &str) {
 }
 
 fn main() {
-    // coordinator overhead: instant backend, open-loop burst
-    run_closed_loop(Arc::new(Instant0), 20_000, "coordinator_overhead(instant backend)");
-    // simulator-paced: batching actually matters
+    // coordinator overhead: instant echo backend, open-loop burst
     let m = manifest();
+    run_closed_loop(
+        Arc::new(EchoBackend::from_manifest(&m)),
+        20_000,
+        "coordinator_overhead(echo backend)",
+    );
+    // simulator-paced: batching actually matters
     run_closed_loop(
         Arc::new(SimBackend::from_manifest(&m, 0.05)),
         2_000,

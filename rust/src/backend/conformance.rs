@@ -1,0 +1,118 @@
+//! Backend conformance suite: the behavioural contract of
+//! [`InferenceBackend`], written as reusable assertion functions.
+//!
+//! These are plain `pub fn`s (not `#[test]`s) so any test crate can apply
+//! them to any implementation — `rust/tests/backend_conformance.rs` runs
+//! the suite against [`EchoBackend`](crate::backend::EchoBackend) and
+//! [`SimBackend`](crate::backend::SimBackend); a PJRT-backed run rides the
+//! `pjrt` feature. A new backend gets the whole contract checked with one
+//! `run_all` call.
+
+use crate::backend::{InferenceBackend, Value};
+use crate::runtime::manifest::Manifest;
+
+/// Specs round-trip the manifest: what the backend reports per artifact is
+/// exactly what the manifest declared, and `batch_capacity` follows the
+/// first input's leading dim.
+pub fn check_spec_introspection(b: &dyn InferenceBackend, m: &Manifest) {
+    for a in &m.artifacts {
+        let ins = b.input_specs(&a.name).expect("input_specs on known artifact");
+        let outs = b.output_specs(&a.name).expect("output_specs on known artifact");
+        assert_eq!(ins, &a.inputs[..], "{}: input specs drifted", a.name);
+        assert_eq!(outs, &a.outputs[..], "{}: output specs drifted", a.name);
+        let want_cap = a.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
+        assert_eq!(b.batch_capacity(&a.name).unwrap(), want_cap, "{}: capacity", a.name);
+    }
+}
+
+/// Unknown artifacts surface as `Err` from every trait method — never a
+/// panic (the seed's `SimBackend::spec` panicked here).
+pub fn check_unknown_artifact_is_error(b: &dyn InferenceBackend) {
+    let name = "__conformance_no_such_artifact__";
+    assert!(b.input_specs(name).is_err(), "input_specs must Err on unknown artifact");
+    assert!(b.output_specs(name).is_err(), "output_specs must Err on unknown artifact");
+    assert!(b.run_batch(name, &[]).is_err(), "run_batch must Err on unknown artifact");
+}
+
+/// Spec-shaped inputs produce spec-shaped outputs: one value per output
+/// spec, exact element count, matching dtype.
+pub fn check_output_shapes(b: &dyn InferenceBackend, m: &Manifest) {
+    for a in &m.artifacts {
+        let inputs: Vec<Value> = a
+            .inputs
+            .iter()
+            .map(|s| Value::zeros(&s.dtype, s.elems()).expect("spec dtype"))
+            .collect();
+        let outs = b
+            .run_batch(&a.name, &inputs)
+            .unwrap_or_else(|e| panic!("{}: valid batch rejected: {e}", a.name));
+        assert_eq!(outs.len(), a.outputs.len(), "{}: output arity", a.name);
+        for (v, s) in outs.iter().zip(&a.outputs) {
+            assert_eq!(v.len(), s.elems(), "{}: output `{}` size", a.name, s.name);
+            assert_eq!(v.dtype(), s.dtype, "{}: output `{}` dtype", a.name, s.name);
+        }
+    }
+}
+
+/// Malformed batches are rejected: wrong arity, wrong element count,
+/// wrong dtype (checked on every artifact that declares inputs).
+pub fn check_input_validation(b: &dyn InferenceBackend, m: &Manifest) {
+    for a in m.artifacts.iter().filter(|a| !a.inputs.is_empty()) {
+        let good = || -> Vec<Value> {
+            a.inputs
+                .iter()
+                .map(|s| Value::zeros(&s.dtype, s.elems()).unwrap())
+                .collect()
+        };
+        assert!(
+            b.run_batch(&a.name, &[]).is_err(),
+            "{}: empty input set must be rejected",
+            a.name
+        );
+        let mut wrong_len = good();
+        wrong_len[0].push_zeros(1);
+        assert!(
+            b.run_batch(&a.name, &wrong_len).is_err(),
+            "{}: oversized input must be rejected",
+            a.name
+        );
+        let mut wrong_dtype = good();
+        wrong_dtype[0] = match wrong_dtype[0].dtype() {
+            "s32" => Value::F32(vec![0.0; a.inputs[0].elems()]),
+            _ => Value::I32(vec![0; a.inputs[0].elems()]),
+        };
+        assert!(
+            b.run_batch(&a.name, &wrong_dtype).is_err(),
+            "{}: wrong-dtype input must be rejected",
+            a.name
+        );
+    }
+}
+
+/// Identical batches produce identical outputs (the coordinator's batch
+/// demux and any response caching rely on this).
+pub fn check_determinism(b: &dyn InferenceBackend, m: &Manifest) {
+    for a in &m.artifacts {
+        let inputs: Vec<Value> = a
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match s.dtype.as_str() {
+                "s32" => Value::I32((0..s.elems() as i32).map(|x| x + i as i32).collect()),
+                _ => Value::F32((0..s.elems()).map(|x| x as f32 * 0.5).collect()),
+            })
+            .collect();
+        let o1 = b.run_batch(&a.name, &inputs).expect("run 1");
+        let o2 = b.run_batch(&a.name, &inputs).expect("run 2");
+        assert_eq!(o1, o2, "{}: nondeterministic outputs", a.name);
+    }
+}
+
+/// The whole contract.
+pub fn run_all(b: &dyn InferenceBackend, m: &Manifest) {
+    check_spec_introspection(b, m);
+    check_unknown_artifact_is_error(b);
+    check_output_shapes(b, m);
+    check_input_validation(b, m);
+    check_determinism(b, m);
+}

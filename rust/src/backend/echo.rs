@@ -1,0 +1,108 @@
+//! Instant test backend: reflects inputs back as recognizable outputs.
+//!
+//! For every sample, each output tensor carries `[first element of the
+//! sample's first input, batch capacity, 0, 0, ...]` — enough structure
+//! for tests to assert that padding, routing and demux preserved their
+//! payload, with zero service time (isolates coordinator overhead in
+//! benches).
+
+use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+pub struct EchoBackend {
+    metas: Vec<ArtifactMeta>,
+}
+
+impl EchoBackend {
+    pub fn from_manifest(m: &Manifest) -> EchoBackend {
+        EchoBackend { metas: m.artifacts.clone() }
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .find(|a| a.name == artifact)
+            .ok_or_else(|| anyhow::anyhow!("EchoBackend: unknown artifact `{artifact}`"))
+    }
+}
+
+impl InferenceBackend for EchoBackend {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        Ok(&self.meta(artifact)?.inputs)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        Ok(&self.meta(artifact)?.outputs)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let meta = self.meta(artifact)?;
+        validate_inputs(artifact, &meta.inputs, inputs)?;
+        let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
+        // first element of sample `b` of the first input, as f64
+        let first = |b: usize| -> f64 {
+            let per = meta.inputs.first().map(|s| s.sample_elems()).unwrap_or(0);
+            if per == 0 || b >= capacity {
+                return 0.0;
+            }
+            match inputs.first() {
+                Some(Value::I32(x)) => x[b * per] as f64,
+                Some(Value::F32(x)) => x[b * per] as f64,
+                None => 0.0,
+            }
+        };
+        let mut out = Vec::with_capacity(meta.outputs.len());
+        for o in &meta.outputs {
+            let per = o.sample_elems();
+            let mut v = Value::empty(&o.dtype)?;
+            for b in 0..o.batch_dim() {
+                for c in 0..per {
+                    let x = match c {
+                        0 => first(b),
+                        1 => capacity as f64,
+                        _ => 0.0,
+                    };
+                    match &mut v {
+                        Value::F32(vec) => vec.push(x as f32),
+                        Value::I32(vec) => vec.push(x as i32),
+                    }
+                }
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = r#"{"artifacts": [
+          {"name": "m_b2", "file": "x", "family": "bert", "model": "m",
+           "sparsity": 8, "batch": 2, "seq": 3,
+           "inputs": [{"name": "ids", "shape": [2, 3], "dtype": "s32"}],
+           "outputs": [{"name": "logits", "shape": [2, 2], "dtype": "f32"}]}
+        ]}"#;
+        Manifest::parse(Path::new("/tmp"), text).unwrap()
+    }
+
+    #[test]
+    fn echoes_first_element_and_capacity() {
+        let b = EchoBackend::from_manifest(&manifest());
+        let out = b
+            .run_batch("m_b2", &[Value::I32(vec![7, 0, 0, 9, 0, 0])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], Value::F32(vec![7.0, 2.0, 9.0, 2.0]));
+    }
+
+    #[test]
+    fn unknown_artifact_is_err() {
+        let b = EchoBackend::from_manifest(&manifest());
+        assert!(b.run_batch("zz", &[]).is_err());
+        assert!(b.input_specs("zz").is_err());
+    }
+}

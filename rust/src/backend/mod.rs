@@ -1,0 +1,124 @@
+//! The unified typed inference API.
+//!
+//! One trait, [`InferenceBackend`], fronts every way this repo can execute
+//! a compiled artifact:
+//!
+//! * the PJRT executor
+//!   ([`runtime::PjrtServingBackend`](crate::runtime::executor), feature
+//!   `pjrt`) — real HLO execution;
+//! * [`SimBackend`] — simulator-paced, deterministic pseudo-outputs
+//!   (serving benchmarks and tests without artifacts);
+//! * [`EchoBackend`] — instant, input-reflecting (unit tests, coordinator
+//!   overhead benches).
+//!
+//! Callers speak `(artifact, Vec<Value>)` and read back `Vec<Value>`;
+//! shape/dtype contracts come from the manifest [`TensorSpec`]s exposed by
+//! [`InferenceBackend::input_specs`] / [`InferenceBackend::output_specs`].
+//! This replaces the old token-matrix-only `coordinator::Backend` trait —
+//! ResNet image batches and BERT token batches now flow through the same
+//! surface (paper §3's SparseRT claim: one runtime for CV, NLP and
+//! multimodal workloads).
+//!
+//! [`conformance`] holds the shared assertion suite every implementation
+//! must pass; integration tests run it against each in-tree backend.
+
+pub mod conformance;
+pub mod echo;
+pub mod sim;
+pub mod value;
+
+pub use crate::runtime::manifest::TensorSpec;
+pub use echo::EchoBackend;
+pub use sim::SimBackend;
+pub use value::Value;
+
+/// A uniform execution engine for compiled artifacts.
+///
+/// Implementations must be cheap to call concurrently (coordinator workers
+/// share one instance behind an `Arc`).
+pub trait InferenceBackend: Send + Sync + 'static {
+    /// Input tensor specs for `artifact`, in positional order. `Err` on
+    /// unknown artifacts — never panic. Borrowed (not cloned): spec
+    /// introspection sits on the serving hot path.
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]>;
+
+    /// Output tensor specs for `artifact`, in positional order.
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]>;
+
+    /// Execute one full batch: `inputs` holds one [`Value`] per input
+    /// spec, already batch-shaped (leading dim = the artifact's batch
+    /// capacity; callers zero-pad short batches). Returns one [`Value`]
+    /// per output spec, batch-shaped the same way.
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>>;
+
+    /// Batch capacity of `artifact`: the leading dim of its first input
+    /// spec (1 when the artifact declares no inputs).
+    fn batch_capacity(&self, artifact: &str) -> anyhow::Result<usize> {
+        Ok(self
+            .input_specs(artifact)?
+            .first()
+            .map(|s| s.batch_dim())
+            .unwrap_or(1))
+    }
+}
+
+/// Shared strict validation of a batch-shaped input set against specs:
+/// arity, dtype, and exact element counts. Implementations call this at
+/// the top of [`InferenceBackend::run_batch`].
+pub fn validate_inputs(
+    artifact: &str,
+    specs: &[TensorSpec],
+    inputs: &[Value],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        inputs.len() == specs.len(),
+        "{artifact}: expected {} inputs, got {}",
+        specs.len(),
+        inputs.len()
+    );
+    for (v, s) in inputs.iter().zip(specs) {
+        anyhow::ensure!(
+            v.matches_dtype(s),
+            "{artifact}: input `{}` dtype mismatch (spec {}, value {})",
+            s.name,
+            s.dtype,
+            v.dtype()
+        );
+        anyhow::ensure!(
+            v.len() == s.elems(),
+            "{artifact}: input `{}` needs {} elems, got {}",
+            s.name,
+            s.elems(),
+            v.len()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: &str) -> TensorSpec {
+        TensorSpec {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            dtype: dtype.to_string(),
+        }
+    }
+
+    #[test]
+    fn validate_inputs_checks_arity_dtype_and_size() {
+        let specs = vec![spec("ids", &[2, 4], "s32"), spec("mask", &[2, 4], "f32")];
+        let ok = vec![Value::I32(vec![0; 8]), Value::F32(vec![0.0; 8])];
+        assert!(validate_inputs("a", &specs, &ok).is_ok());
+        // arity
+        assert!(validate_inputs("a", &specs, &ok[..1]).is_err());
+        // dtype
+        let bad = vec![Value::F32(vec![0.0; 8]), Value::F32(vec![0.0; 8])];
+        assert!(validate_inputs("a", &specs, &bad).is_err());
+        // size
+        let short = vec![Value::I32(vec![0; 7]), Value::F32(vec![0.0; 8])];
+        assert!(validate_inputs("a", &specs, &short).is_err());
+    }
+}

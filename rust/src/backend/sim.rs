@@ -1,0 +1,153 @@
+//! Simulator-paced backend: deterministic pseudo-outputs, service time
+//! from the analytic cost model (scaled so tests run fast). Lets the full
+//! serving stack be exercised and benchmarked without PJRT artifacts —
+//! for any workload the manifest describes, vision or text.
+
+use std::time::Duration;
+
+use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+
+pub struct SimBackend {
+    /// (artifact metadata, simulated service time per batch)
+    specs: Vec<(ArtifactMeta, Duration)>,
+}
+
+impl SimBackend {
+    /// Pace every artifact in `m` by simulating its model on the Antoum
+    /// config at the artifact's sparsity; `time_scale` shrinks the
+    /// simulated latency (1.0 = real pace, 0.01 = 100x faster).
+    pub fn from_manifest(m: &Manifest, time_scale: f64) -> SimBackend {
+        use crate::arch::AntoumConfig;
+        use crate::graph::models;
+        use crate::sim::{simulate, Target};
+        let cfg = AntoumConfig::s4();
+        let specs = m
+            .artifacts
+            .iter()
+            .map(|a| {
+                let g = models::by_name(&a.model, a.batch.max(1))
+                    .unwrap_or_else(|_| models::bert(models::BERT_TINY, a.batch.max(1), 128));
+                let r = simulate(&g, Target::antoum(&cfg, a.sparsity.max(1)));
+                let secs = (r.latency_ms / 1e3 * time_scale).max(1e-6);
+                (a.clone(), Duration::from_secs_f64(secs))
+            })
+            .collect();
+        SimBackend { specs }
+    }
+
+    fn meta(&self, artifact: &str) -> anyhow::Result<&(ArtifactMeta, Duration)> {
+        self.specs
+            .iter()
+            .find(|(a, _)| a.name == artifact)
+            .ok_or_else(|| anyhow::anyhow!("SimBackend: unknown artifact `{artifact}`"))
+    }
+}
+
+impl InferenceBackend for SimBackend {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        Ok(&self.meta(artifact)?.0.inputs)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        Ok(&self.meta(artifact)?.0.outputs)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let (meta, dt) = self.meta(artifact)?;
+        validate_inputs(artifact, &meta.inputs, inputs)?;
+        std::thread::sleep(*dt);
+        let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
+        // deterministic pseudo-outputs: a per-sample hash over every input
+        // tensor, so identical requests get identical answers regardless
+        // of which batch they rode in
+        let mut hashes = vec![0u64; capacity];
+        for (v, spec) in inputs.iter().zip(&meta.inputs) {
+            let per = spec.sample_elems();
+            for (b, h) in hashes.iter_mut().enumerate().take(spec.batch_dim().min(capacity)) {
+                match v {
+                    Value::I32(x) => {
+                        for &t in &x[b * per..(b + 1) * per] {
+                            *h = h.wrapping_mul(31).wrapping_add(t as u64);
+                        }
+                    }
+                    Value::F32(x) => {
+                        for &t in &x[b * per..(b + 1) * per] {
+                            *h = h.wrapping_mul(31).wrapping_add(t.to_bits() as u64);
+                        }
+                    }
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(meta.outputs.len());
+        for o in &meta.outputs {
+            let per = o.sample_elems();
+            let mut v = Value::empty(&o.dtype)?;
+            for b in 0..o.batch_dim() {
+                let h = hashes.get(b).copied().unwrap_or(0);
+                match &mut v {
+                    Value::F32(vec) => {
+                        for c in 0..per {
+                            vec.push(((h >> (c % 16)) & 0xff) as f32 / 255.0);
+                        }
+                    }
+                    Value::I32(vec) => {
+                        for c in 0..per {
+                            vec.push(((h >> (c % 16)) & 0xff) as i32);
+                        }
+                    }
+                }
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Manifest {
+        let text = r#"{"artifacts": [
+          {"name": "bert_tiny_s8_b2", "file": "x", "family": "bert",
+           "model": "bert_tiny", "sparsity": 8, "batch": 2, "seq": 4,
+           "inputs": [{"name": "ids", "shape": [2, 4], "dtype": "s32"}],
+           "outputs": [{"name": "logits", "shape": [2, 3], "dtype": "f32"}]}
+        ]}"#;
+        Manifest::parse(Path::new("/tmp"), text).unwrap()
+    }
+
+    #[test]
+    fn unknown_artifact_is_err_not_panic() {
+        let b = SimBackend::from_manifest(&manifest(), 1e-6);
+        assert!(b.input_specs("nope").is_err());
+        assert!(b.output_specs("nope").is_err());
+        assert!(b.run_batch("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn outputs_are_deterministic_and_spec_shaped() {
+        let b = SimBackend::from_manifest(&manifest(), 1e-6);
+        let inputs = vec![Value::I32(vec![1, 2, 3, 4, 5, 6, 7, 8])];
+        let o1 = b.run_batch("bert_tiny_s8_b2", &inputs).unwrap();
+        let o2 = b.run_batch("bert_tiny_s8_b2", &inputs).unwrap();
+        assert_eq!(o1, o2);
+        assert_eq!(o1.len(), 1);
+        assert_eq!(o1[0].len(), 6);
+        assert_eq!(o1[0].dtype(), "f32");
+        // different samples hash differently
+        let l = o1[0].as_f32().unwrap();
+        assert_ne!(&l[0..3], &l[3..6]);
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        let b = SimBackend::from_manifest(&manifest(), 1e-6);
+        // wrong elem count
+        assert!(b.run_batch("bert_tiny_s8_b2", &[Value::I32(vec![1; 7])]).is_err());
+        // wrong dtype
+        assert!(b.run_batch("bert_tiny_s8_b2", &[Value::F32(vec![0.0; 8])]).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Typed tensor values — the payload type of the unified inference API.
+//!
+//! A [`Value`] is a flat, typed buffer; shape and dtype *contracts* come
+//! from the [`TensorSpec`]s an artifact publishes through
+//! [`InferenceBackend::input_specs`](crate::backend::InferenceBackend::input_specs).
+//! The same type carries a single sample inside a
+//! [`Request`](crate::coordinator::Request), a packed batch handed to a
+//! backend, and a demuxed per-sample output inside a
+//! [`Response`](crate::coordinator::Response).
+
+use crate::runtime::manifest::TensorSpec;
+
+/// A flat, typed tensor buffer (manifest dtypes: `s32`, `f32`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl Value {
+    pub fn len(&self) -> usize {
+        match self {
+            Value::I32(v) => v.len(),
+            Value::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Manifest dtype tag of this value (`"s32"` / `"f32"`).
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::I32(_) => "s32",
+            Value::F32(_) => "f32",
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Value::I32(v) => Some(v),
+            Value::F32(_) => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Value::F32(v) => Some(v),
+            Value::I32(_) => None,
+        }
+    }
+
+    /// Empty value of the given manifest dtype.
+    pub fn empty(dtype: &str) -> anyhow::Result<Value> {
+        match dtype {
+            "s32" => Ok(Value::I32(Vec::new())),
+            "f32" => Ok(Value::F32(Vec::new())),
+            other => anyhow::bail!("unsupported dtype `{other}` (expected s32|f32)"),
+        }
+    }
+
+    /// All-zeros value of `elems` elements.
+    pub fn zeros(dtype: &str, elems: usize) -> anyhow::Result<Value> {
+        let mut v = Value::empty(dtype)?;
+        v.push_zeros(elems);
+        Ok(v)
+    }
+
+    /// Whether this value's dtype can feed `spec` (lengths are checked
+    /// separately: serving pads sample-shaped payloads up to spec size).
+    pub fn matches_dtype(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype
+    }
+
+    /// Append `n` zero elements.
+    pub fn push_zeros(&mut self, n: usize) {
+        match self {
+            Value::I32(v) => v.resize(v.len() + n, 0),
+            Value::F32(v) => v.resize(v.len() + n, 0.0),
+        }
+    }
+
+    /// Append one sample slot from `src`: copies up to `per_sample`
+    /// elements (over-long payloads are truncated, matching the seed's
+    /// token-resize behaviour) and zero-pads the remainder.
+    pub fn push_padded(&mut self, src: &Value, per_sample: usize) -> anyhow::Result<()> {
+        match (self, src) {
+            (Value::I32(dst), Value::I32(s)) => {
+                let n = s.len().min(per_sample);
+                dst.extend_from_slice(&s[..n]);
+                dst.resize(dst.len() + per_sample - n, 0);
+                Ok(())
+            }
+            (Value::F32(dst), Value::F32(s)) => {
+                let n = s.len().min(per_sample);
+                dst.extend_from_slice(&s[..n]);
+                dst.resize(dst.len() + per_sample - n, 0.0);
+                Ok(())
+            }
+            (dst, src) => anyhow::bail!(
+                "dtype mismatch: batch is {}, sample is {}",
+                dst.dtype(),
+                src.dtype()
+            ),
+        }
+    }
+
+    /// Copy out `len` elements starting at `start` as an owned value
+    /// (batch demux). Callers validate bounds against the output spec.
+    pub fn slice(&self, start: usize, len: usize) -> Value {
+        match self {
+            Value::I32(v) => Value::I32(v[start..start + len].to_vec()),
+            Value::F32(v) => Value::F32(v[start..start + len].to_vec()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tags_and_accessors() {
+        let i = Value::I32(vec![1, 2]);
+        let f = Value::F32(vec![0.5]);
+        assert_eq!(i.dtype(), "s32");
+        assert_eq!(f.dtype(), "f32");
+        assert_eq!(i.as_i32(), Some(&[1, 2][..]));
+        assert!(i.as_f32().is_none());
+        assert_eq!(f.as_f32(), Some(&[0.5][..]));
+        assert_eq!(i.len(), 2);
+        assert!(!i.is_empty());
+    }
+
+    #[test]
+    fn zeros_and_empty() {
+        assert_eq!(Value::zeros("s32", 3).unwrap(), Value::I32(vec![0; 3]));
+        assert_eq!(Value::zeros("f32", 2).unwrap(), Value::F32(vec![0.0; 2]));
+        assert!(Value::empty("bf16").is_err());
+    }
+
+    #[test]
+    fn push_padded_truncates_and_pads() {
+        let mut b = Value::empty("s32").unwrap();
+        b.push_padded(&Value::I32(vec![7, 8]), 4).unwrap();
+        b.push_padded(&Value::I32(vec![1, 2, 3, 4, 5]), 4).unwrap();
+        assert_eq!(b, Value::I32(vec![7, 8, 0, 0, 1, 2, 3, 4]));
+        assert!(b.push_padded(&Value::F32(vec![1.0]), 4).is_err());
+    }
+
+    #[test]
+    fn slice_extracts_samples() {
+        let b = Value::F32(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.slice(2, 2), Value::F32(vec![3.0, 4.0]));
+    }
+}

@@ -131,7 +131,7 @@ mod tests {
             Request {
                 id: RequestId(id),
                 model: model.to_string(),
-                tokens: vec![0; 4],
+                inputs: vec![crate::backend::Value::I32(vec![0; 4])],
                 submitted: Instant::now(),
                 reply: tx,
             },

@@ -1,15 +1,20 @@
 //! SparseRT serving coordinator (Layer 3).
 //!
-//! The serve-time system around the runtime: requests come in, are
+//! The serve-time system around the runtime: typed requests come in, are
 //! admission-controlled, dynamically batched, routed to a compiled model
-//! variant, executed on a backend (PJRT or simulator), and answered — all
-//! on std threads + channels, Python never involved.
+//! variant, executed on any [`InferenceBackend`] (PJRT, simulator, echo),
+//! and answered — all on std threads + channels, Python never involved.
 //!
 //! ```text
-//! client ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ backend
+//! client ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ InferenceBackend
 //!                                                        │
 //!                                  metrics ◀─────────────┘
 //! ```
+//!
+//! Requests carry `Vec<Value>` payloads (one sample-shaped tensor per
+//! model input) and the padding/demux in the worker pool is driven by the
+//! artifact's `TensorSpec`s, so BERT token batches and ResNet image
+//! batches flow through the identical path.
 
 pub mod admission;
 pub mod batcher;
@@ -22,5 +27,9 @@ pub use admission::{Admission, AdmissionDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
-pub use router::{Router, RoutingPolicy};
-pub use server::{Backend, Server, ServerConfig, SimBackend};
+pub use router::{Placement, Router, RoutingPolicy};
+pub use server::{Server, ServerConfig, ServerHandle};
+
+// The execution surface lives in `crate::backend`; re-exported here for
+// serving-centric call sites.
+pub use crate::backend::{EchoBackend, InferenceBackend, SimBackend};

@@ -1,31 +1,42 @@
 //! Request/response types on the serving hot path.
+//!
+//! Payloads are typed multi-tensor [`Value`]s: a request carries one
+//! *sample-shaped* value per model input (token ids for BERT, image
+//! pixels for ResNet), a response carries one sample-shaped value per
+//! model output. The server pads samples to the routed artifact's
+//! [`TensorSpec`](crate::backend::TensorSpec)s and demuxes batch outputs
+//! back per request — nothing here assumes a token→logits shape.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::backend::Value;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
 
-/// One inference request: a token sequence for a named model.
+/// One inference request for a named model.
 #[derive(Debug)]
 pub struct Request {
     pub id: RequestId,
     pub model: String,
-    /// token ids, length = the model's sequence length (router pads/rejects)
-    pub tokens: Vec<i32>,
+    /// one sample-shaped value per model input; the server zero-pads (or
+    /// truncates) each to the routed artifact's per-sample spec length
+    pub inputs: Vec<Value>,
     pub submitted: Instant,
     /// where the response goes (per-client channel)
     pub reply: Sender<Response>,
 }
 
-/// The answer: classifier logits plus serving telemetry.
+/// The answer: typed output tensors plus serving telemetry.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: RequestId,
-    pub logits: Vec<f32>,
+    /// one sample-shaped value per model output
+    pub outputs: Vec<Value>,
     /// which artifact variant served it (e.g. "bert_tiny_s8_b8")
     pub served_by: String,
-    /// batch size it rode in
+    /// batch capacity it rode in
     pub batch_size: usize,
     /// end-to-end latency
     pub latency_us: u64,
@@ -39,7 +50,7 @@ impl Response {
     pub fn error(id: RequestId, msg: impl Into<String>) -> Response {
         Response {
             id,
-            logits: Vec::new(),
+            outputs: Vec::new(),
             served_by: String::new(),
             batch_size: 0,
             latency_us: 0,
@@ -47,5 +58,36 @@ impl Response {
             ok: false,
             error: Some(msg.into()),
         }
+    }
+
+    /// The first f32 output — the classifier-logits convenience accessor
+    /// (empty when the request failed or the model emits no f32 tensor).
+    pub fn logits(&self) -> &[f32] {
+        self.outputs
+            .iter()
+            .find_map(|v| v.as_f32())
+            .unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_response_is_marked_and_empty() {
+        let r = Response::error(RequestId(7), "nope");
+        assert!(!r.ok);
+        assert_eq!(r.id, RequestId(7));
+        assert!(r.outputs.is_empty());
+        assert!(r.logits().is_empty());
+        assert_eq!(r.error.as_deref(), Some("nope"));
+    }
+
+    #[test]
+    fn logits_finds_first_f32_output() {
+        let mut r = Response::error(RequestId(1), "x");
+        r.outputs = vec![Value::I32(vec![3]), Value::F32(vec![0.25, 0.75])];
+        assert_eq!(r.logits(), &[0.25, 0.75]);
     }
 }

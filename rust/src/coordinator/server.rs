@@ -1,42 +1,32 @@
-//! The serving loop: batcher thread + worker pool over a [`Backend`].
+//! The serving loop: batcher thread + worker pool over an
+//! [`InferenceBackend`].
 //!
 //! Wire-up (std threads, no async runtime in this environment):
 //! * clients send [`Request`]s through [`ServerHandle::submit`] (admission
 //!   happens there);
 //! * one batcher thread forms [`Batch`]es;
 //! * `workers` threads pull batches from a shared channel, ask the
-//!   [`Router`] for placements, run them on the [`Backend`], and reply.
+//!   [`Router`] for placements, pack typed spec-driven input batches, run
+//!   them on the backend, and demux typed responses.
+//!
+//! The backend is any [`InferenceBackend`] — PJRT (feature `pjrt`),
+//! [`SimBackend`](crate::backend::SimBackend), or
+//! [`EchoBackend`](crate::backend::EchoBackend) — and padding/demux is
+//! driven entirely by the artifact's `TensorSpec`s, so token models and
+//! image models serve through the same path.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use super::admission::{Admission, AdmissionDecision};
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
-use super::router::Router;
+use super::router::{Placement, Router};
+use crate::backend::{InferenceBackend, Value};
 use crate::runtime::manifest::Manifest;
-
-/// Executes one planned placement. Implementations: PJRT (examples — owns
-/// the compiled executables), simulator (tests/benches), echo (unit tests).
-pub trait Backend: Send + Sync + 'static {
-    /// Run `artifact` with a token matrix of `capacity × seq` (already
-    /// padded); return per-sample logits (len = capacity × classes).
-    fn run(
-        &self,
-        artifact: &str,
-        capacity: usize,
-        tokens: &[i32],
-    ) -> anyhow::Result<Vec<f32>>;
-
-    /// Sequence length the artifact expects (for padding).
-    fn seq_len(&self, artifact: &str) -> usize;
-
-    /// Classes per sample in the output.
-    fn classes(&self, artifact: &str) -> usize;
-}
 
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
@@ -72,12 +62,13 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit a request; returns the receiver for its response, or an
-    /// immediate rejection.
+    /// Submit a typed request (one sample-shaped [`Value`] per model
+    /// input); returns the receiver for its response, or an immediate
+    /// rejection.
     pub fn submit(
         &self,
         model: &str,
-        tokens: Vec<i32>,
+        inputs: Vec<Value>,
     ) -> Result<(RequestId, Receiver<Response>), AdmissionDecision> {
         match self.admission.try_admit() {
             AdmissionDecision::Admit => {}
@@ -99,7 +90,7 @@ impl ServerHandle {
         let req = Request {
             id,
             model: model.to_string(),
-            tokens,
+            inputs,
             submitted: Instant::now(),
             reply: rtx,
         };
@@ -110,6 +101,15 @@ impl ServerHandle {
         }
         Ok((id, rrx))
     }
+
+    /// Convenience for single-input token models (BERT-style).
+    pub fn submit_tokens(
+        &self,
+        model: &str,
+        tokens: Vec<i32>,
+    ) -> Result<(RequestId, Receiver<Response>), AdmissionDecision> {
+        self.submit(model, vec![Value::I32(tokens)])
+    }
 }
 
 impl Server {
@@ -118,7 +118,7 @@ impl Server {
         cfg: ServerConfig,
         manifest: Manifest,
         router: Router,
-        backend: Arc<dyn Backend>,
+        backend: Arc<dyn InferenceBackend>,
     ) -> Server {
         let (req_tx, req_rx) = channel::<Request>();
         let (batch_tx, batch_rx) = channel::<Batch>();
@@ -204,12 +204,12 @@ impl Server {
     }
 }
 
-/// Execute one formed batch: plan placements, pad, run, demux responses.
+/// Execute one formed batch: plan placements, pack, run, demux responses.
 fn serve_batch(
     batch: &Batch,
     manifest: &Manifest,
     router: &Router,
-    backend: &dyn Backend,
+    backend: &dyn InferenceBackend,
     metrics: &Metrics,
 ) {
     let placements = match router.plan(manifest, &batch.model, batch.len()) {
@@ -227,126 +227,167 @@ fn serve_batch(
         let reqs = &batch.requests[cursor..cursor + p.fill];
         cursor += p.fill;
         metrics.record_batch(p.fill, p.batch_capacity);
-        let seq = backend.seq_len(&p.artifact);
-        let classes = backend.classes(&p.artifact);
-        // pack + pad tokens (pad slots repeat the last real sample so the
-        // executable always sees valid token ids)
-        let mut tokens = Vec::with_capacity(p.batch_capacity * seq);
-        for r in reqs {
-            let mut t = r.tokens.clone();
-            t.resize(seq, 0);
-            tokens.extend_from_slice(&t[..seq]);
-        }
-        for _ in reqs.len()..p.batch_capacity {
-            let start = (reqs.len() - 1) * seq;
-            let last: Vec<i32> = tokens[start..start + seq].to_vec();
-            tokens.extend_from_slice(&last);
-        }
-        let exec_start = Instant::now();
-        match backend.run(&p.artifact, p.batch_capacity, &tokens) {
-            Ok(logits) => {
-                for (i, r) in reqs.iter().enumerate() {
-                    let latency = r.submitted.elapsed();
-                    let queue = batch
-                        .formed_at
-                        .saturating_duration_since(r.submitted)
-                        + exec_start.saturating_duration_since(batch.formed_at);
-                    metrics.record_completion(
-                        latency.as_micros() as u64,
-                        queue.as_micros() as u64,
-                    );
-                    let _ = r.reply.send(Response {
-                        id: r.id,
-                        logits: logits[i * classes..(i + 1) * classes].to_vec(),
-                        served_by: p.artifact.clone(),
-                        batch_size: p.batch_capacity,
-                        latency_us: latency.as_micros() as u64,
-                        queue_us: queue.as_micros() as u64,
-                        ok: true,
-                        error: None,
-                    });
-                }
-            }
-            Err(e) => {
-                for r in reqs {
-                    metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    let _ = r.reply.send(Response::error(r.id, format!("backend: {e}")));
-                }
+        if let Err(e) = run_placement(&p, reqs, backend, batch.formed_at, metrics) {
+            for r in reqs {
+                metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = r.reply.send(Response::error(r.id, format!("backend: {e}")));
             }
         }
     }
 }
 
-// ---------------------------------------------------------------------------
+/// Pack one placement's requests into spec-shaped input batches, execute,
+/// demux per-request outputs. A per-request payload problem (wrong dtype,
+/// missing input) fails only that request — its slot is zeroed and the
+/// rest of the batch still runs. An `Err` return fails the whole
+/// placement (the caller answers every request).
+fn run_placement(
+    p: &Placement,
+    reqs: &[Request],
+    backend: &dyn InferenceBackend,
+    formed_at: Instant,
+    metrics: &Metrics,
+) -> anyhow::Result<()> {
+    let in_specs = backend.input_specs(&p.artifact)?;
+    let out_specs = backend.output_specs(&p.artifact)?;
 
-/// Simulator-paced backend: deterministic logits, service time from the
-/// analytic cost model (scaled down so tests run fast). Lets the full
-/// serving stack be exercised and benchmarked without PJRT artifacts.
-pub struct SimBackend {
-    /// (artifact name, batch, seq, classes, service time)
-    specs: Vec<(String, usize, usize, usize, Duration)>,
-}
+    let mut bad: Vec<Option<String>> = vec![None; reqs.len()];
+    // arity first: extra tensors are an error, not silently ignored
+    for (ri, r) in reqs.iter().enumerate() {
+        if r.inputs.len() > in_specs.len() {
+            bad[ri] = Some(format!(
+                "expected {} inputs, got {}",
+                in_specs.len(),
+                r.inputs.len()
+            ));
+        }
+    }
+    let mut inputs = Vec::with_capacity(in_specs.len());
+    for (i, spec) in in_specs.iter().enumerate() {
+        let per = spec.sample_elems();
+        // pack to the spec's own leading dim (exactly what the backend's
+        // validation will demand); a manifest whose spec cannot hold the
+        // fill is a placement-level error here, not a confusing
+        // element-count mismatch later
+        let slots = spec.batch_dim();
+        anyhow::ensure!(
+            slots >= reqs.len(),
+            "{}: input `{}` batch dim {} < fill {}",
+            p.artifact,
+            spec.name,
+            slots,
+            reqs.len()
+        );
+        let mut v = Value::empty(&spec.dtype)?;
+        for (ri, r) in reqs.iter().enumerate() {
+            if bad[ri].is_some() {
+                v.push_zeros(per);
+                continue;
+            }
+            match r.inputs.get(i) {
+                Some(x) if x.matches_dtype(spec) => v.push_padded(x, per)?,
+                Some(x) => {
+                    bad[ri] = Some(format!(
+                        "input `{}` dtype mismatch (spec {}, got {})",
+                        spec.name,
+                        spec.dtype,
+                        x.dtype()
+                    ));
+                    v.push_zeros(per);
+                }
+                None => {
+                    bad[ri] = Some(format!("missing input {i} (`{}`)", spec.name));
+                    v.push_zeros(per);
+                }
+            }
+        }
+        // zero-pad unfilled slots (the seed repeated the last real sample
+        // here, which underflowed on an empty placement; zeros are always
+        // valid padding)
+        v.push_zeros(per * (slots - reqs.len()));
+        inputs.push(v);
+    }
 
-impl SimBackend {
-    pub fn from_manifest(m: &Manifest, time_scale: f64) -> SimBackend {
-        use crate::arch::AntoumConfig;
-        use crate::graph::models;
-        use crate::sim::{simulate, Target};
-        let cfg = AntoumConfig::s4();
-        let specs = m
-            .artifacts
+    // nothing real to execute (empty placement, or every slot zeroed by a
+    // bad payload): answer the bad requests and skip the inference
+    if bad.iter().all(Option::is_some) {
+        for (r, msg) in reqs.iter().zip(bad.iter_mut()) {
+            if let Some(msg) = msg.take() {
+                metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let _ = r.reply.send(Response::error(r.id, msg));
+            }
+        }
+        return Ok(());
+    }
+
+    let exec_start = Instant::now();
+    let outputs = backend.run_batch(&p.artifact, &inputs)?;
+
+    // validate the whole output set before answering anyone, so a
+    // malformed backend response cannot double-answer some requests
+    anyhow::ensure!(
+        outputs.len() == out_specs.len(),
+        "{}: backend returned {} outputs, specs say {}",
+        p.artifact,
+        outputs.len(),
+        out_specs.len()
+    );
+    for (o, spec) in outputs.iter().zip(out_specs) {
+        anyhow::ensure!(
+            o.len() == spec.elems() && o.dtype() == spec.dtype,
+            "{}: output `{}` shape/dtype drifted from spec",
+            p.artifact,
+            spec.name
+        );
+        anyhow::ensure!(
+            spec.batch_dim() >= reqs.len(),
+            "{}: output `{}` batch dim {} < fill {}",
+            p.artifact,
+            spec.name,
+            spec.batch_dim(),
+            reqs.len()
+        );
+    }
+
+    for (ri, r) in reqs.iter().enumerate() {
+        if let Some(msg) = bad[ri].take() {
+            metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = r.reply.send(Response::error(r.id, msg));
+            continue;
+        }
+        let outs: Vec<Value> = outputs
             .iter()
-            .map(|a| {
-                let g = models::by_name(&a.model, a.batch.max(1))
-                    .unwrap_or_else(|_| models::bert(models::BERT_TINY, a.batch.max(1), 128));
-                let r = simulate(&g, Target::antoum(&cfg, a.sparsity.max(1)));
-                let secs = (r.latency_ms / 1e3 * time_scale).max(1e-6);
-                let classes = a.outputs.first().map(|o| o.shape[1]).unwrap_or(2);
-                (a.name.clone(), a.batch, a.seq.max(1), classes, Duration::from_secs_f64(secs))
+            .zip(out_specs)
+            .map(|(o, spec)| {
+                let per = spec.sample_elems();
+                o.slice(ri * per, per)
             })
             .collect();
-        SimBackend { specs }
+        let latency = r.submitted.elapsed();
+        let queue = formed_at.saturating_duration_since(r.submitted)
+            + exec_start.saturating_duration_since(formed_at);
+        metrics.record_completion(latency.as_micros() as u64, queue.as_micros() as u64);
+        let _ = r.reply.send(Response {
+            id: r.id,
+            outputs: outs,
+            served_by: p.artifact.clone(),
+            batch_size: p.batch_capacity,
+            latency_us: latency.as_micros() as u64,
+            queue_us: queue.as_micros() as u64,
+            ok: true,
+            error: None,
+        });
     }
-
-    fn spec(&self, artifact: &str) -> &(String, usize, usize, usize, Duration) {
-        self.specs
-            .iter()
-            .find(|s| s.0 == artifact)
-            .unwrap_or_else(|| panic!("SimBackend: unknown artifact {artifact}"))
-    }
-}
-
-impl Backend for SimBackend {
-    fn run(&self, artifact: &str, capacity: usize, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
-        let (_, _, seq, classes, dt) = self.spec(artifact).clone();
-        anyhow::ensure!(tokens.len() == capacity * seq, "token shape");
-        std::thread::sleep(dt);
-        // deterministic pseudo-logits: hash of each sample's tokens
-        let mut out = Vec::with_capacity(capacity * classes);
-        for b in 0..capacity {
-            let h = tokens[b * seq..(b + 1) * seq]
-                .iter()
-                .fold(0u64, |acc, &t| acc.wrapping_mul(31).wrapping_add(t as u64));
-            for c in 0..classes {
-                out.push(((h >> (c % 16)) & 0xff) as f32 / 255.0);
-            }
-        }
-        Ok(out)
-    }
-
-    fn seq_len(&self, artifact: &str) -> usize {
-        self.spec(artifact).2
-    }
-
-    fn classes(&self, artifact: &str) -> usize {
-        self.spec(artifact).3
-    }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::EchoBackend;
+    use crate::coordinator::RoutingPolicy;
     use std::path::Path;
+    use std::time::Duration;
 
     fn manifest() -> Manifest {
         let text = r#"{"artifacts": [
@@ -357,63 +398,65 @@ mod tests {
           {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
            "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 16,
            "inputs": [{"name": "ids", "shape": [8, 16], "dtype": "s32"}],
-           "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+           "outputs": [{"shape": [8, 2], "dtype": "f32"}]},
+          {"name": "resnet50_s8_b4", "file": "z", "family": "resnet",
+           "model": "resnet50", "sparsity": 8, "batch": 4, "seq": 0,
+           "inputs": [{"name": "images", "shape": [4, 48], "dtype": "f32"}],
+           "outputs": [{"shape": [4, 10], "dtype": "f32"}]}
         ]}"#;
         Manifest::parse(Path::new("/tmp"), text).unwrap()
     }
 
-    /// Echo backend: instant, logits = [first token, batch size].
-    struct Echo;
-    impl Backend for Echo {
-        fn run(&self, _a: &str, capacity: usize, tokens: &[i32]) -> anyhow::Result<Vec<f32>> {
-            let seq = tokens.len() / capacity;
-            Ok((0..capacity)
-                .flat_map(|b| [tokens[b * seq] as f32, capacity as f32])
-                .collect())
-        }
-        fn seq_len(&self, _a: &str) -> usize {
-            16
-        }
-        fn classes(&self, _a: &str) -> usize {
-            2
-        }
+    fn echo_server(cfg: ServerConfig) -> Server {
+        let m = manifest();
+        let backend = Arc::new(EchoBackend::from_manifest(&m));
+        Server::start(cfg, m, Router::new(RoutingPolicy::MaxSparsity), backend)
     }
 
     #[test]
     fn end_to_end_single_request() {
-        let srv = Server::start(
-            ServerConfig {
-                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
-                workers: 1,
-                max_inflight: 16,
-            },
-            manifest(),
-            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
-            Arc::new(Echo),
-        );
+        let srv = echo_server(ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            max_inflight: 16,
+        });
         let h = srv.handle();
-        let (_, rx) = h.submit("bert_tiny", vec![42; 16]).unwrap();
+        let (_, rx) = h.submit_tokens("bert_tiny", vec![42; 16]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(resp.ok, "{:?}", resp.error);
-        assert_eq!(resp.logits[0], 42.0);
+        assert_eq!(resp.logits()[0], 42.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn image_requests_serve_through_the_same_stack() {
+        let srv = echo_server(ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            max_inflight: 16,
+        });
+        let h = srv.handle();
+        let mut pixels = vec![0.0f32; 48];
+        pixels[0] = 0.625;
+        let (_, rx) = h.submit("resnet50", vec![Value::F32(pixels)]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.served_by, "resnet50_s8_b4");
+        assert_eq!(resp.logits().len(), 10);
+        assert_eq!(resp.logits()[0], 0.625);
         srv.shutdown();
     }
 
     #[test]
     fn batches_fill_under_load() {
-        let srv = Server::start(
-            ServerConfig {
-                batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
-                workers: 1,
-                max_inflight: 64,
-            },
-            manifest(),
-            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
-            Arc::new(Echo),
-        );
+        let srv = echo_server(ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+            workers: 1,
+            max_inflight: 64,
+        });
         let h = srv.handle();
         let rxs: Vec<_> = (0..16)
-            .map(|i| h.submit("bert_tiny", vec![i; 16]).unwrap().1)
+            .map(|i| h.submit_tokens("bert_tiny", vec![i; 16]).unwrap().1)
             .collect();
         for rx in rxs {
             let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -427,14 +470,9 @@ mod tests {
 
     #[test]
     fn unknown_model_errors_cleanly() {
-        let srv = Server::start(
-            ServerConfig::default(),
-            manifest(),
-            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
-            Arc::new(Echo),
-        );
+        let srv = echo_server(ServerConfig::default());
         let h = srv.handle();
-        let (_, rx) = h.submit("nonexistent", vec![1; 16]).unwrap();
+        let (_, rx) = h.submit_tokens("nonexistent", vec![1; 16]).unwrap();
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(!r.ok);
         assert!(r.error.unwrap().contains("routing"));
@@ -442,25 +480,67 @@ mod tests {
     }
 
     #[test]
+    fn wrong_dtype_fails_only_that_request() {
+        let srv = echo_server(ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
+            workers: 1,
+            max_inflight: 16,
+        });
+        let h = srv.handle();
+        // an f32 payload for a token model rides the same batch as a good
+        // request; only the bad one fails
+        let (_, rx_bad) = h.submit("bert_tiny", vec![Value::F32(vec![1.0; 16])]).unwrap();
+        let (_, rx_ok) = h.submit_tokens("bert_tiny", vec![5; 16]).unwrap();
+        let bad = rx_bad.recv_timeout(Duration::from_secs(5)).unwrap();
+        let ok = rx_ok.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!bad.ok);
+        assert!(bad.error.unwrap().contains("dtype"));
+        assert!(ok.ok, "{:?}", ok.error);
+        assert_eq!(ok.logits()[0], 5.0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn missing_input_fails_cleanly() {
+        let srv = echo_server(ServerConfig::default());
+        let h = srv.handle();
+        let (_, rx) = h.submit("bert_tiny", Vec::new()).unwrap();
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r.ok);
+        assert!(r.error.unwrap().contains("missing input"));
+        srv.shutdown();
+    }
+
+    #[test]
     fn admission_rejects_over_capacity() {
         // max_inflight 1 with a slow-ish path: second submit may reject
-        let srv = Server::start(
-            ServerConfig {
-                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(50) },
-                workers: 1,
-                max_inflight: 1,
-            },
-            manifest(),
-            Router::new(crate::coordinator::RoutingPolicy::MaxSparsity),
-            Arc::new(Echo),
-        );
+        let srv = echo_server(ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(50) },
+            workers: 1,
+            max_inflight: 1,
+        });
         let h = srv.handle();
-        let (_, _rx1) = h.submit("bert_tiny", vec![1; 16]).unwrap();
+        let (_, _rx1) = h.submit_tokens("bert_tiny", vec![1; 16]).unwrap();
         // immediately after, capacity is full until the worker drains it
-        let second = h.submit("bert_tiny", vec![2; 16]);
+        let second = h.submit_tokens("bert_tiny", vec![2; 16]);
         if let Err(d) = second {
             assert_eq!(d, AdmissionDecision::RejectQueueFull);
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn zero_fill_placement_pads_with_zeros_instead_of_panicking() {
+        // the seed's `(reqs.len() - 1) * seq` underflowed here
+        let m = manifest();
+        let backend = EchoBackend::from_manifest(&m);
+        let p = Placement {
+            artifact: "bert_tiny_s8_b8".into(),
+            batch_capacity: 8,
+            fill: 0,
+        };
+        let metrics = Metrics::new();
+        run_placement(&p, &[], &backend, Instant::now(), &metrics).unwrap();
+        assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 }

@@ -20,16 +20,35 @@
 //! * [`sim`] — maps graphs onto the chip, schedules them, and produces
 //!   latency/throughput/energy reports; includes the Nvidia T4 dense
 //!   baseline the paper compares against.
-//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt` (AOT-lowered
-//!   JAX models whose matmuls/convs run the Pallas sparse kernel) and
-//!   executes them on the CPU client. Python never runs at serve time.
-//! * [`coordinator`] — the SparseRT serving layer: request router, dynamic
-//!   batcher, admission control, worker pool, metrics.
+//! * [`backend`] — the unified typed inference API: [`backend::Value`]
+//!   payloads, manifest-driven `TensorSpec` introspection, and the
+//!   [`backend::InferenceBackend`] trait every execution engine implements
+//!   ([`backend::SimBackend`], [`backend::EchoBackend`], and the PJRT
+//!   executor under the `pjrt` feature) — plus the
+//!   [`backend::conformance`] suite that pins the contract.
+//! * [`runtime`] — artifact manifests (`artifacts/manifest.json`, the
+//!   contract with `python/compile/aot.py`) and, behind the `pjrt`
+//!   feature, the PJRT bridge that compiles and executes the AOT-lowered
+//!   HLO. Python never runs at serve time.
+//! * [`coordinator`] — the SparseRT serving layer: typed multi-tensor
+//!   requests, request router, dynamic batcher, admission control, worker
+//!   pool, metrics — generic over any [`backend::InferenceBackend`].
 //! * [`util`] — in-repo substrates this environment lacks crates for:
 //!   JSON, deterministic RNG, stats, CLI parsing, a bench harness, and a
 //!   mini property-testing runner.
 //!
+//! ## Feature flags
+//!
+//! * `pjrt` *(off by default)* — compiles [`runtime::executor`] (the
+//!   `Executor`/`LoadedModel` PJRT bridge and `PjrtServingBackend`), the
+//!   `serve_bert` example, and the `runtime_e2e` tests. It needs the
+//!   external `xla` crate (see `rust/Cargo.toml`). Everything else —
+//!   simulator, coordinator, Sim/Echo backends, benches — builds without
+//!   it, so `cargo build --release && cargo test -q` is hermetic.
+//!
 //! ## Quickstart
+//!
+//! Simulate (no artifacts or PJRT needed):
 //!
 //! ```no_run
 //! use s4::arch::AntoumConfig;
@@ -42,8 +61,27 @@
 //! println!("latency: {:.3} ms, throughput: {:.0} img/s",
 //!          r.latency_ms, r.throughput);
 //! ```
+//!
+//! Serve — any model, text or vision, goes through one trait:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use s4::backend::{SimBackend, Value};
+//! use s4::coordinator::{Router, RoutingPolicy, Server, ServerConfig};
+//! use s4::runtime::{default_artifact_dir, Manifest};
+//!
+//! let manifest = Manifest::load(&default_artifact_dir()).unwrap();
+//! let backend = Arc::new(SimBackend::from_manifest(&manifest, 1.0));
+//! let srv = Server::start(ServerConfig::default(), manifest,
+//!                         Router::new(RoutingPolicy::MaxSparsity), backend);
+//! let h = srv.handle();
+//! let (_, rx) = h.submit("bert_tiny", vec![Value::I32(vec![42; 128])]).unwrap();
+//! println!("logits: {:?}", rx.recv().unwrap().logits());
+//! srv.shutdown();
+//! ```
 
 pub mod arch;
+pub mod backend;
 pub mod coordinator;
 pub mod graph;
 pub mod runtime;

@@ -181,7 +181,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     for _ in 0..n {
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.next_exp(rate)));
         let tokens: Vec<i32> = (0..128).map(|_| rng.next_below(1000) as i32).collect();
-        match h.submit("bert_tiny", tokens) {
+        match h.submit_tokens("bert_tiny", tokens) {
             Ok((_, rx)) => rxs.push(rx),
             Err(d) => println!("rejected: {d:?}"),
         }

@@ -1,34 +1,19 @@
-//! PJRT executor: load AOT-lowered HLO text, compile once, execute many.
+//! PJRT executor (feature `pjrt`): load AOT-lowered HLO text, compile
+//! once, execute many.
 //!
-//! Wraps the `xla` crate (PJRT C API). One [`Executor`] owns the CPU
-//! client and a cache of compiled executables keyed by artifact name —
+//! Wraps the external `xla` crate (PJRT C API). One [`Executor`] owns the
+//! CPU client and a cache of compiled executables keyed by artifact name —
 //! compilation happens once per variant at load (or first use), never on
-//! the request path.
+//! the request path. [`PjrtServingBackend`] adapts the executor to the
+//! unified [`InferenceBackend`] trait for the serving coordinator.
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
 
-use crate::runtime::manifest::{ArtifactMeta, Manifest};
-
-/// Runtime input values (matching the artifact's `TensorSpec` order).
-#[derive(Clone, Debug, PartialEq)]
-pub enum Value {
-    I32(Vec<i32>),
-    F32(Vec<f32>),
-}
-
-impl Value {
-    pub fn len(&self) -> usize {
-        match self {
-            Value::I32(v) => v.len(),
-            Value::F32(v) => v.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
+use crate::backend::{validate_inputs, InferenceBackend, Value};
+use crate::runtime::manifest::{ArtifactMeta, Manifest, TensorSpec};
 
 /// A compiled model variant ready to execute.
 pub struct LoadedModel {
@@ -37,36 +22,17 @@ pub struct LoadedModel {
 }
 
 impl LoadedModel {
-    /// Execute with positional inputs; returns the flattened f32 outputs
-    /// (one vec per output tensor; our artifacts have exactly one).
-    pub fn run(&self, inputs: &[Value]) -> anyhow::Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(
-            inputs.len() == self.meta.inputs.len(),
-            "{}: expected {} inputs, got {}",
-            self.meta.name,
-            self.meta.inputs.len(),
-            inputs.len()
-        );
+    /// Execute with positional inputs (validated against the artifact's
+    /// input specs); returns one [`Value`] per output tensor (our
+    /// artifacts emit exactly one f32 tensor).
+    pub fn run(&self, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        validate_inputs(&self.meta.name, &self.meta.inputs, inputs)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (v, spec) in inputs.iter().zip(&self.meta.inputs) {
-            anyhow::ensure!(
-                v.len() == spec.elems(),
-                "{}: input `{}` needs {} elems, got {}",
-                self.meta.name,
-                spec.name,
-                spec.elems(),
-                v.len()
-            );
             let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            let lit = match (v, spec.dtype.as_str()) {
-                (Value::I32(x), "s32") => xla::Literal::vec1(x).reshape(&dims)?,
-                (Value::F32(x), "f32") => xla::Literal::vec1(x).reshape(&dims)?,
-                (v, dt) => anyhow::bail!(
-                    "{}: input `{}` dtype mismatch (artifact {dt}, value {:?})",
-                    self.meta.name,
-                    spec.name,
-                    std::mem::discriminant(v)
-                ),
+            let lit = match v {
+                Value::I32(x) => xla::Literal::vec1(x).reshape(&dims)?,
+                Value::F32(x) => xla::Literal::vec1(x).reshape(&dims)?,
             };
             literals.push(lit);
         }
@@ -74,7 +40,7 @@ impl LoadedModel {
             .to_literal_sync()?;
         // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
         let out = result.to_tuple1()?;
-        Ok(vec![out.to_vec::<f32>()?])
+        Ok(vec![Value::F32(out.to_vec::<f32>()?)])
     }
 }
 
@@ -136,5 +102,94 @@ impl Executor {
 
     pub fn loaded_count(&self) -> usize {
         self.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+type Job = (String, Vec<Value>, Sender<anyhow::Result<Vec<Value>>>);
+
+/// Serving backend over the PJRT executor, implementing the unified
+/// [`InferenceBackend`] trait.
+///
+/// The PJRT client is not `Send`/`Sync` (Rc-based internals), so a
+/// dedicated thread owns it; coordinator workers submit execution jobs
+/// over a channel. All artifacts are compiled at construction — the
+/// request path is pure execution.
+pub struct PjrtServingBackend {
+    tx: Mutex<Sender<Job>>,
+    /// artifact → (input specs, output specs), snapshotted from the manifest
+    specs: HashMap<String, (Vec<TensorSpec>, Vec<TensorSpec>)>,
+}
+
+impl PjrtServingBackend {
+    pub fn new(m: &Manifest) -> anyhow::Result<PjrtServingBackend> {
+        let specs = m
+            .artifacts
+            .iter()
+            .map(|a| (a.name.clone(), (a.inputs.clone(), a.outputs.clone())))
+            .collect();
+        let (tx, rx) = channel::<Job>();
+        let m2 = m.clone();
+        // readiness signal: compilation happens before serving starts
+        let (ready_tx, ready_rx) = channel::<anyhow::Result<usize>>();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let mut ex = match Executor::cpu() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                match ex.load_all(&m2) {
+                    Ok(n) => {
+                        let _ = ready_tx.send(Ok(n));
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+                while let Ok((artifact, inputs, resp)) = rx.recv() {
+                    let result = ex
+                        .loaded(&artifact)
+                        .ok_or_else(|| anyhow::anyhow!("artifact {artifact} not loaded"))
+                        .and_then(|model| model.run(&inputs));
+                    let _ = resp.send(result);
+                }
+            })?;
+        let n = ready_rx.recv()??;
+        eprintln!("compiled {n} artifacts on the PJRT executor thread");
+        Ok(PjrtServingBackend { tx: Mutex::new(tx), specs })
+    }
+
+    fn spec_pair(&self, artifact: &str) -> anyhow::Result<&(Vec<TensorSpec>, Vec<TensorSpec>)> {
+        self.specs
+            .get(artifact)
+            .ok_or_else(|| anyhow::anyhow!("PjrtServingBackend: unknown artifact `{artifact}`"))
+    }
+}
+
+impl InferenceBackend for PjrtServingBackend {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        Ok(&self.spec_pair(artifact)?.0)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        Ok(&self.spec_pair(artifact)?.1)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        self.spec_pair(artifact)?; // fail fast on unknown artifacts
+        let (rtx, rrx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send((artifact.to_string(), inputs.to_vec(), rtx))
+            .map_err(|_| anyhow::anyhow!("pjrt executor thread gone"))?;
+        rrx.recv()
+            .map_err(|_| anyhow::anyhow!("pjrt executor thread gone"))?
     }
 }

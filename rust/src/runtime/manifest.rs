@@ -21,6 +21,17 @@ impl TensorSpec {
         self.shape.iter().product()
     }
 
+    /// Leading (batch) dimension — 1 for scalar/unbatched shapes.
+    pub fn batch_dim(&self) -> usize {
+        self.shape.first().copied().unwrap_or(1).max(1)
+    }
+
+    /// Elements in one sample: the shape without its leading batch dim.
+    /// The coordinator packs/demuxes batches in units of this.
+    pub fn sample_elems(&self) -> usize {
+        self.elems() / self.batch_dim()
+    }
+
     fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
         let shape = j
             .get("shape")
@@ -187,6 +198,23 @@ mod tests {
         assert_eq!(a.sparsity, 8);
         assert_eq!(a.inputs[0].elems(), 128);
         assert_eq!(a.inputs[0].dtype, "s32");
+        assert_eq!(a.inputs[0].batch_dim(), 1);
+        assert_eq!(a.inputs[0].sample_elems(), 128);
+        assert_eq!(a.outputs[0].sample_elems(), 2);
+    }
+
+    #[test]
+    fn spec_batch_dim_degenerate_shapes() {
+        let s = |shape: Vec<usize>| TensorSpec {
+            name: "t".into(),
+            shape,
+            dtype: "f32".into(),
+        };
+        assert_eq!(s(vec![]).batch_dim(), 1);
+        assert_eq!(s(vec![]).sample_elems(), 1);
+        assert_eq!(s(vec![8, 16]).batch_dim(), 8);
+        assert_eq!(s(vec![8, 16]).sample_elems(), 16);
+        assert_eq!(s(vec![0, 16]).sample_elems(), 0);
     }
 
     #[test]

@@ -1,12 +1,26 @@
-//! The PJRT runtime bridge: Python lowers models once (`make artifacts`);
-//! this module loads the HLO-text artifacts and executes them. No Python
-//! on the request path.
+//! The runtime layer: artifact manifests plus the PJRT bridge.
+//!
+//! [`manifest`] (always available) parses `artifacts/manifest.json` — the
+//! contract between the build-time Python world (`python/compile/aot.py`)
+//! and the serve-time rust world, including the [`TensorSpec`]s that drive
+//! the unified [`backend`](crate::backend) API.
+//!
+//! [`executor`] (feature `pjrt`) loads the HLO-text artifacts and executes
+//! them on the PJRT CPU client; [`executor::PjrtServingBackend`] plugs it
+//! into the serving coordinator through the same `InferenceBackend` trait
+//! the simulator backend implements. No Python on the request path.
 
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod manifest;
 
-pub use executor::{Executor, LoadedModel, Value};
+#[cfg(feature = "pjrt")]
+pub use executor::{Executor, LoadedModel, PjrtServingBackend};
 pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+
+// `Value` started life here; it now lives in the unified backend API and
+// is re-exported for the runtime-centric import path.
+pub use crate::backend::Value;
 
 use std::path::PathBuf;
 

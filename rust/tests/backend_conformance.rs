@@ -1,0 +1,39 @@
+//! Runs the shared backend conformance suite (`s4::backend::conformance`)
+//! against every in-tree `InferenceBackend` that works without external
+//! dependencies. The suite pins spec introspection, shape/dtype
+//! validation, error paths (unknown artifacts are `Err`, never a panic),
+//! and output determinism — one manifest spanning a token model and an
+//! image model, so both modalities are covered on every backend.
+
+use s4::backend::{conformance, EchoBackend, SimBackend};
+use s4::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "a", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "b", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [8, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [8, 2], "dtype": "f32"}]},
+      {"name": "resnet50_s8_b4", "file": "c", "family": "resnet",
+       "model": "resnet50", "sparsity": 8, "batch": 4, "seq": 0,
+       "inputs": [{"name": "images", "shape": [4, 3, 8, 8], "dtype": "f32"}],
+       "outputs": [{"name": "logits", "shape": [4, 10], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+#[test]
+fn echo_backend_conforms() {
+    let m = manifest();
+    conformance::run_all(&EchoBackend::from_manifest(&m), &m);
+}
+
+#[test]
+fn sim_backend_conforms() {
+    let m = manifest();
+    conformance::run_all(&SimBackend::from_manifest(&m, 1e-4), &m);
+}

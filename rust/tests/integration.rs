@@ -169,7 +169,7 @@ fn serving_stack_under_simulated_load() {
     );
     let h = srv.handle();
     let rxs: Vec<_> = (0..48)
-        .filter_map(|i| h.submit("bert_tiny", vec![i as i32; 32]).ok())
+        .filter_map(|i| h.submit_tokens("bert_tiny", vec![i as i32; 32]).ok())
         .map(|(_, rx)| rx)
         .collect();
     assert!(rxs.len() >= 40, "most requests admitted");
@@ -208,10 +208,55 @@ fn dense_policy_routes_dense() {
         backend,
     );
     let h = srv.handle();
-    let (_, rx) = h.submit("bert_tiny", vec![1; 16]).unwrap();
+    let (_, rx) = h.submit_tokens("bert_tiny", vec![1; 16]).unwrap();
     let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
     assert!(r.ok);
     assert_eq!(r.served_by, "m_s1_b1");
+    srv.shutdown();
+}
+
+#[test]
+fn tokens_and_images_serve_through_one_inference_backend() {
+    // the acceptance claim of the unified API: a BERT-style token request
+    // and a ResNet-style image request served by the same coordinator over
+    // the same `InferenceBackend` instance
+    use s4::backend::Value;
+    use s4::runtime::Manifest;
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b4", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 4, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [4, 16], "dtype": "s32"}],
+       "outputs": [{"shape": [4, 2], "dtype": "f32"}]},
+      {"name": "resnet50_s8_b4", "file": "y", "family": "resnet",
+       "model": "resnet50", "sparsity": 8, "batch": 4, "seq": 0,
+       "inputs": [{"name": "images", "shape": [4, 192], "dtype": "f32"}],
+       "outputs": [{"shape": [4, 10], "dtype": "f32"}]}
+    ]}"#;
+    let manifest = Manifest::parse(std::path::Path::new("/tmp"), text).unwrap();
+    let backend = Arc::new(SimBackend::from_manifest(&manifest, 0.001));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            workers: 2,
+            max_inflight: 64,
+        },
+        manifest,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let (_, rx_txt) = h.submit_tokens("bert_tiny", vec![7; 16]).unwrap();
+    let (_, rx_img) = h
+        .submit("resnet50", vec![Value::F32(vec![0.5; 192])])
+        .unwrap();
+    let txt = rx_txt.recv_timeout(Duration::from_secs(30)).unwrap();
+    let img = rx_img.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert!(txt.ok, "{:?}", txt.error);
+    assert!(img.ok, "{:?}", img.error);
+    assert_eq!(txt.served_by, "bert_tiny_s8_b4");
+    assert_eq!(img.served_by, "resnet50_s8_b4");
+    assert_eq!(txt.logits().len(), 2);
+    assert_eq!(img.logits().len(), 10);
     srv.shutdown();
 }
 
