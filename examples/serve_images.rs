@@ -6,17 +6,20 @@
 //! requests (s32 ids) arrive interleaved; the dynamic batcher keeps the
 //! models separate, the router picks sparsity/batch variants per model,
 //! and spec-driven padding/demux handles both payload types through the
-//! identical path. Runs on the simulator-paced backend, so no PJRT or
-//! AOT artifacts are needed.
+//! identical path. Runs on the simulator-paced backend by default
+//! (`--backend cpu` swaps in [`CpuSparseBackend`] for real sparse
+//! compute through the tiled SpMM engine), so no PJRT or AOT artifacts
+//! are needed.
 //!
 //! ```bash
 //! cargo run --release --example serve_images -- --requests 48 --rate 200
+//! cargo run --release --example serve_images -- --backend cpu
 //! ```
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use s4::backend::{SimBackend, Value};
+use s4::backend::{CpuSparseBackend, InferenceBackend, SimBackend, Value};
 use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
 use s4::runtime::Manifest;
 use s4::util::cli::Args;
@@ -48,7 +51,11 @@ fn main() -> anyhow::Result<()> {
     let time_scale = args.get_f64("time-scale", 0.01)?;
 
     let manifest = Manifest::parse(std::path::Path::new("/tmp"), MANIFEST)?;
-    let backend = Arc::new(SimBackend::from_manifest(&manifest, time_scale));
+    let backend: Arc<dyn InferenceBackend> = match args.get_or("backend", "sim") {
+        "cpu" => Arc::new(CpuSparseBackend::from_manifest(&manifest)),
+        "sim" => Arc::new(SimBackend::from_manifest(&manifest, time_scale)),
+        b => anyhow::bail!("unknown backend {b:?} (cpu | sim)"),
+    };
     let srv = Server::start(
         ServerConfig {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },

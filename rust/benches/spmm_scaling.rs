@@ -1,0 +1,218 @@
+//! Bench: the parallel tiled SpMM engine + real-sparse serving, with a
+//! machine-readable perf trajectory.
+//!
+//! Emits (schema `s4-bench-v1`, see EXPERIMENTS.md §Perf):
+//! * `BENCH_spmm.json` — GFLOP/s, speedup-vs-serial and speedup-vs-dense
+//!   for every (sparsity ∈ {1,2,4,8,16,32}) × (thread count) point, so
+//!   the paper's "linear speedup from balanced sparsity" claim is a
+//!   measured curve, not an asymptote (The Sparsity Roofline's demand);
+//! * `BENCH_serving.json` — closed-loop p50/p99/throughput through the
+//!   coordinator for the instant Echo backend (pure overhead) and the
+//!   CpuSparseBackend (real sparse compute on the request path).
+//!
+//! `--smoke` (or `S4_BENCH_SMOKE=1`) shrinks shapes and iteration counts
+//! for CI; files land in `$S4_BENCH_DIR` (default: cwd).
+//!
+//! ```bash
+//! cargo bench --bench spmm_scaling            # full
+//! cargo bench --bench spmm_scaling -- --smoke # CI trajectory point
+//! ```
+
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend};
+use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
+use s4::runtime::Manifest;
+use s4::sparse::format::BlockBalanced;
+use s4::sparse::matmul::{dense_mm, spmm, Act};
+use s4::sparse::pack::spmm_tiled;
+use s4::sparse::tensor::Dense2;
+use s4::util::bench::{Bench, JsonReport};
+use s4::util::cli::Args;
+use s4::util::json::Json;
+use s4::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let spmm_path = bench_spmm(&args, smoke)?;
+    let serving_path = bench_serving(&args, smoke)?;
+    println!("\nwrote {}", spmm_path.display());
+    println!("wrote {}", serving_path.display());
+    Ok(())
+}
+
+// ----------------------------- kernel scaling ------------------------------
+
+fn bench_spmm(args: &Args, smoke: bool) -> anyhow::Result<std::path::PathBuf> {
+    let b = if smoke {
+        Bench { min_sample_secs: 0.005, samples: 3, warmup_secs: 0.02 }
+    } else {
+        Bench::default()
+    };
+    let (m, k, n) = if smoke { (32, 256, 128) } else { (128, 1024, 256) };
+    let threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    let x = Dense2::randn(m, k, 1);
+    let wd = Dense2::randn(k, n, 2);
+    let dense_flops = 2.0 * (m * k * n) as f64;
+
+    println!("== spmm scaling ({m}x{k}x{n}, threads {threads:?}) ==");
+    let rd = b.run(&format!("dense_mm {m}x{k}x{n}"), || {
+        black_box(dense_mm(&x, &wd, None, Act::None));
+    });
+    let dense_p50 = rd.summary.p50;
+
+    let mut report = JsonReport::new("spmm");
+    report.set("smoke", Json::Bool(smoke));
+    report.set(
+        "shape",
+        Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+        ]),
+    );
+    report.set("dense_p50_s", Json::Num(dense_p50));
+    report.set("dense_gflops", Json::Num(dense_flops / dense_p50 / 1e9));
+
+    for &s in &s4::sparse::SUPPORTED_SPARSITIES {
+        let w = BlockBalanced::from_dense(&wd, s)?;
+        let packed = w.pack();
+        // correctness gate before any timing is recorded
+        let serial = spmm(&x, &w, None, Act::None);
+        let diff = serial.max_abs_diff(&spmm_tiled(&x, &packed, None, Act::None, 4));
+        anyhow::ensure!(diff <= 1e-4, "tiled kernel diverged at s={s}: {diff}");
+
+        let flops = dense_flops / s as f64;
+        let rs = b.run(&format!("spmm_serial s={s:<2}"), || {
+            black_box(spmm(&x, &w, None, Act::None));
+        });
+        for &t in &threads {
+            let rt = b.run(&format!("spmm_tiled  s={s:<2} t={t}"), || {
+                black_box(spmm_tiled(&x, &packed, None, Act::None, t));
+            });
+            report.push(Json::obj(vec![
+                ("sparsity", Json::Num(s as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("serial_p50_s", Json::Num(rs.summary.p50)),
+                ("tiled_p50_s", Json::Num(rt.summary.p50)),
+                ("gflops", Json::Num(flops / rt.summary.p50 / 1e9)),
+                (
+                    "speedup_vs_serial",
+                    Json::Num(rs.summary.p50 / rt.summary.p50),
+                ),
+                ("speedup_vs_dense", Json::Num(dense_p50 / rt.summary.p50)),
+            ]));
+        }
+    }
+    report.write()
+}
+
+// ------------------------------- serving -----------------------------------
+
+fn serving_manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+/// Closed-loop run: submit `n` requests, wait for all, report latency
+/// percentiles + throughput. Returns one trajectory entry.
+fn closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) -> Json {
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 4,
+            max_inflight: 4096,
+        },
+        serving_manifest(),
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let t0 = Instant::now();
+    // closed loop over exactly `n` requests: admission rejections
+    // (inflight > max_inflight under this burst) are retried, not
+    // dropped, so trajectory entries are comparable across runs. The
+    // retry deadline turns a wedged server into a bench failure rather
+    // than a CI hang.
+    let submit_deadline = Instant::now() + Duration::from_secs(120);
+    let mut rxs = Vec::with_capacity(n);
+    for i in 0..n {
+        loop {
+            match h.submit_tokens("bert_tiny", vec![i as i32 % 997; 32]) {
+                Ok((_, rx)) => {
+                    rxs.push(rx);
+                    break;
+                }
+                Err(_) => {
+                    assert!(
+                        Instant::now() < submit_deadline,
+                        "submit retry deadline exceeded after {} of {n} requests \
+                         (server wedged?)",
+                        rxs.len()
+                    );
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+        }
+    }
+    let mut lat_us = Vec::with_capacity(rxs.len());
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert!(r.ok, "{:?}", r.error);
+        lat_us.push(r.latency_us as f64);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&lat_us);
+    let rps = lat_us.len() as f64 / wall;
+    println!(
+        "bench serving/{label:<24} {rps:>9.0} req/s  p50 {:>8.0}µs  p99 {:>8.0}µs  fill {:.2}",
+        s.p50,
+        s.p99,
+        h.metrics.mean_batch_fill(),
+    );
+    let entry = Json::obj(vec![
+        ("backend", Json::Str(label.into())),
+        ("requests", Json::Num(lat_us.len() as f64)),
+        ("throughput_rps", Json::Num(rps)),
+        ("p50_us", Json::Num(s.p50)),
+        ("p99_us", Json::Num(s.p99)),
+        ("mean_batch_fill", Json::Num(h.metrics.mean_batch_fill())),
+    ]);
+    srv.shutdown();
+    entry
+}
+
+fn bench_serving(_args: &Args, smoke: bool) -> anyhow::Result<std::path::PathBuf> {
+    let m = serving_manifest();
+    println!("\n== serving (coordinator overhead + real sparse compute) ==");
+    let mut report = JsonReport::new("serving");
+    report.set("smoke", Json::Bool(smoke));
+    let (n_echo, n_cpu) = if smoke { (2_000, 500) } else { (20_000, 5_000) };
+    // instant backend: isolates coordinator overhead (§Perf target:
+    // p50 < 200 µs/request)
+    report.push(closed_loop(
+        Arc::new(EchoBackend::from_manifest(&m)),
+        n_echo,
+        "echo_overhead",
+    ));
+    // real sparse compute on the request path
+    report.push(closed_loop(
+        Arc::new(CpuSparseBackend::from_manifest(&m)),
+        n_cpu,
+        "cpu_sparse",
+    ));
+    report.write()
+}

@@ -3,9 +3,11 @@
 //!
 //! These are plain `pub fn`s (not `#[test]`s) so any test crate can apply
 //! them to any implementation — `rust/tests/backend_conformance.rs` runs
-//! the suite against [`EchoBackend`](crate::backend::EchoBackend) and
-//! [`SimBackend`](crate::backend::SimBackend); a PJRT-backed run rides the
-//! `pjrt` feature. A new backend gets the whole contract checked with one
+//! the suite against [`EchoBackend`](crate::backend::EchoBackend),
+//! [`SimBackend`](crate::backend::SimBackend), and
+//! [`CpuSparseBackend`](crate::backend::CpuSparseBackend). (No PJRT-backed
+//! run exists yet — adding one once real artifacts are wired into CI is
+//! an open item.) A new backend gets the whole contract checked with one
 //! `run_all` call.
 
 use crate::backend::{InferenceBackend, Value};

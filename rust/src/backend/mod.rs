@@ -6,6 +6,9 @@
 //! * the PJRT executor
 //!   ([`runtime::PjrtServingBackend`](crate::runtime::executor), feature
 //!   `pjrt`) — real HLO execution;
+//! * [`CpuSparseBackend`] — real block-balanced sparse compute through
+//!   the parallel tiled SpMM engine (the coordinator's CPU execution
+//!   path; deterministic logits, no artifacts needed);
 //! * [`SimBackend`] — simulator-paced, deterministic pseudo-outputs
 //!   (serving benchmarks and tests without artifacts);
 //! * [`EchoBackend`] — instant, input-reflecting (unit tests, coordinator
@@ -23,11 +26,13 @@
 //! must pass; integration tests run it against each in-tree backend.
 
 pub mod conformance;
+pub mod cpu;
 pub mod echo;
 pub mod sim;
 pub mod value;
 
 pub use crate::runtime::manifest::TensorSpec;
+pub use cpu::CpuSparseBackend;
 pub use echo::EchoBackend;
 pub use sim::SimBackend;
 pub use value::Value;

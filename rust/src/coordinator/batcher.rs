@@ -29,7 +29,8 @@ impl Default for BatcherConfig {
 /// A formed batch: same-model requests, ready for routing.
 #[derive(Debug)]
 pub struct Batch {
-    pub model: String,
+    /// shared with every request in the batch (refcount clone, no alloc)
+    pub model: Arc<str>,
     pub requests: Vec<Request>,
     pub formed_at: Instant,
 }
@@ -94,13 +95,18 @@ impl DynamicBatcher {
         let deadline = Instant::now() + self.cfg.max_wait;
         let mut requests = vec![first];
 
-        // keep only same-model requests; stash the rest in arrival order
-        let mut i = 0;
-        while i < self.stash.len() && requests.len() < self.cfg.max_batch {
-            if self.stash[i].model == model {
-                requests.push(self.stash.remove(i).unwrap());
+        // take same-model requests; keep the rest stashed in arrival
+        // order. Single in-place rotation pass — each element is popped
+        // once and either joins the batch or returns to the back, so the
+        // stash buffer is reused with zero allocation. (The seed used
+        // `VecDeque::remove` under a scan, which shifts the tail once per
+        // hit — O(n²) when many models interleave under fan-in.)
+        for _ in 0..self.stash.len() {
+            let r = self.stash.pop_front().expect("bounded by len");
+            if requests.len() < self.cfg.max_batch && r.model == model {
+                requests.push(r);
             } else {
-                i += 1;
+                self.stash.push_back(r);
             }
         }
         while requests.len() < self.cfg.max_batch {
@@ -130,7 +136,7 @@ mod tests {
         (
             Request {
                 id: RequestId(id),
-                model: model.to_string(),
+                model: Arc::from(model),
                 inputs: vec![crate::backend::Value::I32(vec![0; 4])],
                 submitted: Instant::now(),
                 reply: tx,
@@ -154,7 +160,7 @@ mod tests {
         }
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.len(), 3);
-        assert_eq!(batch.model, "m");
+        assert_eq!(&*batch.model, "m");
         let batch2 = b.next_batch().unwrap();
         assert_eq!(batch2.len(), 2);
     }
@@ -188,11 +194,38 @@ mod tests {
             keep.push(resp);
         }
         let b1 = b.next_batch().unwrap();
-        assert_eq!(b1.model, "a");
+        assert_eq!(&*b1.model, "a");
         assert_eq!(b1.len(), 2);
         let b2 = b.next_batch().unwrap();
-        assert_eq!(b2.model, "b");
+        assert_eq!(&*b2.model, "b");
         assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn stash_drain_preserves_per_model_arrival_order() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(2) },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for (i, m) in [(1, "a"), (2, "b"), (3, "a"), (4, "b"), (5, "a"), (6, "b")] {
+            let (r, resp) = req(i, m);
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        drop(tx);
+        let mut total = 0;
+        let (mut last_a, mut last_b) = (0u64, 0u64);
+        while let Some(batch) = b.next_batch() {
+            for r in &batch.requests {
+                total += 1;
+                let last = if &*batch.model == "a" { &mut last_a } else { &mut last_b };
+                assert!(r.id.0 > *last, "arrival order violated: {:?}", r.id);
+                *last = r.id.0;
+            }
+        }
+        assert_eq!(total, 6, "no request lost");
     }
 
     #[test]
@@ -218,7 +251,7 @@ mod tests {
         }
         drop(tx);
         let sizes: Vec<(String, usize)> = std::iter::from_fn(|| b.next_batch())
-            .map(|batch| (batch.model.clone(), batch.len()))
+            .map(|batch| (batch.model.to_string(), batch.len()))
             .collect();
         let total: usize = sizes.iter().map(|(_, n)| n).sum();
         assert_eq!(total, 4, "no request lost: {sizes:?}");

@@ -8,6 +8,7 @@
 //! back per request — nothing here assumes a token→logits shape.
 
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::backend::Value;
@@ -19,7 +20,9 @@ pub struct RequestId(pub u64);
 #[derive(Debug)]
 pub struct Request {
     pub id: RequestId,
-    pub model: String,
+    /// shared, immutable model name — `Arc<str>` so batching/stash
+    /// bookkeeping clones a refcount, not a heap string, per request
+    pub model: Arc<str>,
     /// one sample-shaped value per model input; the server zero-pads (or
     /// truncates) each to the routed artifact's per-sample spec length
     pub inputs: Vec<Value>,

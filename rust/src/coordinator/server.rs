@@ -89,7 +89,7 @@ impl ServerHandle {
         let (rtx, rrx) = channel();
         let req = Request {
             id,
-            model: model.to_string(),
+            model: Arc::from(model),
             inputs,
             submitted: Instant::now(),
             reply: rtx,

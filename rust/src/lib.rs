@@ -8,8 +8,11 @@
 //!
 //! ## Layer map
 //!
-//! * [`sparse`] — block-balanced sparse tensor formats, pruning, and
-//!   reference sparse ops (the numerics the simulator is validated against).
+//! * [`sparse`] — block-balanced sparse tensor formats, pruning, reference
+//!   sparse ops (the numerics the simulator is validated against), and the
+//!   parallel tiled SpMM engine ([`sparse::pack`]: packed execution layout
+//!   + `spmm_tiled`, the multithreaded cache-tiled kernel the CPU serving
+//!   backend runs on).
 //! * [`graph`] — an op-graph IR with per-op FLOPs/bytes accounting plus
 //!   builders for the paper's benchmark models (ResNet-50/152,
 //!   BERT-base/large).
@@ -23,9 +26,11 @@
 //! * [`backend`] — the unified typed inference API: [`backend::Value`]
 //!   payloads, manifest-driven `TensorSpec` introspection, and the
 //!   [`backend::InferenceBackend`] trait every execution engine implements
-//!   ([`backend::SimBackend`], [`backend::EchoBackend`], and the PJRT
-//!   executor under the `pjrt` feature) — plus the
-//!   [`backend::conformance`] suite that pins the contract.
+//!   ([`backend::CpuSparseBackend`] — real block-balanced sparse compute
+//!   through the tiled SpMM engine, [`backend::SimBackend`],
+//!   [`backend::EchoBackend`], and the PJRT executor under the `pjrt`
+//!   feature) — plus the [`backend::conformance`] suite that pins the
+//!   contract.
 //! * [`runtime`] — artifact manifests (`artifacts/manifest.json`, the
 //!   contract with `python/compile/aot.py`) and, behind the `pjrt`
 //!   feature, the PJRT bridge that compiles and executes the AOT-lowered
@@ -34,8 +39,9 @@
 //!   requests, request router, dynamic batcher, admission control, worker
 //!   pool, metrics — generic over any [`backend::InferenceBackend`].
 //! * [`util`] — in-repo substrates this environment lacks crates for:
-//!   JSON, deterministic RNG, stats, CLI parsing, a bench harness, and a
-//!   mini property-testing runner.
+//!   JSON, deterministic RNG, stats, CLI parsing, a bench harness (with
+//!   the `BENCH_<topic>.json` machine-readable perf-trajectory writer —
+//!   see EXPERIMENTS.md §Perf), and a mini property-testing runner.
 //!
 //! ## Feature flags
 //!

@@ -55,6 +55,7 @@ fn print_help() {
            sweep     [--batch B] [--models resnet50,bert_base]\n\
            residency --model M [--sparsity S]\n\
            serve     [--requests N] [--rate R] [--policy max|dense|fixed:S]\n\
+                     [--backend cpu|sim|echo]\n\
            help\n\
          \n\
          MODELS: resnet50 resnet152 bert_tiny bert_mini bert_base bert_large"
@@ -160,7 +161,10 @@ fn cmd_residency(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use s4::coordinator::{Router, RoutingPolicy, Server, ServerConfig, SimBackend};
+    use s4::coordinator::{
+        CpuSparseBackend, EchoBackend, InferenceBackend, Router, RoutingPolicy, Server,
+        ServerConfig, SimBackend,
+    };
     use s4::runtime::{default_artifact_dir, Manifest};
     use std::sync::Arc;
 
@@ -173,7 +177,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         p => anyhow::bail!("unknown policy {p:?}"),
     };
     let manifest = Manifest::load(&default_artifact_dir())?;
-    let backend = Arc::new(SimBackend::from_manifest(&manifest, 1.0));
+    let backend: Arc<dyn InferenceBackend> = match args.get_or("backend", "cpu") {
+        // real sparse compute through the tiled SpMM engine
+        "cpu" => Arc::new(CpuSparseBackend::from_manifest(&manifest)),
+        // simulator-paced pseudo-outputs (latency realism, no compute)
+        "sim" => Arc::new(SimBackend::from_manifest(&manifest, 1.0)),
+        // instant reflection (coordinator overhead probing)
+        "echo" => Arc::new(EchoBackend::from_manifest(&manifest)),
+        b => anyhow::bail!("unknown backend {b:?} (cpu | sim | echo)"),
+    };
     let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
     let h = srv.handle();
     let mut rng = s4::util::rng::Xoshiro256::seed_from_u64(7);

@@ -2,10 +2,11 @@
 //!
 //! This is the *numerical twin* of the Pallas SPU kernel: gather-based,
 //! touching only stored non-zeros, with a fused bias + activation epilogue.
-//! It serves three roles: (1) golden numerics for simulator validation,
-//! (2) the CPU fallback path of the coordinator when no PJRT artifact
-//! exists for a model variant, and (3) the operand of the ablation bench
-//! comparing balanced vs unstructured (CSR) execution.
+//! [`spmm`] is the **serial reference**: the golden numerics the simulator,
+//! the parallel tiled engine ([`super::pack::spmm_tiled`] — what
+//! [`crate::backend::cpu::CpuSparseBackend`] actually serves batches
+//! through), and the balanced-vs-CSR ablation bench are all validated
+//! against (differential tests in `rust/tests/properties.rs`).
 
 use super::format::{BlockBalanced, Csr};
 use super::tensor::Dense2;

@@ -8,11 +8,13 @@
 pub mod conv;
 pub mod format;
 pub mod matmul;
+pub mod pack;
 pub mod prune;
 pub mod quant;
 pub mod tensor;
 
 pub use format::{BlockBalanced, Csr, BLOCK};
+pub use pack::{spmm_tiled, PackedBlockBalanced, N_TILE};
 pub use prune::{magnitude_prune, PruneSchedule};
 pub use tensor::{DType, Dense2};
 

@@ -1,0 +1,334 @@
+//! Packed execution layout + the parallel tiled SpMM engine.
+//!
+//! [`BlockBalanced`] stores values/offsets row-major over `[k/s, n]` —
+//! the natural *construction* layout (it mirrors `pack.py`). The hot
+//! kernel wants something else: weight data grouped by output-column
+//! tile so one tile streams contiguously while an input block stays in
+//! registers. [`BlockBalanced::pack`] reorders into that layout once at
+//! load time; [`spmm_tiled`] is the kernel the serving backend
+//! ([`crate::backend::cpu`]) runs batches through.
+//!
+//! Kernel structure (targets in EXPERIMENTS.md §Perf):
+//! * **parallel over output-row stripes** — each thread owns a disjoint
+//!   `&mut` stripe of the output, spawned with `std::thread::scope` (no
+//!   locks, no channels on the compute path);
+//! * **cache-blocked over `n`** — weights are walked one column tile at
+//!   a time; a tile's `keep × tile` slab sits in L1 while it is reused
+//!   across a chunk of input rows, cutting DRAM traffic by the chunk
+//!   length;
+//! * **preallocated per-thread scratch** — accumulation runs in a local
+//!   f32 tile, the fused bias+activation epilogue writes the output
+//!   exactly once;
+//! * **specialized inner loops** — the per-block gather loop is
+//!   monomorphized over `keep ∈ {32,16,8,4,2,1}` (sparsity 1..32×) so
+//!   the compiler fully unrolls the `keep` dimension.
+//!
+//! Determinism: every output element is reduced in ascending
+//! compressed-row order — the same order as the serial [`spmm`]
+//! reference — for *any* thread count or tile width, so results are
+//! bit-identical across machines and `threads` settings (the property
+//! tests in `rust/tests/properties.rs` pin this).
+//!
+//! [`spmm`]: crate::sparse::matmul::spmm
+
+use super::format::{BlockBalanced, BLOCK};
+use super::matmul::Act;
+use super::tensor::Dense2;
+
+/// Default output-column tile width: 128 columns × one weight-buffer row
+/// of values+offsets per block keeps a whole per-block slab (`keep × 128`
+/// slots at 5 bytes/slot ≤ 20 KiB even at keep=32) inside L1d.
+pub const N_TILE: usize = 128;
+
+/// Input rows processed per weight-tile pass: each column tile is
+/// streamed from memory once per `ROW_CHUNK` rows instead of once per
+/// row.
+const ROW_CHUNK: usize = 16;
+
+/// [`BlockBalanced`] reordered for execution: values and offsets advance
+/// in lockstep through column tiles (an interleave at tile granularity —
+/// per-slot interleaving would break f32 alignment for no cache benefit).
+///
+/// Layout: tiles are laid out left to right; within tile `t` (columns
+/// `[t*n_tile, t*n_tile + tw)`), compressed rows are contiguous:
+/// slot `(cr, c)` lives at `kc*t*n_tile + cr*tw + (c - t*n_tile)`.
+/// The `keep` rows of one reduction block therefore form one contiguous
+/// `keep × tw` slab — the unit the inner kernel streams.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBlockBalanced {
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: usize,
+    /// column tile width the data was packed with
+    pub n_tile: usize,
+    /// `[k/s * n]` values in tile order (see struct docs)
+    pub values: Vec<f32>,
+    /// block-relative offsets in `[0, BLOCK)`, same order as `values`
+    pub offsets: Vec<u8>,
+}
+
+impl PackedBlockBalanced {
+    /// Rows kept per block per column.
+    pub fn keep(&self) -> usize {
+        BLOCK / self.sparsity
+    }
+
+    /// Compressed row count `k/s`.
+    pub fn kc(&self) -> usize {
+        self.k / self.sparsity
+    }
+}
+
+impl BlockBalanced {
+    /// Reorder into the execution layout at the default tile width.
+    pub fn pack(&self) -> PackedBlockBalanced {
+        self.pack_tiled(N_TILE)
+    }
+
+    /// Reorder into the execution layout with an explicit column tile
+    /// width (property tests use small widths to exercise tile seams).
+    pub fn pack_tiled(&self, n_tile: usize) -> PackedBlockBalanced {
+        assert!(n_tile > 0, "tile width must be positive");
+        let (kc, n) = (self.kc(), self.n);
+        let mut values = Vec::with_capacity(kc * n);
+        let mut offsets = Vec::with_capacity(kc * n);
+        let mut col = 0;
+        while col < n {
+            let tw = n_tile.min(n - col);
+            for cr in 0..kc {
+                let at = cr * n + col;
+                values.extend_from_slice(&self.values[at..at + tw]);
+                offsets.extend_from_slice(&self.offsets[at..at + tw]);
+            }
+            col += tw;
+        }
+        PackedBlockBalanced {
+            k: self.k,
+            n,
+            sparsity: self.sparsity,
+            n_tile,
+            values,
+            offsets,
+        }
+    }
+}
+
+/// `y = act(x @ W + b)` over the packed layout, parallel + tiled.
+/// `x`: [m, k]; returns [m, n]. Accumulates in f32, matching the serial
+/// [`spmm`](crate::sparse::matmul::spmm) reduction order element-for-
+/// element, so the two agree bitwise for any `threads`.
+pub fn spmm_tiled(
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    threads: usize,
+) -> Dense2 {
+    assert_eq!(x.cols, w.k, "reduction dim mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.n, "bias length");
+    }
+    let (m, n) = (x.rows, w.n);
+    let mut out = Dense2::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    let threads = threads.max(1).min(m);
+    if threads == 1 {
+        stripe(x, w, bias, act, 0, &mut out.data);
+        return out;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
+            s.spawn(move || stripe(x, w, bias, act, ti * rows_per, chunk));
+        }
+    });
+    out
+}
+
+/// One thread's stripe: rows `row0 ..` of `x` into `out` (a disjoint
+/// `rows × n` slice of the output). Dispatches to the `keep`-
+/// monomorphized kernel.
+fn stripe(
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    row0: usize,
+    out: &mut [f32],
+) {
+    match w.keep() {
+        1 => stripe_keep::<1>(x, w, bias, act, row0, out),
+        2 => stripe_keep::<2>(x, w, bias, act, row0, out),
+        4 => stripe_keep::<4>(x, w, bias, act, row0, out),
+        8 => stripe_keep::<8>(x, w, bias, act, row0, out),
+        16 => stripe_keep::<16>(x, w, bias, act, row0, out),
+        32 => stripe_keep::<32>(x, w, bias, act, row0, out),
+        other => unreachable!("pack() only produces supported keeps, got {other}"),
+    }
+}
+
+fn stripe_keep<const KEEP: usize>(
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    row0: usize,
+    out: &mut [f32],
+) {
+    let n = w.n;
+    let kc = w.kc();
+    let nblocks = w.k / BLOCK;
+    let rows = out.len() / n;
+    let mut scratch = vec![0.0f32; ROW_CHUNK * w.n_tile.min(n)];
+    let mut r = 0;
+    while r < rows {
+        let rc = ROW_CHUNK.min(rows - r);
+        let mut col = 0;
+        while col < n {
+            let tw = w.n_tile.min(n - col);
+            // slots before this tile: every earlier tile is full width
+            let tile_base = kc * col;
+            let acc_all = &mut scratch[..rc * tw];
+            acc_all.fill(0.0);
+            for blk in 0..nblocks {
+                let at = tile_base + blk * KEEP * tw;
+                let vals = &w.values[at..at + KEEP * tw];
+                let offs = &w.offsets[at..at + KEEP * tw];
+                for li in 0..rc {
+                    let xrow = x.row(row0 + r + li);
+                    let xblock: &[f32; BLOCK] =
+                        xrow[blk * BLOCK..][..BLOCK].try_into().unwrap();
+                    let acc = &mut acc_all[li * tw..][..tw];
+                    for j in 0..KEEP {
+                        let vrow = &vals[j * tw..][..tw];
+                        let orow = &offs[j * tw..][..tw];
+                        for ((a, &v), &o) in acc.iter_mut().zip(vrow).zip(orow) {
+                            // `off & 31` keeps the gather provably in
+                            // bounds of the fixed-size block (offsets are
+                            // validated < BLOCK at construction), so the
+                            // loop vectorizes without panicking paths —
+                            // same trick as the serial reference.
+                            *a += xblock[(o & 31) as usize] * v;
+                        }
+                    }
+                }
+            }
+            // fused epilogue: bias + activation, single write to out
+            for li in 0..rc {
+                let acc = &scratch[li * tw..][..tw];
+                let orow = &mut out[(r + li) * n + col..][..tw];
+                match bias {
+                    Some(b) => {
+                        let bt = &b[col..col + tw];
+                        for ((o, &a), &bv) in orow.iter_mut().zip(acc).zip(bt) {
+                            *o = act.apply(a + bv);
+                        }
+                    }
+                    None => {
+                        for (o, &a) in orow.iter_mut().zip(acc) {
+                            *o = act.apply(a);
+                        }
+                    }
+                }
+            }
+            col += tw;
+        }
+        r += rc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::matmul::{dense_mm, spmm};
+
+    fn case(m: usize, k: usize, n: usize, s: usize, seed: u64) -> (Dense2, BlockBalanced) {
+        let x = Dense2::randn(m, k, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(k, n, seed + 1), s).unwrap();
+        (x, w)
+    }
+
+    #[test]
+    fn pack_preserves_every_slot() {
+        let (_, w) = case(1, 96, 37, 4, 1);
+        for n_tile in [1usize, 8, 16, 37, 64, 128] {
+            let p = w.pack_tiled(n_tile);
+            assert_eq!(p.values.len(), w.values.len());
+            assert_eq!(p.offsets.len(), w.offsets.len());
+            // reconstruct slot (cr, c) from the tile layout
+            for cr in 0..w.kc() {
+                for c in 0..w.n {
+                    let t = c / n_tile;
+                    let tw = n_tile.min(w.n - t * n_tile);
+                    let at = p.kc() * t * n_tile + cr * tw + (c - t * n_tile);
+                    assert_eq!(p.values[at], w.values[cr * w.n + c], "({cr},{c}) tile {n_tile}");
+                    assert_eq!(p.offsets[at], w.offsets[cr * w.n + c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_serial_bitwise_all_sparsities() {
+        for &s in &crate::sparse::SUPPORTED_SPARSITIES {
+            let (x, w) = case(7, 64, 43, s, 100 + s as u64);
+            let serial = spmm(&x, &w, None, Act::None);
+            for threads in [1usize, 2, 4] {
+                let tiled = spmm_tiled(&x, &w.pack(), None, Act::None, threads);
+                assert_eq!(serial.data, tiled.data, "s={s} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_matches_serial_across_tile_seams() {
+        // n straddles tile boundaries for small widths; row count exceeds
+        // ROW_CHUNK so the row-chunking path is exercised too
+        let (x, w) = case(37, 96, 29, 8, 7);
+        let serial = spmm(&x, &w, None, Act::None);
+        for n_tile in [1usize, 5, 16, 29, 64] {
+            let tiled = spmm_tiled(&x, &w.pack_tiled(n_tile), None, Act::None, 3);
+            assert_eq!(serial.data, tiled.data, "n_tile={n_tile}");
+        }
+    }
+
+    #[test]
+    fn tiled_bias_and_act_epilogue() {
+        let (x, w) = case(5, 64, 11, 4, 21);
+        let bias: Vec<f32> = (0..11).map(|i| i as f32 * 0.25 - 1.0).collect();
+        for act in [Act::None, Act::Relu, Act::Gelu] {
+            let serial = spmm(&x, &w, Some(&bias), act);
+            let tiled = spmm_tiled(&x, &w.pack(), Some(&bias), act, 2);
+            assert_eq!(serial.data, tiled.data, "{act:?}");
+            let dense = dense_mm(&x, &w.to_dense(), Some(&bias), act);
+            assert!(tiled.max_abs_diff(&dense) < 1e-4, "{act:?} vs dense");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_rows_is_fine() {
+        let (x, w) = case(2, 32, 8, 2, 31);
+        let serial = spmm(&x, &w, None, Act::None);
+        let tiled = spmm_tiled(&x, &w.pack(), None, Act::None, 16);
+        assert_eq!(serial.data, tiled.data);
+    }
+
+    #[test]
+    fn empty_input_rows() {
+        let (_, w) = case(1, 32, 8, 2, 41);
+        let x = Dense2::zeros(0, 32);
+        let y = spmm_tiled(&x, &w.pack(), None, Act::None, 4);
+        assert_eq!(y.rows, 0);
+        assert_eq!(y.cols, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "reduction dim mismatch")]
+    fn shape_checked() {
+        let (x, _) = case(2, 32, 4, 2, 51);
+        let w = BlockBalanced::from_dense(&Dense2::randn(64, 4, 52), 2).unwrap();
+        spmm_tiled(&x, &w.pack(), None, Act::None, 2);
+    }
+}

@@ -4,9 +4,16 @@
 //! and a stable text format the `rust/benches/*.rs` binaries (registered
 //! with `harness = false`) print. Paper-table benches additionally emit the
 //! rows the paper reports via [`crate::sim::report`].
+//!
+//! [`JsonReport`] is the machine-readable side: benches push entries into
+//! it and [`JsonReport::write`] emits `BENCH_<topic>.json` (schema
+//! `s4-bench-v1`, see EXPERIMENTS.md §Perf) — the per-PR perf trajectory
+//! CI uploads as an artifact.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// One measured benchmark.
@@ -20,6 +27,19 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (seconds; consumed by [`JsonReport`]).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_s", Json::Num(self.summary.mean)),
+            ("p50_s", Json::Num(self.summary.p50)),
+            ("p99_s", Json::Num(self.summary.p99)),
+            ("std_s", Json::Num(self.summary.std)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+            ("samples", Json::Num(self.samples as f64)),
+        ])
+    }
+
     pub fn print(&self) {
         let s = &self.summary;
         println!(
@@ -126,6 +146,60 @@ impl Bench {
     }
 }
 
+/// Collector for one `BENCH_<topic>.json` trajectory file.
+///
+/// Convention (schema `s4-bench-v1`): top-level metadata set via
+/// [`set`](JsonReport::set), one object per measurement pushed into
+/// `entries`. Files land in `$S4_BENCH_DIR` (default: the process
+/// working directory), named `BENCH_<topic>.json`, so successive PRs
+/// produce a comparable perf trajectory.
+pub struct JsonReport {
+    topic: String,
+    fields: Vec<(String, Json)>,
+    entries: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(topic: &str) -> JsonReport {
+        JsonReport { topic: topic.to_string(), fields: Vec::new(), entries: Vec::new() }
+    }
+
+    /// Set a top-level metadata field (shape, smoke flag, host info, ...).
+    pub fn set(&mut self, key: &str, v: Json) {
+        self.fields.push((key.to_string(), v));
+    }
+
+    /// Append one measurement entry.
+    pub fn push(&mut self, entry: Json) {
+        self.entries.push(entry);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("schema", Json::Str("s4-bench-v1".into())),
+            ("bench", Json::Str(self.topic.clone())),
+        ];
+        for (k, v) in &self.fields {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        pairs.push(("entries", Json::Arr(self.entries.clone())));
+        Json::obj(pairs)
+    }
+
+    /// Write `BENCH_<topic>.json` into `dir`; returns the path.
+    pub fn write_to(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.topic));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Write to `$S4_BENCH_DIR` (default `.`).
+    pub fn write(&self) -> anyhow::Result<PathBuf> {
+        let dir = std::env::var("S4_BENCH_DIR").unwrap_or_else(|_| ".".into());
+        self.write_to(Path::new(&dir))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +223,36 @@ mod tests {
         assert!(fmt_time(3e-6).ends_with("µs"));
         assert!(fmt_time(3e-3).ends_with("ms"));
         assert!(fmt_time(3.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_report_roundtrips_and_writes() {
+        let mut r = JsonReport::new("unit_test");
+        r.set("smoke", Json::Bool(true));
+        r.push(Json::obj(vec![("sparsity", Json::Num(8.0)), ("gflops", Json::Num(1.5))]));
+        let j = r.to_json();
+        assert_eq!(j.get("schema").as_str(), Some("s4-bench-v1"));
+        assert_eq!(j.get("bench").as_str(), Some("unit_test"));
+        assert_eq!(j.get("entries").as_arr().unwrap().len(), 1);
+        // serialized form parses back identically
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        let dir = std::env::temp_dir();
+        let path = r.write_to(&dir).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_unit_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(text.trim()).unwrap(), j);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn bench_result_to_json_has_core_fields() {
+        let b = Bench { min_sample_secs: 0.001, samples: 3, warmup_secs: 0.0 };
+        let r = b.run("spin", || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("spin"));
+        assert!(j.get("p50_s").as_f64().unwrap() >= 0.0);
+        assert!(j.get("samples").as_u64().unwrap() == 3);
     }
 }

@@ -5,7 +5,7 @@
 //! and output determinism — one manifest spanning a token model and an
 //! image model, so both modalities are covered on every backend.
 
-use s4::backend::{conformance, EchoBackend, SimBackend};
+use s4::backend::{conformance, CpuSparseBackend, EchoBackend, SimBackend};
 use s4::runtime::Manifest;
 
 fn manifest() -> Manifest {
@@ -36,4 +36,13 @@ fn echo_backend_conforms() {
 fn sim_backend_conforms() {
     let m = manifest();
     conformance::run_all(&SimBackend::from_manifest(&m, 1e-4), &m);
+}
+
+#[test]
+fn cpu_sparse_backend_conforms() {
+    // the real-compute backend honors the identical contract — including
+    // determinism, which the tiled kernel guarantees at any thread count
+    let m = manifest();
+    conformance::run_all(&CpuSparseBackend::from_manifest(&m), &m);
+    conformance::run_all(&CpuSparseBackend::with_threads(&m, 3), &m);
 }

@@ -7,6 +7,7 @@ use s4::prop_assert;
 use s4::runtime::Manifest;
 use s4::sparse::format::{BlockBalanced, BLOCK};
 use s4::sparse::matmul::{dense_mm, spmm, Act};
+use s4::sparse::pack::spmm_tiled;
 use s4::sparse::tensor::Dense2;
 use s4::util::prop::{check, Gen};
 
@@ -109,6 +110,46 @@ fn prop_spmm_matches_dense_reference() {
         let yd = dense_mm(&x, &w.to_dense(), None, act);
         let diff = y.max_abs_diff(&yd);
         prop_assert!(diff < 1e-3, "diff {diff} (m={m} k={} n={n} s={s})", kb * BLOCK);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiled_spmm_matches_serial_and_dense() {
+    // the differential contract of the parallel engine: for random
+    // shapes, every supported sparsity, any thread count and tile width
+    // (including widths that split the output mid-tile), the tiled
+    // kernel is bit-identical to the serial reference and within fp
+    // tolerance of the dense reference
+    check("tiled spmm differential", 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 24);
+        let kb = g.usize_in(1, 3);
+        let n = g.usize_in(1, 40);
+        let s = *g.pick(&[1usize, 2, 4, 8, 16, 32]);
+        let threads = g.usize_in(1, 4);
+        let n_tile = *g.pick(&[3usize, 8, 16, 128]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let x = Dense2::randn(m, kb * BLOCK, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(kb * BLOCK, n, seed + 1), s)
+            .map_err(|e| e.to_string())?;
+        let bias: Option<Vec<f32>> = if g.bool() {
+            Some((0..n).map(|i| (i as f32).sin()).collect())
+        } else {
+            None
+        };
+        let act = *g.pick(&[Act::None, Act::Relu, Act::Gelu]);
+        let serial = spmm(&x, &w, bias.as_deref(), act);
+        let tiled = spmm_tiled(&x, &w.pack_tiled(n_tile), bias.as_deref(), act, threads);
+        prop_assert!(
+            serial.data == tiled.data,
+            "tiled != serial (m={m} k={} n={n} s={s} t={threads} nt={n_tile}, \
+             diff {})",
+            kb * BLOCK,
+            serial.max_abs_diff(&tiled)
+        );
+        let dense = dense_mm(&x, &w.to_dense(), bias.as_deref(), act);
+        let diff = tiled.max_abs_diff(&dense);
+        prop_assert!(diff < 1e-3, "tiled vs dense diff {diff} (s={s})");
         Ok(())
     });
 }
