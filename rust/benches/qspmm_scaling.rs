@@ -1,0 +1,102 @@
+//! Bench: the INT8 quantized packed kernel vs the f32 tiled engine —
+//! the paper's sparsity × quantization composition as a measured curve.
+//!
+//! Emits `BENCH_qspmm.json` (schema `s4-bench-v1`, see EXPERIMENTS.md
+//! §Perf): for every (sparsity ∈ {1,2,4,8,16,32}) × (thread count)
+//! point, the int8 kernel's GFLOP/s (sparse-effective, i.e. dense FLOPs
+//! ÷ sparsity over wall time) and its speedup over the f32 tiled kernel
+//! at the same point — the int8-vs-f32 tradeoff each PR defends.
+//!
+//! Before any timing, the run gates on correctness: `qspmm_tiled` must
+//! match the serial int8 reference bitwise, and stay within the analytic
+//! quantization-error bound of the f32 kernel.
+//!
+//! `--smoke` (or `S4_BENCH_SMOKE=1`) shrinks shapes and iteration counts
+//! for CI; files land in `$S4_BENCH_DIR` (default: cwd).
+//!
+//! ```bash
+//! cargo bench --bench qspmm_scaling            # full
+//! cargo bench --bench qspmm_scaling -- --smoke # CI trajectory point
+//! ```
+
+use std::hint::black_box;
+
+use s4::sparse::format::BlockBalanced;
+use s4::sparse::matmul::{spmm, Act};
+use s4::sparse::pack::{qspmm_tiled, spmm_tiled};
+use s4::sparse::quant::{qspmm, quant_drift_bound};
+use s4::sparse::tensor::Dense2;
+use s4::util::bench::{Bench, JsonReport};
+use s4::util::cli::Args;
+use s4::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let b = if smoke {
+        Bench { min_sample_secs: 0.005, samples: 3, warmup_secs: 0.02 }
+    } else {
+        Bench::default()
+    };
+    let (m, k, n) = if smoke { (32, 256, 128) } else { (128, 1024, 256) };
+    let threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    let x = Dense2::randn(m, k, 1);
+    let wd = Dense2::randn(k, n, 2);
+    let dense_flops = 2.0 * (m * k * n) as f64;
+
+    println!("== qspmm scaling: int8 vs f32 ({m}x{k}x{n}, threads {threads:?}) ==");
+    let mut report = JsonReport::new("qspmm");
+    report.set("smoke", Json::Bool(smoke));
+    report.set(
+        "shape",
+        Json::obj(vec![
+            ("m", Json::Num(m as f64)),
+            ("k", Json::Num(k as f64)),
+            ("n", Json::Num(n as f64)),
+        ]),
+    );
+
+    for &s in &s4::sparse::SUPPORTED_SPARSITIES {
+        let w = BlockBalanced::from_dense(&wd, s)?;
+        let packed = w.pack();
+        let qb = w.quantize();
+        let qpacked = qb.pack();
+
+        // correctness gates before any timing is recorded:
+        // (1) tiled int8 == serial int8, bitwise
+        let serial_q = qspmm(&x, &qb, None, Act::None);
+        let tiled_q = qspmm_tiled(&x, &qpacked, None, Act::None, 4);
+        anyhow::ensure!(
+            serial_q.data == tiled_q.data,
+            "int8 tiled kernel diverged from serial reference at s={s}"
+        );
+        // (2) int8 within the worst-case quantization bound of f32
+        // (shared definition with the differential property test)
+        let f32_ref = spmm(&x, &w, None, Act::None);
+        let bound = quant_drift_bound(&x, &w, &qb);
+        let drift = tiled_q.max_abs_diff(&f32_ref);
+        anyhow::ensure!(drift <= bound, "int8 drift {drift} > bound {bound} at s={s}");
+
+        let flops = dense_flops / s as f64;
+        for &t in &threads {
+            let rf = b.run(&format!("spmm_tiled  s={s:<2} t={t}"), || {
+                black_box(spmm_tiled(&x, &packed, None, Act::None, t));
+            });
+            let rq = b.run(&format!("qspmm_tiled s={s:<2} t={t}"), || {
+                black_box(qspmm_tiled(&x, &qpacked, None, Act::None, t));
+            });
+            report.push(Json::obj(vec![
+                ("sparsity", Json::Num(s as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("f32_p50_s", Json::Num(rf.summary.p50)),
+                ("int8_p50_s", Json::Num(rq.summary.p50)),
+                ("int8_gflops", Json::Num(flops / rq.summary.p50 / 1e9)),
+                ("speedup_vs_f32", Json::Num(rf.summary.p50 / rq.summary.p50)),
+            ]));
+        }
+    }
+    let path = report.write()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -34,15 +34,27 @@
 //! identical logits, for any thread count (the tiled kernel reduces in a
 //! fixed order). The backend-conformance suite runs against this type in
 //! `rust/tests/backend_conformance.rs`.
+//!
+//! **Precision**: every layer carries both the f32 packed weights and
+//! their INT8 quantized twin (same pruned matrix through
+//! `prune → per-channel calibrate → pack`). [`Precision::Int8`] serves
+//! through [`qspmm_tiled`] — i32 accumulation, fused
+//! `dequant → bias → activation` epilogue — which is the paper's
+//! headline sparsity×quantization composition. The mode is chosen per
+//! artifact by the manifest's `"precision"` field and can be forced
+//! process-wide with [`CpuSparseBackend::with_precision`]
+//! (`s4 serve --precision int8`). Int8 logits stay within the
+//! [`CpuSparseBackend::int8_tolerance`] bound of the f32 logits and are
+//! just as deterministic (integer accumulation is order-independent).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
 use crate::graph::op::OpKind;
-use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::manifest::{ArtifactIndex, ArtifactMeta, Manifest, Precision};
 use crate::sparse::matmul::Act;
-use crate::sparse::pack::{spmm_tiled, PackedBlockBalanced};
+use crate::sparse::pack::{qspmm_tiled, spmm_tiled, PackedBlockBalanced, QPackedBlockBalanced};
 use crate::sparse::tensor::Dense2;
 use crate::sparse::{BlockBalanced, BLOCK, SUPPORTED_SPARSITIES};
 
@@ -57,9 +69,16 @@ const DEPTH: usize = 2;
 /// in the low milliseconds even for ResNet-width (2048) feature layers.
 const MAX_HIDDEN: usize = 512;
 
-/// One fused sparse layer: packed weights + bias + activation epilogue.
+/// One fused sparse layer: packed f32 weights, optionally their INT8
+/// twin, + bias + activation epilogue. The INT8 side comes from the same
+/// pruned matrix through the `prune → per-channel calibrate → pack`
+/// pipeline, so F32/Int8 serving differ only in kernel + quantization
+/// noise. `qw` is built only when the backend can actually serve Int8
+/// (f32-only construction skips the quantize+pack cost and the ~25%
+/// extra weight memory).
 struct SparseLayer {
     w: PackedBlockBalanced,
+    qw: Option<QPackedBlockBalanced>,
     bias: Vec<f32>,
     act: Act,
 }
@@ -67,7 +86,7 @@ struct SparseLayer {
 impl SparseLayer {
     /// Deterministic layer `[k, n]` pruned to `sparsity`, seeded by `tag`.
     /// Weight scale 1/√k keeps activations O(1) through the trunk.
-    fn new(k: usize, n: usize, sparsity: usize, act: Act, tag: &str) -> SparseLayer {
+    fn new(k: usize, n: usize, sparsity: usize, act: Act, tag: &str, int8: bool) -> SparseLayer {
         let mut wd = Dense2::randn(k, n, fnv1a(tag));
         let scale = 1.0 / (k as f32).sqrt();
         for v in &mut wd.data {
@@ -77,7 +96,21 @@ impl SparseLayer {
             .expect("distilled layer dims are BLOCK-aligned");
         let mut brng = crate::util::rng::Xoshiro256::seed_from_u64(fnv1a(tag) ^ 0xB1A5);
         let bias = (0..n).map(|_| brng.next_gaussian() as f32 * 0.1).collect();
-        SparseLayer { w: bb.pack(), bias, act }
+        let qw = int8.then(|| bb.quantize().pack());
+        SparseLayer { w: bb.pack(), qw, bias, act }
+    }
+
+    /// Execute the layer at `prec` through the tiled engine.
+    fn run(&self, x: &Dense2, prec: Precision, threads: usize) -> Dense2 {
+        match prec {
+            Precision::F32 => spmm_tiled(x, &self.w, Some(&self.bias), self.act, threads),
+            Precision::Int8 => {
+                // constructors build qw whenever any artifact can resolve
+                // to Int8, so this is reachable only with it present
+                let qw = self.qw.as_ref().expect("net built without int8 weights");
+                qspmm_tiled(x, qw, Some(&self.bias), self.act, threads)
+            }
+        }
     }
 }
 
@@ -91,12 +124,19 @@ struct SparseNet {
 }
 
 impl SparseNet {
-    fn build(model: &str, sparsity: usize, outputs: &[TensorSpec]) -> SparseNet {
+    fn build(model: &str, sparsity: usize, outputs: &[TensorSpec], int8: bool) -> SparseNet {
         let hidden = model_hidden(model);
         let embed = Dense2::randn(EMBED_ROWS, hidden, fnv1a(&format!("{model}/embed")));
         let trunk = (0..DEPTH)
             .map(|l| {
-                SparseLayer::new(hidden, hidden, sparsity, Act::Gelu, &format!("{model}/trunk{l}"))
+                SparseLayer::new(
+                    hidden,
+                    hidden,
+                    sparsity,
+                    Act::Gelu,
+                    &format!("{model}/trunk{l}"),
+                    int8,
+                )
             })
             .collect();
         let heads = outputs
@@ -109,6 +149,7 @@ impl SparseNet {
                     sparsity,
                     Act::None,
                     &format!("{model}/head{i}"),
+                    int8,
                 )
             })
             .collect();
@@ -120,8 +161,11 @@ pub struct CpuSparseBackend {
     /// nets are shared across artifact variants: weights depend only on
     /// (model, clamped sparsity, output sample widths), so `_b1`/`_b8`
     /// variants of one model reference the same network
-    nets: Vec<(ArtifactMeta, Arc<SparseNet>)>,
+    nets: ArtifactIndex<Arc<SparseNet>>,
     threads: usize,
+    /// `Some` forces every artifact to this precision (`s4 serve
+    /// --precision`); `None` follows each artifact's manifest field.
+    precision: Option<Precision>,
 }
 
 /// Largest SPU-supported sparsity ≤ the manifest's tier (manifests may
@@ -173,28 +217,99 @@ impl CpuSparseBackend {
     }
 
     pub fn with_threads(m: &Manifest, threads: usize) -> CpuSparseBackend {
-        let mut cache: HashMap<(String, usize, Vec<usize>), Arc<SparseNet>> = HashMap::new();
-        let nets = m
+        Self::with_threads_precision(m, threads, None)
+    }
+
+    /// Serve every artifact at `precision`, ignoring the manifest field
+    /// (the `s4 serve --precision` override).
+    pub fn with_precision(m: &Manifest, precision: Precision) -> CpuSparseBackend {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8);
+        Self::with_threads_precision(m, threads, Some(precision))
+    }
+
+    /// Full constructor: explicit thread count and optional precision
+    /// override (`None` = per-artifact from the manifest).
+    pub fn with_threads_precision(
+        m: &Manifest,
+        threads: usize,
+        precision: Option<Precision>,
+    ) -> CpuSparseBackend {
+        type NetKey = (String, usize, Vec<usize>);
+        let net_key = |a: &ArtifactMeta| -> NetKey {
+            (
+                a.model.clone(),
+                clamp_sparsity(a.sparsity),
+                a.outputs.iter().map(|o| o.sample_elems()).collect(),
+            )
+        };
+        // a net carries the quantized twin only if one of its artifacts
+        // can resolve to Int8 under the effective precision policy —
+        // f32-only nets skip the quantize+pack cost and extra memory
+        let int8_nets: HashSet<NetKey> = m
             .artifacts
             .iter()
-            .map(|a| {
-                let s = clamp_sparsity(a.sparsity);
-                let widths: Vec<usize> = a.outputs.iter().map(|o| o.sample_elems()).collect();
-                let net = cache
-                    .entry((a.model.clone(), s, widths))
-                    .or_insert_with(|| Arc::new(SparseNet::build(&a.model, s, &a.outputs)))
-                    .clone();
-                (a.clone(), net)
-            })
+            .filter(|a| precision.unwrap_or(a.precision) == Precision::Int8)
+            .map(|a| net_key(a))
             .collect();
-        CpuSparseBackend { nets, threads: threads.max(1) }
+        let mut cache: HashMap<NetKey, Arc<SparseNet>> = HashMap::new();
+        let nets = ArtifactIndex::build(m, |a| {
+            let key = net_key(a);
+            let int8 = int8_nets.contains(&key);
+            cache
+                .entry(key)
+                .or_insert_with(|| {
+                    let s = clamp_sparsity(a.sparsity);
+                    Arc::new(SparseNet::build(&a.model, s, &a.outputs, int8))
+                })
+                .clone()
+        });
+        CpuSparseBackend { nets, threads: threads.max(1), precision }
     }
 
     fn net(&self, artifact: &str) -> anyhow::Result<&(ArtifactMeta, Arc<SparseNet>)> {
         self.nets
-            .iter()
-            .find(|(a, _)| a.name == artifact)
+            .get(artifact)
             .ok_or_else(|| anyhow::anyhow!("CpuSparseBackend: unknown artifact `{artifact}`"))
+    }
+
+    /// Effective serving precision of `artifact`: the process-wide
+    /// override if set, else the artifact's manifest precision.
+    pub fn precision_of(&self, artifact: &str) -> anyhow::Result<Precision> {
+        Ok(self.precision.unwrap_or(self.net(artifact)?.0.precision))
+    }
+
+    /// Relative-L2 tolerance for this artifact's Int8 logits vs its F32
+    /// logits, derived from the per-layer quantization error bounds: a
+    /// logit crosses every trunk layer plus one head, and each quantized
+    /// layer contributes at most [`QPackedBlockBalanced::rel_error_bound`]
+    /// (½ LSB relative) weight noise plus the same ½-LSB relative noise
+    /// from per-tensor activation quantization. `CANCEL_SLACK` covers the
+    /// amplification when a dot product's terms partially cancel
+    /// (empirically < 4× on the gaussian-ish distilled weights — cf. the
+    /// 2% single-layer `qgemm_close_to_f32_gemm` bound vs the ~0.8%
+    /// noise floor). The conformance suite asserts against this bound.
+    pub fn int8_tolerance(&self, artifact: &str) -> anyhow::Result<f32> {
+        const CANCEL_SLACK: f32 = 8.0;
+        const ACT_REL: f32 = 0.5 / 127.0;
+        let (_, net) = self.net(artifact)?;
+        let rel = |l: &SparseLayer| -> anyhow::Result<f32> {
+            let qw = l.qw.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("{artifact}: backend was built without the int8 path")
+            })?;
+            Ok(qw.rel_error_bound() + ACT_REL)
+        };
+        let mut trunk = 0.0f32;
+        for l in &net.trunk {
+            trunk += rel(l)?;
+        }
+        let mut head = 0.0f32;
+        for l in &net.heads {
+            head = head.max(rel(l)?);
+        }
+        Ok(CANCEL_SLACK * (trunk + head))
     }
 }
 
@@ -256,17 +371,18 @@ impl InferenceBackend for CpuSparseBackend {
     fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
         let (meta, net) = self.net(artifact)?;
         validate_inputs(artifact, &meta.inputs, inputs)?;
+        let prec = self.precision.unwrap_or(meta.precision);
         let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
         // modest batches don't amortize thread spawns — run those serial
         let threads = if capacity * net.hidden >= 2048 { self.threads } else { 1 };
         let mut hrows = featurize(net, &meta.inputs, inputs, capacity);
         for layer in &net.trunk {
-            hrows = spmm_tiled(&hrows, &layer.w, Some(&layer.bias), layer.act, threads);
+            hrows = layer.run(&hrows, prec, threads);
         }
         let mut out = Vec::with_capacity(meta.outputs.len());
         for (spec, head) in meta.outputs.iter().zip(&net.heads) {
             let per = spec.sample_elems();
-            let y = spmm_tiled(&hrows, &head.w, Some(&head.bias), head.act, threads);
+            let y = head.run(&hrows, prec, threads);
             let mut v = Value::empty(&spec.dtype)?;
             for b in 0..spec.batch_dim() {
                 if b < capacity {
@@ -358,6 +474,69 @@ mod tests {
         let b = CpuSparseBackend::from_manifest(&manifest());
         assert!(b.run_batch("bert_tiny_s8_b2", &[Value::I32(vec![1; 7])]).is_err());
         assert!(b.run_batch("bert_tiny_s8_b2", &[Value::F32(vec![0.0; 8])]).is_err());
+    }
+
+    fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+        let num: f32 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let den: f32 = b.iter().map(|v| v * v).sum();
+        if den == 0.0 {
+            0.0
+        } else {
+            (num / den).sqrt()
+        }
+    }
+
+    #[test]
+    fn int8_mode_is_deterministic_and_close_to_f32() {
+        let m = manifest();
+        let f = CpuSparseBackend::from_manifest(&m);
+        let q = CpuSparseBackend::with_precision(&m, Precision::Int8);
+        let inputs = vec![Value::I32(vec![1, 2, 3, 4, 9, 9, 9, 9])];
+        let of = f.run_batch("bert_tiny_s8_b2", &inputs).unwrap();
+        let oq1 = q.run_batch("bert_tiny_s8_b2", &inputs).unwrap();
+        let oq2 = q.run_batch("bert_tiny_s8_b2", &inputs).unwrap();
+        assert_eq!(oq1, oq2, "int8 must be deterministic");
+        assert_ne!(of, oq1, "int8 must actually run the quantized kernel");
+        let tol = q.int8_tolerance("bert_tiny_s8_b2").unwrap();
+        assert!(tol > 0.0 && tol < 0.5, "tolerance sane: {tol}");
+        let rel = rel_l2(oq1[0].as_f32().unwrap(), of[0].as_f32().unwrap());
+        assert!(rel <= tol, "int8 rel err {rel} exceeds tolerance {tol}");
+    }
+
+    #[test]
+    fn int8_deterministic_across_thread_counts() {
+        let m = manifest();
+        let q1 = CpuSparseBackend::with_threads_precision(&m, 1, Some(Precision::Int8));
+        let q4 = CpuSparseBackend::with_threads_precision(&m, 4, Some(Precision::Int8));
+        let inputs = vec![Value::I32(vec![5, 6, 7, 8, 1, 2, 3, 4])];
+        assert_eq!(
+            q1.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+            q4.run_batch("bert_tiny_s8_b2", &inputs).unwrap()
+        );
+    }
+
+    #[test]
+    fn precision_follows_manifest_unless_overridden() {
+        let text = r#"{"artifacts": [
+          {"name": "q8", "file": "x", "family": "bert",
+           "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 4,
+           "precision": "int8",
+           "inputs": [{"name": "ids", "shape": [1, 4], "dtype": "s32"}],
+           "outputs": [{"name": "logits", "shape": [1, 3], "dtype": "f32"}]}
+        ]}"#;
+        let m = Manifest::parse(std::path::Path::new("/tmp"), text).unwrap();
+        let b = CpuSparseBackend::from_manifest(&m);
+        assert_eq!(b.precision_of("q8").unwrap(), Precision::Int8);
+        let forced = CpuSparseBackend::with_precision(&m, Precision::F32);
+        assert_eq!(forced.precision_of("q8").unwrap(), Precision::F32);
+        // manifest-selected int8 == override-selected int8, bitwise
+        let inputs = vec![Value::I32(vec![4, 3, 2, 1])];
+        let via_manifest = b.run_batch("q8", &inputs).unwrap();
+        let via_override = CpuSparseBackend::with_precision(&m, Precision::Int8)
+            .run_batch("q8", &inputs)
+            .unwrap();
+        assert_eq!(via_manifest, via_override);
+        assert_ne!(via_manifest, forced.run_batch("q8", &inputs).unwrap());
     }
 
     #[test]

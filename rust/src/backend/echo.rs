@@ -7,21 +7,21 @@
 //! benches).
 
 use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
-use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::manifest::{ArtifactIndex, ArtifactMeta, Manifest};
 
 pub struct EchoBackend {
-    metas: Vec<ArtifactMeta>,
+    metas: ArtifactIndex<()>,
 }
 
 impl EchoBackend {
     pub fn from_manifest(m: &Manifest) -> EchoBackend {
-        EchoBackend { metas: m.artifacts.clone() }
+        EchoBackend { metas: ArtifactIndex::build(m, |_| ()) }
     }
 
     fn meta(&self, artifact: &str) -> anyhow::Result<&ArtifactMeta> {
         self.metas
-            .iter()
-            .find(|a| a.name == artifact)
+            .get(artifact)
+            .map(|(a, _)| a)
             .ok_or_else(|| anyhow::anyhow!("EchoBackend: unknown artifact `{artifact}`"))
     }
 }

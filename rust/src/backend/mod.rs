@@ -31,7 +31,7 @@ pub mod echo;
 pub mod sim;
 pub mod value;
 
-pub use crate::runtime::manifest::TensorSpec;
+pub use crate::runtime::manifest::{Precision, TensorSpec};
 pub use cpu::CpuSparseBackend;
 pub use echo::EchoBackend;
 pub use sim::SimBackend;

@@ -6,11 +6,12 @@
 use std::time::Duration;
 
 use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
-use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::manifest::{ArtifactIndex, ArtifactMeta, Manifest};
 
 pub struct SimBackend {
-    /// (artifact metadata, simulated service time per batch)
-    specs: Vec<(ArtifactMeta, Duration)>,
+    /// artifact metadata keyed by name, payload = simulated service time
+    /// per batch
+    specs: ArtifactIndex<Duration>,
 }
 
 impl SimBackend {
@@ -22,24 +23,19 @@ impl SimBackend {
         use crate::graph::models;
         use crate::sim::{simulate, Target};
         let cfg = AntoumConfig::s4();
-        let specs = m
-            .artifacts
-            .iter()
-            .map(|a| {
-                let g = models::by_name(&a.model, a.batch.max(1))
-                    .unwrap_or_else(|_| models::bert(models::BERT_TINY, a.batch.max(1), 128));
-                let r = simulate(&g, Target::antoum(&cfg, a.sparsity.max(1)));
-                let secs = (r.latency_ms / 1e3 * time_scale).max(1e-6);
-                (a.clone(), Duration::from_secs_f64(secs))
-            })
-            .collect();
+        let specs = ArtifactIndex::build(m, |a| {
+            let g = models::by_name(&a.model, a.batch.max(1))
+                .unwrap_or_else(|_| models::bert(models::BERT_TINY, a.batch.max(1), 128));
+            let r = simulate(&g, Target::antoum(&cfg, a.sparsity.max(1)));
+            let secs = (r.latency_ms / 1e3 * time_scale).max(1e-6);
+            Duration::from_secs_f64(secs)
+        });
         SimBackend { specs }
     }
 
     fn meta(&self, artifact: &str) -> anyhow::Result<&(ArtifactMeta, Duration)> {
         self.specs
-            .iter()
-            .find(|(a, _)| a.name == artifact)
+            .get(artifact)
             .ok_or_else(|| anyhow::anyhow!("SimBackend: unknown artifact `{artifact}`"))
     }
 }

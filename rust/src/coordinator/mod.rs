@@ -32,4 +32,4 @@ pub use server::{Server, ServerConfig, ServerHandle};
 
 // The execution surface lives in `crate::backend`; re-exported here for
 // serving-centric call sites.
-pub use crate::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, SimBackend};
+pub use crate::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, Precision, SimBackend};

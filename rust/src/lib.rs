@@ -9,10 +9,13 @@
 //! ## Layer map
 //!
 //! * [`sparse`] — block-balanced sparse tensor formats, pruning, reference
-//!   sparse ops (the numerics the simulator is validated against), and the
-//!   parallel tiled SpMM engine ([`sparse::pack`]: packed execution layout
-//!   + `spmm_tiled`, the multithreaded cache-tiled kernel the CPU serving
-//!   backend runs on).
+//!   sparse ops (the numerics the simulator is validated against), INT8
+//!   quantization composed with sparsity ([`sparse::quant`]:
+//!   `prune → per-channel calibrate → quantize`, serial `qspmm`
+//!   reference), and the parallel tiled SpMM engine ([`sparse::pack`]:
+//!   packed execution layouts + `spmm_tiled`/`qspmm_tiled`, the
+//!   multithreaded cache-tiled f32/int8 kernels the CPU serving backend
+//!   runs on).
 //! * [`graph`] — an op-graph IR with per-op FLOPs/bytes accounting plus
 //!   builders for the paper's benchmark models (ResNet-50/152,
 //!   BERT-base/large).
@@ -27,7 +30,8 @@
 //!   payloads, manifest-driven `TensorSpec` introspection, and the
 //!   [`backend::InferenceBackend`] trait every execution engine implements
 //!   ([`backend::CpuSparseBackend`] — real block-balanced sparse compute
-//!   through the tiled SpMM engine, [`backend::SimBackend`],
+//!   through the tiled SpMM engine, at f32 or int8 precision per artifact
+//!   ([`backend::Precision`], `s4 serve --precision`), [`backend::SimBackend`],
 //!   [`backend::EchoBackend`], and the PJRT executor under the `pjrt`
 //!   feature) — plus the [`backend::conformance`] suite that pins the
 //!   contract.

@@ -55,7 +55,7 @@ fn print_help() {
            sweep     [--batch B] [--models resnet50,bert_base]\n\
            residency --model M [--sparsity S]\n\
            serve     [--requests N] [--rate R] [--policy max|dense|fixed:S]\n\
-                     [--backend cpu|sim|echo]\n\
+                     [--backend cpu|sim|echo] [--precision f32|int8]\n\
            help\n\
          \n\
          MODELS: resnet50 resnet152 bert_tiny bert_mini bert_base bert_large"
@@ -162,8 +162,8 @@ fn cmd_residency(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use s4::coordinator::{
-        CpuSparseBackend, EchoBackend, InferenceBackend, Router, RoutingPolicy, Server,
-        ServerConfig, SimBackend,
+        CpuSparseBackend, EchoBackend, InferenceBackend, Precision, Router, RoutingPolicy,
+        Server, ServerConfig, SimBackend,
     };
     use s4::runtime::{default_artifact_dir, Manifest};
     use std::sync::Arc;
@@ -177,13 +177,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         p => anyhow::bail!("unknown policy {p:?}"),
     };
     let manifest = Manifest::load(&default_artifact_dir())?;
+    // precision override for the cpu backend: f32 | int8 (default:
+    // per-artifact from the manifest)
+    let precision = args.get("precision").map(Precision::parse).transpose()?;
     let backend: Arc<dyn InferenceBackend> = match args.get_or("backend", "cpu") {
-        // real sparse compute through the tiled SpMM engine
-        "cpu" => Arc::new(CpuSparseBackend::from_manifest(&manifest)),
+        // real sparse compute through the tiled SpMM engine (f32 or the
+        // quantized int8 packed kernel)
+        "cpu" => match precision {
+            Some(p) => Arc::new(CpuSparseBackend::with_precision(&manifest, p)),
+            None => Arc::new(CpuSparseBackend::from_manifest(&manifest)),
+        },
         // simulator-paced pseudo-outputs (latency realism, no compute)
-        "sim" => Arc::new(SimBackend::from_manifest(&manifest, 1.0)),
+        "sim" if precision.is_none() => Arc::new(SimBackend::from_manifest(&manifest, 1.0)),
         // instant reflection (coordinator overhead probing)
-        "echo" => Arc::new(EchoBackend::from_manifest(&manifest)),
+        "echo" if precision.is_none() => Arc::new(EchoBackend::from_manifest(&manifest)),
+        b @ ("sim" | "echo") => {
+            anyhow::bail!("--precision only applies to --backend cpu (got {b})")
+        }
         b => anyhow::bail!("unknown backend {b:?} (cpu | sim | echo)"),
     };
     let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);

@@ -4,9 +4,39 @@
 //! world and the serve-time rust world; this module parses and validates
 //! it (and the per-artifact golden files used by the integration tests).
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
+
+/// Numeric precision an artifact is served at. `Int8` runs the quantized
+/// packed kernel ([`crate::sparse::pack::qspmm_tiled`]); `F32` the float
+/// one. Selected per artifact via the manifest's optional `"precision"`
+/// field (default `f32`), overridable process-wide with
+/// `s4 serve --precision`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "int8" => Ok(Precision::Int8),
+            other => anyhow::bail!("unknown precision {other:?} (f32 | int8)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
 
 /// Tensor spec of a runtime input/output.
 #[derive(Clone, Debug, PartialEq)]
@@ -67,6 +97,8 @@ pub struct ArtifactMeta {
     pub outputs: Vec<TensorSpec>,
     pub hlo_bytes: usize,
     pub golden: Option<String>,
+    /// Serving precision (manifest `"precision"` field, default f32).
+    pub precision: Precision,
 }
 
 /// The whole manifest.
@@ -74,6 +106,40 @@ pub struct ArtifactMeta {
 pub struct Manifest {
     pub dir: PathBuf,
     pub artifacts: Vec<ArtifactMeta>,
+    /// artifact name → index into `artifacts`, built once at parse time
+    by_name: HashMap<String, usize>,
+}
+
+/// Name-keyed artifact map carrying one payload per artifact — the shared
+/// lookup every backend keeps on its spec-introspection hot path (the
+/// `executor.rs` HashMap pattern, extracted). Build it once from a
+/// manifest with a payload constructor; `get` is O(1) thereafter.
+pub struct ArtifactIndex<T> {
+    entries: Vec<(ArtifactMeta, T)>,
+    by_name: HashMap<String, usize>,
+}
+
+impl<T> ArtifactIndex<T> {
+    /// One entry per manifest artifact, payload built by `f` (called in
+    /// manifest order, so deterministic construction stays deterministic).
+    pub fn build<F: FnMut(&ArtifactMeta) -> T>(m: &Manifest, mut f: F) -> ArtifactIndex<T> {
+        let entries: Vec<(ArtifactMeta, T)> =
+            m.artifacts.iter().map(|a| (a.clone(), f(a))).collect();
+        let by_name = entries
+            .iter()
+            .enumerate()
+            .map(|(i, (a, _))| (a.name.clone(), i))
+            .collect();
+        ArtifactIndex { entries, by_name }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&(ArtifactMeta, T)> {
+        self.by_name.get(name).map(|&i| &self.entries[i])
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(ArtifactMeta, T)> {
+        self.entries.iter()
+    }
 }
 
 impl Manifest {
@@ -119,14 +185,33 @@ impl Manifest {
                 outputs,
                 hlo_bytes: a.get("hlo_bytes").as_u64().unwrap_or(0) as usize,
                 golden: a.get("golden").as_str().map(String::from),
+                precision: match a.get("precision") {
+                    Json::Null => Precision::F32,
+                    p => Precision::parse(p.as_str().ok_or_else(|| {
+                        // a present-but-non-string field must fail loudly,
+                        // not silently serve the f32 path
+                        anyhow::anyhow!("artifact `precision` must be a string")
+                    })?)?,
+                },
             });
         }
         anyhow::ensure!(!artifacts.is_empty(), "manifest has no artifacts");
-        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+        // names must be unique: the keyed lookups below (and every
+        // ArtifactIndex) resolve by name, while other consumers scan the
+        // vec — duplicates would make the two disagree
+        let mut by_name = HashMap::with_capacity(artifacts.len());
+        for (i, a) in artifacts.iter().enumerate() {
+            anyhow::ensure!(
+                by_name.insert(a.name.clone(), i).is_none(),
+                "duplicate artifact name `{}`",
+                a.name
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, by_name })
     }
 
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
-        self.artifacts.iter().find(|a| a.name == name)
+        self.by_name.get(name).map(|&i| &self.artifacts[i])
     }
 
     /// Variants of a model sorted by sparsity ascending (router policy
@@ -228,6 +313,40 @@ mod tests {
     }
 
     #[test]
+    fn precision_parses_and_defaults() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        // SAMPLE carries no precision field → f32 default
+        assert_eq!(m.get("m_s8_b1").unwrap().precision, Precision::F32);
+        let text = r#"{"artifacts": [
+          {"name": "q", "file": "f", "family": "bert", "model": "m",
+           "precision": "int8", "inputs": [], "outputs": []}
+        ]}"#;
+        let m = Manifest::parse(Path::new("/tmp"), text).unwrap();
+        assert_eq!(m.get("q").unwrap().precision, Precision::Int8);
+        let bad = text.replace("int8", "fp4");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+        // present-but-non-string must fail loudly, not default to f32
+        let non_str = text.replace(r#""int8""#, "8");
+        assert!(Manifest::parse(Path::new("/tmp"), &non_str).is_err());
+        assert_eq!(Precision::parse("f32").unwrap().name(), "f32");
+        assert!(Precision::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn artifact_index_keyed_lookup() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let idx = ArtifactIndex::build(&m, |a| a.sparsity * 10);
+        let (a, payload) = idx.get("m_s8_b1").unwrap();
+        assert_eq!(a.name, "m_s8_b1");
+        assert_eq!(*payload, 80);
+        assert!(idx.get("nope").is_none());
+        assert_eq!(idx.iter().count(), m.artifacts.len());
+        // iteration preserves manifest order
+        let names: Vec<&str> = idx.iter().map(|(a, _)| a.name.as_str()).collect();
+        assert_eq!(names, vec!["m_s8_b1", "m_s1_b1"]);
+    }
+
+    #[test]
     fn rejects_bad_manifests() {
         assert!(Manifest::parse(Path::new("/tmp"), "{}").is_err());
         assert!(Manifest::parse(Path::new("/tmp"), r#"{"artifacts": []}"#).is_err());
@@ -235,5 +354,13 @@ mod tests {
         // missing required name
         let bad = r#"{"artifacts": [{"file": "x", "family": "f", "model": "m"}]}"#;
         assert!(Manifest::parse(Path::new("/tmp"), bad).is_err());
+        // duplicate names (keyed lookup would disagree with vec scans)
+        let dup = r#"{"artifacts": [
+          {"name": "a", "file": "x", "family": "f", "model": "m",
+           "inputs": [], "outputs": []},
+          {"name": "a", "file": "y", "family": "f", "model": "m",
+           "inputs": [], "outputs": []}
+        ]}"#;
+        assert!(Manifest::parse(Path::new("/tmp"), dup).is_err());
     }
 }

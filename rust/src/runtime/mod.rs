@@ -16,7 +16,7 @@ pub mod manifest;
 
 #[cfg(feature = "pjrt")]
 pub use executor::{Executor, LoadedModel, PjrtServingBackend};
-pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+pub use manifest::{ArtifactIndex, ArtifactMeta, Manifest, Precision, TensorSpec};
 
 // `Value` started life here; it now lives in the unified backend API and
 // is re-exported for the runtime-centric import path.

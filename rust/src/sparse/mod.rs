@@ -14,8 +14,9 @@ pub mod quant;
 pub mod tensor;
 
 pub use format::{BlockBalanced, Csr, BLOCK};
-pub use pack::{spmm_tiled, PackedBlockBalanced, N_TILE};
+pub use pack::{qspmm_tiled, spmm_tiled, PackedBlockBalanced, QPackedBlockBalanced, N_TILE};
 pub use prune::{magnitude_prune, PruneSchedule};
+pub use quant::{qspmm, QBlockBalanced};
 pub use tensor::{DType, Dense2};
 
 /// Sparsity factors the SPU natively supports (paper: "up to 32x").

@@ -33,6 +33,7 @@
 
 use super::format::{BlockBalanced, BLOCK};
 use super::matmul::Act;
+use super::quant::{QBlockBalanced, QParams};
 use super::tensor::Dense2;
 
 /// Default output-column tile width: 128 columns × one weight-buffer row
@@ -79,6 +80,32 @@ impl PackedBlockBalanced {
     }
 }
 
+/// The tile reorder itself, generic over the value element so the f32
+/// and i8 packed layouts come from ONE loop and can never diverge (the
+/// int8 kernel's bitwise contract assumes the identical tile order).
+fn pack_slots<V: Copy>(
+    values: &[V],
+    offsets: &[u8],
+    kc: usize,
+    n: usize,
+    n_tile: usize,
+) -> (Vec<V>, Vec<u8>) {
+    assert!(n_tile > 0, "tile width must be positive");
+    let mut pv = Vec::with_capacity(kc * n);
+    let mut po = Vec::with_capacity(kc * n);
+    let mut col = 0;
+    while col < n {
+        let tw = n_tile.min(n - col);
+        for cr in 0..kc {
+            let at = cr * n + col;
+            pv.extend_from_slice(&values[at..at + tw]);
+            po.extend_from_slice(&offsets[at..at + tw]);
+        }
+        col += tw;
+    }
+    (pv, po)
+}
+
 impl BlockBalanced {
     /// Reorder into the execution layout at the default tile width.
     pub fn pack(&self) -> PackedBlockBalanced {
@@ -88,27 +115,91 @@ impl BlockBalanced {
     /// Reorder into the execution layout with an explicit column tile
     /// width (property tests use small widths to exercise tile seams).
     pub fn pack_tiled(&self, n_tile: usize) -> PackedBlockBalanced {
-        assert!(n_tile > 0, "tile width must be positive");
-        let (kc, n) = (self.kc(), self.n);
-        let mut values = Vec::with_capacity(kc * n);
-        let mut offsets = Vec::with_capacity(kc * n);
-        let mut col = 0;
-        while col < n {
-            let tw = n_tile.min(n - col);
-            for cr in 0..kc {
-                let at = cr * n + col;
-                values.extend_from_slice(&self.values[at..at + tw]);
-                offsets.extend_from_slice(&self.offsets[at..at + tw]);
-            }
-            col += tw;
-        }
+        let (values, offsets) =
+            pack_slots(&self.values, &self.offsets, self.kc(), self.n, n_tile);
         PackedBlockBalanced {
             k: self.k,
-            n,
+            n: self.n,
             sparsity: self.sparsity,
             n_tile,
             values,
             offsets,
+        }
+    }
+}
+
+/// [`QBlockBalanced`] reordered for execution: the INT8 twin of
+/// [`PackedBlockBalanced`], same tile order, values as i8 plus the
+/// per-output-channel dequantization scales. Produced by the
+/// `prune → per-channel calibrate → pack` pipeline
+/// (`BlockBalanced::from_dense` → [`BlockBalanced::quantize`] →
+/// [`QBlockBalanced::pack`]); executed by [`qspmm_tiled`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct QPackedBlockBalanced {
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: usize,
+    /// column tile width the data was packed with
+    pub n_tile: usize,
+    /// `[k/s * n]` i8 values in tile order (see [`PackedBlockBalanced`])
+    pub values: Vec<i8>,
+    /// block-relative offsets in `[0, BLOCK)`, same order as `values`
+    pub offsets: Vec<u8>,
+    /// per-output-column dequantization scales (column order, NOT tiled —
+    /// the epilogue indexes them by absolute column)
+    pub scales: Vec<f32>,
+}
+
+impl QPackedBlockBalanced {
+    /// Rows kept per block per column.
+    pub fn keep(&self) -> usize {
+        BLOCK / self.sparsity
+    }
+
+    /// Compressed row count `k/s`.
+    pub fn kc(&self) -> usize {
+        self.k / self.sparsity
+    }
+
+    /// Worst-case absolute weight error (½ LSB of the coarsest channel).
+    pub fn max_error_bound(&self) -> f32 {
+        self.scales.iter().fold(0.0f32, |m, &s| m.max(0.5 * s))
+    }
+
+    /// Worst-case *relative* weight error: ½ LSB over the largest
+    /// representable weight of the coarsest channel — `0.5/127` by
+    /// construction of symmetric INT8, exposed as a derived quantity so
+    /// accuracy tolerances cite the bound, not a magic constant.
+    pub fn rel_error_bound(&self) -> f32 {
+        let smax = self.scales.iter().fold(0.0f32, |m, &s| m.max(s));
+        if smax == 0.0 {
+            0.0
+        } else {
+            self.max_error_bound() / (127.0 * smax)
+        }
+    }
+}
+
+impl QBlockBalanced {
+    /// Reorder into the execution layout at the default tile width.
+    pub fn pack(&self) -> QPackedBlockBalanced {
+        self.pack_tiled(N_TILE)
+    }
+
+    /// Reorder into the execution layout with an explicit column tile
+    /// width — the identical reorder as [`BlockBalanced::pack_tiled`]
+    /// (both go through [`pack_slots`]).
+    pub fn pack_tiled(&self, n_tile: usize) -> QPackedBlockBalanced {
+        let (values, offsets) =
+            pack_slots(&self.values, &self.offsets, self.kc(), self.n, n_tile);
+        QPackedBlockBalanced {
+            k: self.k,
+            n: self.n,
+            sparsity: self.sparsity,
+            n_tile,
+            values,
+            offsets,
+            scales: self.scales.clone(),
         }
     }
 }
@@ -239,10 +330,159 @@ fn stripe_keep<const KEEP: usize>(
     }
 }
 
+/// `y = act(dequant(x_q @ W_q) + b)` over the INT8 packed layout,
+/// parallel + tiled — the quantized twin of [`spmm_tiled`], same
+/// stripe-parallel / cache-blocked / `keep`-monomorphized structure.
+///
+/// Activations are quantized once per call (per-tensor max-abs, the same
+/// dynamic scheme as the serial [`qspmm`](crate::sparse::quant::qspmm)
+/// reference), every tile accumulates in i32 (exact integer arithmetic —
+/// order-independent, so determinism is free), and the fused epilogue
+/// applies `dequant → bias → activation` in the identical f32 expression
+/// tree as the serial reference: the two agree **bitwise** for any
+/// thread count or tile width.
+pub fn qspmm_tiled(
+    x: &Dense2,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    threads: usize,
+) -> Dense2 {
+    assert_eq!(x.cols, w.k, "reduction dim mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.n, "bias length");
+    }
+    let (m, n) = (x.rows, w.n);
+    let mut out = Dense2::zeros(m, n);
+    if m == 0 || n == 0 {
+        return out;
+    }
+    // per-tensor activation quantization, shared by every stripe
+    let xq = QParams::calibrate(&x.data);
+    let xdata: Vec<i8> = x.data.iter().map(|&v| xq.quantize(v)).collect();
+    let threads = threads.max(1).min(m);
+    if threads == 1 {
+        qstripe(&xdata, x.cols, xq.scale, w, bias, act, 0, &mut out.data);
+        return out;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
+            let xdata = &xdata;
+            s.spawn(move || {
+                qstripe(xdata, x.cols, xq.scale, w, bias, act, ti * rows_per, chunk)
+            });
+        }
+    });
+    out
+}
+
+/// One thread's INT8 stripe: rows `row0 ..` of the quantized input into
+/// `out`. Dispatches to the `keep`-monomorphized kernel.
+#[allow(clippy::too_many_arguments)]
+fn qstripe(
+    xdata: &[i8],
+    k: usize,
+    sx: f32,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    row0: usize,
+    out: &mut [f32],
+) {
+    match w.keep() {
+        1 => qstripe_keep::<1>(xdata, k, sx, w, bias, act, row0, out),
+        2 => qstripe_keep::<2>(xdata, k, sx, w, bias, act, row0, out),
+        4 => qstripe_keep::<4>(xdata, k, sx, w, bias, act, row0, out),
+        8 => qstripe_keep::<8>(xdata, k, sx, w, bias, act, row0, out),
+        16 => qstripe_keep::<16>(xdata, k, sx, w, bias, act, row0, out),
+        32 => qstripe_keep::<32>(xdata, k, sx, w, bias, act, row0, out),
+        other => unreachable!("pack() only produces supported keeps, got {other}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qstripe_keep<const KEEP: usize>(
+    xdata: &[i8],
+    k: usize,
+    sx: f32,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    row0: usize,
+    out: &mut [f32],
+) {
+    let n = w.n;
+    let kc = w.kc();
+    let nblocks = w.k / BLOCK;
+    let rows = out.len() / n;
+    let mut scratch = vec![0i32; ROW_CHUNK * w.n_tile.min(n)];
+    let mut r = 0;
+    while r < rows {
+        let rc = ROW_CHUNK.min(rows - r);
+        let mut col = 0;
+        while col < n {
+            let tw = w.n_tile.min(n - col);
+            let tile_base = kc * col;
+            let acc_all = &mut scratch[..rc * tw];
+            acc_all.fill(0);
+            for blk in 0..nblocks {
+                let at = tile_base + blk * KEEP * tw;
+                let vals = &w.values[at..at + KEEP * tw];
+                let offs = &w.offsets[at..at + KEEP * tw];
+                for li in 0..rc {
+                    let xrow = &xdata[(row0 + r + li) * k..(row0 + r + li + 1) * k];
+                    let xblock: &[i8; BLOCK] =
+                        xrow[blk * BLOCK..][..BLOCK].try_into().unwrap();
+                    let acc = &mut acc_all[li * tw..][..tw];
+                    for j in 0..KEEP {
+                        let vrow = &vals[j * tw..][..tw];
+                        let orow = &offs[j * tw..][..tw];
+                        for ((a, &v), &o) in acc.iter_mut().zip(vrow).zip(orow) {
+                            // same provably-in-bounds gather trick as the
+                            // f32 kernel; widening i8×i8→i32 MACs are the
+                            // SPU INT8 datapath
+                            *a += xblock[(o & 31) as usize] as i32 * v as i32;
+                        }
+                    }
+                }
+            }
+            // fused epilogue: dequant → bias → activation, single write.
+            // Expression tree `acc·(sx·sw) [+ b]` matches the serial
+            // reference exactly (bitwise contract).
+            let scales = &w.scales[col..col + tw];
+            for li in 0..rc {
+                let acc = &scratch[li * tw..][..tw];
+                let orow = &mut out[(r + li) * n + col..][..tw];
+                match bias {
+                    Some(b) => {
+                        let bt = &b[col..col + tw];
+                        for ((o, (&a, &sc)), &bv) in
+                            orow.iter_mut().zip(acc.iter().zip(scales)).zip(bt)
+                        {
+                            let y = a as f32 * (sx * sc);
+                            *o = act.apply(y + bv);
+                        }
+                    }
+                    None => {
+                        for (o, (&a, &sc)) in orow.iter_mut().zip(acc.iter().zip(scales)) {
+                            let y = a as f32 * (sx * sc);
+                            *o = act.apply(y);
+                        }
+                    }
+                }
+            }
+            col += tw;
+        }
+        r += rc;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sparse::matmul::{dense_mm, spmm};
+    use crate::sparse::quant::qspmm;
 
     fn case(m: usize, k: usize, n: usize, s: usize, seed: u64) -> (Dense2, BlockBalanced) {
         let x = Dense2::randn(m, k, seed);
@@ -330,5 +570,89 @@ mod tests {
         let (x, _) = case(2, 32, 4, 2, 51);
         let w = BlockBalanced::from_dense(&Dense2::randn(64, 4, 52), 2).unwrap();
         spmm_tiled(&x, &w.pack(), None, Act::None, 2);
+    }
+
+    // ------------------------- INT8 packed path --------------------------
+
+    #[test]
+    fn qpack_preserves_every_slot_and_scales() {
+        let (_, w) = case(1, 96, 37, 4, 61);
+        let qb = w.quantize();
+        for n_tile in [1usize, 8, 37, 128] {
+            let p = qb.pack_tiled(n_tile);
+            assert_eq!(p.values.len(), qb.values.len());
+            assert_eq!(p.scales, qb.scales, "scales stay in column order");
+            for cr in 0..qb.kc() {
+                for c in 0..qb.n {
+                    let t = c / n_tile;
+                    let tw = n_tile.min(qb.n - t * n_tile);
+                    let at = p.kc() * t * n_tile + cr * tw + (c - t * n_tile);
+                    assert_eq!(p.values[at], qb.values[cr * qb.n + c], "({cr},{c})");
+                    assert_eq!(p.offsets[at], qb.offsets[cr * qb.n + c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qtiled_matches_serial_bitwise_all_sparsities_and_threads() {
+        // the qspmm_tiled == qspmm bitwise contract at every supported
+        // sparsity × thread count
+        for &s in &crate::sparse::SUPPORTED_SPARSITIES {
+            let (x, w) = case(7, 64, 43, s, 200 + s as u64);
+            let qb = w.quantize();
+            let serial = qspmm(&x, &qb, None, Act::None);
+            for threads in [1usize, 2, 4] {
+                let tiled = qspmm_tiled(&x, &qb.pack(), None, Act::None, threads);
+                assert_eq!(serial.data, tiled.data, "s={s} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn qtiled_matches_serial_across_tile_seams() {
+        let (x, w) = case(37, 96, 29, 8, 67);
+        let qb = w.quantize();
+        let serial = qspmm(&x, &qb, None, Act::None);
+        for n_tile in [1usize, 5, 16, 29, 64] {
+            let tiled = qspmm_tiled(&x, &qb.pack_tiled(n_tile), None, Act::None, 3);
+            assert_eq!(serial.data, tiled.data, "n_tile={n_tile}");
+        }
+    }
+
+    #[test]
+    fn qtiled_bias_act_epilogue_and_f32_proximity() {
+        let (x, w) = case(5, 64, 11, 4, 71);
+        let qb = w.quantize();
+        let bias: Vec<f32> = (0..11).map(|i| i as f32 * 0.25 - 1.0).collect();
+        for act in [Act::None, Act::Relu, Act::Gelu] {
+            let serial = qspmm(&x, &qb, Some(&bias), act);
+            let tiled = qspmm_tiled(&x, &qb.pack(), Some(&bias), act, 2);
+            assert_eq!(serial.data, tiled.data, "{act:?}");
+            // int8 result tracks the f32 kernel within quantization noise
+            let f32_ref = spmm_tiled(&x, &w.pack(), Some(&bias), act, 2);
+            let ymax = f32_ref.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!(
+                tiled.max_abs_diff(&f32_ref) < 0.05 * ymax.max(1.0),
+                "{act:?} drifted from f32"
+            );
+        }
+    }
+
+    #[test]
+    fn qtiled_empty_input_rows() {
+        let (_, w) = case(1, 32, 8, 2, 81);
+        let x = Dense2::zeros(0, 32);
+        let y = qspmm_tiled(&x, &w.quantize().pack(), None, Act::None, 4);
+        assert_eq!(y.rows, 0);
+        assert_eq!(y.cols, 8);
+    }
+
+    #[test]
+    fn q_rel_error_bound_is_half_lsb() {
+        let (_, w) = case(1, 64, 8, 8, 82);
+        let p = w.quantize().pack();
+        assert!((p.rel_error_bound() - 0.5 / 127.0).abs() < 1e-9);
+        assert!(p.max_error_bound() > 0.0);
     }
 }

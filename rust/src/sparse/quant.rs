@@ -7,7 +7,18 @@
 //! The simulator costs INT8 ops at the full MAC rate (`arch::spu`); this
 //! module supplies the numerics so the CPU fallback path and tests can
 //! check accuracy claims (quantization error bounds below).
+//!
+//! [`QBlockBalanced`] is where sparsity *composes with* quantization —
+//! the `prune → per-channel calibrate → quantize` pipeline that turns a
+//! [`BlockBalanced`] matrix into i8 values + per-output-channel scales
+//! (same `[k/s, n]` construction layout, same offsets). [`qspmm`] is the
+//! serial INT8 reference the parallel tiled kernel
+//! ([`crate::sparse::pack::qspmm_tiled`]) is pinned bitwise against:
+//! i32 accumulation per output element in ascending compressed-row
+//! order, then a fused `dequant → bias → activation` f32 epilogue.
 
+use super::format::{BlockBalanced, BLOCK};
+use super::matmul::Act;
 use super::tensor::Dense2;
 
 /// Quantization parameters: `real = scale * (q - zero_point)`; symmetric
@@ -81,6 +92,155 @@ impl QMatrix {
     }
 }
 
+/// Block-balanced sparse matrix quantized to INT8: the deployed
+/// `prune → quantize` composition (Mishra et al. 2021; the paper's
+/// headline 944 TOPS is this path). Same `[k/s, n]` row-major
+/// values/offsets construction layout as [`BlockBalanced`], values as i8
+/// against symmetric per-output-channel scales.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QBlockBalanced {
+    pub k: usize,
+    pub n: usize,
+    pub sparsity: usize,
+    /// `[k/s * n]` i8 values, row-major over `[k/s, n]`
+    pub values: Vec<i8>,
+    /// block-relative offsets in `[0, BLOCK)`, same layout as `values`
+    pub offsets: Vec<u8>,
+    /// per-output-column dequantization scales (`real = scale * q`)
+    pub scales: Vec<f32>,
+}
+
+impl BlockBalanced {
+    /// Per-channel calibrate + quantize the pruned matrix — step two of
+    /// the `prune → calibrate → pack` pipeline (pack with
+    /// [`QBlockBalanced::pack`](crate::sparse::pack)).
+    pub fn quantize(&self) -> QBlockBalanced {
+        QBlockBalanced::from_block_balanced(self)
+    }
+}
+
+impl QBlockBalanced {
+    /// Rows kept per block per column.
+    pub fn keep(&self) -> usize {
+        BLOCK / self.sparsity
+    }
+
+    /// Compressed row count `k/s`.
+    pub fn kc(&self) -> usize {
+        self.k / self.sparsity
+    }
+
+    /// Max-abs calibration over each output column's stored non-zeros,
+    /// then symmetric quantization. Calibrating *after* pruning matters:
+    /// the scale only has to cover surviving weights, so high sparsity
+    /// tightens the quantization grid for free.
+    pub fn from_block_balanced(bb: &BlockBalanced) -> QBlockBalanced {
+        let (kc, n) = (bb.kc(), bb.n);
+        let mut scales = Vec::with_capacity(n);
+        for c in 0..n {
+            let max = (0..kc).fold(0.0f32, |m, cr| m.max(bb.values[cr * n + c].abs()));
+            scales.push(if max == 0.0 { 1.0 } else { max / 127.0 });
+        }
+        let mut values = vec![0i8; kc * n];
+        for cr in 0..kc {
+            for c in 0..n {
+                values[cr * n + c] =
+                    (bb.values[cr * n + c] / scales[c]).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QBlockBalanced {
+            k: bb.k,
+            n,
+            sparsity: bb.sparsity,
+            values,
+            offsets: bb.offsets.clone(),
+            scales,
+        }
+    }
+
+    /// Dequantize back to the f32 block-balanced format (tests/inspection).
+    pub fn dequantize(&self) -> BlockBalanced {
+        let values = self
+            .values
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| q as f32 * self.scales[i % self.n])
+            .collect();
+        BlockBalanced {
+            k: self.k,
+            n: self.n,
+            sparsity: self.sparsity,
+            values,
+            offsets: self.offsets.clone(),
+        }
+    }
+
+    /// Worst-case absolute weight error (½ LSB of the coarsest channel).
+    pub fn max_error_bound(&self) -> f32 {
+        self.scales.iter().fold(0.0f32, |m, &s| m.max(0.5 * s))
+    }
+}
+
+/// Serial INT8 SpMM reference: `y = act(dequant(x_q @ W_q) + b)` with `W`
+/// block-balanced INT8. Activations are quantized per-tensor (max-abs,
+/// symmetric) at call time — the dynamic-quantization mode of the SPU's
+/// INT8 pipeline. Accumulates in i32 (exact, order-independent), then a
+/// single f32 `dequant → bias → activation` epilogue per output element;
+/// [`crate::sparse::pack::qspmm_tiled`] must match this bitwise.
+pub fn qspmm(x: &Dense2, w: &QBlockBalanced, bias: Option<&[f32]>, act: Act) -> Dense2 {
+    assert_eq!(x.cols, w.k, "reduction dim mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.n, "bias length");
+    }
+    let xq = QParams::calibrate(&x.data);
+    let xdata: Vec<i8> = x.data.iter().map(|&v| xq.quantize(v)).collect();
+    let (m, n, kc) = (x.rows, w.n, w.kc());
+    let keep = w.keep();
+    let mut out = Dense2::zeros(m, n);
+    let mut acc = vec![0i32; n];
+    for i in 0..m {
+        acc.fill(0);
+        let xrow = &xdata[i * x.cols..(i + 1) * x.cols];
+        for cr in 0..kc {
+            let vrow = &w.values[cr * n..(cr + 1) * n];
+            let offs = &w.offsets[cr * n..(cr + 1) * n];
+            let xblock: &[i8; BLOCK] =
+                xrow[(cr / keep) * BLOCK..][..BLOCK].try_into().unwrap();
+            for ((a, &v), &off) in acc.iter_mut().zip(vrow).zip(offs) {
+                // same provably-in-bounds gather as the f32 kernels
+                *a += xblock[(off & 31) as usize] as i32 * v as i32;
+            }
+        }
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (c, (o, &a)) in orow.iter_mut().zip(&acc).enumerate() {
+            // NOTE: expression shape is part of the contract — the tiled
+            // kernel evaluates the identical `acc·(sx·sw) [+ b]` tree so
+            // the two agree bitwise
+            let y = a as f32 * (xq.scale * w.scales[c]);
+            *o = act.apply(match bias {
+                Some(b) => y + b[c],
+                None => y,
+            });
+        }
+    }
+    out
+}
+
+/// Worst-case `|int8 spmm − f32 spmm|` for one activation-free SpMM:
+/// each of the `kc` kept terms errs by at most
+/// `|x|·½sw + |w|·½sx + ¼·sx·sw` (weight, activation, and cross
+/// rounding). Callers wrap activations by scaling with the act's
+/// Lipschitz constant. One definition shared by the bench correctness
+/// gate (`qspmm_scaling`) and the differential property test so the two
+/// always enforce the same bound.
+pub fn quant_drift_bound(x: &Dense2, w: &BlockBalanced, qw: &QBlockBalanced) -> f32 {
+    let xmax = x.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let wmax = w.values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let sx = if xmax == 0.0 { 1.0 } else { xmax / 127.0 };
+    let sw = qw.scales.iter().fold(0.0f32, |m, &v| m.max(v));
+    w.kc() as f32 * (xmax * 0.5 * sw + wmax * 0.5 * sx + 0.25 * sx * sw) + 1e-5
+}
+
 /// INT8 GEMM with f32 dequant epilogue: `y = (x_q @ w_q) * sx * sw[c]` —
 /// the numeric path of the SPU's INT8 mode (accumulate in i32, rescale in
 /// the output pipeline).
@@ -143,6 +303,101 @@ mod tests {
         let den: f32 = yf.data.iter().map(|v| v * v).sum();
         let rel = (num / den).sqrt();
         assert!(rel < 0.02, "rel err {rel}");
+    }
+
+    #[test]
+    fn qblock_balanced_roundtrip_bounds_error() {
+        use crate::sparse::format::BlockBalanced;
+        for &s in &crate::sparse::SUPPORTED_SPARSITIES {
+            let w = Dense2::randn(64, 16, 90 + s as u64);
+            let bb = BlockBalanced::from_dense(&w, s).unwrap();
+            let qb = bb.quantize();
+            assert_eq!(qb.offsets, bb.offsets, "s={s}: offsets must be untouched");
+            let back = qb.dequantize();
+            back.validate().unwrap();
+            let max_err = bb
+                .values
+                .iter()
+                .zip(&back.values)
+                .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+            assert!(max_err <= qb.max_error_bound() + 1e-6, "s={s}: {max_err}");
+            // structural zeros stay exactly zero (symmetric quantization)
+            for (a, b) in bb.values.iter().zip(&back.values) {
+                if *a == 0.0 {
+                    assert_eq!(*b, 0.0, "s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_covers_exactly_the_surviving_weights() {
+        use crate::sparse::format::BlockBalanced;
+        let w = Dense2::randn(96, 8, 91);
+        let bb = BlockBalanced::from_dense(&w, 8).unwrap();
+        let qb = bb.quantize();
+        for c in 0..qb.n {
+            let col_max =
+                (0..bb.kc()).fold(0.0f32, |m, cr| m.max(bb.values[cr * bb.n + c].abs()));
+            assert!((qb.scales[c] - col_max / 127.0).abs() <= 1e-9, "col {c}");
+        }
+        // the largest-magnitude slot of each column saturates the grid
+        for (i, &q) in qb.values.iter().enumerate() {
+            assert!((-127..=127).contains(&(q as i32)), "slot {i}");
+        }
+    }
+
+    #[test]
+    fn qspmm_close_to_f32_spmm() {
+        use crate::sparse::format::BlockBalanced;
+        use crate::sparse::matmul::spmm;
+        for &s in &[1usize, 4, 16] {
+            let x = Dense2::randn(8, 64, 92 + s as u64);
+            let w = BlockBalanced::from_dense(&Dense2::randn(64, 16, 93 + s as u64), s)
+                .unwrap();
+            let yq = qspmm(&x, &w.quantize(), None, Act::None);
+            let yf = spmm(&x, &w, None, Act::None);
+            // same relative-Frobenius criterion as qgemm_close_to_f32_gemm
+            // (2%), with headroom for the few-term reductions at s=16
+            let num: f32 =
+                yq.data.iter().zip(&yf.data).map(|(a, b)| (a - b) * (a - b)).sum();
+            let den: f32 = yf.data.iter().map(|v| v * v).sum();
+            let rel = (num / den).sqrt();
+            let bound = if s >= 16 { 0.03 } else { 0.02 };
+            assert!(rel < bound, "s={s}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn qspmm_bias_and_act_epilogue() {
+        use crate::sparse::format::BlockBalanced;
+        use crate::sparse::matmul::spmm;
+        let x = Dense2::randn(5, 64, 94);
+        let w = BlockBalanced::from_dense(&Dense2::randn(64, 11, 95), 4).unwrap();
+        let qw = w.quantize();
+        let bias: Vec<f32> = (0..11).map(|i| i as f32 * 0.25 - 1.0).collect();
+        for act in [Act::None, Act::Relu, Act::Gelu] {
+            let yq = qspmm(&x, &qw, Some(&bias), act);
+            let yf = spmm(&x, &w, Some(&bias), act);
+            // ~½ LSB weight + ½ LSB activation noise through a k=64
+            // reduction: bound relative to the output magnitude
+            let ymax = yf.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!(yq.max_abs_diff(&yf) < 0.05 * ymax.max(1.0), "{act:?}");
+        }
+        let yr = qspmm(&x, &qw, Some(&bias), Act::Relu);
+        assert!(yr.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn qspmm_zero_input_is_safe() {
+        use crate::sparse::format::BlockBalanced;
+        let w = BlockBalanced::from_dense(&Dense2::randn(32, 4, 96), 2).unwrap();
+        let x = Dense2::zeros(3, 32);
+        let y = qspmm(&x, &w.quantize(), None, Act::None);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+        let empty = Dense2::zeros(0, 32);
+        let y0 = qspmm(&empty, &w.quantize(), None, Act::None);
+        assert_eq!(y0.rows, 0);
     }
 
     #[test]

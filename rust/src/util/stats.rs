@@ -52,13 +52,23 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 
 /// Online mean/variance (Welford) — allocation-free metric accumulation for
 /// the serving hot path.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Welford {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+/// Manual impl: a derived `Default` would zero `min`/`max`, making an
+/// accumulator built via `Default::default()` report `min = 0` for
+/// all-positive samples. Delegating to [`Welford::new`] keeps the ±∞
+/// sentinels.
+impl Default for Welford {
+    fn default() -> Self {
+        Welford::new()
+    }
 }
 
 impl Welford {
@@ -145,7 +155,10 @@ impl LatencyHistogram {
         if self.total == 0 {
             return 0.0;
         }
-        let target = (q * self.total as f64).ceil() as u64;
+        // clamp to ≥ 1: at q=0 a zero target made `acc >= target` hold at
+        // bucket 0 even when that bucket was empty — the minimum quantile
+        // must land in the first *occupied* bucket
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
         let mut acc = 0;
         for (i, &c) in self.counts.iter().enumerate() {
             acc += c;
@@ -211,6 +224,30 @@ mod tests {
         assert!(p50 < p99);
         // log buckets: answer within one growth factor of truth
         assert!(p50 >= 500.0 / 1.5 && p50 <= 500.0 * 1.5 * 1.5, "p50={p50}");
+    }
+
+    #[test]
+    fn welford_default_matches_new() {
+        // regression: the old derived Default zeroed min/max
+        let mut w = Welford::default();
+        w.push(3.0);
+        w.push(5.0);
+        assert_eq!(w.min(), 3.0);
+        assert_eq!(w.max(), 5.0);
+        let mut neg = Welford::default();
+        neg.push(-2.0);
+        assert_eq!(neg.max(), -2.0);
+    }
+
+    #[test]
+    fn histogram_quantile_zero_lands_in_occupied_bucket() {
+        // regression: q=0 used to return bucket 0's upper edge (~1.5 µs)
+        // even when only a 1000 µs sample was recorded
+        let mut h = LatencyHistogram::new();
+        h.record_us(1000.0);
+        let q0 = h.quantile_us(0.0);
+        assert!(q0 >= 1000.0 / 1.5 && q0 <= 1000.0 * 1.5 * 1.5, "q0={q0}");
+        assert_eq!(h.quantile_us(0.0), h.quantile_us(1.0));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! and output determinism — one manifest spanning a token model and an
 //! image model, so both modalities are covered on every backend.
 
-use s4::backend::{conformance, CpuSparseBackend, EchoBackend, SimBackend};
+use s4::backend::{conformance, CpuSparseBackend, EchoBackend, Precision, SimBackend, Value};
 use s4::runtime::Manifest;
 
 fn manifest() -> Manifest {
@@ -45,4 +45,48 @@ fn cpu_sparse_backend_conforms() {
     let m = manifest();
     conformance::run_all(&CpuSparseBackend::from_manifest(&m), &m);
     conformance::run_all(&CpuSparseBackend::with_threads(&m, 3), &m);
+}
+
+#[test]
+fn cpu_sparse_backend_int8_conforms() {
+    // the quantized serving path honors the same contract: spec
+    // introspection, validation, error paths, and determinism (i32
+    // accumulation is order-independent, so any thread count agrees)
+    let m = manifest();
+    conformance::run_all(&CpuSparseBackend::with_precision(&m, Precision::Int8), &m);
+    conformance::run_all(
+        &CpuSparseBackend::with_threads_precision(&m, 3, Some(Precision::Int8)),
+        &m,
+    );
+}
+
+#[test]
+fn cpu_sparse_int8_logits_within_derived_tolerance_of_f32() {
+    // accuracy half of the int8 serving contract: for every artifact
+    // (token and image modalities), Int8 logits stay within the
+    // per-layer max_error_bound-derived tolerance of the F32 logits
+    let m = manifest();
+    let f = CpuSparseBackend::with_precision(&m, Precision::F32);
+    let q = CpuSparseBackend::with_precision(&m, Precision::Int8);
+    for a in &m.artifacts {
+        let inputs: Vec<Value> = a
+            .inputs
+            .iter()
+            .map(|s| match s.dtype.as_str() {
+                "s32" => Value::I32((0..s.elems() as i32).map(|x| x % 101).collect()),
+                _ => Value::F32((0..s.elems()).map(|x| (x as f32 * 0.37).sin()).collect()),
+            })
+            .collect();
+        let of = f.run_batch(&a.name, &inputs).unwrap();
+        let oq = q.run_batch(&a.name, &inputs).unwrap();
+        let tol = q.int8_tolerance(&a.name).unwrap();
+        assert!(tol > 0.0 && tol < 0.5, "{}: tolerance sane ({tol})", a.name);
+        for (vf, vq) in of.iter().zip(&oq) {
+            let (lf, lq) = (vf.as_f32().unwrap(), vq.as_f32().unwrap());
+            let num: f32 = lf.iter().zip(lq).map(|(x, y)| (x - y) * (x - y)).sum();
+            let den: f32 = lf.iter().map(|v| v * v).sum();
+            let rel = if den == 0.0 { 0.0 } else { (num / den).sqrt() };
+            assert!(rel <= tol, "{}: int8 rel err {rel} > tolerance {tol}", a.name);
+        }
+    }
 }

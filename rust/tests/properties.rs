@@ -7,7 +7,8 @@ use s4::prop_assert;
 use s4::runtime::Manifest;
 use s4::sparse::format::{BlockBalanced, BLOCK};
 use s4::sparse::matmul::{dense_mm, spmm, Act};
-use s4::sparse::pack::spmm_tiled;
+use s4::sparse::pack::{qspmm_tiled, spmm_tiled};
+use s4::sparse::quant::{qspmm, quant_drift_bound};
 use s4::sparse::tensor::Dense2;
 use s4::util::prop::{check, Gen};
 
@@ -150,6 +151,57 @@ fn prop_tiled_spmm_matches_serial_and_dense() {
         let dense = dense_mm(&x, &w.to_dense(), bias.as_deref(), act);
         let diff = tiled.max_abs_diff(&dense);
         prop_assert!(diff < 1e-3, "tiled vs dense diff {diff} (s={s})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qspmm_tiled_matches_serial_int8_and_tracks_f32() {
+    // the differential contract of the quantized engine: for random
+    // shapes, every supported sparsity, any thread count and tile width,
+    // qspmm_tiled is BIT-IDENTICAL to the serial int8 reference (i32
+    // accumulation + identical dequant epilogue expression), and the
+    // int8 result stays within quantization noise of the f32 spmm
+    // (the same relative-error criterion as qgemm_close_to_f32_gemm,
+    // with headroom for few-term reductions at high sparsity)
+    check("quantized tiled spmm differential", 60, |g: &mut Gen| {
+        let m = g.usize_in(1, 24);
+        let kb = g.usize_in(1, 3);
+        let n = g.usize_in(1, 40);
+        let s = *g.pick(&[1usize, 2, 4, 8, 16, 32]);
+        let threads = g.usize_in(1, 4);
+        let n_tile = *g.pick(&[3usize, 8, 16, 128]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let x = Dense2::randn(m, kb * BLOCK, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(kb * BLOCK, n, seed + 1), s)
+            .map_err(|e| e.to_string())?;
+        let qb = w.quantize();
+        let bias: Option<Vec<f32>> = if g.bool() {
+            Some((0..n).map(|i| (i as f32).sin()).collect())
+        } else {
+            None
+        };
+        let act = *g.pick(&[Act::None, Act::Relu, Act::Gelu]);
+        let serial = qspmm(&x, &qb, bias.as_deref(), act);
+        let tiled = qspmm_tiled(&x, &qb.pack_tiled(n_tile), bias.as_deref(), act, threads);
+        prop_assert!(
+            serial.data == tiled.data,
+            "qtiled != qserial (m={m} k={} n={n} s={s} t={threads} nt={n_tile}, diff {})",
+            kb * BLOCK,
+            serial.max_abs_diff(&tiled)
+        );
+        // int8 vs f32: the worst-case quantization-error propagation
+        // bound (the spirit of qgemm_close_to_f32_gemm's 2% empirical
+        // bound, made analytic so it holds for every random shape);
+        // the shared quant_drift_bound covers the activation-free SpMM,
+        // ×1.2 covers the activations' Lipschitz constants (Gelu ≈ 1.13)
+        let f32_ref = spmm(&x, &w, bias.as_deref(), act);
+        let bound = 1.2 * quant_drift_bound(&x, &w, &qb);
+        let diff = tiled.max_abs_diff(&f32_ref);
+        prop_assert!(
+            diff <= bound,
+            "int8 drifted from f32: diff {diff} > bound {bound} (s={s})"
+        );
         Ok(())
     });
 }
