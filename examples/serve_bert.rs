@@ -17,6 +17,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use s4::backend::Value;
 use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
 use s4::runtime::{default_artifact_dir, Manifest, PjrtServingBackend};
 use s4::util::cli::Args;
@@ -56,23 +57,23 @@ fn main() -> anyhow::Result<()> {
     eprintln!("serving {n} requests at ~{rate}/s, policy {policy:?}");
     let mut rng = Xoshiro256::seed_from_u64(7);
     let t0 = Instant::now();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     let mut rejected = 0;
     for _ in 0..n {
         std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
         let tokens: Vec<i32> = (0..128).map(|_| rng.next_below(vocab as u64) as i32).collect();
-        match h.submit_tokens("bert_tiny", tokens) {
-            Ok((_, rx)) => rxs.push(rx),
+        match h.submit("bert_tiny", vec![Value::tokens(tokens)]) {
+            Ok(t) => tickets.push(t),
             Err(_) => rejected += 1,
         }
     }
     let mut lat_ms = Vec::new();
     let mut by_artifact: std::collections::BTreeMap<String, usize> = Default::default();
-    for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(120))?;
-        anyhow::ensure!(r.ok, "request failed: {:?}", r.error);
+    for t in tickets {
+        let r = t.wait_timeout(Duration::from_secs(120))?;
+        anyhow::ensure!(r.is_ok(), "request failed: {:?}", r.status);
         lat_ms.push(r.latency_us as f64 / 1e3);
-        *by_artifact.entry(r.served_by).or_default() += 1;
+        *by_artifact.entry(r.served_by.to_string()).or_default() += 1;
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -88,7 +89,7 @@ fn main() -> anyhow::Result<()> {
     for (a, c) in by_artifact {
         println!("  {a:<24} {c}");
     }
-    println!("metrics:     {}", h.metrics.report());
+    println!("metrics:     {}", h.metrics_snapshot().report());
     srv.shutdown();
     Ok(())
 }

@@ -20,7 +20,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use s4::backend::{CpuSparseBackend, InferenceBackend, SimBackend, Value};
-use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
+use s4::coordinator::{
+    BatcherConfig, ResponseStatus, Router, RoutingPolicy, Server, ServerConfig, SubmitOptions,
+};
 use s4::runtime::Manifest;
 use s4::util::cli::Args;
 use s4::util::rng::Xoshiro256;
@@ -71,31 +73,43 @@ fn main() -> anyhow::Result<()> {
     eprintln!("serving {n} mixed image/token requests at ~{rate}/s");
     let mut rng = Xoshiro256::seed_from_u64(11);
     let t0 = Instant::now();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     let mut rejected = 0usize;
     for i in 0..n {
         std::thread::sleep(Duration::from_secs_f64(rng.next_exp(rate)));
-        // 2 in 3 requests are images, the rest are token sequences
+        // 2 in 3 requests are images (bulk-ish analytics traffic); the
+        // token sequences are the latency-critical interactive tier
         let submitted = if i % 3 != 0 {
             let pixels: Vec<f32> =
                 (0..3 * 32 * 32).map(|_| rng.next_below(256) as f32 / 255.0).collect();
             h.submit("resnet50", vec![Value::F32(pixels)])
         } else {
             let tokens: Vec<i32> = (0..128).map(|_| rng.next_below(1024) as i32).collect();
-            h.submit_tokens("bert_tiny", tokens)
+            h.submit_with(
+                "bert_tiny",
+                vec![Value::tokens(tokens)],
+                SubmitOptions::interactive().with_deadline(Duration::from_secs(30)),
+            )
         };
         match submitted {
-            Ok((_, rx)) => rxs.push(rx),
+            Ok(t) => tickets.push(t),
             Err(_) => rejected += 1,
         }
     }
 
     let mut lat_ms = Vec::new();
+    let mut shed = 0usize;
     let mut by_artifact: std::collections::BTreeMap<String, usize> = Default::default();
     let mut top1: std::collections::BTreeMap<usize, usize> = Default::default();
-    for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(60))?;
-        anyhow::ensure!(r.ok, "request failed: {:?}", r.error);
+    for t in tickets {
+        let r = t.wait_timeout(Duration::from_secs(60))?;
+        match r.status {
+            ResponseStatus::Expired | ResponseStatus::Cancelled => {
+                shed += 1;
+                continue;
+            }
+            _ => anyhow::ensure!(r.is_ok(), "request failed: {:?}", r.status),
+        }
         lat_ms.push(r.latency_us as f64 / 1e3);
         // argmax over the returned logits — the classification answer
         let logits = r.logits();
@@ -106,13 +120,16 @@ fn main() -> anyhow::Result<()> {
         {
             *top1.entry(cls).or_default() += 1;
         }
-        *by_artifact.entry(r.served_by).or_default() += 1;
+        *by_artifact.entry(r.served_by.to_string()).or_default() += 1;
     }
     let wall = t0.elapsed().as_secs_f64();
 
     let s = Summary::of(&lat_ms);
     println!("\n=== serve_images results ===");
-    println!("completed:   {} / {n} ({rejected} rejected)", lat_ms.len());
+    println!(
+        "completed:   {} / {n} ({rejected} rejected, {shed} shed)",
+        lat_ms.len()
+    );
     println!("wall time:   {wall:.2} s  ({:.1} req/s)", lat_ms.len() as f64 / wall);
     println!(
         "latency ms:  p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
@@ -123,7 +140,7 @@ fn main() -> anyhow::Result<()> {
         println!("  {a:<24} {c}");
     }
     println!("distinct top-1 classes: {}", top1.len());
-    println!("metrics:     {}", h.metrics.report());
+    println!("metrics:     {}", h.metrics_snapshot().report());
     srv.shutdown();
     Ok(())
 }

@@ -1,0 +1,266 @@
+//! Bench: QoS-aware serving under mixed-priority overload, with a
+//! machine-readable perf trajectory.
+//!
+//! Emits `BENCH_qos.json` (schema `s4-bench-v1`, see EXPERIMENTS.md
+//! §Perf "QoS"): the same burst workload is served twice through the
+//! coordinator over a fixed-service-time backend —
+//!
+//! * **fifo_baseline** — every request `Standard` (the undifferentiated
+//!   PR 1-era behavior): latency is queue position, the tail is the whole
+//!   backlog drain;
+//! * **qos** — the identical arrival sequence tagged `Interactive` /
+//!   `Standard` / `Bulk`, bulk carrying a deadline it cannot meet at the
+//!   back of the queue, plus a slice of explicit ticket cancellations.
+//!
+//! The trajectory point each PR defends: `interactive_p99_speedup_vs_fifo`
+//! strictly > 1 (priority scheduling must buy the latency-critical class
+//! real tail latency under overload) while expired/cancelled work is shed
+//! before it reaches the backend (`shed_rate` > 0, zero backend time
+//! spent on it).
+//!
+//! ```bash
+//! cargo bench --bench serving_qos            # full
+//! cargo bench --bench serving_qos -- --smoke # CI trajectory point
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s4::backend::{EchoBackend, InferenceBackend, TensorSpec, Value};
+use s4::coordinator::{
+    BatcherConfig, Priority, ResponseStatus, Router, RoutingPolicy, Server, ServerConfig,
+    SubmitOptions, Ticket,
+};
+use s4::runtime::Manifest;
+use s4::util::bench::JsonReport;
+use s4::util::cli::Args;
+use s4::util::json::Json;
+use s4::util::stats::Summary;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+/// Echo semantics with a fixed service time per batch — a backend slow
+/// enough to build a real backlog, deterministic enough for a
+/// trajectory point.
+struct ThrottledEcho {
+    inner: EchoBackend,
+    service: Duration,
+}
+
+impl InferenceBackend for ThrottledEcho {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.input_specs(artifact)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.output_specs(artifact)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        std::thread::sleep(self.service);
+        self.inner.run_batch(artifact, inputs)
+    }
+}
+
+/// The class each burst position gets in the qos scenario (the baseline
+/// serves the identical positions as all-Standard). Every 5th request is
+/// interactive; 2 in 10 are bulk.
+fn class_of(i: usize) -> Priority {
+    match i % 10 {
+        0 | 5 => Priority::Interactive,
+        3 | 8 => Priority::Bulk,
+        _ => Priority::Standard,
+    }
+}
+
+struct RunOutcome {
+    /// completed latencies (µs) per class
+    lat_us: [Vec<f64>; 3],
+    expired: u64,
+    cancelled: u64,
+    admitted: u64,
+    wall_s: f64,
+}
+
+/// Burst-submit `n` requests and wait for every ticket. In qos mode
+/// requests are tagged by [`class_of`], bulk carries `bulk_deadline`,
+/// and the last few standard tickets are cancelled while queued.
+fn run_burst(n: usize, service: Duration, qos: bool, bulk_deadline: Duration) -> RunOutcome {
+    let m = manifest();
+    let backend = Arc::new(ThrottledEcho { inner: EchoBackend::from_manifest(&m), service });
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 1,
+            max_inflight: 4 * n, // admission out of the picture: this bench measures scheduling
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let t0 = Instant::now();
+    let cancel_from = n.saturating_sub(n / 10); // last 10%: cancelled while queued
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(n);
+    for i in 0..n {
+        let opts = if qos {
+            match class_of(i) {
+                Priority::Interactive => SubmitOptions::interactive(),
+                Priority::Bulk => SubmitOptions::bulk().with_deadline(bulk_deadline),
+                Priority::Standard => SubmitOptions::default(),
+            }
+        } else {
+            SubmitOptions::default()
+        };
+        let t = h
+            .submit_with("bert_tiny", vec![Value::tokens(vec![i as i32 % 997; 32])], opts)
+            .expect("burst fits under max_inflight");
+        tickets.push(t);
+    }
+    if qos {
+        for t in &tickets[cancel_from..] {
+            if t.priority() == Priority::Standard {
+                t.cancel();
+            }
+        }
+    }
+    let mut lat_us: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for (i, t) in tickets.iter().enumerate() {
+        let r = t.wait_timeout(Duration::from_secs(120)).expect("response");
+        match r.status {
+            ResponseStatus::Ok => {
+                // in the baseline, bucket by the class the request WOULD
+                // have (same positions), so the two runs compare the same
+                // subpopulation
+                lat_us[class_of(i).idx()].push(r.latency_us as f64);
+            }
+            ResponseStatus::Expired | ResponseStatus::Cancelled => {
+                assert!(qos, "baseline run must not shed");
+                assert!(r.outputs.is_empty(), "shed work must never reach the backend");
+            }
+            ResponseStatus::Error(e) => panic!("request failed: {e}"),
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let snap = h.metrics_snapshot();
+    assert_eq!(
+        snap.answered(),
+        snap.admitted,
+        "every admitted request answered exactly once: {}",
+        snap.report()
+    );
+    srv.shutdown();
+    RunOutcome {
+        lat_us,
+        expired: snap.expired,
+        cancelled: snap.cancelled,
+        admitted: snap.admitted,
+        wall_s,
+    }
+}
+
+fn class_entry(scenario: &str, class: Priority, lat: &[f64]) -> Json {
+    let (p50, p99) = if lat.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let s = Summary::of(lat);
+        (s.p50, s.p99)
+    };
+    println!(
+        "bench qos/{scenario:<14} {:<12} n={:<5} p50 {p50:>9.0}µs  p99 {p99:>9.0}µs",
+        class.as_str(),
+        lat.len()
+    );
+    Json::obj(vec![
+        ("scenario", Json::Str(scenario.into())),
+        ("class", Json::Str(class.as_str().into())),
+        ("completed", Json::Num(lat.len() as f64)),
+        ("p50_us", Json::Num(p50)),
+        ("p99_us", Json::Num(p99)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let (n, service) = if smoke {
+        (400, Duration::from_micros(300))
+    } else {
+        (2_000, Duration::from_millis(1))
+    };
+    // a bulk deadline around a third of the expected drain time: the bulk
+    // tail cannot meet it from the back of the priority queue and is shed
+    let drain = service * (n as u32 / 8);
+    let bulk_deadline = drain / 3;
+
+    println!("== serving qos ({n} requests, {service:?}/batch, bulk deadline {bulk_deadline:?}) ==");
+    let baseline = run_burst(n, service, false, bulk_deadline);
+    let qos = run_burst(n, service, true, bulk_deadline);
+
+    let mut report = JsonReport::new("qos");
+    report.set("smoke", Json::Bool(smoke));
+    report.set("requests", Json::Num(n as f64));
+    report.set("service_us_per_batch", Json::Num(service.as_micros() as f64));
+    report.set("bulk_deadline_us", Json::Num(bulk_deadline.as_micros() as f64));
+
+    for p in Priority::ALL {
+        report.push(class_entry("fifo_baseline", p, &baseline.lat_us[p.idx()]));
+    }
+    for p in Priority::ALL {
+        report.push(class_entry("qos", p, &qos.lat_us[p.idx()]));
+    }
+
+    // the headline ratio: tail latency of the interactive positions under
+    // priority scheduling vs the SAME positions under undifferentiated FIFO
+    let base_int = Summary::of(&baseline.lat_us[Priority::Interactive.idx()]);
+    let qos_int_lat = &qos.lat_us[Priority::Interactive.idx()];
+    anyhow::ensure!(!qos_int_lat.is_empty(), "interactive class must complete");
+    let qos_int = Summary::of(qos_int_lat);
+    let speedup = base_int.p99 / qos_int.p99.max(1.0);
+    let shed = qos.expired + qos.cancelled;
+    let shed_rate = shed as f64 / qos.admitted as f64;
+    report.set("interactive_p99_speedup_vs_fifo", Json::Num(speedup));
+    report.set("shed_rate", Json::Num(shed_rate));
+    report.set("expired", Json::Num(qos.expired as f64));
+    report.set("cancelled", Json::Num(qos.cancelled as f64));
+    report.set("baseline_wall_s", Json::Num(baseline.wall_s));
+    report.set("qos_wall_s", Json::Num(qos.wall_s));
+
+    println!(
+        "bench qos/summary        interactive p99 {:.0}µs vs fifo {:.0}µs  \
+         speedup {speedup:.2}x  shed {shed} ({:.1}%: {} expired, {} cancelled)",
+        qos_int.p99,
+        base_int.p99,
+        100.0 * shed_rate,
+        qos.expired,
+        qos.cancelled
+    );
+    anyhow::ensure!(
+        speedup > 1.0,
+        "QoS scheduling must beat undifferentiated FIFO for the interactive tail \
+         (got {speedup:.2}x)"
+    );
+    anyhow::ensure!(
+        baseline.expired == 0 && baseline.cancelled == 0,
+        "baseline must not shed"
+    );
+    anyhow::ensure!(qos.expired > 0, "overloaded bulk tail must expire");
+    anyhow::ensure!(qos.cancelled > 0, "cancelled tickets must be shed");
+
+    let path = report.write()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

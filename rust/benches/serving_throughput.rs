@@ -8,7 +8,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use s4::backend::{EchoBackend, InferenceBackend, SimBackend};
+use s4::backend::{EchoBackend, InferenceBackend, SimBackend, Value};
 use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
 use s4::runtime::Manifest;
 use s4::util::stats::Summary;
@@ -40,14 +40,13 @@ fn run_closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) {
     );
     let h = srv.handle();
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n)
-        .filter_map(|i| h.submit_tokens("bert_tiny", vec![i as i32; 32]).ok())
-        .map(|(_, rx)| rx)
+    let tickets: Vec<_> = (0..n)
+        .filter_map(|i| h.submit("bert_tiny", vec![Value::tokens(vec![i as i32; 32])]).ok())
         .collect();
-    let mut lat_us = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(60)).expect("response");
-        assert!(r.ok);
+    let mut lat_us = Vec::with_capacity(tickets.len());
+    for t in tickets {
+        let r = t.wait_timeout(Duration::from_secs(60)).expect("response");
+        assert!(r.is_ok());
         lat_us.push(r.latency_us as f64);
     }
     let wall = t0.elapsed().as_secs_f64();

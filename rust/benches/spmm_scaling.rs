@@ -22,7 +22,7 @@ use std::hint::black_box;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend};
+use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, Value};
 use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, Server, ServerConfig};
 use s4::runtime::Manifest;
 use s4::sparse::format::BlockBalanced;
@@ -148,12 +148,12 @@ fn closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) -> Jso
     // retry deadline turns a wedged server into a bench failure rather
     // than a CI hang.
     let submit_deadline = Instant::now() + Duration::from_secs(120);
-    let mut rxs = Vec::with_capacity(n);
+    let mut tickets = Vec::with_capacity(n);
     for i in 0..n {
         loop {
-            match h.submit_tokens("bert_tiny", vec![i as i32 % 997; 32]) {
-                Ok((_, rx)) => {
-                    rxs.push(rx);
+            match h.submit("bert_tiny", vec![Value::tokens(vec![i as i32 % 997; 32])]) {
+                Ok(t) => {
+                    tickets.push(t);
                     break;
                 }
                 Err(_) => {
@@ -161,17 +161,17 @@ fn closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) -> Jso
                         Instant::now() < submit_deadline,
                         "submit retry deadline exceeded after {} of {n} requests \
                          (server wedged?)",
-                        rxs.len()
+                        tickets.len()
                     );
                     std::thread::sleep(Duration::from_micros(50));
                 }
             }
         }
     }
-    let mut lat_us = Vec::with_capacity(rxs.len());
-    for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(60)).expect("response");
-        assert!(r.ok, "{:?}", r.error);
+    let mut lat_us = Vec::with_capacity(tickets.len());
+    for t in tickets {
+        let r = t.wait_timeout(Duration::from_secs(60)).expect("response");
+        assert!(r.is_ok(), "{:?}", r.status);
         lat_us.push(r.latency_us as f64);
     }
     let wall = t0.elapsed().as_secs_f64();

@@ -37,6 +37,14 @@ impl Value {
         }
     }
 
+    /// Token-id payload for single-input text models (BERT-style) — the
+    /// `Value`-level replacement for the retired
+    /// `ServerHandle::submit_tokens`: submit with
+    /// `submit(model, vec![Value::tokens(ids)])`.
+    pub fn tokens(ids: Vec<i32>) -> Value {
+        Value::I32(ids)
+    }
+
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             Value::I32(v) => Some(v),

@@ -1,8 +1,11 @@
-//! Admission control: bound the queue, shed load early.
+//! Admission control: bound the queue, shed load early — per class.
 //!
-//! Two mechanisms compose (either can reject):
+//! Three mechanisms compose (any can reject):
 //! * **queue depth bound** — reject when in-flight requests exceed a cap
 //!   (keeps tail latency bounded under overload);
+//! * **per-class budget** — each [`Priority`] class has its own in-flight
+//!   cap; by default `Bulk` is capped at a quarter of `max_inflight`, so
+//!   a bulk backlog can never fill the queue and starve `Interactive`;
 //! * **token bucket** — smooth sustained rate to what the backend can
 //!   actually serve (capacity = burst tolerance).
 
@@ -10,11 +13,16 @@ use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use super::request::Priority;
+
+/// Outcome of [`Admission::try_admit`]. Rejections carry the class that
+/// was turned away, so callers (and metrics) can tell a shed bulk
+/// backfill from a refused interactive request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmissionDecision {
     Admit,
-    RejectQueueFull,
-    RejectRateLimited,
+    RejectQueueFull(Priority),
+    RejectRateLimited(Priority),
 }
 
 #[derive(Debug)]
@@ -27,7 +35,10 @@ struct Bucket {
 #[derive(Debug)]
 pub struct Admission {
     max_inflight: i64,
+    /// per-class in-flight caps, indexed by [`Priority::idx`]
+    class_caps: [i64; 3],
     inflight: AtomicI64,
+    inflight_class: [AtomicI64; 3],
     /// requests/second sustained; f64::INFINITY disables rate limiting
     rate: f64,
     burst: f64,
@@ -35,29 +46,53 @@ pub struct Admission {
 }
 
 impl Admission {
+    /// Default class budgets for a total cap: `Interactive`/`Standard`
+    /// may use the whole queue, `Bulk` at most a quarter of it (≥ 1).
+    fn default_class_caps(max_inflight: usize) -> [i64; 3] {
+        let bulk = (max_inflight / 4).max(1) as i64;
+        [max_inflight as i64, max_inflight as i64, bulk]
+    }
+
     pub fn new(max_inflight: usize, rate_per_sec: f64, burst: usize) -> Admission {
         Admission {
             max_inflight: max_inflight as i64,
+            class_caps: Self::default_class_caps(max_inflight),
             inflight: AtomicI64::new(0),
+            inflight_class: [AtomicI64::new(0), AtomicI64::new(0), AtomicI64::new(0)],
             rate: rate_per_sec,
             burst: burst as f64,
             bucket: Mutex::new(Bucket { tokens: burst as f64, last: Instant::now() }),
         }
     }
 
-    /// Unlimited-rate controller with only a queue bound.
+    /// Unlimited-rate controller with only depth + class bounds.
     pub fn depth_only(max_inflight: usize) -> Admission {
         Admission::new(max_inflight, f64::INFINITY, 1)
     }
 
-    /// Try to admit one request. On `Admit`, the caller MUST later call
-    /// [`complete`](Self::complete) exactly once.
-    pub fn try_admit(&self) -> AdmissionDecision {
-        // optimistic in-flight increment; back out on reject
+    /// Override the per-class in-flight caps (indexed by
+    /// [`Priority::idx`]); caps above `max_inflight` are harmless — the
+    /// total bound still applies.
+    pub fn with_class_caps(mut self, caps: [usize; 3]) -> Admission {
+        self.class_caps = [caps[0] as i64, caps[1] as i64, caps[2] as i64];
+        self
+    }
+
+    /// Try to admit one `class` request. On `Admit`, the caller MUST
+    /// later call [`complete`](Self::complete) exactly once with the same
+    /// class.
+    pub fn try_admit(&self, class: Priority) -> AdmissionDecision {
+        // optimistic increments; back out on reject
         let inflight = self.inflight.fetch_add(1, Ordering::AcqRel) + 1;
         if inflight > self.max_inflight {
             self.inflight.fetch_sub(1, Ordering::AcqRel);
-            return AdmissionDecision::RejectQueueFull;
+            return AdmissionDecision::RejectQueueFull(class);
+        }
+        let per = &self.inflight_class[class.idx()];
+        if per.fetch_add(1, Ordering::AcqRel) + 1 > self.class_caps[class.idx()] {
+            per.fetch_sub(1, Ordering::AcqRel);
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            return AdmissionDecision::RejectQueueFull(class);
         }
         if self.rate.is_finite() {
             let mut b = self.bucket.lock().unwrap();
@@ -67,22 +102,29 @@ impl Admission {
             b.last = now;
             if b.tokens < 1.0 {
                 drop(b);
+                per.fetch_sub(1, Ordering::AcqRel);
                 self.inflight.fetch_sub(1, Ordering::AcqRel);
-                return AdmissionDecision::RejectRateLimited;
+                return AdmissionDecision::RejectRateLimited(class);
             }
             b.tokens -= 1.0;
         }
         AdmissionDecision::Admit
     }
 
-    /// Mark one admitted request finished.
-    pub fn complete(&self) {
+    /// Mark one admitted `class` request finished (served, failed,
+    /// expired, or cancelled — anything that releases its slot).
+    pub fn complete(&self, class: Priority) {
+        let prev_class = self.inflight_class[class.idx()].fetch_sub(1, Ordering::AcqRel);
         let prev = self.inflight.fetch_sub(1, Ordering::AcqRel);
-        debug_assert!(prev > 0, "complete() without admit()");
+        debug_assert!(prev > 0 && prev_class > 0, "complete() without admit()");
     }
 
     pub fn inflight(&self) -> i64 {
         self.inflight.load(Ordering::Acquire)
+    }
+
+    pub fn inflight_class(&self, class: Priority) -> i64 {
+        self.inflight_class[class.idx()].load(Ordering::Acquire)
     }
 }
 
@@ -93,12 +135,53 @@ mod tests {
     #[test]
     fn depth_bound_rejects_then_recovers() {
         let a = Admission::depth_only(2);
-        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
-        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
-        assert_eq!(a.try_admit(), AdmissionDecision::RejectQueueFull);
-        a.complete();
-        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(Priority::Standard), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(Priority::Standard), AdmissionDecision::Admit);
+        assert_eq!(
+            a.try_admit(Priority::Standard),
+            AdmissionDecision::RejectQueueFull(Priority::Standard)
+        );
+        a.complete(Priority::Standard);
+        assert_eq!(a.try_admit(Priority::Standard), AdmissionDecision::Admit);
         assert_eq!(a.inflight(), 2);
+    }
+
+    #[test]
+    fn bulk_budget_cannot_starve_interactive() {
+        // max_inflight 8 → default bulk cap 2: the bulk flood stops at 2
+        // while interactive still has 6 slots
+        let a = Admission::depth_only(8);
+        assert_eq!(a.try_admit(Priority::Bulk), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(Priority::Bulk), AdmissionDecision::Admit);
+        assert_eq!(
+            a.try_admit(Priority::Bulk),
+            AdmissionDecision::RejectQueueFull(Priority::Bulk)
+        );
+        assert_eq!(a.inflight_class(Priority::Bulk), 2);
+        for _ in 0..6 {
+            assert_eq!(a.try_admit(Priority::Interactive), AdmissionDecision::Admit);
+        }
+        // total bound now binds — and names the rejected class
+        assert_eq!(
+            a.try_admit(Priority::Interactive),
+            AdmissionDecision::RejectQueueFull(Priority::Interactive)
+        );
+        a.complete(Priority::Bulk);
+        assert_eq!(a.inflight_class(Priority::Bulk), 1);
+        assert_eq!(a.try_admit(Priority::Bulk), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn class_caps_are_overridable() {
+        let a = Admission::depth_only(8).with_class_caps([1, 8, 8]);
+        assert_eq!(a.try_admit(Priority::Interactive), AdmissionDecision::Admit);
+        assert_eq!(
+            a.try_admit(Priority::Interactive),
+            AdmissionDecision::RejectQueueFull(Priority::Interactive)
+        );
+        for _ in 0..7 {
+            assert_eq!(a.try_admit(Priority::Bulk), AdmissionDecision::Admit);
+        }
     }
 
     #[test]
@@ -107,32 +190,38 @@ mod tests {
         let a = Admission::new(100, 1.0, 3);
         let mut admitted = 0;
         for _ in 0..5 {
-            if a.try_admit() == AdmissionDecision::Admit {
+            if a.try_admit(Priority::Standard) == AdmissionDecision::Admit {
                 admitted += 1;
             }
         }
         assert_eq!(admitted, 3);
+        assert_eq!(a.inflight(), 3, "rate rejects must back out both counters");
+        assert_eq!(a.inflight_class(Priority::Standard), 3);
     }
 
     #[test]
     fn rate_limit_refills_over_time() {
         let a = Admission::new(100, 1000.0, 1);
-        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
-        assert_eq!(a.try_admit(), AdmissionDecision::RejectRateLimited);
+        assert_eq!(a.try_admit(Priority::Standard), AdmissionDecision::Admit);
+        assert_eq!(
+            a.try_admit(Priority::Standard),
+            AdmissionDecision::RejectRateLimited(Priority::Standard)
+        );
         std::thread::sleep(std::time::Duration::from_millis(5));
-        assert_eq!(a.try_admit(), AdmissionDecision::Admit);
+        assert_eq!(a.try_admit(Priority::Standard), AdmissionDecision::Admit);
     }
 
     #[test]
     fn inflight_never_negative_under_contention() {
         let a = std::sync::Arc::new(Admission::depth_only(8));
         let mut handles = Vec::new();
-        for _ in 0..4 {
+        for t in 0..4 {
             let a = a.clone();
             handles.push(std::thread::spawn(move || {
+                let class = Priority::ALL[t % 3];
                 for _ in 0..1000 {
-                    if a.try_admit() == AdmissionDecision::Admit {
-                        a.complete();
+                    if a.try_admit(class) == AdmissionDecision::Admit {
+                        a.complete(class);
                     }
                 }
             }));
@@ -141,5 +230,8 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(a.inflight(), 0);
+        for p in Priority::ALL {
+            assert_eq!(a.inflight_class(p), 0);
+        }
     }
 }

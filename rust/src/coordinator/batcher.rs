@@ -1,10 +1,20 @@
-//! Dynamic batcher: trade a bounded wait for batch fill.
+//! Dynamic batcher: trade a bounded wait for batch fill — QoS-aware.
 //!
 //! The classic serving batcher (vLLM/Triton style, simplified to
-//! fixed-shape classification): block for the first request, then keep
-//! draining the queue until either `max_batch` requests are collected or
-//! `max_wait` has elapsed since the first one. Requests for different
-//! models are never mixed in one batch.
+//! fixed-shape classification), extended with the v2 lifecycle rules:
+//!
+//! * everything already queued is pulled into the stash before a batch is
+//!   seeded, so scheduling decisions see the whole backlog;
+//! * the seed is the **highest-priority** stashed request (FIFO within a
+//!   class): an `Interactive` request is never left waiting while a
+//!   `Bulk` request seeds a batch;
+//! * batch fill drains same-model stash entries in (priority, arrival)
+//!   order, then waits up to `max_wait` for stragglers;
+//! * cancelled or deadline-expired requests are shed at formation time —
+//!   answered with [`Response::cancelled`]/[`Response::expired`] and
+//!   never handed to a worker.
+//!
+//! Requests for different models are never mixed in one batch.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -12,7 +22,9 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::admission::Admission;
+use super::metrics::Metrics;
+use super::request::{Priority, Request};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
@@ -24,6 +36,17 @@ impl Default for BatcherConfig {
     fn default() -> Self {
         BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
     }
+}
+
+/// Idle-poll interval for the seed-wait loop: bounded by `max_wait` so a
+/// sub-20ms batching config is not quantized by a hardcoded poll (the
+/// stop flag — and with it shutdown — is observed once per poll), with a
+/// 1ms floor so an aggressive `max_wait` cannot turn the idle loop into
+/// a busy spin.
+fn idle_poll(max_wait: Duration) -> Duration {
+    max_wait
+        .min(Duration::from_millis(20))
+        .max(Duration::from_millis(1))
 }
 
 /// A formed batch: same-model requests, ready for routing.
@@ -45,15 +68,26 @@ impl Batch {
     }
 }
 
+/// Server-side bookkeeping for requests the batcher sheds: shed counters
+/// plus the admission slot the request still holds. A standalone batcher
+/// (unit tests, offline replay) runs without one — shed requests are
+/// still answered, just not accounted.
+struct ShedSink {
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+}
+
 /// Pulls requests off a channel, forms batches.
 pub struct DynamicBatcher {
     cfg: BatcherConfig,
     rx: Receiver<Request>,
-    /// same-model constraint: requests for *other* models wait here
+    /// the visible backlog: same-model constraint and priority seeding
+    /// both operate on this queue (arrival order preserved within it)
     stash: VecDeque<Request>,
     /// cooperative shutdown: senders may outlive the server (cloned
     /// handles), so channel-closure alone cannot signal exit
     stop: Arc<AtomicBool>,
+    shed: Option<ShedSink>,
 }
 
 impl DynamicBatcher {
@@ -66,79 +100,203 @@ impl DynamicBatcher {
         rx: Receiver<Request>,
         stop: Arc<AtomicBool>,
     ) -> DynamicBatcher {
-        DynamicBatcher { cfg, rx, stash: VecDeque::new(), stop }
+        DynamicBatcher { cfg, rx, stash: VecDeque::new(), stop, shed: None }
+    }
+
+    /// Attach the server's metrics + admission so shed requests release
+    /// their in-flight slot and are counted (`Server::start` wires this).
+    pub fn with_shed_accounting(
+        mut self,
+        metrics: Arc<Metrics>,
+        admission: Arc<Admission>,
+    ) -> DynamicBatcher {
+        self.shed = Some(ShedSink { metrics, admission });
+        self
+    }
+
+    /// Stash depth per priority class (observability; lets tests assert
+    /// the "never seed Bulk while Interactive is stashed" invariant).
+    pub fn stash_depth_by_class(&self) -> [usize; 3] {
+        let mut depth = [0usize; 3];
+        for r in &self.stash {
+            depth[r.priority.idx()] += 1;
+        }
+        depth
+    }
+
+    /// Answer a shed request and release its accounting (metrics +
+    /// admission slot) when a sink is attached.
+    fn answer_shed(&self, r: Request, resp: super::request::Response) {
+        if let Some(sink) = &self.shed {
+            sink.metrics.record_shed(&resp.status);
+            sink.admission.complete(r.priority);
+        }
+        let _ = r.reply.send(resp);
+    }
+
+    /// One rotation pass over the stash: shed every cancelled/expired
+    /// entry (they must not squat on admission slots or per-class
+    /// budgets while a backlog drains) and count the survivors per
+    /// class, so `fill` can skip classes with nothing stashed.
+    fn reap_and_count(&mut self, now: Instant) -> [usize; 3] {
+        let mut count = [0usize; 3];
+        for _ in 0..self.stash.len() {
+            let r = self.stash.pop_front().expect("bounded by len");
+            match r.shed_response(now) {
+                Some(resp) => self.answer_shed(r, resp),
+                None => {
+                    count[r.priority.idx()] += 1;
+                    self.stash.push_back(r);
+                }
+            }
+        }
+        count
     }
 
     /// Form the next batch. `None` when shutdown is signalled (or the
     /// channel closed) and no requests remain.
     pub fn next_batch(&mut self) -> Option<Batch> {
-        // seed: stashed request first, else poll the channel (bounded
-        // waits so the stop flag is observed)
-        let first = match self.stash.pop_front() {
-            Some(r) => r,
-            None => loop {
-                if self.stop.load(Ordering::Acquire) {
-                    // drain anything already queued before exiting
-                    match self.rx.try_recv() {
-                        Ok(r) => break r,
-                        Err(_) => return None,
+        loop {
+            // pull the whole queued backlog into the stash: priority
+            // seeding needs a global view, not channel arrival order
+            while let Ok(r) = self.rx.try_recv() {
+                self.stash.push_back(r);
+            }
+            let now = Instant::now();
+            // shed every dead entry (releasing its admission slot), then
+            // seed with the best (priority class, arrival order) survivor
+            let class_counts = self.reap_and_count(now);
+            if let Some(first) = self.take_seed(now) {
+                return Some(self.fill(first, class_counts));
+            }
+            // stash is empty here: idle-wait for the next arrival with a
+            // bounded poll so the stop flag is observed promptly
+            if self.stop.load(Ordering::Acquire) {
+                // drain anything that raced the flag before exiting
+                match self.rx.try_recv() {
+                    Ok(r) => self.stash.push_back(r),
+                    Err(_) => return None,
+                }
+                continue;
+            }
+            match self.rx.recv_timeout(idle_poll(self.cfg.max_wait)) {
+                Ok(r) => self.stash.push_back(r),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+
+    /// Remove and return the seed: the earliest-arrived request of the
+    /// most urgent class present, shedding dead entries encountered on
+    /// the way. `None` if the stash empties out.
+    fn take_seed(&mut self, now: Instant) -> Option<Request> {
+        loop {
+            let mut best: Option<(Priority, usize)> = None;
+            for (i, r) in self.stash.iter().enumerate() {
+                if best.map_or(true, |(bp, _)| r.priority < bp) {
+                    best = Some((r.priority, i));
+                    if r.priority == Priority::Interactive {
+                        break; // nothing outranks the first Interactive
                     }
                 }
-                match self.rx.recv_timeout(Duration::from_millis(20)) {
-                    Ok(r) => break r,
-                    Err(RecvTimeoutError::Timeout) => continue,
-                    Err(RecvTimeoutError::Disconnected) => return None,
-                }
-            },
-        };
+            }
+            let (_, i) = best?;
+            let r = self.stash.remove(i).expect("index from scan");
+            match r.shed_response(now) {
+                Some(resp) => self.answer_shed(r, resp),
+                None => return Some(r),
+            }
+        }
+    }
+
+    /// Fill a batch around `first`: same-model stash entries in
+    /// (priority, arrival) order, then a bounded wait for stragglers.
+    /// `class_counts` is the per-class stash census from
+    /// [`reap_and_count`](Self::reap_and_count) (the seed already
+    /// removed); passes over classes with nothing stashed are skipped.
+    fn fill(&mut self, first: Request, mut class_counts: [usize; 3]) -> Batch {
+        class_counts[first.priority.idx()] =
+            class_counts[first.priority.idx()].saturating_sub(1);
         let model = first.model.clone();
         let deadline = Instant::now() + self.cfg.max_wait;
         let mut requests = vec![first];
 
-        // take same-model requests; keep the rest stashed in arrival
-        // order. Single in-place rotation pass — each element is popped
-        // once and either joins the batch or returns to the back, so the
-        // stash buffer is reused with zero allocation. (The seed used
-        // `VecDeque::remove` under a scan, which shifts the tail once per
-        // hit — O(n²) when many models interleave under fan-in.)
-        for _ in 0..self.stash.len() {
-            let r = self.stash.pop_front().expect("bounded by len");
-            if requests.len() < self.cfg.max_batch && r.model == model {
-                requests.push(r);
-            } else {
-                self.stash.push_back(r);
+        // Priority passes over the stash. Each pass is the PR 2 in-place
+        // rotation (pop each element once; it either joins the batch or
+        // returns to the back — zero allocation, order of the remainder
+        // preserved), run once per class so Interactive stragglers board
+        // before Bulk even when they arrived later.
+        for class in Priority::ALL {
+            if requests.len() >= self.cfg.max_batch {
+                break;
+            }
+            if class_counts[class.idx()] == 0 {
+                continue; // nothing of this class stashed — skip the pass
+            }
+            for _ in 0..self.stash.len() {
+                let r = self.stash.pop_front().expect("bounded by len");
+                if requests.len() < self.cfg.max_batch
+                    && r.priority == class
+                    && r.model == model
+                {
+                    match r.shed_response(Instant::now()) {
+                        Some(resp) => self.answer_shed(r, resp),
+                        None => requests.push(r),
+                    }
+                } else {
+                    self.stash.push_back(r);
+                }
             }
         }
+        // bounded wait for same-model stragglers
         while requests.len() < self.cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match self.rx.recv_timeout(deadline - now) {
-                Ok(r) if r.model == model => requests.push(r),
+                Ok(r) if r.model == model => match r.shed_response(Instant::now()) {
+                    Some(resp) => self.answer_shed(r, resp),
+                    None => requests.push(r),
+                },
                 Ok(r) => self.stash.push_back(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        Some(Batch { model, requests, formed_at: Instant::now() })
+        Batch { model, requests, formed_at: Instant::now() }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{RequestId, Response};
+    use crate::coordinator::request::{RequestId, Response, ResponseStatus};
     use std::sync::mpsc;
 
     fn req(id: u64, model: &str) -> (Request, mpsc::Receiver<Response>) {
+        req_qos(id, model, Priority::Standard, None)
+    }
+
+    fn req_qos(
+        id: u64,
+        model: &str,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> (Request, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
+        let now = Instant::now();
         (
             Request {
                 id: RequestId(id),
                 model: Arc::from(model),
                 inputs: vec![crate::backend::Value::I32(vec![0; 4])],
-                submitted: Instant::now(),
+                submitted: now,
+                priority,
+                deadline: deadline.map(|d| now + d),
+                cancelled: Arc::new(AtomicBool::new(false)),
+                client_tag: None,
                 reply: tx,
             },
             rx,
@@ -146,10 +304,18 @@ mod tests {
     }
 
     #[test]
+    fn idle_poll_tracks_max_wait_with_floor_and_cap() {
+        assert_eq!(idle_poll(Duration::from_millis(2)), Duration::from_millis(2));
+        assert_eq!(idle_poll(Duration::from_millis(100)), Duration::from_millis(20));
+        assert_eq!(idle_poll(Duration::from_micros(10)), Duration::from_millis(1));
+        assert_eq!(idle_poll(Duration::from_millis(20)), Duration::from_millis(20));
+    }
+
+    #[test]
     fn fills_to_max_batch_without_waiting() {
         let (tx, rx) = mpsc::channel();
         let mut b = DynamicBatcher::new(
-            BatcherConfig { max_batch: 3, max_wait: Duration::from_secs(10) },
+            BatcherConfig { max_batch: 3, max_wait: Duration::from_millis(200) },
             rx,
         );
         let mut keep = Vec::new();
@@ -181,6 +347,38 @@ mod tests {
     }
 
     #[test]
+    fn sub_poll_max_wait_forms_batches_at_its_own_cadence() {
+        // satellite regression: with the idle poll hardcoded at 20ms, a
+        // 2ms max_wait config had its shutdown/flush responsiveness
+        // quantized to the poll. The deadline flush above plus this
+        // stop-latency bound pin the ~2ms cadence. Best-of-3 so a single
+        // descheduling hiccup on a loaded CI runner cannot flake the
+        // assert — under the old 20ms quantum every attempt is slow.
+        let mut best = Duration::MAX;
+        for _ in 0..3 {
+            let (_tx, rx) = mpsc::channel::<Request>();
+            let stop = Arc::new(AtomicBool::new(false));
+            let mut b = DynamicBatcher::with_stop(
+                BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+                rx,
+                stop.clone(),
+            );
+            let h = std::thread::spawn(move || b.next_batch());
+            // let the batcher settle into its idle poll, then signal stop
+            std::thread::sleep(Duration::from_millis(10));
+            let t0 = Instant::now();
+            stop.store(true, Ordering::Release);
+            assert!(h.join().unwrap().is_none());
+            best = best.min(t0.elapsed());
+        }
+        // observed within ~one 2ms poll; far below the old 20ms quantum
+        assert!(
+            best < Duration::from_millis(15),
+            "stop took {best:?} at best, idle poll not derived from max_wait"
+        );
+    }
+
+    #[test]
     fn models_never_mixed() {
         let (tx, rx) = mpsc::channel();
         let mut b = DynamicBatcher::new(
@@ -199,6 +397,147 @@ mod tests {
         let b2 = b.next_batch().unwrap();
         assert_eq!(&*b2.model, "b");
         assert_eq!(b2.len(), 2);
+    }
+
+    #[test]
+    fn interactive_seeds_before_earlier_bulk() {
+        // bulk request arrives FIRST; the later interactive one must
+        // still seed the first batch
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for (i, p) in [
+            (1, Priority::Bulk),
+            (2, Priority::Standard),
+            (3, Priority::Interactive),
+        ] {
+            let (r, resp) = req_qos(i, "m", p, None);
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        drop(tx);
+        let order: Vec<u64> = std::iter::from_fn(|| b.next_batch())
+            .map(|batch| batch.requests[0].id.0)
+            .collect();
+        assert_eq!(order, vec![3, 2, 1], "seed order must follow class urgency");
+    }
+
+    #[test]
+    fn batch_fill_prefers_higher_class_stragglers() {
+        // seed is interactive; the batch's remaining slot must go to the
+        // other interactive request even though bulk arrived earlier
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 2, max_wait: Duration::ZERO },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for (i, p) in [
+            (1, Priority::Interactive),
+            (2, Priority::Bulk),
+            (3, Priority::Interactive),
+        ] {
+            let (r, resp) = req_qos(i, "m", p, None);
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        let b1 = b.next_batch().unwrap();
+        let ids: Vec<u64> = b1.requests.iter().map(|r| r.id.0).collect();
+        assert_eq!(ids, vec![1, 3]);
+        assert_eq!(b.stash_depth_by_class(), [0, 0, 1]);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_formation() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 8, max_wait: Duration::ZERO },
+            rx,
+        );
+        let (dead, dead_rx) = req_qos(1, "m", Priority::Standard, Some(Duration::ZERO));
+        let (live, _live_rx) = req_qos(2, "m", Priority::Standard, None);
+        tx.send(dead).unwrap();
+        tx.send(live).unwrap();
+        std::thread::sleep(Duration::from_millis(2)); // let the deadline pass
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.requests[0].id.0, 2);
+        let shed = dead_rx.try_recv().unwrap();
+        assert_eq!(shed.status, ResponseStatus::Expired);
+    }
+
+    #[test]
+    fn cancelled_requests_are_shed_at_formation() {
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 8, max_wait: Duration::ZERO },
+            rx,
+        );
+        let (gone, gone_rx) = req_qos(1, "m", Priority::Interactive, None);
+        let flag = gone.cancelled.clone();
+        let (live, _live_rx) = req_qos(2, "m", Priority::Bulk, None);
+        tx.send(gone).unwrap();
+        tx.send(live).unwrap();
+        flag.store(true, Ordering::Release);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch.requests[0].id.0, 2);
+        assert_eq!(gone_rx.try_recv().unwrap().status, ResponseStatus::Cancelled);
+    }
+
+    #[test]
+    fn dead_low_class_entries_shed_while_backlog_drains() {
+        // review regression: an expired Bulk request queued behind a
+        // Standard backlog must be shed at the NEXT formation pass (so it
+        // releases its admission slot), not when its class is finally
+        // seeded after the drain
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+            rx,
+        );
+        let mut keep = Vec::new();
+        for i in 0..3 {
+            let (r, resp) = req_qos(i, "m", Priority::Standard, None);
+            tx.send(r).unwrap();
+            keep.push(resp);
+        }
+        let (dead_bulk, dead_rx) = req_qos(9, "m", Priority::Bulk, Some(Duration::ZERO));
+        tx.send(dead_bulk).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        // first formation: seeds Standard 0, but the dead Bulk is already
+        // reaped out of the stash
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests[0].id.0, 0);
+        assert_eq!(dead_rx.try_recv().unwrap().status, ResponseStatus::Expired);
+        assert_eq!(b.stash_depth_by_class(), [0, 2, 0]);
+    }
+
+    #[test]
+    fn shed_accounting_releases_admission_and_counts() {
+        let metrics = Arc::new(Metrics::new());
+        let admission = Arc::new(Admission::depth_only(4));
+        let (tx, rx) = mpsc::channel();
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch: 8, max_wait: Duration::ZERO },
+            rx,
+        )
+        .with_shed_accounting(metrics.clone(), admission.clone());
+        assert_eq!(
+            admission.try_admit(Priority::Standard),
+            crate::coordinator::AdmissionDecision::Admit
+        );
+        let (dead, dead_rx) = req_qos(1, "m", Priority::Standard, Some(Duration::ZERO));
+        tx.send(dead).unwrap();
+        drop(tx);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(b.next_batch().is_none(), "only request was shed");
+        assert_eq!(dead_rx.try_recv().unwrap().status, ResponseStatus::Expired);
+        assert_eq!(metrics.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(admission.inflight(), 0, "shed must release the slot");
     }
 
     #[test]

@@ -1,9 +1,21 @@
-//! Serving metrics: lock-free counters + histogram latencies.
+//! Serving metrics: lock-free counters + histogram latencies, with a
+//! typed point-in-time [`MetricsSnapshot`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::request::{Priority, ResponseStatus};
 use crate::util::stats::LatencyHistogram;
+
+/// Both per-request histograms behind ONE mutex: `record_completion` is
+/// on the hot path of every served request, and two separate locks cost
+/// two acquisitions (and let a reader interleave between them, observing
+/// a completion's latency without its queue time).
+#[derive(Debug, Default)]
+struct Latencies {
+    latency: LatencyHistogram,
+    queue: LatencyHistogram,
+}
 
 /// Shared serving metrics (cheap to record from any worker).
 #[derive(Debug, Default)]
@@ -12,11 +24,88 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// shed before execution: deadline elapsed while queued
+    pub expired: AtomicU64,
+    /// shed before execution: client cancelled the ticket
+    pub cancelled: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padding_slots: AtomicU64,
-    latency: Mutex<LatencyHistogram>,
-    queue: Mutex<LatencyHistogram>,
+    admitted_by_class: [AtomicU64; 3],
+    completed_by_class: [AtomicU64; 3],
+    lat: Mutex<Latencies>,
+}
+
+/// Admitted/completed counts for one [`Priority`] class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    pub admitted: u64,
+    pub completed: u64,
+}
+
+/// Typed point-in-time view of [`Metrics`] — what
+/// [`ServingService::metrics_snapshot`](crate::coordinator::ServingService::metrics_snapshot)
+/// returns, so dashboards and benches consume fields, not a formatted
+/// string.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub admitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub expired: u64,
+    pub cancelled: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub padding_slots: u64,
+    /// indexed by [`Priority::idx`]
+    pub by_class: [ClassStats; 3],
+    pub mean_batch_fill: f64,
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub queue_p50_us: f64,
+    pub queue_p99_us: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn class(&self, p: Priority) -> ClassStats {
+        self.by_class[p.idx()]
+    }
+
+    /// Every admitted request is eventually answered exactly once.
+    pub fn answered(&self) -> u64 {
+        self.completed + self.failed + self.expired + self.cancelled
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "admitted={} rejected={} completed={} failed={} expired={} \
+             cancelled={} batches={} fill={:.2} pad={} p50={:.0}µs p99={:.0}µs \
+             queue_p50={:.0}µs",
+            self.admitted,
+            self.rejected,
+            self.completed,
+            self.failed,
+            self.expired,
+            self.cancelled,
+            self.batches,
+            self.mean_batch_fill,
+            self.padding_slots,
+            self.latency_p50_us,
+            self.latency_p99_us,
+            self.queue_p50_us,
+        );
+        for p in Priority::ALL {
+            let c = self.class(p);
+            s.push_str(&format!(
+                " {}={}/{}",
+                p.as_str(),
+                c.completed,
+                c.admitted
+            ));
+        }
+        s
+    }
 }
 
 impl Metrics {
@@ -25,10 +114,43 @@ impl Metrics {
     }
 
     #[inline]
-    pub fn record_completion(&self, latency_us: u64, queue_us: u64) {
+    pub fn record_admitted(&self, class: Priority) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.admitted_by_class[class.idx()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Back out a [`record_admitted`](Self::record_admitted) for a
+    /// request that turned out to be rejected (queue send failed after
+    /// admission) — counted as a rejection instead.
+    #[inline]
+    pub fn unrecord_admitted(&self, class: Priority) {
+        self.admitted.fetch_sub(1, Ordering::Relaxed);
+        self.admitted_by_class[class.idx()].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_completion(&self, class: Priority, latency_us: u64, queue_us: u64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latency.lock().unwrap().record_us(latency_us as f64);
-        self.queue.lock().unwrap().record_us(queue_us as f64);
+        self.completed_by_class[class.idx()].fetch_add(1, Ordering::Relaxed);
+        let mut l = self.lat.lock().unwrap();
+        l.latency.record_us(latency_us as f64);
+        l.queue.record_us(queue_us as f64);
+    }
+
+    /// Count one request shed before execution ([`ResponseStatus::Expired`]
+    /// or [`ResponseStatus::Cancelled`]; other statuses are not sheds).
+    #[inline]
+    pub fn record_shed(&self, status: &ResponseStatus) {
+        match status {
+            ResponseStatus::Expired => self.expired.fetch_add(1, Ordering::Relaxed),
+            ResponseStatus::Cancelled => self.cancelled.fetch_add(1, Ordering::Relaxed),
+            ResponseStatus::Ok | ResponseStatus::Error(_) => return,
+        };
     }
 
     #[inline]
@@ -40,11 +162,11 @@ impl Metrics {
     }
 
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
-        self.latency.lock().unwrap().quantile_us(q)
+        self.lat.lock().unwrap().latency.quantile_us(q)
     }
 
     pub fn queue_quantile_us(&self, q: f64) -> f64 {
-        self.queue.lock().unwrap().quantile_us(q)
+        self.lat.lock().unwrap().queue.quantile_us(q)
     }
 
     /// Mean requests per executed batch (batching efficiency).
@@ -56,21 +178,52 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    pub fn admitted_class(&self, p: Priority) -> u64 {
+        self.admitted_by_class[p.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn completed_class(&self, p: Priority) -> u64 {
+        self.completed_by_class[p.idx()].load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut by_class = [ClassStats::default(); 3];
+        for p in Priority::ALL {
+            by_class[p.idx()] = ClassStats {
+                admitted: self.admitted_class(p),
+                completed: self.completed_class(p),
+            };
+        }
+        let (lp50, lp99, qp50, qp99) = {
+            let l = self.lat.lock().unwrap();
+            (
+                l.latency.quantile_us(0.5),
+                l.latency.quantile_us(0.99),
+                l.queue.quantile_us(0.5),
+                l.queue.quantile_us(0.99),
+            )
+        };
+        MetricsSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            padding_slots: self.padding_slots.load(Ordering::Relaxed),
+            by_class,
+            mean_batch_fill: self.mean_batch_fill(),
+            latency_p50_us: lp50,
+            latency_p99_us: lp99,
+            queue_p50_us: qp50,
+            queue_p99_us: qp99,
+        }
+    }
+
     pub fn report(&self) -> String {
-        format!(
-            "admitted={} rejected={} completed={} failed={} batches={} \
-             fill={:.2} pad={} p50={:.0}µs p99={:.0}µs queue_p50={:.0}µs",
-            self.admitted.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.mean_batch_fill(),
-            self.padding_slots.load(Ordering::Relaxed),
-            self.latency_quantile_us(0.5),
-            self.latency_quantile_us(0.99),
-            self.queue_quantile_us(0.5),
-        )
+        self.snapshot().report()
     }
 }
 
@@ -81,16 +234,60 @@ mod tests {
     #[test]
     fn records_and_reports() {
         let m = Metrics::new();
-        m.admitted.fetch_add(3, Ordering::Relaxed);
+        m.record_admitted(Priority::Standard);
+        m.record_admitted(Priority::Standard);
+        m.record_admitted(Priority::Interactive);
         m.record_batch(3, 8);
-        m.record_completion(1000, 100);
-        m.record_completion(2000, 200);
+        m.record_completion(Priority::Standard, 1000, 100);
+        m.record_completion(Priority::Interactive, 2000, 200);
         assert_eq!(m.completed.load(Ordering::Relaxed), 2);
         assert_eq!(m.padding_slots.load(Ordering::Relaxed), 5);
         assert_eq!(m.mean_batch_fill(), 3.0);
         let r = m.report();
-        assert!(r.contains("admitted=3"));
+        assert!(r.contains("admitted=3"), "{r}");
+        assert!(r.contains("interactive=1/1"), "{r}");
         assert!(m.latency_quantile_us(0.5) > 500.0);
+    }
+
+    #[test]
+    fn snapshot_is_typed_and_consistent() {
+        let m = Metrics::new();
+        m.record_admitted(Priority::Bulk);
+        m.record_admitted(Priority::Bulk);
+        m.record_completion(Priority::Bulk, 500, 50);
+        m.record_shed(&ResponseStatus::Expired);
+        let s = m.snapshot();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.cancelled, 0);
+        assert_eq!(s.class(Priority::Bulk), ClassStats { admitted: 2, completed: 1 });
+        assert_eq!(s.class(Priority::Interactive), ClassStats::default());
+        assert_eq!(s.answered(), 2); // 1 completed + 1 expired
+        assert!(s.latency_p50_us > 0.0 && s.latency_p99_us >= s.latency_p50_us);
+    }
+
+    #[test]
+    fn shed_counters_by_status() {
+        let m = Metrics::new();
+        m.record_shed(&ResponseStatus::Expired);
+        m.record_shed(&ResponseStatus::Cancelled);
+        m.record_shed(&ResponseStatus::Cancelled);
+        m.record_shed(&ResponseStatus::Ok); // not a shed
+        m.record_shed(&ResponseStatus::Error("x".into())); // not a shed
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn unrecord_admitted_backs_out_both_counters() {
+        let m = Metrics::new();
+        m.record_admitted(Priority::Interactive);
+        m.unrecord_admitted(Priority::Interactive);
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.admitted, 0);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.class(Priority::Interactive).admitted, 0);
     }
 
     #[test]

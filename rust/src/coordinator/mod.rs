@@ -1,20 +1,31 @@
 //! SparseRT serving coordinator (Layer 3).
 //!
-//! The serve-time system around the runtime: typed requests come in, are
-//! admission-controlled, dynamically batched, routed to a compiled model
-//! variant, executed on any [`InferenceBackend`] (PJRT, simulator, echo),
-//! and answered — all on std threads + channels, Python never involved.
+//! The serve-time system around the runtime: typed requests come in with
+//! per-request QoS ([`SubmitOptions`]: priority class, deadline, client
+//! tag), are admission-controlled per class, priority-batched, routed to
+//! a compiled model variant, executed on any [`InferenceBackend`] (PJRT,
+//! simulator, echo), and answered — all on std threads + channels,
+//! Python never involved. Clients hold a [`Ticket`] per submission
+//! (wait / poll / cancel); every ticket resolves to exactly one
+//! [`Response`] whose [`ResponseStatus`] is `Ok`, `Error`, `Expired`, or
+//! `Cancelled`.
 //!
 //! ```text
+//!            ServingService::submit_with(model, inputs, SubmitOptions)
 //! client ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ InferenceBackend
-//!                                                        │
-//!                                  metrics ◀─────────────┘
+//!    ▲      (per-class       (priority seed,   │      (pre-exec shed:     │
+//!    │       budgets)         shed expired/    │       cancel/deadline    │
+//!  Ticket                     cancelled)       │       re-check)          │
+//!  wait/poll/cancel                 metrics ◀──┴───────────┴──────────────┘
 //! ```
 //!
 //! Requests carry `Vec<Value>` payloads (one sample-shaped tensor per
 //! model input) and the padding/demux in the worker pool is driven by the
 //! artifact's `TensorSpec`s, so BERT token batches and ResNet image
-//! batches flow through the identical path.
+//! batches flow through the identical path. Scheduling differentiates
+//! the three [`Priority`] classes: `Interactive` seeds batches first and
+//! `Bulk` is budget-capped at admission, so latency-critical traffic
+//! survives overload instead of queueing behind backfills.
 
 pub mod admission;
 pub mod batcher;
@@ -25,10 +36,12 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use metrics::Metrics;
-pub use request::{Request, RequestId, Response};
+pub use metrics::{ClassStats, Metrics, MetricsSnapshot};
+pub use request::{
+    Priority, Request, RequestId, Response, ResponseStatus, SubmitOptions, Ticket,
+};
 pub use router::{Placement, Router, RoutingPolicy};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{Server, ServerConfig, ServerHandle, ServingService};
 
 // The execution surface lives in `crate::backend`; re-exported here for
 // serving-centric call sites.

@@ -1,4 +1,4 @@
-//! Request/response types on the serving hot path.
+//! Request/response types + the QoS-aware submission surface.
 //!
 //! Payloads are typed multi-tensor [`Value`]s: a request carries one
 //! *sample-shaped* value per model input (token ids for BERT, image
@@ -6,15 +6,116 @@
 //! model output. The server pads samples to the routed artifact's
 //! [`TensorSpec`](crate::backend::TensorSpec)s and demuxes batch outputs
 //! back per request — nothing here assumes a token→logits shape.
+//!
+//! The v2 lifecycle surface lives here too:
+//! * [`Priority`] — the three serving classes the batcher and admission
+//!   controller differentiate on;
+//! * [`SubmitOptions`] — per-request QoS knobs (priority, deadline,
+//!   client tag);
+//! * [`Ticket`] — the client-side handle a submission returns (wait /
+//!   poll / cancel), replacing the PR 1-era raw
+//!   `(RequestId, Receiver<Response>)` tuple;
+//! * [`ResponseStatus`] — the typed outcome (`Ok`/`Error`/`Expired`/
+//!   `Cancelled`) replacing the old `ok: bool` + `Option<String>` pair.
 
-use std::sync::mpsc::Sender;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::backend::Value;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct RequestId(pub u64);
+
+/// Serving class of a request. Ordering is scheduling order: a
+/// lower-valued class is drained first (`Interactive < Standard < Bulk`),
+/// so `Priority` sorts from most to least latency-critical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Latency-critical: seeded into batches before anything else and
+    /// never starved by `Bulk` backlog.
+    Interactive,
+    /// The default class — PR 1-era `submit()` calls land here.
+    #[default]
+    Standard,
+    /// Throughput traffic (offline scoring, backfills): capped to a
+    /// fraction of `max_inflight` at admission so it cannot crowd out
+    /// the other classes.
+    Bulk,
+}
+
+impl Priority {
+    /// All classes, in scheduling (drain) order.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Bulk];
+
+    /// Dense index for per-class counter arrays.
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Bulk => "bulk",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Priority> {
+        match s {
+            "interactive" => Ok(Priority::Interactive),
+            "standard" => Ok(Priority::Standard),
+            "bulk" => Ok(Priority::Bulk),
+            other => anyhow::bail!(
+                "unknown priority `{other}` (interactive | standard | bulk)"
+            ),
+        }
+    }
+}
+
+/// Per-request QoS options for
+/// [`ServingService::submit_with`](crate::coordinator::ServingService::submit_with).
+///
+/// `SubmitOptions::default()` is exactly the PR 1 behavior: `Standard`
+/// priority, no deadline, no tag — which is why the two-arg
+/// [`submit`](crate::coordinator::ServingService::submit) wrapper stays a
+/// mechanical migration for old call sites.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    pub priority: Priority,
+    /// End-to-end budget measured from submission; a request still
+    /// unexecuted when it elapses is shed with [`ResponseStatus::Expired`]
+    /// instead of wasting backend time.
+    pub deadline: Option<Duration>,
+    /// Free-form client label carried on the request for observability.
+    pub client_tag: Option<String>,
+}
+
+impl SubmitOptions {
+    pub fn interactive() -> SubmitOptions {
+        SubmitOptions { priority: Priority::Interactive, ..Default::default() }
+    }
+
+    pub fn bulk() -> SubmitOptions {
+        SubmitOptions { priority: Priority::Bulk, ..Default::default() }
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> SubmitOptions {
+        self.priority = p;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> SubmitOptions {
+        self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_client_tag(mut self, tag: impl Into<String>) -> SubmitOptions {
+        self.client_tag = Some(tag.into());
+        self
+    }
+}
 
 /// One inference request for a named model.
 #[derive(Debug)]
@@ -27,8 +128,50 @@ pub struct Request {
     /// truncates) each to the routed artifact's per-sample spec length
     pub inputs: Vec<Value>,
     pub submitted: Instant,
+    pub priority: Priority,
+    /// absolute cutoff derived from [`SubmitOptions::deadline`]
+    pub deadline: Option<Instant>,
+    /// cooperative cancellation flag, shared with the client's [`Ticket`]
+    pub cancelled: Arc<AtomicBool>,
+    /// client label from [`SubmitOptions::client_tag`]
+    pub client_tag: Option<Arc<str>>,
     /// where the response goes (per-client channel)
     pub reply: Sender<Response>,
+}
+
+impl Request {
+    /// If this request should be shed (cancelled by the client, or past
+    /// its deadline at `now`), the response to answer it with.
+    /// Cancellation wins over expiry: it is explicit client intent.
+    pub fn shed_response(&self, now: Instant) -> Option<Response> {
+        if self.cancelled.load(Ordering::Acquire) {
+            return Some(Response::cancelled(self.id));
+        }
+        if self.deadline.map_or(false, |d| now >= d) {
+            return Some(Response::expired(self.id));
+        }
+        None
+    }
+}
+
+/// Typed request outcome — replaces the `ok: bool` + `Option<String>`
+/// pair, so expiry and cancellation are first-class results rather than
+/// stringly-typed errors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ResponseStatus {
+    Ok,
+    /// Routing/backend/payload failure, with the reason.
+    Error(String),
+    /// Shed before execution: the deadline elapsed while queued.
+    Expired,
+    /// Shed before execution: the client cancelled the [`Ticket`].
+    Cancelled,
+}
+
+impl ResponseStatus {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, ResponseStatus::Ok)
+    }
 }
 
 /// The answer: typed output tensors plus serving telemetry.
@@ -37,29 +180,54 @@ pub struct Response {
     pub id: RequestId,
     /// one sample-shaped value per model output
     pub outputs: Vec<Value>,
-    /// which artifact variant served it (e.g. "bert_tiny_s8_b8")
-    pub served_by: String,
+    /// which artifact variant served it (e.g. "bert_tiny_s8_b8"); shared
+    /// across every response demuxed from the same placement
+    pub served_by: Arc<str>,
     /// batch capacity it rode in
     pub batch_size: usize,
     /// end-to-end latency
     pub latency_us: u64,
     /// time spent queued before execution started
     pub queue_us: u64,
-    pub ok: bool,
-    pub error: Option<String>,
+    pub status: ResponseStatus,
 }
 
 impl Response {
-    pub fn error(id: RequestId, msg: impl Into<String>) -> Response {
+    fn unserved(id: RequestId, status: ResponseStatus) -> Response {
         Response {
             id,
             outputs: Vec::new(),
-            served_by: String::new(),
+            served_by: Arc::from(""),
             batch_size: 0,
             latency_us: 0,
             queue_us: 0,
-            ok: false,
-            error: Some(msg.into()),
+            status,
+        }
+    }
+
+    pub fn error(id: RequestId, msg: impl Into<String>) -> Response {
+        Response::unserved(id, ResponseStatus::Error(msg.into()))
+    }
+
+    /// Deadline elapsed before execution; no backend work was done.
+    pub fn expired(id: RequestId) -> Response {
+        Response::unserved(id, ResponseStatus::Expired)
+    }
+
+    /// Client cancelled before execution; no backend work was done.
+    pub fn cancelled(id: RequestId) -> Response {
+        Response::unserved(id, ResponseStatus::Cancelled)
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status.is_ok()
+    }
+
+    /// The error message, when `status` is [`ResponseStatus::Error`].
+    pub fn error_message(&self) -> Option<&str> {
+        match &self.status {
+            ResponseStatus::Error(msg) => Some(msg),
+            _ => None,
         }
     }
 
@@ -73,18 +241,100 @@ impl Response {
     }
 }
 
+/// Client-side handle for one submitted request — the v2 replacement for
+/// the raw `(RequestId, Receiver<Response>)` tuple.
+///
+/// Exactly one [`Response`] ever arrives per ticket (the server replies
+/// once on every path: served, failed, expired, or cancelled), so
+/// [`wait`](Ticket::wait) after a racing [`cancel`](Ticket::cancel) still
+/// returns a single coherent outcome: either the completed response (the
+/// cancel lost the race and the work was already done) or
+/// [`ResponseStatus::Cancelled`].
+#[derive(Debug)]
+pub struct Ticket {
+    id: RequestId,
+    priority: Priority,
+    rx: Receiver<Response>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl Ticket {
+    pub(crate) fn new(
+        id: RequestId,
+        priority: Priority,
+        rx: Receiver<Response>,
+        cancelled: Arc<AtomicBool>,
+    ) -> Ticket {
+        Ticket { id, priority, rx, cancelled }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    /// Ask the server to drop this request before execution. Purely
+    /// cooperative: the batcher checks the flag at batch formation and
+    /// the worker re-checks it just before execution; work already
+    /// executing completes normally. Always safe to call (idempotent,
+    /// any time, from the thread holding the ticket).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Block until the response arrives. Errors only if the server was
+    /// torn down without answering (a bug or a mid-shutdown submit).
+    pub fn wait(&self) -> anyhow::Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request {:?} without replying", self.id))
+    }
+
+    /// Like [`wait`](Ticket::wait), bounded by `timeout`.
+    pub fn wait_timeout(&self, timeout: Duration) -> anyhow::Result<Response> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => {
+                anyhow::anyhow!("request {:?}: no response within {timeout:?}", self.id)
+            }
+            RecvTimeoutError::Disconnected => {
+                anyhow::anyhow!("server dropped request {:?} without replying", self.id)
+            }
+        })
+    }
+
+    /// Non-blocking probe: the response if it already arrived.
+    pub fn try_poll(&self) -> Option<Response> {
+        self.rx.try_recv().ok()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::mpsc::channel;
 
     #[test]
     fn error_response_is_marked_and_empty() {
         let r = Response::error(RequestId(7), "nope");
-        assert!(!r.ok);
+        assert!(!r.is_ok());
         assert_eq!(r.id, RequestId(7));
         assert!(r.outputs.is_empty());
         assert!(r.logits().is_empty());
-        assert_eq!(r.error.as_deref(), Some("nope"));
+        assert_eq!(r.error_message(), Some("nope"));
+    }
+
+    #[test]
+    fn shed_constructors_are_typed() {
+        assert_eq!(Response::expired(RequestId(1)).status, ResponseStatus::Expired);
+        assert_eq!(Response::cancelled(RequestId(2)).status, ResponseStatus::Cancelled);
+        assert_eq!(Response::expired(RequestId(1)).error_message(), None);
     }
 
     #[test]
@@ -92,5 +342,85 @@ mod tests {
         let mut r = Response::error(RequestId(1), "x");
         r.outputs = vec![Value::I32(vec![3]), Value::F32(vec![0.25, 0.75])];
         assert_eq!(r.logits(), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn priority_orders_by_scheduling_urgency() {
+        assert!(Priority::Interactive < Priority::Standard);
+        assert!(Priority::Standard < Priority::Bulk);
+        assert_eq!(Priority::default(), Priority::Standard);
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.idx(), i);
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), *p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    #[test]
+    fn submit_options_builders() {
+        let o = SubmitOptions::default();
+        assert_eq!(o.priority, Priority::Standard);
+        assert!(o.deadline.is_none() && o.client_tag.is_none());
+        let o = SubmitOptions::interactive()
+            .with_deadline(Duration::from_millis(5))
+            .with_client_tag("cam-7");
+        assert_eq!(o.priority, Priority::Interactive);
+        assert_eq!(o.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(o.client_tag.as_deref(), Some("cam-7"));
+        assert_eq!(SubmitOptions::bulk().priority, Priority::Bulk);
+    }
+
+    fn request(deadline: Option<Duration>) -> (Request, Receiver<Response>, Arc<AtomicBool>) {
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let r = Request {
+            id: RequestId(1),
+            model: Arc::from("m"),
+            inputs: Vec::new(),
+            submitted: now,
+            priority: Priority::Standard,
+            deadline: deadline.map(|d| now + d),
+            cancelled: cancelled.clone(),
+            client_tag: None,
+            reply: tx,
+        };
+        (r, rx, cancelled)
+    }
+
+    #[test]
+    fn shed_response_checks_cancel_then_deadline() {
+        let (r, _rx, cancelled) = request(None);
+        assert!(r.shed_response(Instant::now()).is_none());
+        cancelled.store(true, Ordering::Release);
+        assert_eq!(r.shed_response(Instant::now()).unwrap().status, ResponseStatus::Cancelled);
+
+        let (r, _rx, _) = request(Some(Duration::ZERO));
+        let late = Instant::now() + Duration::from_millis(1);
+        assert_eq!(r.shed_response(late).unwrap().status, ResponseStatus::Expired);
+
+        let (r, _rx, _) = request(Some(Duration::from_secs(60)));
+        assert!(r.shed_response(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn ticket_cancel_and_poll() {
+        let (tx, rx) = channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let t = Ticket::new(RequestId(9), Priority::Interactive, rx, cancelled.clone());
+        assert_eq!(t.id(), RequestId(9));
+        assert_eq!(t.priority(), Priority::Interactive);
+        assert!(t.try_poll().is_none());
+        assert!(!t.is_cancelled());
+        t.cancel();
+        t.cancel(); // idempotent
+        assert!(cancelled.load(Ordering::Acquire));
+        tx.send(Response::cancelled(RequestId(9))).unwrap();
+        assert_eq!(t.try_poll().unwrap().status, ResponseStatus::Cancelled);
+        // exactly one response per ticket
+        assert!(t.try_poll().is_none());
+        drop(tx);
+        assert!(t.wait_timeout(Duration::from_millis(10)).is_err());
+        assert!(t.wait().is_err());
     }
 }

@@ -1,13 +1,16 @@
 //! The serving loop: batcher thread + worker pool over an
-//! [`InferenceBackend`].
+//! [`InferenceBackend`], fronted by the [`ServingService`] submission
+//! surface.
 //!
 //! Wire-up (std threads, no async runtime in this environment):
-//! * clients send [`Request`]s through [`ServerHandle::submit`] (admission
-//!   happens there);
-//! * one batcher thread forms [`Batch`]es;
-//! * `workers` threads pull batches from a shared channel, ask the
-//!   [`Router`] for placements, pack typed spec-driven input batches, run
-//!   them on the backend, and demux typed responses.
+//! * clients submit through [`ServingService::submit_with`] (admission
+//!   happens there) and hold the returned [`Ticket`];
+//! * one batcher thread forms [`Batch`]es — priority-aware, shedding
+//!   cancelled/expired requests at formation time;
+//! * `workers` threads pull batches from a shared channel, re-check the
+//!   shed conditions immediately before execution, ask the [`Router`]
+//!   for placements, pack typed spec-driven input batches, run them on
+//!   the backend, and demux typed responses.
 //!
 //! The backend is any [`InferenceBackend`] — PJRT (feature `pjrt`),
 //! [`SimBackend`](crate::backend::SimBackend), or
@@ -15,15 +18,17 @@
 //! driven entirely by the artifact's `TensorSpec`s, so token models and
 //! image models serve through the same path.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::admission::{Admission, AdmissionDecision};
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
-use super::metrics::Metrics;
-use super::request::{Request, RequestId, Response};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{
+    Priority, Request, RequestId, Response, SubmitOptions, Ticket,
+};
 use super::router::{Placement, Router};
 use crate::backend::{InferenceBackend, Value};
 use crate::runtime::manifest::Manifest;
@@ -45,6 +50,37 @@ impl Default for ServerConfig {
     }
 }
 
+/// The submission surface of a running serving stack — what application
+/// code should depend on, rather than the concrete [`ServerHandle`].
+///
+/// **Shutdown semantics:** handles are cheap clones that may outlive the
+/// [`Server`]; dropping one never stops serving. [`Server::shutdown`]
+/// signals stop, drains already-queued work (every in-flight ticket
+/// still receives exactly one [`Response`]), and joins the threads.
+/// Submissions racing a shutdown are rejected with
+/// [`AdmissionDecision::RejectQueueFull`].
+pub trait ServingService {
+    /// Submit a typed request (one sample-shaped [`Value`] per model
+    /// input) with explicit QoS options; returns the [`Ticket`] to wait
+    /// on, or an immediate rejection.
+    fn submit_with(
+        &self,
+        model: &str,
+        inputs: Vec<Value>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, AdmissionDecision>;
+
+    /// [`submit_with`](ServingService::submit_with) under
+    /// [`SubmitOptions::default`] — the mechanical migration target for
+    /// PR 1-era two-arg call sites.
+    fn submit(&self, model: &str, inputs: Vec<Value>) -> Result<Ticket, AdmissionDecision> {
+        self.submit_with(model, inputs, SubmitOptions::default())
+    }
+
+    /// Typed point-in-time metrics for this serving stack.
+    fn metrics_snapshot(&self) -> MetricsSnapshot;
+}
+
 /// Running server; call [`shutdown`](Server::shutdown) to stop cleanly.
 pub struct Server {
     handle: ServerHandle,
@@ -52,7 +88,8 @@ pub struct Server {
     stop: Arc<std::sync::atomic::AtomicBool>,
 }
 
-/// Cheap-to-clone submission handle.
+/// Cheap-to-clone submission handle — the [`ServingService`]
+/// implementation backed by a [`Server`]'s queues.
 #[derive(Clone)]
 pub struct ServerHandle {
     tx: Sender<Request>,
@@ -61,54 +98,77 @@ pub struct ServerHandle {
     next_id: Arc<std::sync::atomic::AtomicU64>,
 }
 
-impl ServerHandle {
-    /// Submit a typed request (one sample-shaped [`Value`] per model
-    /// input); returns the receiver for its response, or an immediate
-    /// rejection.
-    pub fn submit(
+impl ServingService for ServerHandle {
+    fn submit_with(
         &self,
         model: &str,
         inputs: Vec<Value>,
-    ) -> Result<(RequestId, Receiver<Response>), AdmissionDecision> {
-        match self.admission.try_admit() {
+        opts: SubmitOptions,
+    ) -> Result<Ticket, AdmissionDecision> {
+        let class = opts.priority;
+        match self.admission.try_admit(class) {
             AdmissionDecision::Admit => {}
             other => {
-                self.metrics
-                    .rejected
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics.record_rejected();
                 return Err(other);
             }
         }
-        self.metrics
-            .admitted
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.record_admitted(class);
         let id = RequestId(
             self.next_id
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
         );
         let (rtx, rrx) = channel();
+        let cancelled = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let now = Instant::now();
         let req = Request {
             id,
             model: Arc::from(model),
             inputs,
-            submitted: Instant::now(),
+            submitted: now,
+            priority: class,
+            deadline: opts.deadline.map(|d| now + d),
+            cancelled: cancelled.clone(),
+            client_tag: opts.client_tag.map(Arc::from),
             reply: rtx,
         };
         // channel send can only fail after shutdown; surface as queue-full
+        // AND fix the books: the request was never enqueued, so it is a
+        // rejection — back out the admitted count (the old code left
+        // `admitted` incremented here, skewing admitted vs
+        // completed+rejected forever after a shutdown race).
         if self.tx.send(req).is_err() {
-            self.admission.complete();
-            return Err(AdmissionDecision::RejectQueueFull);
+            self.admission.complete(class);
+            self.metrics.unrecord_admitted(class);
+            self.metrics.record_rejected();
+            return Err(AdmissionDecision::RejectQueueFull(class));
         }
-        Ok((id, rrx))
+        Ok(Ticket::new(id, class, rrx, cancelled))
     }
 
-    /// Convenience for single-input token models (BERT-style).
-    pub fn submit_tokens(
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+}
+
+impl ServerHandle {
+    /// Inherent mirrors of the [`ServingService`] methods, so call sites
+    /// holding a concrete handle don't need the trait in scope.
+    pub fn submit_with(
         &self,
         model: &str,
-        tokens: Vec<i32>,
-    ) -> Result<(RequestId, Receiver<Response>), AdmissionDecision> {
-        self.submit(model, vec![Value::I32(tokens)])
+        inputs: Vec<Value>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, AdmissionDecision> {
+        ServingService::submit_with(self, model, inputs, opts)
+    }
+
+    pub fn submit(&self, model: &str, inputs: Vec<Value>) -> Result<Ticket, AdmissionDecision> {
+        ServingService::submit(self, model, inputs)
+    }
+
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        ServingService::metrics_snapshot(self)
     }
 }
 
@@ -121,7 +181,14 @@ impl Server {
         backend: Arc<dyn InferenceBackend>,
     ) -> Server {
         let (req_tx, req_rx) = channel::<Request>();
-        let (batch_tx, batch_rx) = channel::<Batch>();
+        // bounded hand-off (capacity 1): if batches queued eagerly in an
+        // unbounded channel, the whole backlog would be frozen into FIFO
+        // batches the moment it arrived and priority/deadline decisions
+        // could never apply to it. Backpressure keeps the backlog in the
+        // batcher's stash, where Interactive still overtakes and dead
+        // requests are shed. Formation is µs-cheap vs execution, so one
+        // batch of slack never starves the workers.
+        let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<Batch>(1);
         let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::depth_only(cfg.max_inflight));
@@ -132,11 +199,14 @@ impl Server {
         {
             let bcfg = cfg.batcher;
             let stop = stop.clone();
+            let metrics = metrics.clone();
+            let admission = admission.clone();
             threads.push(
                 std::thread::Builder::new()
                     .name("s4-batcher".into())
                     .spawn(move || {
-                        let mut b = DynamicBatcher::with_stop(bcfg, req_rx, stop);
+                        let mut b = DynamicBatcher::with_stop(bcfg, req_rx, stop)
+                            .with_shed_accounting(metrics, admission);
                         while let Some(batch) = b.next_batch() {
                             if batch_tx.send(batch).is_err() {
                                 break;
@@ -166,9 +236,15 @@ impl Server {
                                 rx.recv()
                             };
                             let Ok(batch) = batch else { break };
-                            serve_batch(&batch, &manifest, &router, &*backend, &metrics);
-                            for _ in 0..batch.len() {
-                                admission.complete();
+                            // every request in the batch holds an
+                            // admission slot; serve_batch answers each
+                            // exactly once (served, failed, or shed), so
+                            // complete per class afterwards
+                            let classes: Vec<Priority> =
+                                batch.requests.iter().map(|r| r.priority).collect();
+                            serve_batch(batch, &manifest, &router, &*backend, &metrics);
+                            for c in classes {
+                                admission.complete(c);
                             }
                         }
                     })
@@ -204,18 +280,37 @@ impl Server {
     }
 }
 
-/// Execute one formed batch: plan placements, pack, run, demux responses.
+/// Execute one formed batch: shed dead requests, plan placements, pack,
+/// run, demux responses.
 fn serve_batch(
-    batch: &Batch,
+    batch: Batch,
     manifest: &Manifest,
     router: &Router,
     backend: &dyn InferenceBackend,
     metrics: &Metrics,
 ) {
-    let placements = match router.plan(manifest, &batch.model, batch.len()) {
+    let Batch { model, requests, formed_at } = batch;
+    // pre-execution shed: the cancel/deadline re-check closest to the
+    // backend — work cancelled or expired while queued behind earlier
+    // batches is dropped here, after which execution is committed
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(requests.len());
+    for r in requests {
+        match r.shed_response(now) {
+            Some(resp) => {
+                metrics.record_shed(&resp.status);
+                let _ = r.reply.send(resp);
+            }
+            None => live.push(r),
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let placements = match router.plan(manifest, &model, live.len()) {
         Ok(p) => p,
         Err(e) => {
-            for r in &batch.requests {
+            for r in &live {
                 metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let _ = r.reply.send(Response::error(r.id, format!("routing: {e}")));
             }
@@ -224,10 +319,10 @@ fn serve_batch(
     };
     let mut cursor = 0usize;
     for p in placements {
-        let reqs = &batch.requests[cursor..cursor + p.fill];
+        let reqs = &live[cursor..cursor + p.fill];
         cursor += p.fill;
         metrics.record_batch(p.fill, p.batch_capacity);
-        if let Err(e) = run_placement(&p, reqs, backend, batch.formed_at, metrics) {
+        if let Err(e) = run_placement(&p, reqs, backend, formed_at, metrics) {
             for r in reqs {
                 metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let _ = r.reply.send(Response::error(r.id, format!("backend: {e}")));
@@ -349,6 +444,9 @@ fn run_placement(
         );
     }
 
+    // one shared name for every response demuxed from this placement
+    // (refcount clone per request, not a fresh heap String)
+    let served_by: Arc<str> = Arc::from(p.artifact.as_str());
     for (ri, r) in reqs.iter().enumerate() {
         if let Some(msg) = bad[ri].take() {
             metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -366,16 +464,19 @@ fn run_placement(
         let latency = r.submitted.elapsed();
         let queue = formed_at.saturating_duration_since(r.submitted)
             + exec_start.saturating_duration_since(formed_at);
-        metrics.record_completion(latency.as_micros() as u64, queue.as_micros() as u64);
+        metrics.record_completion(
+            r.priority,
+            latency.as_micros() as u64,
+            queue.as_micros() as u64,
+        );
         let _ = r.reply.send(Response {
             id: r.id,
             outputs: outs,
-            served_by: p.artifact.clone(),
+            served_by: served_by.clone(),
             batch_size: p.batch_capacity,
             latency_us: latency.as_micros() as u64,
             queue_us: queue.as_micros() as u64,
-            ok: true,
-            error: None,
+            status: super::request::ResponseStatus::Ok,
         });
     }
     Ok(())
@@ -385,6 +486,7 @@ fn run_placement(
 mod tests {
     use super::*;
     use crate::backend::EchoBackend;
+    use crate::coordinator::request::ResponseStatus;
     use crate::coordinator::RoutingPolicy;
     use std::path::Path;
     use std::time::Duration;
@@ -421,9 +523,9 @@ mod tests {
             max_inflight: 16,
         });
         let h = srv.handle();
-        let (_, rx) = h.submit_tokens("bert_tiny", vec![42; 16]).unwrap();
-        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(resp.ok, "{:?}", resp.error);
+        let t = h.submit("bert_tiny", vec![Value::tokens(vec![42; 16])]).unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.is_ok(), "{:?}", resp.status);
         assert_eq!(resp.logits()[0], 42.0);
         srv.shutdown();
     }
@@ -438,10 +540,10 @@ mod tests {
         let h = srv.handle();
         let mut pixels = vec![0.0f32; 48];
         pixels[0] = 0.625;
-        let (_, rx) = h.submit("resnet50", vec![Value::F32(pixels)]).unwrap();
-        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(resp.ok, "{:?}", resp.error);
-        assert_eq!(resp.served_by, "resnet50_s8_b4");
+        let t = h.submit("resnet50", vec![Value::F32(pixels)]).unwrap();
+        let resp = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.is_ok(), "{:?}", resp.status);
+        assert_eq!(&*resp.served_by, "resnet50_s8_b4");
         assert_eq!(resp.logits().len(), 10);
         assert_eq!(resp.logits()[0], 0.625);
         srv.shutdown();
@@ -455,12 +557,12 @@ mod tests {
             max_inflight: 64,
         });
         let h = srv.handle();
-        let rxs: Vec<_> = (0..16)
-            .map(|i| h.submit_tokens("bert_tiny", vec![i; 16]).unwrap().1)
+        let tickets: Vec<_> = (0..16)
+            .map(|i| h.submit("bert_tiny", vec![Value::tokens(vec![i; 16])]).unwrap())
             .collect();
-        for rx in rxs {
-            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-            assert!(r.ok);
+        for t in tickets {
+            let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.is_ok());
         }
         // under instant backend + 20ms window, the 16 requests should ride
         // few batches with strong fill
@@ -472,10 +574,10 @@ mod tests {
     fn unknown_model_errors_cleanly() {
         let srv = echo_server(ServerConfig::default());
         let h = srv.handle();
-        let (_, rx) = h.submit_tokens("nonexistent", vec![1; 16]).unwrap();
-        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(!r.ok);
-        assert!(r.error.unwrap().contains("routing"));
+        let t = h.submit("nonexistent", vec![Value::tokens(vec![1; 16])]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r.is_ok());
+        assert!(r.error_message().unwrap().contains("routing"));
         srv.shutdown();
     }
 
@@ -489,13 +591,13 @@ mod tests {
         let h = srv.handle();
         // an f32 payload for a token model rides the same batch as a good
         // request; only the bad one fails
-        let (_, rx_bad) = h.submit("bert_tiny", vec![Value::F32(vec![1.0; 16])]).unwrap();
-        let (_, rx_ok) = h.submit_tokens("bert_tiny", vec![5; 16]).unwrap();
-        let bad = rx_bad.recv_timeout(Duration::from_secs(5)).unwrap();
-        let ok = rx_ok.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(!bad.ok);
-        assert!(bad.error.unwrap().contains("dtype"));
-        assert!(ok.ok, "{:?}", ok.error);
+        let t_bad = h.submit("bert_tiny", vec![Value::F32(vec![1.0; 16])]).unwrap();
+        let t_ok = h.submit("bert_tiny", vec![Value::tokens(vec![5; 16])]).unwrap();
+        let bad = t_bad.wait_timeout(Duration::from_secs(5)).unwrap();
+        let ok = t_ok.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!bad.is_ok());
+        assert!(bad.error_message().unwrap().contains("dtype"));
+        assert!(ok.is_ok(), "{:?}", ok.status);
         assert_eq!(ok.logits()[0], 5.0);
         srv.shutdown();
     }
@@ -504,10 +606,10 @@ mod tests {
     fn missing_input_fails_cleanly() {
         let srv = echo_server(ServerConfig::default());
         let h = srv.handle();
-        let (_, rx) = h.submit("bert_tiny", Vec::new()).unwrap();
-        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
-        assert!(!r.ok);
-        assert!(r.error.unwrap().contains("missing input"));
+        let t = h.submit("bert_tiny", Vec::new()).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r.is_ok());
+        assert!(r.error_message().unwrap().contains("missing input"));
         srv.shutdown();
     }
 
@@ -520,13 +622,88 @@ mod tests {
             max_inflight: 1,
         });
         let h = srv.handle();
-        let (_, _rx1) = h.submit_tokens("bert_tiny", vec![1; 16]).unwrap();
+        let _t1 = h.submit("bert_tiny", vec![Value::tokens(vec![1; 16])]).unwrap();
         // immediately after, capacity is full until the worker drains it
-        let second = h.submit_tokens("bert_tiny", vec![2; 16]);
+        let second = h.submit("bert_tiny", vec![Value::tokens(vec![2; 16])]);
         if let Err(d) = second {
-            assert_eq!(d, AdmissionDecision::RejectQueueFull);
+            assert_eq!(d, AdmissionDecision::RejectQueueFull(Priority::Standard));
         }
         srv.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_a_rejection_not_an_admission() {
+        // satellite regression: the send-failure path used to leave
+        // `admitted` incremented while returning a rejection
+        let srv = echo_server(ServerConfig::default());
+        let h = srv.handle();
+        srv.shutdown();
+        let r = h.submit("bert_tiny", vec![Value::tokens(vec![1; 16])]);
+        assert!(matches!(r, Err(AdmissionDecision::RejectQueueFull(Priority::Standard))));
+        let s = h.metrics_snapshot();
+        assert_eq!(s.admitted, 0, "failed enqueue must not count as admitted");
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.class(Priority::Standard).admitted, 0);
+        assert_eq!(h.metrics.admitted.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn submit_with_carries_priority_and_tag() {
+        let srv = echo_server(ServerConfig::default());
+        let h = srv.handle();
+        let t = h
+            .submit_with(
+                "bert_tiny",
+                vec![Value::tokens(vec![9; 16])],
+                SubmitOptions::interactive().with_client_tag("probe"),
+            )
+            .unwrap();
+        assert_eq!(t.priority(), Priority::Interactive);
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.is_ok(), "{:?}", r.status);
+        let s = h.metrics_snapshot();
+        assert_eq!(s.class(Priority::Interactive).admitted, 1);
+        assert_eq!(s.class(Priority::Interactive).completed, 1);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn pre_execution_shed_answers_expired_without_running() {
+        // deadline already passed when the worker sees the batch
+        let m = manifest();
+        let backend = EchoBackend::from_manifest(&m);
+        let (tx, rx) = channel();
+        let now = Instant::now();
+        let req = Request {
+            id: RequestId(1),
+            model: Arc::from("bert_tiny"),
+            inputs: vec![Value::tokens(vec![1; 16])],
+            submitted: now,
+            priority: Priority::Standard,
+            deadline: Some(now), // expired immediately
+            cancelled: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+            client_tag: None,
+            reply: tx,
+        };
+        let metrics = Metrics::new();
+        let batch = Batch {
+            model: req.model.clone(),
+            requests: vec![req],
+            formed_at: Instant::now(),
+        };
+        std::thread::sleep(Duration::from_millis(1));
+        serve_batch(
+            batch,
+            &m,
+            &Router::new(RoutingPolicy::MaxSparsity),
+            &backend,
+            &metrics,
+        );
+        let resp = rx.try_recv().unwrap();
+        assert_eq!(resp.status, ResponseStatus::Expired);
+        assert_eq!(metrics.expired.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 0);
+        assert_eq!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -39,9 +39,15 @@
 //!   contract with `python/compile/aot.py`) and, behind the `pjrt`
 //!   feature, the PJRT bridge that compiles and executes the AOT-lowered
 //!   HLO. Python never runs at serve time.
-//! * [`coordinator`] — the SparseRT serving layer: typed multi-tensor
-//!   requests, request router, dynamic batcher, admission control, worker
-//!   pool, metrics — generic over any [`backend::InferenceBackend`].
+//! * [`coordinator`] — the SparseRT serving layer: the QoS-aware
+//!   [`coordinator::ServingService`] submission surface
+//!   ([`coordinator::SubmitOptions`] priority/deadline/tag,
+//!   [`coordinator::Ticket`] wait/poll/cancel handles, typed
+//!   [`coordinator::ResponseStatus`] outcomes), request router,
+//!   priority-aware dynamic batcher with deadline/cancel shedding,
+//!   per-class admission control, worker pool, metrics
+//!   ([`coordinator::MetricsSnapshot`]) — generic over any
+//!   [`backend::InferenceBackend`].
 //! * [`util`] — in-repo substrates this environment lacks crates for:
 //!   JSON, deterministic RNG, stats, CLI parsing, a bench harness (with
 //!   the `BENCH_<topic>.json` machine-readable perf-trajectory writer —
@@ -72,12 +78,15 @@
 //!          r.latency_ms, r.throughput);
 //! ```
 //!
-//! Serve — any model, text or vision, goes through one trait:
+//! Serve — any model, text or vision, goes through one trait; every
+//! submission returns a [`coordinator::Ticket`] and takes optional QoS
+//! ([`coordinator::SubmitOptions`]: priority class, deadline, tag):
 //!
 //! ```no_run
 //! use std::sync::Arc;
+//! use std::time::Duration;
 //! use s4::backend::{SimBackend, Value};
-//! use s4::coordinator::{Router, RoutingPolicy, Server, ServerConfig};
+//! use s4::coordinator::{Router, RoutingPolicy, Server, ServerConfig, SubmitOptions};
 //! use s4::runtime::{default_artifact_dir, Manifest};
 //!
 //! let manifest = Manifest::load(&default_artifact_dir()).unwrap();
@@ -85,8 +94,16 @@
 //! let srv = Server::start(ServerConfig::default(), manifest,
 //!                         Router::new(RoutingPolicy::MaxSparsity), backend);
 //! let h = srv.handle();
-//! let (_, rx) = h.submit("bert_tiny", vec![Value::I32(vec![42; 128])]).unwrap();
-//! println!("logits: {:?}", rx.recv().unwrap().logits());
+//! // default options (Standard priority, no deadline)
+//! let t = h.submit("bert_tiny", vec![Value::tokens(vec![42; 128])]).unwrap();
+//! println!("logits: {:?}", t.wait().unwrap().logits());
+//! // latency-critical, shed if not executed within 20ms, cancellable
+//! let t = h.submit_with("bert_tiny", vec![Value::tokens(vec![7; 128])],
+//!                       SubmitOptions::interactive()
+//!                           .with_deadline(Duration::from_millis(20))).unwrap();
+//! if t.try_poll().is_none() { t.cancel(); }
+//! println!("outcome: {:?}", t.wait().unwrap().status);
+//! println!("{}", h.metrics_snapshot().report());
 //! srv.shutdown();
 //! ```
 

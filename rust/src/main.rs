@@ -56,6 +56,8 @@ fn print_help() {
            residency --model M [--sparsity S]\n\
            serve     [--requests N] [--rate R] [--policy max|dense|fixed:S]\n\
                      [--backend cpu|sim|echo] [--precision f32|int8]\n\
+                     [--default-priority interactive|standard|bulk]\n\
+                     [--deadline-ms D]\n\
            help\n\
          \n\
          MODELS: resnet50 resnet152 bert_tiny bert_mini bert_base bert_large"
@@ -161,9 +163,10 @@ fn cmd_residency(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use s4::backend::Value;
     use s4::coordinator::{
-        CpuSparseBackend, EchoBackend, InferenceBackend, Precision, Router, RoutingPolicy,
-        Server, ServerConfig, SimBackend,
+        CpuSparseBackend, EchoBackend, InferenceBackend, Precision, Priority, Router,
+        RoutingPolicy, Server, ServerConfig, SimBackend, SubmitOptions,
     };
     use s4::runtime::{default_artifact_dir, Manifest};
     use std::sync::Arc;
@@ -176,6 +179,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         p if p.starts_with("fixed:") => RoutingPolicy::Fixed(p[6..].parse()?),
         p => anyhow::bail!("unknown policy {p:?}"),
     };
+    // QoS defaults for every request this driver submits
+    let priority = Priority::parse(args.get_or("default-priority", "standard"))?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let mut opts = SubmitOptions::default().with_priority(priority);
+    if deadline_ms > 0 {
+        opts = opts.with_deadline(std::time::Duration::from_millis(deadline_ms));
+    }
     let manifest = Manifest::load(&default_artifact_dir())?;
     // precision override for the cpu backend: f32 | int8 (default:
     // per-artifact from the manifest)
@@ -199,24 +209,32 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
     let h = srv.handle();
     let mut rng = s4::util::rng::Xoshiro256::seed_from_u64(7);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for _ in 0..n {
         std::thread::sleep(std::time::Duration::from_secs_f64(rng.next_exp(rate)));
         let tokens: Vec<i32> = (0..128).map(|_| rng.next_below(1000) as i32).collect();
-        match h.submit_tokens("bert_tiny", tokens) {
-            Ok((_, rx)) => rxs.push(rx),
+        match h.submit_with("bert_tiny", vec![Value::tokens(tokens)], opts.clone()) {
+            Ok(t) => tickets.push(t),
             Err(d) => println!("rejected: {d:?}"),
         }
     }
-    let mut ok = 0;
-    for rx in rxs {
-        if rx.recv_timeout(std::time::Duration::from_secs(30)).map(|r| r.ok).unwrap_or(false)
-        {
-            ok += 1;
+    let (mut ok, mut shed) = (0, 0);
+    for t in tickets {
+        match t.wait_timeout(std::time::Duration::from_secs(30)) {
+            Ok(r) if r.is_ok() => ok += 1,
+            Ok(r) if matches!(
+                r.status,
+                s4::coordinator::ResponseStatus::Expired
+                    | s4::coordinator::ResponseStatus::Cancelled
+            ) =>
+            {
+                shed += 1
+            }
+            _ => {}
         }
     }
-    println!("served {ok}/{n} requests");
-    println!("{}", h.metrics.report());
+    println!("served {ok}/{n} requests ({shed} shed by deadline/cancel)");
+    println!("{}", h.metrics_snapshot().report());
     srv.shutdown();
     Ok(())
 }

@@ -50,14 +50,14 @@ fn bert_served_logits_are_real_and_deterministic() {
 
     // same payload submitted twice (it may ride different artifact
     // variants/batches) → identical logits
-    let (_, rx1) = h.submit_tokens("bert_tiny", tokens(3)).unwrap();
-    let (_, rx2) = h.submit_tokens("bert_tiny", tokens(3)).unwrap();
-    let (_, rx3) = h.submit_tokens("bert_tiny", tokens(4)).unwrap();
-    let r1 = rx1.recv_timeout(Duration::from_secs(10)).unwrap();
-    let r2 = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
-    let r3 = rx3.recv_timeout(Duration::from_secs(10)).unwrap();
-    assert!(r1.ok, "{:?}", r1.error);
-    assert!(r2.ok && r3.ok);
+    let t1 = h.submit("bert_tiny", vec![Value::tokens(tokens(3))]).unwrap();
+    let t2 = h.submit("bert_tiny", vec![Value::tokens(tokens(3))]).unwrap();
+    let t3 = h.submit("bert_tiny", vec![Value::tokens(tokens(4))]).unwrap();
+    let r1 = t1.wait_timeout(Duration::from_secs(10)).unwrap();
+    let r2 = t2.wait_timeout(Duration::from_secs(10)).unwrap();
+    let r3 = t3.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert!(r1.is_ok(), "{:?}", r1.status);
+    assert!(r2.is_ok() && r3.is_ok());
     assert_eq!(r1.logits().len(), 2);
     assert_eq!(r1.logits(), r2.logits(), "same input must give same logits");
     assert_ne!(r1.logits(), r3.logits(), "different input must give different logits");
@@ -88,9 +88,9 @@ fn served_logits_match_direct_backend_execution() {
 
     let srv = server(m);
     let h = srv.handle();
-    let (_, rx) = h.submit_tokens("bert_tiny", ids).unwrap();
-    let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
-    assert!(r.ok, "{:?}", r.error);
+    let t = h.submit("bert_tiny", vec![Value::tokens(ids)]).unwrap();
+    let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert!(r.is_ok(), "{:?}", r.status);
     assert_eq!(
         r.logits(),
         &direct_logits[..],
@@ -107,9 +107,9 @@ fn deterministic_across_server_instances() {
     let run = || {
         let srv = server(manifest());
         let h = srv.handle();
-        let (_, rx) = h.submit_tokens("bert_tiny", tokens(7)).unwrap();
-        let r = rx.recv_timeout(Duration::from_secs(10)).unwrap();
-        assert!(r.ok, "{:?}", r.error);
+        let t = h.submit("bert_tiny", vec![Value::tokens(tokens(7))]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r.is_ok(), "{:?}", r.status);
         let l = r.logits().to_vec();
         srv.shutdown();
         l

@@ -5,6 +5,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use s4::arch::AntoumConfig;
+use s4::backend::Value;
 use s4::coordinator::{
     BatcherConfig, Router, RoutingPolicy, Server, ServerConfig, SimBackend,
 };
@@ -168,16 +169,15 @@ fn serving_stack_under_simulated_load() {
         backend,
     );
     let h = srv.handle();
-    let rxs: Vec<_> = (0..48)
-        .filter_map(|i| h.submit_tokens("bert_tiny", vec![i as i32; 32]).ok())
-        .map(|(_, rx)| rx)
+    let tickets: Vec<_> = (0..48)
+        .filter_map(|i| h.submit("bert_tiny", vec![Value::tokens(vec![i as i32; 32])]).ok())
         .collect();
-    assert!(rxs.len() >= 40, "most requests admitted");
+    assert!(tickets.len() >= 40, "most requests admitted");
     let mut served_by_sparse = 0;
-    for rx in rxs {
-        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-        assert!(r.ok, "{:?}", r.error);
-        if r.served_by == "bert_tiny_s8_b8" {
+    for t in tickets {
+        let r = t.wait_timeout(Duration::from_secs(30)).unwrap();
+        assert!(r.is_ok(), "{:?}", r.status);
+        if &*r.served_by == "bert_tiny_s8_b8" {
             served_by_sparse += 1;
         }
     }
@@ -208,10 +208,10 @@ fn dense_policy_routes_dense() {
         backend,
     );
     let h = srv.handle();
-    let (_, rx) = h.submit_tokens("bert_tiny", vec![1; 16]).unwrap();
-    let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
-    assert!(r.ok);
-    assert_eq!(r.served_by, "m_s1_b1");
+    let t = h.submit("bert_tiny", vec![Value::tokens(vec![1; 16])]).unwrap();
+    let r = t.wait_timeout(Duration::from_secs(30)).unwrap();
+    assert!(r.is_ok());
+    assert_eq!(&*r.served_by, "m_s1_b1");
     srv.shutdown();
 }
 
@@ -220,7 +220,6 @@ fn tokens_and_images_serve_through_one_inference_backend() {
     // the acceptance claim of the unified API: a BERT-style token request
     // and a ResNet-style image request served by the same coordinator over
     // the same `InferenceBackend` instance
-    use s4::backend::Value;
     use s4::runtime::Manifest;
     let text = r#"{"artifacts": [
       {"name": "bert_tiny_s8_b4", "file": "x", "family": "bert",
@@ -245,16 +244,16 @@ fn tokens_and_images_serve_through_one_inference_backend() {
         backend,
     );
     let h = srv.handle();
-    let (_, rx_txt) = h.submit_tokens("bert_tiny", vec![7; 16]).unwrap();
-    let (_, rx_img) = h
+    let t_txt = h.submit("bert_tiny", vec![Value::tokens(vec![7; 16])]).unwrap();
+    let t_img = h
         .submit("resnet50", vec![Value::F32(vec![0.5; 192])])
         .unwrap();
-    let txt = rx_txt.recv_timeout(Duration::from_secs(30)).unwrap();
-    let img = rx_img.recv_timeout(Duration::from_secs(30)).unwrap();
-    assert!(txt.ok, "{:?}", txt.error);
-    assert!(img.ok, "{:?}", img.error);
-    assert_eq!(txt.served_by, "bert_tiny_s8_b4");
-    assert_eq!(img.served_by, "resnet50_s8_b4");
+    let txt = t_txt.wait_timeout(Duration::from_secs(30)).unwrap();
+    let img = t_img.wait_timeout(Duration::from_secs(30)).unwrap();
+    assert!(txt.is_ok(), "{:?}", txt.status);
+    assert!(img.is_ok(), "{:?}", img.status);
+    assert_eq!(&*txt.served_by, "bert_tiny_s8_b4");
+    assert_eq!(&*img.served_by, "resnet50_s8_b4");
     assert_eq!(txt.logits().len(), 2);
     assert_eq!(img.logits().len(), 10);
     srv.shutdown();

@@ -1,6 +1,7 @@
 //! Property-based tests (in-repo `util::prop` runner) over the coordinator
 //! and substrate invariants the brief calls out: routing conservation,
-//! batching non-loss, sparse-format structure, event-sim sanity.
+//! batching non-loss, priority-scheduling order, sparse-format structure,
+//! event-sim sanity.
 
 use s4::coordinator::{Router, RoutingPolicy};
 use s4::prop_assert;
@@ -56,6 +57,69 @@ fn prop_router_plan_conserves_requests() {
         let padded: usize = plan.iter().map(|p| p.batch_capacity - p.fill).sum();
         let max_cap = *caps.last().unwrap();
         prop_assert!(padded < max_cap, "padding {padded} ≥ largest cap {max_cap}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_formation_never_seeds_past_a_stashed_interactive() {
+    // the QoS scheduling invariant: with the whole backlog visible, a
+    // batch is never seeded from a lower-urgency class while a
+    // higher-urgency request (for ANY model) is still stashed — and no
+    // request is ever lost across batches
+    use s4::backend::Value;
+    use s4::coordinator::{BatcherConfig, DynamicBatcher, Priority, Request, RequestId};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::{mpsc, Arc};
+    use std::time::{Duration, Instant};
+
+    check("priority batch seeding", 80, |g: &mut Gen| {
+        let models = ["a", "b", "c"];
+        let n = g.usize_in(1, 30);
+        let max_batch = g.usize_in(1, 6);
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::new();
+        for i in 0..n {
+            let (rtx, rrx) = mpsc::channel();
+            let r = Request {
+                id: RequestId(i as u64),
+                model: Arc::from(*g.pick(&models)),
+                inputs: vec![Value::tokens(vec![0; 4])],
+                submitted: Instant::now(),
+                priority: *g.pick(&Priority::ALL),
+                deadline: None,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                client_tag: None,
+                reply: rtx,
+            };
+            tx.send(r).map_err(|e| e.to_string())?;
+            replies.push(rrx);
+        }
+        drop(tx); // all requests visible up front; no mid-fill arrivals
+        let mut b = DynamicBatcher::new(
+            BatcherConfig { max_batch, max_wait: Duration::ZERO },
+            rx,
+        );
+        let mut total = 0usize;
+        while let Some(batch) = b.next_batch() {
+            total += batch.len();
+            let seed = batch.requests[0].priority;
+            let depth = b.stash_depth_by_class();
+            for p in Priority::ALL {
+                if p < seed {
+                    prop_assert!(
+                        depth[p.idx()] == 0,
+                        "seeded {seed:?} while {} {p:?} request(s) stashed \
+                         (n={n} max_batch={max_batch})",
+                        depth[p.idx()]
+                    );
+                }
+            }
+            for r in &batch.requests {
+                prop_assert!(r.model == batch.model, "mixed-model batch");
+            }
+        }
+        prop_assert!(total == n, "lost requests: batched {total} of {n}");
         Ok(())
     });
 }

@@ -1,0 +1,314 @@
+//! Lifecycle tests for the v2 serving surface: deadlines, cancellation,
+//! per-class accounting, and the `ServingService` conformance contract
+//! (the coordinator is a transparent transport around the backend for
+//! default options).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, Value};
+use s4::coordinator::{
+    BatcherConfig, Priority, ResponseStatus, Router, RoutingPolicy, Server, ServerConfig,
+    ServingService, SubmitOptions,
+};
+use s4::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b4", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 4, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [4, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+fn echo_server(max_wait_ms: u64) -> Server {
+    let m = manifest();
+    let backend = Arc::new(EchoBackend::from_manifest(&m));
+    Server::start(
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+            workers: 2,
+            max_inflight: 64,
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    )
+}
+
+fn tokens(seed: i32) -> Vec<i32> {
+    (0..16).map(|t| (seed * 31 + t * 7) % 997).collect()
+}
+
+#[test]
+fn deadline_expired_request_is_shed_without_executing() {
+    let srv = echo_server(1);
+    let h = srv.handle();
+    // a deadline of zero has already elapsed when the batcher first sees
+    // the request — it must be answered Expired and never executed
+    let t = h
+        .submit_with(
+            "bert_tiny",
+            vec![Value::tokens(tokens(1))],
+            SubmitOptions::default().with_deadline(Duration::ZERO),
+        )
+        .unwrap();
+    let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(r.status, ResponseStatus::Expired);
+    assert!(!r.is_ok());
+    assert!(r.outputs.is_empty(), "expired work must produce no outputs");
+    assert!(r.logits().is_empty());
+    // the shed happened before any backend execution
+    let s = h.metrics_snapshot();
+    assert_eq!(s.expired, 1);
+    assert_eq!(s.completed, 0);
+    assert_eq!(s.batches, 0, "no batch may be executed for expired-only work");
+    assert_eq!(s.answered(), s.admitted);
+    srv.shutdown();
+}
+
+#[test]
+fn generous_deadline_still_serves() {
+    let srv = echo_server(1);
+    let h = srv.handle();
+    let t = h
+        .submit_with(
+            "bert_tiny",
+            vec![Value::tokens(tokens(2))],
+            SubmitOptions::interactive().with_deadline(Duration::from_secs(30)),
+        )
+        .unwrap();
+    let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert!(r.is_ok(), "{:?}", r.status);
+    srv.shutdown();
+}
+
+#[test]
+fn cancel_racing_execution_never_double_replies() {
+    // cancel at every point of the pipeline (before formation, during
+    // batching, after completion): the ticket always resolves to exactly
+    // one response, Ok or Cancelled
+    let srv = echo_server(1);
+    let h = srv.handle();
+    let (mut oks, mut cancels) = (0u32, 0u32);
+    for i in 0..60 {
+        let t = h
+            .submit("bert_tiny", vec![Value::tokens(tokens(i))])
+            .unwrap();
+        // vary the race window
+        if i % 3 == 0 {
+            std::thread::sleep(Duration::from_micros((i as u64 % 7) * 300));
+        }
+        t.cancel();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        match r.status {
+            ResponseStatus::Ok => oks += 1,
+            ResponseStatus::Cancelled => {
+                assert!(r.outputs.is_empty());
+                cancels += 1;
+            }
+            other => panic!("unexpected status {other:?}"),
+        }
+        // never a second reply
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t.try_poll().is_none(), "double reply on request {i}");
+    }
+    // the books balance no matter how each race resolved
+    let s = h.metrics_snapshot();
+    assert_eq!(s.admitted, 60);
+    assert_eq!(s.completed, oks as u64);
+    assert_eq!(s.cancelled, cancels as u64);
+    assert_eq!(s.answered(), s.admitted, "{}", s.report());
+    srv.shutdown();
+}
+
+#[test]
+fn per_class_counters_track_mixed_traffic() {
+    let srv = echo_server(1);
+    let h = srv.handle();
+    let mut tickets = Vec::new();
+    for i in 0..12 {
+        let opts = match i % 3 {
+            0 => SubmitOptions::interactive(),
+            1 => SubmitOptions::default(),
+            _ => SubmitOptions::bulk(),
+        };
+        tickets.push(
+            h.submit_with("bert_tiny", vec![Value::tokens(tokens(i))], opts)
+                .unwrap(),
+        );
+    }
+    for t in &tickets {
+        assert!(t.wait_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    }
+    let s = h.metrics_snapshot();
+    for p in Priority::ALL {
+        assert_eq!(s.class(p).admitted, 4, "{}", s.report());
+        assert_eq!(s.class(p).completed, 4, "{}", s.report());
+    }
+    assert_eq!(s.answered(), 12);
+    srv.shutdown();
+}
+
+#[test]
+fn bulk_admission_budget_protects_the_queue() {
+    // max_inflight 16 → default bulk cap 4: a bulk flood is clipped while
+    // interactive traffic still admits
+    let m = manifest();
+    let backend = Arc::new(EchoBackend::from_manifest(&m));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig {
+                // max_batch above the submission count and a long fill
+                // window: every submission lands while the first batch is
+                // still forming, so nothing completes mid-loop and the
+                // admission counts below are deterministic
+                max_batch: 8,
+                max_wait: Duration::from_millis(200),
+            },
+            workers: 1,
+            max_inflight: 16,
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let mut bulk_ok = 0;
+    let mut bulk_rejected = 0;
+    let mut keep = Vec::new();
+    for i in 0..10 {
+        match h.submit_with(
+            "bert_tiny",
+            vec![Value::tokens(tokens(i))],
+            SubmitOptions::bulk(),
+        ) {
+            Ok(t) => {
+                bulk_ok += 1;
+                keep.push(t);
+            }
+            Err(d) => {
+                assert!(matches!(
+                    d,
+                    s4::coordinator::AdmissionDecision::RejectQueueFull(Priority::Bulk)
+                ));
+                bulk_rejected += 1;
+            }
+        }
+    }
+    assert_eq!(bulk_ok, 4, "bulk budget is max_inflight/4");
+    assert_eq!(bulk_rejected, 6);
+    // interactive still has headroom
+    let t = h
+        .submit_with(
+            "bert_tiny",
+            vec![Value::tokens(tokens(99))],
+            SubmitOptions::interactive(),
+        )
+        .unwrap();
+    keep.push(t);
+    for t in &keep {
+        assert!(t.wait_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn serving_service_matches_direct_backend_execution() {
+    // conformance: submitting through the `ServingService` trait object
+    // with default options yields bitwise the logits of direct backend
+    // execution — the coordinator adds QoS, not numerics
+    let m = manifest();
+    let backend = CpuSparseBackend::from_manifest(&m);
+    let ids = tokens(11);
+    let direct = backend
+        .run_batch("bert_tiny_s8_b1", &[Value::tokens(ids.clone())])
+        .unwrap();
+    let direct_logits = direct[0].as_f32().unwrap().to_vec();
+
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            workers: 2,
+            max_inflight: 64,
+        },
+        manifest(),
+        Router::new(RoutingPolicy::MaxSparsity),
+        Arc::new(CpuSparseBackend::from_manifest(&manifest())),
+    );
+    let handle = srv.handle();
+    let svc: &dyn ServingService = &handle;
+    let t = svc.submit("bert_tiny", vec![Value::tokens(ids)]).unwrap();
+    assert_eq!(t.priority(), Priority::Standard, "default options are Standard");
+    let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert!(r.is_ok(), "{:?}", r.status);
+    assert_eq!(
+        r.logits(),
+        &direct_logits[..],
+        "served logits must equal direct backend execution (rode {})",
+        r.served_by
+    );
+    let snap = svc.metrics_snapshot();
+    assert_eq!(snap.completed, 1);
+    srv.shutdown();
+}
+
+#[test]
+fn shed_requests_release_admission_capacity() {
+    // a cancelled backlog must not clog max_inflight: after shedding,
+    // new submissions admit again
+    let m = manifest();
+    let backend = Arc::new(EchoBackend::from_manifest(&m));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            max_inflight: 4,
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let tickets: Vec<_> = (0..4)
+        .map(|i| h.submit("bert_tiny", vec![Value::tokens(tokens(i))]).unwrap())
+        .collect();
+    for t in &tickets {
+        t.cancel();
+    }
+    for t in &tickets {
+        // each resolves exactly once (served or cancelled)
+        let _ = t.wait_timeout(Duration::from_secs(5)).unwrap();
+    }
+    // capacity is back: a fresh submit admits (the slot release runs
+    // just after the response send, so allow a bounded settle window)
+    let deadline = std::time::Instant::now() + Duration::from_secs(2);
+    let t = loop {
+        match h.submit("bert_tiny", vec![Value::tokens(tokens(9))]) {
+            Ok(t) => break t,
+            Err(_) => {
+                assert!(std::time::Instant::now() < deadline, "capacity never released");
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+    };
+    assert!(t.wait_timeout(Duration::from_secs(5)).unwrap().is_ok());
+    let s = h.metrics_snapshot();
+    assert_eq!(s.answered(), s.admitted, "{}", s.report());
+    assert_eq!(
+        h.metrics.admitted.load(Ordering::Relaxed),
+        s.admitted,
+        "snapshot mirrors raw counters"
+    );
+    srv.shutdown();
+}
