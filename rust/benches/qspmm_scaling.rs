@@ -40,14 +40,20 @@ fn main() -> anyhow::Result<()> {
         Bench::default()
     };
     let (m, k, n) = if smoke { (32, 256, 128) } else { (128, 1024, 256) };
-    let threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    // clamp the sweep to what the ExecPool can actually dispatch (see
+    // spmm_scaling.rs — points past the cap would re-measure the cap)
+    let pool = s4::sparse::ExecPool::global();
+    let cap = pool.participants();
+    let mut threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    pool.clamp_thread_sweep(&mut threads);
     let x = Dense2::randn(m, k, 1);
     let wd = Dense2::randn(k, n, 2);
     let dense_flops = 2.0 * (m * k * n) as f64;
 
-    println!("== qspmm scaling: int8 vs f32 ({m}x{k}x{n}, threads {threads:?}) ==");
+    println!("== qspmm scaling: int8 vs f32 ({m}x{k}x{n}, threads {threads:?} cap {cap}) ==");
     let mut report = JsonReport::new("qspmm");
     report.set("smoke", Json::Bool(smoke));
+    report.set_effective_workers(threads.iter().copied().max().unwrap_or(1));
     report.set(
         "shape",
         Json::obj(vec![

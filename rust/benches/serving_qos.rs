@@ -212,6 +212,9 @@ fn main() -> anyhow::Result<()> {
 
     let mut report = JsonReport::new("qos");
     report.set("smoke", Json::Bool(smoke));
+    // QoS uses a synthetic-delay backend behind one coordinator worker
+    // (see run_burst's ServerConfig); that is the effective parallelism
+    report.set_effective_workers(1);
     report.set("requests", Json::Num(n as f64));
     report.set("service_us_per_batch", Json::Num(service.as_micros() as f64));
     report.set("bulk_deadline_us", Json::Num(bulk_deadline.as_micros() as f64));

@@ -54,12 +54,19 @@ fn bench_spmm(args: &Args, smoke: bool) -> anyhow::Result<std::path::PathBuf> {
         Bench::default()
     };
     let (m, k, n) = if smoke { (32, 256, 128) } else { (128, 1024, 256) };
-    let threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    // the tiled kernels dispatch through the process-wide ExecPool, which
+    // caps concurrent stripes at its participant count — sweep points
+    // beyond that would silently re-measure the cap, so drop them instead
+    // of recording thread counts the pool never ran
+    let pool = s4::sparse::ExecPool::global();
+    let cap = pool.participants();
+    let mut threads = args.get_usize_list("threads", &[1, 2, 4, 8])?;
+    pool.clamp_thread_sweep(&mut threads);
     let x = Dense2::randn(m, k, 1);
     let wd = Dense2::randn(k, n, 2);
     let dense_flops = 2.0 * (m * k * n) as f64;
 
-    println!("== spmm scaling ({m}x{k}x{n}, threads {threads:?}) ==");
+    println!("== spmm scaling ({m}x{k}x{n}, threads {threads:?} [pool cap {cap}]) ==");
     let rd = b.run(&format!("dense_mm {m}x{k}x{n}"), || {
         black_box(dense_mm(&x, &wd, None, Act::None));
     });
@@ -67,6 +74,8 @@ fn bench_spmm(args: &Args, smoke: bool) -> anyhow::Result<std::path::PathBuf> {
 
     let mut report = JsonReport::new("spmm");
     report.set("smoke", Json::Bool(smoke));
+    // widest point the pool actually dispatched (sweep is pre-clamped)
+    report.set_effective_workers(threads.iter().copied().max().unwrap_or(1));
     report.set(
         "shape",
         Json::obj(vec![
@@ -200,6 +209,11 @@ fn bench_serving(_args: &Args, smoke: bool) -> anyhow::Result<std::path::PathBuf
     println!("\n== serving (coordinator overhead + real sparse compute) ==");
     let mut report = JsonReport::new("serving");
     report.set("smoke", Json::Bool(smoke));
+    // serving compute dispatches on the process-wide pool, bounded by
+    // CpuSparseBackend::from_manifest's default thread cap
+    report.set_effective_workers(
+        s4::sparse::ExecPool::global().participants().min(CpuSparseBackend::DEFAULT_THREAD_CAP),
+    );
     let (n_echo, n_cpu) = if smoke { (2_000, 500) } else { (20_000, 5_000) };
     // instant backend: isolates coordinator overhead (§Perf target:
     // p50 < 200 µs/request)

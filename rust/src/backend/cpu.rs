@@ -7,8 +7,8 @@
 //! magnitude-pruned to the manifest's sparsity via
 //! [`BlockBalanced::from_dense`], packed once with
 //! [`BlockBalanced::pack`], and executed batch-by-batch through the
-//! parallel tiled kernel [`spmm_tiled`] with its fused bias+activation
-//! epilogue. Unlike [`SimBackend`](crate::backend::SimBackend)'s hashed
+//! parallel tiled kernel [`spmm_tiled_into`] with its fused
+//! bias+activation epilogue. Unlike [`SimBackend`](crate::backend::SimBackend)'s hashed
 //! pseudo-outputs, logits here are the product of actual sparse
 //! matmuls — so end-to-end tests exercise the numeric hot path, and the
 //! serving benches measure real compute.
@@ -38,7 +38,7 @@
 //! **Precision**: every layer carries both the f32 packed weights and
 //! their INT8 quantized twin (same pruned matrix through
 //! `prune → per-channel calibrate → pack`). [`Precision::Int8`] serves
-//! through [`qspmm_tiled`] — i32 accumulation, fused
+//! through [`qspmm_tiled_into`] — i32 accumulation, fused
 //! `dequant → bias → activation` epilogue — which is the paper's
 //! headline sparsity×quantization composition. The mode is chosen per
 //! artifact by the manifest's `"precision"` field and can be forced
@@ -46,15 +46,35 @@
 //! (`s4 serve --precision int8`). Int8 logits stay within the
 //! [`CpuSparseBackend::int8_tolerance`] bound of the f32 logits and are
 //! just as deterministic (integer accumulation is order-independent).
+//!
+//! **Hot-path execution** (the PR-5 dispatch rework): every layer runs
+//! through ONE long-lived [`ExecPool`] held by the backend — constructed
+//! once per backend (or injected via [`CpuSparseBackend::with_pool`] and
+//! shared between backends, e.g. an F32 and an Int8 instance) — instead
+//! of spawning fresh threads per layer call. The forward pass itself is
+//! **zero-alloc in steady state**: each forward leases a ping-pong
+//! activation arena (two [`Dense2`] buffers plus an int8 staging
+//! buffer, grown monotonically to the max layer width × batch capacity)
+//! off a free-list, replacing the per-layer `Dense2::zeros` the trunk
+//! used to allocate; only the returned output [`Value`]s are freshly
+//! allocated. Concurrent coordinator workers each lease their own arena
+//! (the list grows to peak concurrency, then everything is reuse), so
+//! small-batch forwards still overlap across workers while large-batch
+//! compute parallelizes across pool stripes. Arena pointer stability
+//! across calls is pinned by the `arena_pointers_stable...` reuse test
+//! below.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
 use crate::graph::op::OpKind;
 use crate::runtime::manifest::{ArtifactIndex, ArtifactMeta, Manifest, Precision};
 use crate::sparse::matmul::Act;
-use crate::sparse::pack::{qspmm_tiled, spmm_tiled, PackedBlockBalanced, QPackedBlockBalanced};
+use crate::sparse::pack::{
+    qspmm_tiled_into, spmm_tiled_into, PackedBlockBalanced, QPackedBlockBalanced,
+};
+use crate::sparse::pool::ExecPool;
 use crate::sparse::tensor::Dense2;
 use crate::sparse::{BlockBalanced, BLOCK, SUPPORTED_SPARSITIES};
 
@@ -100,18 +120,43 @@ impl SparseLayer {
         SparseLayer { w: bb.pack(), qw, bias, act }
     }
 
-    /// Execute the layer at `prec` through the tiled engine.
-    fn run(&self, x: &Dense2, prec: Precision, threads: usize) -> Dense2 {
+    /// Execute the layer at `prec` through the tiled engine, dispatching
+    /// on `pool` and writing into the arena buffer `out` (`qbuf` stages
+    /// quantized activations on the Int8 path) — no allocation once the
+    /// arena has grown to the layer's footprint.
+    fn run_into(
+        &self,
+        pool: &ExecPool,
+        x: &Dense2,
+        prec: Precision,
+        threads: usize,
+        qbuf: &mut Vec<i8>,
+        out: &mut Dense2,
+    ) {
         match prec {
-            Precision::F32 => spmm_tiled(x, &self.w, Some(&self.bias), self.act, threads),
+            Precision::F32 => {
+                spmm_tiled_into(pool, x, &self.w, Some(&self.bias), self.act, threads, out)
+            }
             Precision::Int8 => {
                 // constructors build qw whenever any artifact can resolve
                 // to Int8, so this is reachable only with it present
                 let qw = self.qw.as_ref().expect("net built without int8 weights");
-                qspmm_tiled(x, qw, Some(&self.bias), self.act, threads)
+                qspmm_tiled_into(pool, x, qw, Some(&self.bias), self.act, threads, qbuf, out)
             }
         }
     }
+}
+
+/// The ping-pong activation arena: layer `i` reads one buffer and writes
+/// the other, so a whole forward pass touches exactly two activation
+/// allocations (plus the int8 staging buffer), each grown monotonically
+/// to the largest `batch × width` seen and then reused forever.
+#[derive(Default)]
+struct ActivationArena {
+    ping: Dense2,
+    pong: Dense2,
+    /// quantized-activation staging for [`qspmm_tiled_into`]
+    qbuf: Vec<i8>,
 }
 
 /// The distilled sparse network for one artifact.
@@ -166,6 +211,15 @@ pub struct CpuSparseBackend {
     /// `Some` forces every artifact to this precision (`s4 serve
     /// --precision`); `None` follows each artifact's manifest field.
     precision: Option<Precision>,
+    /// the ONE dispatch pool every layer of every artifact runs on —
+    /// held for the backend's lifetime (shared F32/Int8, shareable
+    /// across backends via [`CpuSparseBackend::with_pool`])
+    pool: Arc<ExecPool>,
+    /// free-list of ping-pong activation arenas: a forward *leases* one
+    /// (popping under a short lock, never holding it during compute), so
+    /// concurrent coordinator workers overlap fully; the list grows to
+    /// the peak forward concurrency and is then reused forever
+    arenas: Mutex<Vec<ActivationArena>>,
 }
 
 /// Largest SPU-supported sparsity ≤ the manifest's tier (manifests may
@@ -205,14 +259,22 @@ fn fnv1a(s: &str) -> u64 {
 }
 
 impl CpuSparseBackend {
+    /// Default ceiling on per-layer stripe parallelism when constructors
+    /// derive the thread count from the machine (beyond ~8 stripes the
+    /// distilled layers are dispatch-bound, not compute-bound). Shared
+    /// with the serving bench so recorded `host.effective_workers`
+    /// metadata cannot drift from what the backend dispatches.
+    pub const DEFAULT_THREAD_CAP: usize = 8;
+
     /// Build distilled sparse networks for every artifact in `m`.
-    /// Threads default to the machine's parallelism (capped at 8); the
-    /// kernel stays deterministic at any setting.
+    /// Threads default to the machine's parallelism (capped at
+    /// [`DEFAULT_THREAD_CAP`](Self::DEFAULT_THREAD_CAP)); the kernel
+    /// stays deterministic at any setting.
     pub fn from_manifest(m: &Manifest) -> CpuSparseBackend {
         let threads = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
-            .min(8);
+            .min(Self::DEFAULT_THREAD_CAP);
         Self::with_threads(m, threads)
     }
 
@@ -226,16 +288,31 @@ impl CpuSparseBackend {
         let threads = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1)
-            .min(8);
+            .min(Self::DEFAULT_THREAD_CAP);
         Self::with_threads_precision(m, threads, Some(precision))
     }
 
-    /// Full constructor: explicit thread count and optional precision
-    /// override (`None` = per-artifact from the manifest).
+    /// [`with_threads_precision`](CpuSparseBackend::with_threads_precision)
+    /// on the process-wide [`ExecPool::global`] pool.
     pub fn with_threads_precision(
         m: &Manifest,
         threads: usize,
         precision: Option<Precision>,
+    ) -> CpuSparseBackend {
+        Self::with_pool(m, threads, precision, ExecPool::global().clone())
+    }
+
+    /// Full constructor: explicit thread count, optional precision
+    /// override (`None` = per-artifact from the manifest), and the
+    /// dispatch pool — pass one `Arc<ExecPool>` to several backends to
+    /// share a single worker set (e.g. an F32 and an Int8 backend on one
+    /// machine; the pool serializes their dispatches instead of
+    /// oversubscribing cores).
+    pub fn with_pool(
+        m: &Manifest,
+        threads: usize,
+        precision: Option<Precision>,
+        pool: Arc<ExecPool>,
     ) -> CpuSparseBackend {
         type NetKey = (String, usize, Vec<usize>);
         let net_key = |a: &ArtifactMeta| -> NetKey {
@@ -266,7 +343,28 @@ impl CpuSparseBackend {
                 })
                 .clone()
         });
-        CpuSparseBackend { nets, threads: threads.max(1), precision }
+        CpuSparseBackend {
+            nets,
+            threads: threads.max(1),
+            precision,
+            pool,
+            arenas: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Raw data addresses of the parked arena's three buffers `(ping,
+    /// pong, qbuf)` — the probe the zero-alloc reuse tests pin: after
+    /// one warm-up forward, sequential calls lease the same arena and
+    /// these must not change.
+    #[cfg(test)]
+    fn arena_ptrs(&self) -> (usize, usize, usize) {
+        let arenas = self.arenas.lock().unwrap_or_else(|p| p.into_inner());
+        let a = arenas.last().expect("no forward has run yet");
+        (
+            a.ping.data.as_ptr() as usize,
+            a.pong.data.as_ptr() as usize,
+            a.qbuf.as_ptr() as usize,
+        )
     }
 
     fn net(&self, artifact: &str) -> anyhow::Result<&(ArtifactMeta, Arc<SparseNet>)> {
@@ -314,17 +412,20 @@ impl CpuSparseBackend {
 }
 
 /// Fold a batch's input tensors into `[capacity, hidden]` feature rows
-/// through the embedding table. Position-salted so reorderings of the
-/// same tokens produce distinct features; zero f32 elements (the
-/// coordinator's padding) contribute nothing.
-fn featurize(
+/// through the embedding table, written into the arena buffer `feat`
+/// (zeroed by its `reset` — accumulation starts clean, no allocation in
+/// steady state). Position-salted so reorderings of the same tokens
+/// produce distinct features; zero f32 elements (the coordinator's
+/// padding) contribute nothing.
+fn featurize_into(
     net: &SparseNet,
     specs: &[TensorSpec],
     inputs: &[Value],
     capacity: usize,
-) -> Dense2 {
+    feat: &mut Dense2,
+) {
     let h = net.hidden;
-    let mut feat = Dense2::zeros(capacity, h);
+    feat.reset(capacity, h);
     for (v, spec) in inputs.iter().zip(specs) {
         let per = spec.sample_elems();
         if per == 0 {
@@ -356,7 +457,6 @@ fn featurize(
             }
         }
     }
-    feat
 }
 
 impl InferenceBackend for CpuSparseBackend {
@@ -373,35 +473,77 @@ impl InferenceBackend for CpuSparseBackend {
         validate_inputs(artifact, &meta.inputs, inputs)?;
         let prec = self.precision.unwrap_or(meta.precision);
         let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
-        // modest batches don't amortize thread spawns — run those serial
+        // modest batches don't amortize parallel dispatch — run serial
         let threads = if capacity * net.hidden >= 2048 { self.threads } else { 1 };
-        let mut hrows = featurize(net, &meta.inputs, inputs, capacity);
-        for layer in &net.trunk {
-            hrows = layer.run(&hrows, prec, threads);
-        }
-        let mut out = Vec::with_capacity(meta.outputs.len());
-        for (spec, head) in meta.outputs.iter().zip(&net.heads) {
-            let per = spec.sample_elems();
-            let y = head.run(&hrows, prec, threads);
-            let mut v = Value::empty(&spec.dtype)?;
-            for b in 0..spec.batch_dim() {
-                if b < capacity {
-                    let row = y.row(b);
-                    match &mut v {
-                        Value::F32(vec) => vec.extend_from_slice(row),
-                        // s32 outputs carry logits quantized at 1/256
-                        Value::I32(vec) => {
-                            vec.extend(row.iter().map(|&x| (x * 256.0).round() as i32))
-                        }
-                    }
-                } else {
-                    v.push_zeros(per);
-                }
-            }
-            out.push(v);
-        }
-        Ok(out)
+        // steady-state zero-alloc forward: lease an arena off the
+        // free-list (a fresh one only when concurrency exceeds anything
+        // seen before), featurize into its ping buffer, then ping-pong
+        // through the trunk and heads — the only fresh allocations below
+        // are the returned output Values. The lock is held only for the
+        // pop/push, so concurrent forwards overlap; a poisoned lock is
+        // recovered (a panicked forward must not brick the backend), and
+        // an arena dropped by a panicking forward is simply re-grown.
+        let mut arena = self
+            .arenas
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .pop()
+            .unwrap_or_default();
+        let result = forward(net, meta, inputs, prec, threads, &self.pool, &mut arena);
+        // the lease goes back even when the forward errors — an early
+        // `?` must not leak a grown arena into per-call allocation
+        self.arenas.lock().unwrap_or_else(|p| p.into_inner()).push(arena);
+        result
     }
+}
+
+/// One forward pass through an artifact's distilled net, entirely inside
+/// the leased `arena` (see [`CpuSparseBackend::run_batch`] for the
+/// lease/return discipline — keeping this a separate function means
+/// every exit path, including errors, flows back through the caller's
+/// arena return).
+fn forward(
+    net: &SparseNet,
+    meta: &ArtifactMeta,
+    inputs: &[Value],
+    prec: Precision,
+    threads: usize,
+    pool: &ExecPool,
+    arena: &mut ActivationArena,
+) -> anyhow::Result<Vec<Value>> {
+    let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
+    let ActivationArena { ping, pong, qbuf } = arena;
+    let (mut cur, mut nxt) = (ping, pong);
+    featurize_into(net, &meta.inputs, inputs, capacity, cur);
+    for layer in &net.trunk {
+        layer.run_into(pool, cur, prec, threads, qbuf, nxt);
+        std::mem::swap(&mut cur, &mut nxt);
+    }
+    let mut out = Vec::with_capacity(meta.outputs.len());
+    for (spec, head) in meta.outputs.iter().zip(&net.heads) {
+        let per = spec.sample_elems();
+        // every head reads the trunk output in `cur` and reuses the
+        // free half of the arena for its logits
+        head.run_into(pool, cur, prec, threads, qbuf, nxt);
+        let y = &*nxt;
+        let mut v = Value::empty(&spec.dtype)?;
+        for b in 0..spec.batch_dim() {
+            if b < capacity {
+                let row = y.row(b);
+                match &mut v {
+                    Value::F32(vec) => vec.extend_from_slice(row),
+                    // s32 outputs carry logits quantized at 1/256
+                    Value::I32(vec) => {
+                        vec.extend(row.iter().map(|&x| (x * 256.0).round() as i32))
+                    }
+                }
+            } else {
+                v.push_zeros(per);
+            }
+        }
+        out.push(v);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -537,6 +679,64 @@ mod tests {
             .unwrap();
         assert_eq!(via_manifest, via_override);
         assert_ne!(via_manifest, forced.run_batch("q8", &inputs).unwrap());
+    }
+
+    #[test]
+    fn arena_pointers_stable_across_calls_pool_zero_alloc() {
+        // the steady-state zero-alloc contract: after one warm-up
+        // forward per precision, the ping-pong arena (and the int8
+        // staging buffer) never reallocates — pointer-stable across
+        // calls, at both precisions, through the SAME backend arena
+        let text = r#"{"artifacts": [
+          {"name": "f32_art", "file": "x", "family": "bert",
+           "model": "bert_tiny", "sparsity": 8, "batch": 2, "seq": 4,
+           "inputs": [{"name": "ids", "shape": [2, 4], "dtype": "s32"}],
+           "outputs": [{"name": "logits", "shape": [2, 3], "dtype": "f32"}]},
+          {"name": "q8_art", "file": "y", "family": "bert",
+           "model": "bert_tiny", "sparsity": 8, "batch": 2, "seq": 4,
+           "precision": "int8",
+           "inputs": [{"name": "ids", "shape": [2, 4], "dtype": "s32"}],
+           "outputs": [{"name": "logits", "shape": [2, 3], "dtype": "f32"}]}
+        ]}"#;
+        let m = Manifest::parse(Path::new("/tmp"), text).unwrap();
+        let b = CpuSparseBackend::from_manifest(&m);
+        let inputs = vec![Value::I32(vec![1, 2, 3, 4, 5, 6, 7, 8])];
+        // warm-up: grows the arena to the max footprint of both paths
+        let f_ref = b.run_batch("f32_art", &inputs).unwrap();
+        let q_ref = b.run_batch("q8_art", &inputs).unwrap();
+        let ptrs = b.arena_ptrs();
+        for _ in 0..4 {
+            assert_eq!(b.run_batch("f32_art", &inputs).unwrap(), f_ref);
+            assert_eq!(b.run_batch("q8_art", &inputs).unwrap(), q_ref);
+            assert_eq!(b.arena_ptrs(), ptrs, "arena reallocated in steady state");
+        }
+    }
+
+    #[test]
+    fn two_backends_share_one_pool_interleaved_precisions() {
+        // pool-reuse across backends: an F32 and an Int8 backend
+        // dispatching on ONE ExecPool, interleaved, must match solo
+        // backends exactly (the pool adds scheduling, never numerics)
+        let m = manifest();
+        let pool = Arc::new(ExecPool::new(3));
+        let f = CpuSparseBackend::with_pool(&m, 4, None, pool.clone());
+        let q = CpuSparseBackend::with_pool(&m, 4, Some(Precision::Int8), pool.clone());
+        let f_solo = CpuSparseBackend::with_threads(&m, 4);
+        let q_solo = CpuSparseBackend::with_threads_precision(&m, 4, Some(Precision::Int8));
+        for i in 0..4 {
+            let inputs = vec![Value::I32(vec![i, 2, 3, 4, 9, 8, 7, 6])];
+            assert_eq!(
+                f.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+                f_solo.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+                "shared-pool f32 diverged (i={i})"
+            );
+            assert_eq!(
+                q.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+                q_solo.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+                "shared-pool int8 diverged (i={i})"
+            );
+        }
+        assert_eq!(pool.workers(), 3, "backends must not resize a shared pool");
     }
 
     #[test]

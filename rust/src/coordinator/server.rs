@@ -17,6 +17,17 @@
 //! [`EchoBackend`](crate::backend::EchoBackend) — and padding/demux is
 //! driven entirely by the artifact's `TensorSpec`s, so token models and
 //! image models serve through the same path.
+//!
+//! Worker-count guidance for compute-heavy backends: with
+//! [`CpuSparseBackend`](crate::backend::CpuSparseBackend), the worker
+//! threads here do batch plumbing (and run small, serial forwards
+//! concurrently — each leases its own activation arena), while
+//! large-batch matmuls fan out across the backend's persistent
+//! [`ExecPool`](crate::sparse::ExecPool), whose dispatch gate admits
+//! one multi-stripe job at a time. Raising `workers` overlaps
+//! shed/pack/demux and small forwards with pooled compute; it does not
+//! multiply core usage for the big batches — the pool already owns the
+//! cores — so a handful of workers is enough.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};

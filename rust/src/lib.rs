@@ -12,10 +12,14 @@
 //!   sparse ops (the numerics the simulator is validated against), INT8
 //!   quantization composed with sparsity ([`sparse::quant`]:
 //!   `prune → per-channel calibrate → quantize`, serial `qspmm`
-//!   reference), and the parallel tiled SpMM engine ([`sparse::pack`]:
+//!   reference), the parallel tiled SpMM engine ([`sparse::pack`]:
 //!   packed execution layouts + `spmm_tiled`/`qspmm_tiled`, the
 //!   multithreaded cache-tiled f32/int8 kernels the CPU serving backend
-//!   runs on).
+//!   runs on), and the persistent stripe-execution pool
+//!   ([`sparse::pool`]: [`sparse::ExecPool`] — long-lived parked
+//!   workers, generic `(stripe_fn, out chunks)` dispatch, per-worker
+//!   reusable scratch — the layer every tiled kernel dispatches through
+//!   instead of spawning threads per call).
 //! * [`graph`] — an op-graph IR with per-op FLOPs/bytes accounting plus
 //!   builders for the paper's benchmark models (ResNet-50/152,
 //!   BERT-base/large).

@@ -4,17 +4,25 @@
 //! (the two are cross-validated by `rust/tests/integration.rs` against
 //! goldens) and additionally provides the storage-accounting the Antoum
 //! simulator and the paper's memory-footprint claims are computed from.
+//!
+//! Execution side: [`pack`] holds the tiled f32/int8 kernels, [`pool`]
+//! the persistent stripe-execution pool ([`ExecPool`]) they dispatch on.
 
 pub mod conv;
 pub mod format;
 pub mod matmul;
 pub mod pack;
+pub mod pool;
 pub mod prune;
 pub mod quant;
 pub mod tensor;
 
 pub use format::{BlockBalanced, Csr, BLOCK};
-pub use pack::{qspmm_tiled, spmm_tiled, PackedBlockBalanced, QPackedBlockBalanced, N_TILE};
+pub use pack::{
+    qspmm_tiled, qspmm_tiled_into, spmm_tiled, spmm_tiled_into, PackedBlockBalanced,
+    QPackedBlockBalanced, N_TILE,
+};
+pub use pool::{partition_rows, ExecPool};
 pub use prune::{magnitude_prune, PruneSchedule};
 pub use quant::{qspmm, QBlockBalanced};
 pub use tensor::{DType, Dense2};

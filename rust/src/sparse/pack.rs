@@ -9,16 +9,21 @@
 //! ([`crate::backend::cpu`]) runs batches through.
 //!
 //! Kernel structure (targets in EXPERIMENTS.md §Perf):
-//! * **parallel over output-row stripes** — each thread owns a disjoint
-//!   `&mut` stripe of the output, spawned with `std::thread::scope` (no
-//!   locks, no channels on the compute path);
+//! * **parallel over output-row stripes** — each participant owns a
+//!   disjoint `&mut` stripe of the output, dispatched through the
+//!   persistent [`ExecPool`](crate::sparse::pool::ExecPool) (parked
+//!   workers woken per call — no per-call thread spawns; the old
+//!   spawn-per-call discipline survives only as the measured baseline
+//!   [`scoped_stripes`](crate::sparse::pool::scoped_stripes));
 //! * **cache-blocked over `n`** — weights are walked one column tile at
 //!   a time; a tile's `keep × tile` slab sits in L1 while it is reused
 //!   across a chunk of input rows, cutting DRAM traffic by the chunk
 //!   length;
-//! * **preallocated per-thread scratch** — accumulation runs in a local
-//!   f32 tile, the fused bias+activation epilogue writes the output
-//!   exactly once;
+//! * **reusable per-worker scratch** — accumulation runs in the pool's
+//!   thread-local scratch tile
+//!   ([`with_scratch_f32`](crate::sparse::pool::with_scratch_f32)),
+//!   grown once and reused across layer calls; the fused
+//!   bias+activation epilogue writes the output exactly once;
 //! * **specialized inner loops** — the per-block gather loop is
 //!   monomorphized over `keep ∈ {32,16,8,4,2,1}` (sparsity 1..32×) so
 //!   the compiler fully unrolls the `keep` dimension.
@@ -33,6 +38,7 @@
 
 use super::format::{BlockBalanced, BLOCK};
 use super::matmul::Act;
+use super::pool::{scoped_stripes, with_scratch_f32, with_scratch_i32, ExecPool};
 use super::quant::{QBlockBalanced, QParams};
 use super::tensor::Dense2;
 
@@ -208,7 +214,57 @@ impl QBlockBalanced {
 /// `x`: [m, k]; returns [m, n]. Accumulates in f32, matching the serial
 /// [`spmm`](crate::sparse::matmul::spmm) reduction order element-for-
 /// element, so the two agree bitwise for any `threads`.
+///
+/// Dispatches through the process-wide [`ExecPool::global`]; the
+/// serving hot path uses [`spmm_tiled_into`] with a per-backend pool
+/// and a reused output buffer instead.
 pub fn spmm_tiled(
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    threads: usize,
+) -> Dense2 {
+    let mut out = Dense2::zeros(0, 0);
+    spmm_tiled_into(ExecPool::global(), x, w, bias, act, threads, &mut out);
+    out
+}
+
+/// [`spmm_tiled`] with explicit dispatch pool and caller-owned output:
+/// `out` is reshaped to `[m, n]` in place (its allocation is reused when
+/// capacity suffices — the zero-alloc serving path), then every element
+/// is written exactly once by the fused epilogue. At most `threads`
+/// stripes run concurrently, capped by the pool's participant count;
+/// results are bitwise identical to the serial reference at any setting.
+pub fn spmm_tiled_into(
+    pool: &ExecPool,
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    threads: usize,
+    out: &mut Dense2,
+) {
+    assert_eq!(x.cols, w.k, "reduction dim mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.n, "bias length");
+    }
+    let (m, n) = (x.rows, w.n);
+    // no zero-fill: the fused epilogue writes every element exactly once
+    out.reshape_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    pool.run_stripes(&mut out.data, n, threads, |row0, chunk| {
+        stripe(x, w, bias, act, row0, chunk)
+    });
+}
+
+/// Spawn-per-call variant of [`spmm_tiled`] — the pre-pool dispatch
+/// discipline (one fresh scoped thread per stripe, every call), retained
+/// as the measured baseline `benches/pool_latency.rs` compares the pool
+/// against. Same kernel, same stripes, bitwise-identical results.
+pub fn spmm_tiled_scoped(
     x: &Dense2,
     w: &PackedBlockBalanced,
     bias: Option<&[f32]>,
@@ -224,16 +280,8 @@ pub fn spmm_tiled(
     if m == 0 || n == 0 {
         return out;
     }
-    let threads = threads.max(1).min(m);
-    if threads == 1 {
-        stripe(x, w, bias, act, 0, &mut out.data);
-        return out;
-    }
-    let rows_per = (m + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
-            s.spawn(move || stripe(x, w, bias, act, ti * rows_per, chunk));
-        }
+    scoped_stripes(&mut out.data, n, threads, |row0, chunk| {
+        stripe(x, w, bias, act, row0, chunk)
     });
     out
 }
@@ -268,11 +316,26 @@ fn stripe_keep<const KEEP: usize>(
     row0: usize,
     out: &mut [f32],
 ) {
+    // per-worker reusable accumulator tile (zeroed per column tile in the
+    // inner kernel) — no allocation in steady state
+    with_scratch_f32(ROW_CHUNK * w.n_tile.min(w.n), |scratch| {
+        stripe_keep_in::<KEEP>(x, w, bias, act, row0, out, scratch)
+    })
+}
+
+fn stripe_keep_in<const KEEP: usize>(
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    row0: usize,
+    out: &mut [f32],
+    scratch: &mut [f32],
+) {
     let n = w.n;
     let kc = w.kc();
     let nblocks = w.k / BLOCK;
     let rows = out.len() / n;
-    let mut scratch = vec![0.0f32; ROW_CHUNK * w.n_tile.min(n)];
     let mut r = 0;
     while r < rows {
         let rc = ROW_CHUNK.min(rows - r);
@@ -341,7 +404,64 @@ fn stripe_keep<const KEEP: usize>(
 /// applies `dequant → bias → activation` in the identical f32 expression
 /// tree as the serial reference: the two agree **bitwise** for any
 /// thread count or tile width.
+///
+/// Dispatches through the process-wide [`ExecPool::global`]; the
+/// serving hot path uses [`qspmm_tiled_into`] with a per-backend pool
+/// and reused buffers instead.
 pub fn qspmm_tiled(
+    x: &Dense2,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    threads: usize,
+) -> Dense2 {
+    let mut qbuf = Vec::new();
+    let mut out = Dense2::zeros(0, 0);
+    qspmm_tiled_into(ExecPool::global(), x, w, bias, act, threads, &mut qbuf, &mut out);
+    out
+}
+
+/// [`qspmm_tiled`] with explicit dispatch pool and caller-owned buffers:
+/// `qbuf` stages the per-tensor-quantized activations and `out` is
+/// reshaped to `[m, n]` in place — both reuse their allocations across
+/// calls (the zero-alloc serving path). Bitwise identical to the serial
+/// [`qspmm`](crate::sparse::quant::qspmm) reference at any `threads`,
+/// tile width, or pool size.
+#[allow(clippy::too_many_arguments)]
+pub fn qspmm_tiled_into(
+    pool: &ExecPool,
+    x: &Dense2,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    threads: usize,
+    qbuf: &mut Vec<i8>,
+    out: &mut Dense2,
+) {
+    assert_eq!(x.cols, w.k, "reduction dim mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), w.n, "bias length");
+    }
+    let (m, n) = (x.rows, w.n);
+    // no zero-fill: the fused epilogue writes every element exactly once
+    out.reshape_for_overwrite(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    // per-tensor activation quantization, shared by every stripe; the
+    // staging buffer's capacity is reused call over call
+    let xq = QParams::calibrate(&x.data);
+    qbuf.clear();
+    qbuf.extend(x.data.iter().map(|&v| xq.quantize(v)));
+    let xdata: &[i8] = &qbuf[..];
+    pool.run_stripes(&mut out.data, n, threads, |row0, chunk| {
+        qstripe(xdata, x.cols, xq.scale, w, bias, act, row0, chunk)
+    });
+}
+
+/// Spawn-per-call variant of [`qspmm_tiled`] — the pre-pool dispatch
+/// discipline, retained as the bench baseline (see [`spmm_tiled_scoped`]).
+pub fn qspmm_tiled_scoped(
     x: &Dense2,
     w: &QPackedBlockBalanced,
     bias: Option<&[f32]>,
@@ -357,22 +477,10 @@ pub fn qspmm_tiled(
     if m == 0 || n == 0 {
         return out;
     }
-    // per-tensor activation quantization, shared by every stripe
     let xq = QParams::calibrate(&x.data);
     let xdata: Vec<i8> = x.data.iter().map(|&v| xq.quantize(v)).collect();
-    let threads = threads.max(1).min(m);
-    if threads == 1 {
-        qstripe(&xdata, x.cols, xq.scale, w, bias, act, 0, &mut out.data);
-        return out;
-    }
-    let rows_per = (m + threads - 1) / threads;
-    std::thread::scope(|s| {
-        for (ti, chunk) in out.data.chunks_mut(rows_per * n).enumerate() {
-            let xdata = &xdata;
-            s.spawn(move || {
-                qstripe(xdata, x.cols, xq.scale, w, bias, act, ti * rows_per, chunk)
-            });
-        }
+    scoped_stripes(&mut out.data, n, threads, |row0, chunk| {
+        qstripe(&xdata, x.cols, xq.scale, w, bias, act, row0, chunk)
     });
     out
 }
@@ -412,11 +520,28 @@ fn qstripe_keep<const KEEP: usize>(
     row0: usize,
     out: &mut [f32],
 ) {
+    // per-worker reusable i32 accumulator tile (see stripe_keep)
+    with_scratch_i32(ROW_CHUNK * w.n_tile.min(w.n), |scratch| {
+        qstripe_keep_in::<KEEP>(xdata, k, sx, w, bias, act, row0, out, scratch)
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn qstripe_keep_in<const KEEP: usize>(
+    xdata: &[i8],
+    k: usize,
+    sx: f32,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    row0: usize,
+    out: &mut [f32],
+    scratch: &mut [i32],
+) {
     let n = w.n;
     let kc = w.kc();
     let nblocks = w.k / BLOCK;
     let rows = out.len() / n;
-    let mut scratch = vec![0i32; ROW_CHUNK * w.n_tile.min(n)];
     let mut r = 0;
     while r < rows {
         let rc = ROW_CHUNK.min(rows - r);
@@ -654,5 +779,75 @@ mod tests {
         let p = w.quantize().pack();
         assert!((p.rel_error_bound() - 0.5 / 127.0).abs() < 1e-9);
         assert!(p.max_error_bound() > 0.0);
+    }
+
+    // --------------------- pooled dispatch / _into path ---------------------
+
+    #[test]
+    fn pool_into_variants_reuse_buffers_and_stay_bitwise() {
+        // the zero-alloc serving contract: repeated _into calls reuse the
+        // caller's allocations (pointer-stable once grown) and every call
+        // is bitwise equal to the serial references
+        let pool = ExecPool::new(2);
+        let (x, w) = case(19, 96, 31, 4, 91);
+        let packed = w.pack();
+        let qpacked = w.quantize().pack();
+        let serial = spmm(&x, &w, None, Act::None);
+        let qserial = qspmm(&x, &w.quantize(), None, Act::None);
+
+        let mut out = Dense2::zeros(0, 0);
+        let mut qout = Dense2::zeros(0, 0);
+        let mut qbuf = Vec::new();
+        spmm_tiled_into(&pool, &x, &packed, None, Act::None, 3, &mut out);
+        qspmm_tiled_into(&pool, &x, &qpacked, None, Act::None, 3, &mut qbuf, &mut qout);
+        let (p_out, p_qout, p_qbuf) = (out.data.as_ptr(), qout.data.as_ptr(), qbuf.as_ptr());
+        for _ in 0..3 {
+            spmm_tiled_into(&pool, &x, &packed, None, Act::None, 3, &mut out);
+            qspmm_tiled_into(&pool, &x, &qpacked, None, Act::None, 3, &mut qbuf, &mut qout);
+            assert_eq!(serial.data, out.data, "pooled f32 != serial");
+            assert_eq!(qserial.data, qout.data, "pooled int8 != serial");
+            assert_eq!(out.data.as_ptr(), p_out, "f32 out reallocated");
+            assert_eq!(qout.data.as_ptr(), p_qout, "int8 out reallocated");
+            assert_eq!(qbuf.as_ptr(), p_qbuf, "quant staging reallocated");
+        }
+    }
+
+    #[test]
+    fn pool_scoped_baselines_bitwise_equal_to_pooled() {
+        // the spawn-per-call baselines the pool bench compares against
+        // must compute the exact same thing
+        let (x, w) = case(13, 64, 27, 8, 93);
+        let bias: Vec<f32> = (0..27).map(|i| (i as f32).cos()).collect();
+        let qb = w.quantize();
+        for threads in [1usize, 2, 4] {
+            assert_eq!(
+                spmm_tiled(&x, &w.pack(), Some(&bias), Act::Gelu, threads).data,
+                spmm_tiled_scoped(&x, &w.pack(), Some(&bias), Act::Gelu, threads).data,
+                "f32 threads={threads}"
+            );
+            assert_eq!(
+                qspmm_tiled(&x, &qb.pack(), Some(&bias), Act::Relu, threads).data,
+                qspmm_tiled_scoped(&x, &qb.pack(), Some(&bias), Act::Relu, threads).data,
+                "int8 threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_into_handles_empty_and_reshape() {
+        // a reused output buffer must follow shape changes exactly
+        let pool = ExecPool::new(1);
+        let mut out = Dense2::zeros(0, 0);
+        let (x1, w1) = case(5, 64, 11, 4, 95);
+        spmm_tiled_into(&pool, &x1, &w1.pack(), None, Act::None, 2, &mut out);
+        assert_eq!((out.rows, out.cols), (5, 11));
+        let (x2, w2) = case(2, 32, 40, 2, 96);
+        spmm_tiled_into(&pool, &x2, &w2.pack(), None, Act::None, 2, &mut out);
+        assert_eq!((out.rows, out.cols), (2, 40));
+        assert_eq!(out.data, spmm(&x2, &w2, None, Act::None).data);
+        let empty = Dense2::zeros(0, 64);
+        let (_, w3) = case(1, 64, 8, 2, 97);
+        spmm_tiled_into(&pool, &empty, &w3.pack(), None, Act::None, 4, &mut out);
+        assert_eq!((out.rows, out.cols), (0, 8));
     }
 }

@@ -1,0 +1,612 @@
+//! Persistent stripe-execution pool — the dispatch layer every tiled
+//! kernel runs on.
+//!
+//! Before this module, `spmm_tiled` and `qspmm_tiled` paid OS-level
+//! overhead on **every call**: `std::thread::scope` spawns (and joins,
+//! and frees) a fresh thread per output stripe, which costs tens of
+//! microseconds per thread — more than the compute itself for the
+//! small-`m` batches the Interactive serving class produces. [`ExecPool`]
+//! amortizes that: a fixed set of workers is spawned once, parks on a
+//! condvar between dispatches, and is woken with two lock round-trips
+//! per layer call. `BENCH_pool.json` (schema `s4-bench-v1`, written by
+//! `rust/benches/pool_latency.rs`) pins `pooled_small_m_speedup_vs_spawn
+//! > 1`; targets live in EXPERIMENTS.md §Perf ("Dispatch overhead").
+//!
+//! Design:
+//! * **stripe tasks** — a dispatch partitions an `m × cols` row-major
+//!   output into at most `workers + 1` contiguous row stripes
+//!   ([`partition_rows`], shared with the spawn-per-call baseline so the
+//!   two paths can never disagree about geometry) and runs
+//!   `stripe_fn(row0, chunk)` on each. Stripe 0 always runs **on the
+//!   calling thread** — a 1-stripe job (the `m == 1` Interactive case)
+//!   never takes a lock or wakes anyone.
+//! * **static assignment, no work stealing** — worker `i` owns stripe
+//!   `i + 1` for the whole dispatch. Stripes are equal-sized to within
+//!   one row, so there is nothing to steal, and static assignment is
+//!   what makes the lifetime-erasure below provable: a worker can only
+//!   ever touch the job its epoch handed it.
+//! * **parking/wakeup** — workers sleep on a condvar keyed by a dispatch
+//!   epoch; the dispatcher publishes the job under the mutex, bumps the
+//!   epoch, and `notify_all`s. Completion is a counter under the same
+//!   mutex plus a second condvar the dispatcher waits on.
+//! * **per-worker reusable scratch** — [`with_scratch_f32`] /
+//!   [`with_scratch_i32`] hand kernels a thread-local, monotonically
+//!   grown accumulator buffer, so steady-state stripe execution does no
+//!   heap allocation (on pool workers *and* on the calling thread).
+//! * **generic over the kernel** — dispatch takes `(out, cols,
+//!   stripe_fn)`; nothing in this module knows about f32 vs int8 (or the
+//!   future bf16 / NUMA-striped kernels — those add a placement policy
+//!   here, not a new spawn path).
+//!
+//! Determinism: the pool decides only *which thread* computes a stripe,
+//! never the reduction order within an output element, so kernels that
+//! are bitwise-deterministic under `std::thread::scope` stay
+//! bitwise-deterministic here at any worker count (pinned by
+//! `prop_pooled_matches_scoped_and_serial` in `rust/tests/properties.rs`).
+//!
+//! Concurrency contract: one dispatch runs at a time per pool (an
+//! internal gate serializes concurrent callers — deliberate: two
+//! parallel SpMMs would oversubscribe the same cores, not finish
+//! sooner). `stripe_fn` must not dispatch on the same pool (the gate is
+//! not reentrant); it may use a *different* pool.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Split `m` rows into at most `parts` contiguous stripes, as equal as
+/// possible: the first `m % parts` stripes get one extra row. Yields
+/// `(row0, rows)` pairs with `rows > 0` — when `m < parts` only `m`
+/// single-row stripes are produced, so callers never see empty work.
+///
+/// This is the ONE partitioning used by the pool, the spawn-per-call
+/// baseline ([`scoped_stripes`]), and therefore both tiled kernels —
+/// `spmm_tiled`/`qspmm_tiled` previously each hand-rolled a ceil-divide
+/// copy of this logic.
+pub fn partition_rows(m: usize, parts: usize) -> impl Iterator<Item = (usize, usize)> {
+    let parts = parts.max(1).min(m.max(1));
+    (0..parts.min(m)).map(move |i| stripe_at(m, parts, i))
+}
+
+/// Closed form of [`partition_rows`]'s `i`-th stripe: `(row0, rows)`.
+/// Workers use this directly so a dispatch carries no per-stripe table.
+#[inline]
+fn stripe_at(m: usize, parts: usize, i: usize) -> (usize, usize) {
+    let q = m / parts;
+    let r = m % parts;
+    let rows = q + usize::from(i < r);
+    let row0 = i * q + i.min(r);
+    (row0, rows)
+}
+
+/// Spawn-per-call stripe execution — the exact dispatch discipline the
+/// tiled kernels used before [`ExecPool`] existed, kept (a) as the
+/// measured baseline for `benches/pool_latency.rs` and (b) as the shared
+/// deduplication of the two kernels' old `std::thread::scope`
+/// scaffolding. Runs `stripe_fn(row0, chunk)` over the stripes of
+/// [`partition_rows`]`(m, max_stripes)` where `m = out.len() / cols`.
+pub fn scoped_stripes<T, F>(out: &mut [T], cols: usize, max_stripes: usize, stripe_fn: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let m = if cols == 0 { 0 } else { out.len() / cols };
+    assert_eq!(out.len(), m * cols, "out is not m x cols");
+    if m == 0 {
+        return;
+    }
+    let stripes = max_stripes.max(1).min(m);
+    if stripes == 1 {
+        stripe_fn(0, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &stripe_fn;
+        let mut rest = &mut *out;
+        for (row0, rows) in partition_rows(m, stripes) {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows * cols);
+            rest = tail;
+            s.spawn(move || f(row0, chunk));
+        }
+    });
+}
+
+/// The type-erased job a dispatch publishes: `f(stripe_index)` runs one
+/// stripe. The borrow behind the pointer outlives every use because
+/// [`ExecPool::run_stripes`] does not return until all stripes complete.
+type JobFn = dyn Fn(usize) + Sync;
+
+#[derive(Clone, Copy)]
+struct JobSlot(*const JobFn);
+
+// SAFETY: the pointer is only dereferenced by pool workers between job
+// publication and completion, a window during which the dispatcher keeps
+// the referent alive and `F: Sync` makes shared calls sound.
+unsafe impl Send for JobSlot {}
+
+/// Raw output-base pointer a dispatch shares with its stripes —
+/// provenance-preserving (no `usize` laundering, so the pool stays
+/// Miri/strict-provenance clean).
+struct OutPtr<T>(*mut T);
+
+impl<T> Clone for OutPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for OutPtr<T> {}
+
+// SAFETY: stripes derived from this pointer index disjoint ranges of a
+// live `&mut [T]` the dispatcher holds for the whole dispatch.
+unsafe impl<T: Send> Send for OutPtr<T> {}
+unsafe impl<T: Send> Sync for OutPtr<T> {}
+
+struct Ctrl {
+    /// bumped once per dispatch; workers detect new work by `epoch !=
+    /// last seen`
+    epoch: u64,
+    /// workers participating in the current dispatch (worker ids `0 ..
+    /// need`); non-participants skip the epoch without touching the job
+    need: usize,
+    job: Option<JobSlot>,
+    /// participants finished so far (compared against `need`)
+    done: usize,
+    /// a worker's stripe panicked; surfaced by the dispatcher after join
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    /// workers park here between dispatches
+    work_cv: Condvar,
+    /// the dispatcher parks here until `done == need`
+    done_cv: Condvar,
+}
+
+/// Long-lived stripe-execution pool: `workers` pinned-count background
+/// threads plus the calling thread, woken per dispatch, parked between.
+///
+/// Construction is the expensive part (thread spawns) and happens once —
+/// per backend via
+/// [`CpuSparseBackend::with_pool`](crate::backend::cpu::CpuSparseBackend::with_pool),
+/// or process-wide via [`ExecPool::global`]. Dropping a pool joins its
+/// workers.
+pub struct ExecPool {
+    shared: Arc<Shared>,
+    /// serializes dispatches; see the module-level concurrency contract
+    gate: Mutex<()>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ExecPool {
+    /// Spawn `workers` background threads (total parallelism is
+    /// `workers + 1`: the dispatching thread always executes stripe 0).
+    /// `ExecPool::new(0)` is valid and runs everything inline.
+    pub fn new(workers: usize) -> ExecPool {
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                epoch: 0,
+                need: 0,
+                job: None,
+                done: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|id| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("s4-pool{id}"))
+                    .spawn(move || worker_loop(&shared, id))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ExecPool { shared, gate: Mutex::new(()), workers, handles }
+    }
+
+    /// The process-wide pool the bare `spmm_tiled`/`qspmm_tiled` wrappers
+    /// dispatch through: `available_parallelism - 1` workers, i.e. total
+    /// parallelism equal to the machine width. Explicit `threads`
+    /// arguments are honored up to that width; beyond it a dispatch is
+    /// capped at [`participants`](ExecPool::participants) (the old
+    /// spawn-per-call path would oversubscribe instead, which never
+    /// helped — callers who really want more stripes than cores can
+    /// build their own [`ExecPool::new`]). Never dropped.
+    pub fn global() -> &'static Arc<ExecPool> {
+        static POOL: OnceLock<Arc<ExecPool>> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Arc::new(ExecPool::new(par.saturating_sub(1)))
+        })
+    }
+
+    /// Background worker count (excludes the dispatching thread).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Maximum concurrent stripes per dispatch: workers + the caller.
+    pub fn participants(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Clamp a thread-sweep list to what this pool can actually
+    /// dispatch: entries above [`participants`](ExecPool::participants)
+    /// are dropped (falling back to a single `participants()` entry if
+    /// that empties the list), so recorded measurements never claim
+    /// parallelism the pool silently downgraded. Shared by the scaling
+    /// benches — keep their sweeps honest in `BENCH_*.json`.
+    pub fn clamp_thread_sweep(&self, sweep: &mut Vec<usize>) {
+        let cap = self.participants();
+        sweep.retain(|&t| t <= cap);
+        if sweep.is_empty() {
+            sweep.push(cap);
+        }
+    }
+
+    /// Run `stripe_fn(row0, chunk)` over disjoint row stripes of `out`
+    /// (an `m × cols` row-major buffer, `m = out.len() / cols`),
+    /// partitioned by [`partition_rows`]`(m, max_stripes)` and capped at
+    /// [`participants`](ExecPool::participants). Stripe 0 runs on the
+    /// calling thread; stripes `1..` on pool workers. Returns after every
+    /// stripe completes — a panic inside any stripe is re-raised here,
+    /// never left in a worker.
+    pub fn run_stripes<T, F>(&self, out: &mut [T], cols: usize, max_stripes: usize, stripe_fn: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let m = if cols == 0 { 0 } else { out.len() / cols };
+        // hard assert: a ragged buffer would silently leave a tail of
+        // stale elements unwritten (cost is nil next to a dispatch)
+        assert_eq!(out.len(), m * cols, "out is not m x cols");
+        if m == 0 {
+            return;
+        }
+        let stripes = max_stripes.max(1).min(m).min(self.participants());
+        if stripes == 1 {
+            // the small-batch fast path: no lock, no wakeup, no worker
+            stripe_fn(0, out);
+            return;
+        }
+
+        let base = OutPtr(out.as_mut_ptr());
+        let run_stripe = move |i: usize| {
+            let (row0, rows) = stripe_at(m, stripes, i);
+            // SAFETY: stripes index disjoint `rows * cols` ranges of a
+            // live `&mut [T]` the dispatcher holds for the whole call.
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(row0 * cols), rows * cols)
+            };
+            stripe_fn(row0, chunk);
+        };
+        let job: &JobFn = &run_stripe;
+        // Lifetime erasure: sound because this function blocks until
+        // `done == need`, i.e. until no worker can touch the job again.
+        let slot = JobSlot(unsafe {
+            std::mem::transmute::<&JobFn, &'static JobFn>(job) as *const JobFn
+        });
+
+        let gate = self.gate.lock().unwrap();
+        let need = stripes - 1;
+        {
+            let mut g = self.shared.ctrl.lock().unwrap();
+            g.epoch += 1;
+            g.need = need;
+            g.done = 0;
+            g.panicked = false;
+            g.job = Some(slot);
+            self.shared.work_cv.notify_all();
+        }
+        // the dispatcher is participant 0 — it computes, it doesn't sleep
+        let caller = catch_unwind(AssertUnwindSafe(|| run_stripe(0)));
+        let panicked = {
+            let mut g = self.shared.ctrl.lock().unwrap();
+            while g.done < g.need {
+                g = self.shared.done_cv.wait(g).unwrap();
+            }
+            g.job = None;
+            g.panicked
+        };
+        // release the gate BEFORE re-raising, so a panicking stripe
+        // doesn't poison the dispatch mutex and brick the pool
+        drop(gate);
+        if let Err(e) = caller {
+            resume_unwind(e);
+        }
+        assert!(!panicked, "ExecPool: a worker stripe panicked");
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.ctrl.lock().unwrap();
+            g.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let slot = {
+            let mut g = shared.ctrl.lock().unwrap();
+            loop {
+                if g.shutdown {
+                    return;
+                }
+                if g.epoch != seen {
+                    seen = g.epoch;
+                    if id < g.need {
+                        break g.job.expect("job published with epoch");
+                    }
+                    // not a participant this dispatch — skip the epoch
+                    // (dispatch completion never waits on this worker)
+                }
+                g = shared.work_cv.wait(g).unwrap();
+            }
+        };
+        // SAFETY: `slot` belongs to the epoch just observed; the
+        // dispatcher keeps its referent alive until `done == need`,
+        // which this worker contributes to only after the call returns.
+        let result = catch_unwind(AssertUnwindSafe(|| unsafe { (&*slot.0)(id + 1) }));
+        let mut g = shared.ctrl.lock().unwrap();
+        if result.is_err() {
+            g.panicked = true;
+        }
+        g.done += 1;
+        if g.done >= g.need {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+// --------------------------- per-worker scratch ----------------------------
+
+thread_local! {
+    static SCRATCH_F32: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    static SCRATCH_I32: RefCell<Vec<i32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Hand `f` a thread-local f32 scratch slice of length `len`, grown
+/// monotonically and reused across calls — on a pool worker this is the
+/// "per-worker reusable scratch" that makes steady-state stripe
+/// execution allocation-free. Contents are dirty; callers zero what they
+/// need (the kernels `fill(0.0)` per tile anyway). Not reentrant.
+pub fn with_scratch_f32<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH_F32.with(|cell| {
+        let mut v = cell.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+/// The i32 twin of [`with_scratch_f32`] (the INT8 kernel's accumulator).
+pub fn with_scratch_i32<R>(len: usize, f: impl FnOnce(&mut [i32]) -> R) -> R {
+    SCRATCH_I32.with(|cell| {
+        let mut v = cell.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -------------------------- partition_rows ----------------------------
+
+    fn collect(m: usize, parts: usize) -> Vec<(usize, usize)> {
+        partition_rows(m, parts).collect()
+    }
+
+    #[test]
+    fn partition_rows_exact_division() {
+        assert_eq!(collect(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+    }
+
+    #[test]
+    fn partition_rows_remainder_spreads_early() {
+        // m % parts != 0: first `m % parts` stripes get the extra row
+        assert_eq!(collect(10, 4), vec![(0, 3), (3, 3), (6, 2), (8, 2)]);
+        assert_eq!(collect(7, 3), vec![(0, 3), (3, 2), (5, 2)]);
+    }
+
+    #[test]
+    fn partition_rows_fewer_rows_than_parts() {
+        // m < threads: exactly m single-row stripes, never an empty one
+        assert_eq!(collect(3, 8), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(collect(1, 4), vec![(0, 1)]);
+    }
+
+    #[test]
+    fn partition_rows_degenerate_inputs() {
+        assert_eq!(collect(0, 4), vec![]);
+        assert_eq!(collect(5, 0), vec![(0, 5)], "parts clamps to 1");
+    }
+
+    #[test]
+    fn partition_rows_covers_all_rows_contiguously() {
+        for m in 0..40 {
+            for parts in 1..9 {
+                let stripes = collect(m, parts);
+                let mut next = 0;
+                for (row0, rows) in &stripes {
+                    assert_eq!(*row0, next, "gap at m={m} parts={parts}");
+                    assert!(*rows > 0, "empty stripe at m={m} parts={parts}");
+                    next = row0 + rows;
+                }
+                assert_eq!(next, m, "rows lost at m={m} parts={parts}");
+                assert!(stripes.len() <= parts.max(1));
+            }
+        }
+    }
+
+    // ------------------------------ dispatch -------------------------------
+
+    /// Every stripe writes `row index + 1` into its rows; the full output
+    /// must come back exactly covered, whatever the pool/stripe count.
+    fn check_covering(pool: &ExecPool, m: usize, cols: usize, max_stripes: usize) {
+        let mut out = vec![0u32; m * cols];
+        pool.run_stripes(&mut out, cols, max_stripes, |row0, chunk| {
+            for (li, row) in chunk.chunks_mut(cols).enumerate() {
+                row.fill((row0 + li + 1) as u32);
+            }
+        });
+        for r in 0..m {
+            for c in 0..cols {
+                assert_eq!(out[r * cols + c], (r + 1) as u32, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_dispatch_covers_output_at_any_worker_count() {
+        for workers in [0usize, 1, 2, 3, 7] {
+            let pool = ExecPool::new(workers);
+            for m in [1usize, 2, 5, 16, 33] {
+                for max_stripes in [1usize, 2, 4, 16] {
+                    check_covering(&pool, m, 3, max_stripes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reuse_across_many_dispatches() {
+        // the steady-state serving pattern: one pool, many layer calls
+        let pool = ExecPool::new(3);
+        for i in 0..200 {
+            check_covering(&pool, 1 + i % 17, 4, 4);
+        }
+    }
+
+    #[test]
+    fn pool_zero_workers_runs_inline() {
+        let pool = ExecPool::new(0);
+        assert_eq!(pool.participants(), 1);
+        check_covering(&pool, 9, 2, 8);
+    }
+
+    #[test]
+    fn pool_empty_output_is_a_noop() {
+        let pool = ExecPool::new(2);
+        let mut out: Vec<f32> = Vec::new();
+        pool.run_stripes(&mut out, 4, 4, |_, _| panic!("no stripes expected"));
+        pool.run_stripes(&mut out, 0, 4, |_, _| panic!("no stripes expected"));
+    }
+
+    #[test]
+    fn pool_worker_panic_is_propagated_not_hung() {
+        let pool = ExecPool::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut out = vec![0u8; 8];
+            pool.run_stripes(&mut out, 1, 4, |row0, _| {
+                if row0 >= 4 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "stripe panic must surface to the dispatcher");
+        // ...and the pool must still be usable afterwards
+        check_covering(&pool, 6, 2, 3);
+    }
+
+    #[test]
+    fn pool_concurrent_dispatchers_serialize_safely() {
+        // two threads hammer one shared pool; the gate serializes them
+        // and every dispatch still completes correctly
+        let pool = Arc::new(ExecPool::new(2));
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let pool = pool.clone();
+                s.spawn(move || {
+                    for i in 0..50 {
+                        check_covering(&pool, 2 + i % 7, 3, 3);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ExecPool::new(4);
+        check_covering(&pool, 8, 2, 4);
+        drop(pool); // must not hang or leak parked threads
+    }
+
+    #[test]
+    fn pool_global_is_shared_and_machine_wide() {
+        let a = ExecPool::global();
+        let b = ExecPool::global();
+        assert!(Arc::ptr_eq(a, b));
+        let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(a.participants(), par, "global pool spans the machine");
+    }
+
+    #[test]
+    fn pool_clamp_thread_sweep_drops_unreachable_points() {
+        let pool = ExecPool::new(3); // 4 participants
+        let mut sweep = vec![1, 2, 4, 8];
+        pool.clamp_thread_sweep(&mut sweep);
+        assert_eq!(sweep, vec![1, 2, 4]);
+        let mut all_over = vec![16, 32];
+        pool.clamp_thread_sweep(&mut all_over);
+        assert_eq!(all_over, vec![4], "empty sweep falls back to the cap");
+    }
+
+    // ------------------------------ scratch --------------------------------
+
+    #[test]
+    fn pool_scratch_grows_monotonically_and_is_reused() {
+        let p0 = with_scratch_f32(64, |s| {
+            s.fill(1.0);
+            s.as_ptr() as usize
+        });
+        // same or smaller request: same allocation, dirty contents
+        let (p1, first) = with_scratch_f32(32, |s| (s.as_ptr() as usize, s[0]));
+        assert_eq!(p0, p1, "scratch must be reused, not reallocated");
+        assert_eq!(first, 1.0, "scratch is handed back dirty by design");
+        // growth keeps the slice length honest
+        with_scratch_f32(128, |s| assert_eq!(s.len(), 128));
+        with_scratch_i32(16, |s| {
+            s.fill(7);
+            assert_eq!(s.len(), 16);
+        });
+    }
+
+    // -------------------------- scoped baseline ----------------------------
+
+    #[test]
+    fn pool_scoped_baseline_matches_pooled_dispatch() {
+        let pool = ExecPool::new(3);
+        for m in [1usize, 2, 7, 20] {
+            let mut a = vec![0u32; m * 3];
+            let mut b = vec![0u32; m * 3];
+            let f = |row0: usize, chunk: &mut [u32]| {
+                for (li, row) in chunk.chunks_mut(3).enumerate() {
+                    row.fill((row0 + li) as u32 * 10);
+                }
+            };
+            pool.run_stripes(&mut a, 3, 4, f);
+            scoped_stripes(&mut b, 3, 4, f);
+            assert_eq!(a, b, "m={m}");
+        }
+    }
+}

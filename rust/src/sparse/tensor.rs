@@ -42,7 +42,9 @@ impl fmt::Display for DType {
 }
 
 /// Row-major dense matrix of f32 — the reference numeric type on the host.
-#[derive(Clone, Debug, PartialEq)]
+/// `Default` is the empty `0 × 0` matrix (arena buffers start there and
+/// grow on first [`reset`](Dense2::reset)).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Dense2 {
     pub rows: usize,
     pub cols: usize,
@@ -57,6 +59,35 @@ impl Dense2 {
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Dense2 {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Dense2 { rows, cols, data }
+    }
+
+    /// Reshape in place to `rows × cols`, zero-filled, reusing the
+    /// existing allocation: capacity grows monotonically and is never
+    /// released, so a buffer cycled through same-shaped calls keeps a
+    /// stable data pointer — the activation-arena contract the serving
+    /// backend's zero-alloc forward pass is built on.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// [`reset`](Dense2::reset) without the zero-fill: element values
+    /// are unspecified afterwards, so this is only for callers that
+    /// overwrite every element before reading any (the tiled kernels'
+    /// fused epilogue writes each output exactly once). Skipping the
+    /// fill matters on the per-layer hot path — a steady-state reshape
+    /// to the same or smaller footprint touches no memory at all.
+    pub fn reshape_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        let len = rows * cols;
+        if self.data.len() > len {
+            self.data.truncate(len);
+        } else if self.data.len() < len {
+            self.data.resize(len, 0.0);
+        }
     }
 
     /// Gaussian-random matrix (deterministic from seed).
@@ -147,6 +178,35 @@ mod tests {
         let ones = Dense2::from_vec(2, 2, vec![1.0; 4]);
         let y = a.matmul(&ones);
         assert_eq!(y.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn reset_reuses_allocation_with_stable_pointer() {
+        let mut d = Dense2::zeros(4, 8);
+        d.data.fill(3.5);
+        let p = d.data.as_ptr();
+        d.reset(2, 8); // shrink: same allocation, zeroed
+        assert_eq!((d.rows, d.cols), (2, 8));
+        assert_eq!(d.data.len(), 16);
+        assert!(d.data.iter().all(|&v| v == 0.0));
+        assert_eq!(d.data.as_ptr(), p, "shrinking reset must not reallocate");
+        d.reset(4, 8); // regrow within original capacity
+        assert_eq!(d.data.as_ptr(), p, "regrow within capacity must not reallocate");
+        assert_eq!(d.data.len(), 32);
+    }
+
+    #[test]
+    fn reshape_for_overwrite_skips_the_fill() {
+        let mut d = Dense2::zeros(4, 8);
+        d.data.fill(3.5);
+        let p = d.data.as_ptr();
+        d.reshape_for_overwrite(2, 8);
+        assert_eq!((d.rows, d.cols, d.data.len()), (2, 8, 16));
+        assert_eq!(d.data[0], 3.5, "no dead memset on the shrink path");
+        d.reshape_for_overwrite(4, 8);
+        assert_eq!(d.data.len(), 32);
+        assert_eq!(d.data.as_ptr(), p, "reshape reuses the allocation");
+        assert_eq!(d.data[0], 3.5, "prefix untouched on regrow");
     }
 
     #[test]

@@ -157,16 +157,32 @@ pub struct JsonReport {
     topic: String,
     fields: Vec<(String, Json)>,
     entries: Vec<Json>,
+    /// worker/thread count the bench actually dispatched on (see
+    /// [`set_effective_workers`](JsonReport::set_effective_workers))
+    effective_workers: Option<usize>,
 }
 
 impl JsonReport {
     pub fn new(topic: &str) -> JsonReport {
-        JsonReport { topic: topic.to_string(), fields: Vec::new(), entries: Vec::new() }
+        JsonReport {
+            topic: topic.to_string(),
+            fields: Vec::new(),
+            entries: Vec::new(),
+            effective_workers: None,
+        }
     }
 
     /// Set a top-level metadata field (shape, smoke flag, host info, ...).
     pub fn set(&mut self, key: &str, v: Json) {
         self.fields.push((key.to_string(), v));
+    }
+
+    /// Record the parallelism the bench *actually used* (pool
+    /// participants, max thread sweep point, backend thread cap) —
+    /// emitted under `host.effective_workers`. Unset, it defaults to the
+    /// machine's available parallelism.
+    pub fn set_effective_workers(&mut self, n: usize) {
+        self.effective_workers = Some(n);
     }
 
     /// Append one measurement entry.
@@ -175,9 +191,24 @@ impl JsonReport {
     }
 
     pub fn to_json(&self) -> Json {
+        // every BENCH_*.json carries the host's parallelism next to the
+        // worker count the bench dispatched on, so perf trajectories are
+        // comparable across machines (a 2-core CI runner's "speedup at 8
+        // threads" is not a 64-core box's)
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let mut pairs = vec![
             ("schema", Json::Str("s4-bench-v1".into())),
             ("bench", Json::Str(self.topic.clone())),
+            (
+                "host",
+                Json::obj(vec![
+                    ("available_parallelism", Json::Num(avail as f64)),
+                    (
+                        "effective_workers",
+                        Json::Num(self.effective_workers.unwrap_or(avail) as f64),
+                    ),
+                ]),
+            ),
         ];
         for (k, v) in &self.fields {
             pairs.push((k.as_str(), v.clone()));
@@ -234,6 +265,9 @@ mod tests {
         assert_eq!(j.get("schema").as_str(), Some("s4-bench-v1"));
         assert_eq!(j.get("bench").as_str(), Some("unit_test"));
         assert_eq!(j.get("entries").as_arr().unwrap().len(), 1);
+        // host comparability fields are present in every report
+        assert!(j.get("host").get("available_parallelism").as_u64().unwrap() >= 1);
+        assert!(j.get("host").get("effective_workers").as_u64().unwrap() >= 1);
         // serialized form parses back identically
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
         let dir = std::env::temp_dir();
@@ -242,6 +276,14 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(Json::parse(text.trim()).unwrap(), j);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn json_report_effective_workers_override() {
+        let mut r = JsonReport::new("unit_test_workers");
+        r.set_effective_workers(3);
+        let j = r.to_json();
+        assert_eq!(j.get("host").get("effective_workers").as_u64(), Some(3));
     }
 
     #[test]

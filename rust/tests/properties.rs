@@ -220,6 +220,85 @@ fn prop_tiled_spmm_matches_serial_and_dense() {
 }
 
 #[test]
+fn prop_pooled_matches_scoped_and_serial() {
+    // the differential contract of the persistent execution pool: for
+    // random shapes, every supported sparsity, any tile width, and pool
+    // worker counts {1, 2, 3, 7}, dispatching the f32 AND int8 kernels
+    // through a long-lived ExecPool is bitwise identical to (a) the
+    // serial references and (b) the spawn-per-call scoped baselines —
+    // the pool changes who computes a stripe, never what is computed.
+    // Pools are built once and reused across all cases (the steady-state
+    // serving pattern), so this also exercises worker reuse.
+    use s4::sparse::pack::{
+        qspmm_tiled_into, qspmm_tiled_scoped, spmm_tiled_into, spmm_tiled_scoped,
+    };
+    use s4::sparse::pool::ExecPool;
+
+    let pools: Vec<ExecPool> = [1usize, 2, 3, 7].iter().map(|&w| ExecPool::new(w)).collect();
+    let mut f32_out = Dense2::zeros(0, 0);
+    let mut int8_out = Dense2::zeros(0, 0);
+    let mut qbuf = Vec::new();
+    check("pooled dispatch differential", 48, |g: &mut Gen| {
+        let m = g.usize_in(1, 24);
+        let kb = g.usize_in(1, 3);
+        let n = g.usize_in(1, 40);
+        let s = *g.pick(&[1usize, 2, 4, 8, 16, 32]);
+        let n_tile = *g.pick(&[3usize, 8, 16, 128]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let pool = &pools[g.usize_in(0, pools.len() - 1)];
+        let threads = pool.participants();
+        let x = Dense2::randn(m, kb * BLOCK, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(kb * BLOCK, n, seed + 1), s)
+            .map_err(|e| e.to_string())?;
+        let qb = w.quantize();
+        let packed = w.pack_tiled(n_tile);
+        let qpacked = qb.pack_tiled(n_tile);
+        let bias: Option<Vec<f32>> = if g.bool() {
+            Some((0..n).map(|i| (i as f32).sin()).collect())
+        } else {
+            None
+        };
+        let act = *g.pick(&[Act::None, Act::Relu, Act::Gelu]);
+
+        let serial = spmm(&x, &w, bias.as_deref(), act);
+        spmm_tiled_into(pool, &x, &packed, bias.as_deref(), act, threads, &mut f32_out);
+        prop_assert!(
+            serial.data == f32_out.data,
+            "pooled f32 != serial (m={m} n={n} s={s} nt={n_tile} workers={})",
+            pool.workers()
+        );
+        let scoped = spmm_tiled_scoped(&x, &packed, bias.as_deref(), act, threads);
+        prop_assert!(
+            scoped.data == f32_out.data,
+            "pooled f32 != scoped baseline (m={m} n={n} s={s})"
+        );
+
+        let qserial = qspmm(&x, &qb, bias.as_deref(), act);
+        qspmm_tiled_into(
+            pool,
+            &x,
+            &qpacked,
+            bias.as_deref(),
+            act,
+            threads,
+            &mut qbuf,
+            &mut int8_out,
+        );
+        prop_assert!(
+            qserial.data == int8_out.data,
+            "pooled int8 != serial (m={m} n={n} s={s} nt={n_tile} workers={})",
+            pool.workers()
+        );
+        let qscoped = qspmm_tiled_scoped(&x, &qpacked, bias.as_deref(), act, threads);
+        prop_assert!(
+            qscoped.data == int8_out.data,
+            "pooled int8 != scoped baseline (m={m} n={n} s={s})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_qspmm_tiled_matches_serial_int8_and_tracks_f32() {
     // the differential contract of the quantized engine: for random
     // shapes, every supported sparsity, any thread count and tile width,
