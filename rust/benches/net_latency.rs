@@ -1,0 +1,271 @@
+//! Bench: serving latency through the TCP front end, open-loop, with a
+//! machine-readable perf trajectory.
+//!
+//! Emits `BENCH_net.json` (schema `s4-bench-v1`, see EXPERIMENTS.md
+//! §Perf "Network serving"). The same fixed-service-time stack as the
+//! QoS bench (ThrottledEcho behind one worker, capacity = batch/service)
+//! is driven by the open-loop generator at three offered rates — ~25%,
+//! ~50%, and ~150% of saturation — through a real socket
+//! ([`run_open_loop`]); at the matched mid rate, the *identical*
+//! schedule (same seed, same classes, same deadlines) is replayed
+//! straight into the coordinator ([`run_open_loop_local`]), so the
+//! socket's cost is a like-for-like subtraction, not a guess.
+//!
+//! Trajectory points each PR defends:
+//! * `socket_overhead_ratio` — socket-path Interactive p99 ≤ 3× the
+//!   in-process figure at matched load (the wire must not swamp QoS);
+//! * past saturation the harness must *see* the overload: shed work
+//!   (admission rejections and expired Bulk) > 0, achieved < offered.
+//!
+//! ```bash
+//! cargo bench --bench net_latency            # full
+//! cargo bench --bench net_latency -- --smoke # CI trajectory point
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use s4::backend::{EchoBackend, InferenceBackend, TensorSpec, Value};
+use s4::coordinator::{
+    BatcherConfig, Priority, Router, RoutingPolicy, Server, ServerConfig, ServerHandle,
+};
+use s4::net::{run_open_loop, run_open_loop_local, LoadReport, LoadSpec, NetServer, NetServerConfig};
+use s4::runtime::Manifest;
+use s4::util::bench::JsonReport;
+use s4::util::cli::Args;
+use s4::util::json::Json;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+/// Echo semantics with a fixed service time per batch — deterministic
+/// capacity (`max_batch / service` rps with one worker), so offered
+/// rates can be placed below/at/above saturation by construction.
+struct ThrottledEcho {
+    inner: EchoBackend,
+    service: Duration,
+}
+
+impl InferenceBackend for ThrottledEcho {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.input_specs(artifact)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.output_specs(artifact)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        std::thread::sleep(self.service);
+        self.inner.run_batch(artifact, inputs)
+    }
+}
+
+/// A fresh serving stack per experiment, so backlog from an overload run
+/// can never leak into the next rate point.
+fn serve_stack(service: Duration) -> (Server, Arc<ServerHandle>) {
+    let m = manifest();
+    let backend = Arc::new(ThrottledEcho { inner: EchoBackend::from_manifest(&m), service });
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
+            workers: 1,
+            max_inflight: 256,
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let handle = Arc::new(srv.handle());
+    (srv, handle)
+}
+
+fn spec_at(rate: f64, duration: Duration, bulk_deadline: Duration) -> LoadSpec {
+    LoadSpec {
+        model: "bert_tiny".into(),
+        tokens: (0..32).map(|i| (i * 37 + 11) % 1000).collect(),
+        rate_rps: rate,
+        duration,
+        connections: 2,
+        mix: [0.2, 0.5, 0.3],
+        // Bulk carries a deadline it cannot meet from the back of an
+        // overloaded queue — past saturation, expiry must show up
+        deadlines: [None, None, Some(bulk_deadline)],
+        drain_grace: Duration::from_secs(10),
+        seed: 0x4E45_5401,
+    }
+}
+
+/// One socket-path experiment: fresh stack, fresh NetServer on port 0,
+/// open-loop load, full drain, clean shutdown.
+fn run_socket(spec: &LoadSpec, service: Duration) -> anyhow::Result<LoadReport> {
+    let (srv, handle) = serve_stack(service);
+    let net = Arc::new(NetServer::bind("127.0.0.1:0", handle, NetServerConfig::default())?);
+    let addr = net.local_addr();
+    {
+        let net = net.clone();
+        srv.on_shutdown(move || net.shutdown());
+    }
+    let report = run_open_loop(addr, spec)?;
+    srv.shutdown();
+    Ok(report)
+}
+
+/// The matched in-process experiment: identical schedule, no socket.
+fn run_inproc(spec: &LoadSpec, service: Duration) -> anyhow::Result<LoadReport> {
+    let (srv, handle) = serve_stack(service);
+    let report = run_open_loop_local(&handle, spec)?;
+    srv.shutdown();
+    Ok(report)
+}
+
+fn class_rows(scenario: &str, rate: f64, r: &LoadReport) -> Vec<Json> {
+    let mut rows = Vec::new();
+    for p in Priority::ALL {
+        let c = r.class(p);
+        println!(
+            "bench net/{scenario:<8} rate {rate:>6.0}  {:<12} offered={:<5} ok={:<5} \
+             exp={:<4} rej={:<4} p50 {:>8.0}µs  p99 {:>8.0}µs  p999 {:>8.0}µs",
+            p.as_str(),
+            c.offered,
+            c.completed,
+            c.expired,
+            c.rejected,
+            c.p50_us,
+            c.p99_us,
+            c.p999_us
+        );
+        rows.push(Json::obj(vec![
+            ("scenario", Json::Str(scenario.into())),
+            ("offered_rps", Json::Num(rate)),
+            ("class", Json::Str(p.as_str().into())),
+            ("offered", Json::Num(c.offered as f64)),
+            ("completed", Json::Num(c.completed as f64)),
+            ("expired", Json::Num(c.expired as f64)),
+            ("rejected", Json::Num(c.rejected as f64)),
+            ("errors", Json::Num(c.errors as f64)),
+            ("p50_us", Json::Num(c.p50_us)),
+            ("p99_us", Json::Num(c.p99_us)),
+            ("p999_us", Json::Num(c.p999_us)),
+            ("achieved_rps", Json::Num(r.achieved_rps)),
+        ]));
+    }
+    rows
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    // capacity with one worker = max_batch / service
+    let (service, duration, bulk_deadline) = if smoke {
+        (Duration::from_millis(2), Duration::from_millis(800), Duration::from_millis(25))
+    } else {
+        (Duration::from_millis(4), Duration::from_secs(2), Duration::from_millis(50))
+    };
+    let capacity_rps = 8.0 / service.as_secs_f64();
+    // ~25%, ~50% (the matched-comparison point), ~150% of saturation
+    let rates = [0.25 * capacity_rps, 0.5 * capacity_rps, 1.5 * capacity_rps];
+    let mid = rates[1];
+
+    println!(
+        "== net latency (service {service:?}/batch, capacity ~{capacity_rps:.0} rps, \
+         {duration:?}/rate, bulk deadline {bulk_deadline:?}) =="
+    );
+
+    let mut report = JsonReport::new("net");
+    report.set("smoke", Json::Bool(smoke));
+    // synthetic-delay backend behind one coordinator worker
+    report.set_effective_workers(1);
+    report.set("service_us_per_batch", Json::Num(service.as_micros() as f64));
+    report.set("capacity_rps", Json::Num(capacity_rps));
+    report.set("bulk_deadline_us", Json::Num(bulk_deadline.as_micros() as f64));
+    report.set("duration_s_per_rate", Json::Num(duration.as_secs_f64()));
+
+    let mut overload: Option<LoadReport> = None;
+    let mut socket_mid: Option<LoadReport> = None;
+    for &rate in &rates {
+        let spec = spec_at(rate, duration, bulk_deadline);
+        let r = run_socket(&spec, service)?;
+        for row in class_rows("socket", rate, &r) {
+            report.push(row);
+        }
+        if (rate - mid).abs() < 1e-9 {
+            socket_mid = Some(r.clone());
+        }
+        if rate > capacity_rps {
+            overload = Some(r.clone());
+        }
+    }
+
+    // matched in-process run: same seed ⇒ identical arrival schedule
+    let spec = spec_at(mid, duration, bulk_deadline);
+    let inproc = run_inproc(&spec, service)?;
+    for row in class_rows("inproc", mid, &inproc) {
+        report.push(row);
+    }
+
+    let socket_mid = socket_mid.expect("mid rate ran");
+    let overload = overload.expect("overload rate ran");
+
+    // headline: what does the socket cost the latency-critical class at
+    // healthy load?
+    let sock_p99 = socket_mid.class(Priority::Interactive).p99_us;
+    let local_p99 = inproc.class(Priority::Interactive).p99_us;
+    anyhow::ensure!(
+        socket_mid.class(Priority::Interactive).completed > 0,
+        "socket run must complete interactive traffic"
+    );
+    anyhow::ensure!(
+        inproc.class(Priority::Interactive).completed > 0,
+        "in-process run must complete interactive traffic"
+    );
+    let ratio = sock_p99 / local_p99.max(1.0);
+    report.set("socket_interactive_p99_us", Json::Num(sock_p99));
+    report.set("inproc_interactive_p99_us", Json::Num(local_p99));
+    report.set("socket_overhead_ratio", Json::Num(ratio));
+    report.set("overload_shed", Json::Num(overload.shed() as f64));
+    report.set("overload_achieved_rps", Json::Num(overload.achieved_rps));
+    report.set("overload_offered_rps", Json::Num(overload.offered_rps));
+
+    println!(
+        "bench net/summary   interactive p99: socket {sock_p99:.0}µs vs in-process \
+         {local_p99:.0}µs  (ratio {ratio:.2}x)  overload: achieved {:.0}/{:.0} rps, \
+         shed {}",
+        overload.achieved_rps,
+        overload.offered_rps,
+        overload.shed()
+    );
+
+    anyhow::ensure!(
+        ratio <= 3.0,
+        "socket path must stay within 3x of in-process interactive p99 at matched load \
+         (got {ratio:.2}x: socket {sock_p99:.0}µs vs {local_p99:.0}µs)"
+    );
+    anyhow::ensure!(
+        overload.shed() > 0,
+        "past saturation the harness must observe shed work (rejected/expired)"
+    );
+    anyhow::ensure!(
+        overload.achieved_rps < overload.offered_rps,
+        "past saturation achieved rate must fall below offered \
+         (achieved {:.0} vs offered {:.0})",
+        overload.achieved_rps,
+        overload.offered_rps
+    );
+
+    let path = report.write()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

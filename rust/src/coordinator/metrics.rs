@@ -31,6 +31,22 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
     pub padding_slots: AtomicU64,
+    /// Connection-level counters recorded by the net front end
+    /// ([`NetServer`](crate::net::NetServer)) when it shares this sink
+    /// (via [`ServingService::shared_metrics`](crate::coordinator::ServingService::shared_metrics)),
+    /// so the socket boundary is observable through the same snapshot as
+    /// serving. All zero when no front end is attached.
+    pub conns_accepted: AtomicU64,
+    /// gauge: connections currently being served
+    pub conns_active: AtomicU64,
+    /// closed by the server on a protocol/IO error or handler panic
+    /// (a clean client close does not count)
+    pub conns_closed_on_error: AtomicU64,
+    pub frames_in: AtomicU64,
+    pub frames_out: AtomicU64,
+    /// frames rejected by the codec (bad magic, oversized, truncated,
+    /// undecodable payload); each also closes its connection
+    pub frames_malformed: AtomicU64,
     admitted_by_class: [AtomicU64; 3],
     completed_by_class: [AtomicU64; 3],
     lat: Mutex<Latencies>,
@@ -41,6 +57,19 @@ pub struct Metrics {
 pub struct ClassStats {
     pub admitted: u64,
     pub completed: u64,
+}
+
+/// Point-in-time view of the connection-level counters the net front end
+/// records — part of [`MetricsSnapshot`] so socket observability rides
+/// the same path as serving observability.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub conns_accepted: u64,
+    pub conns_active: u64,
+    pub conns_closed_on_error: u64,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub frames_malformed: u64,
 }
 
 /// Typed point-in-time view of [`Metrics`] — what
@@ -60,11 +89,15 @@ pub struct MetricsSnapshot {
     pub padding_slots: u64,
     /// indexed by [`Priority::idx`]
     pub by_class: [ClassStats; 3],
+    /// socket-boundary counters (all zero without a net front end)
+    pub net: NetStats,
     pub mean_batch_fill: f64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
+    pub latency_p999_us: f64,
     pub queue_p50_us: f64,
     pub queue_p99_us: f64,
+    pub queue_p999_us: f64,
 }
 
 impl MetricsSnapshot {
@@ -102,6 +135,17 @@ impl MetricsSnapshot {
                 p.as_str(),
                 c.completed,
                 c.admitted
+            ));
+        }
+        if self.net.conns_accepted > 0 {
+            s.push_str(&format!(
+                " net[conns={}/{} err_closed={} frames={}/{} malformed={}]",
+                self.net.conns_active,
+                self.net.conns_accepted,
+                self.net.conns_closed_on_error,
+                self.net.frames_in,
+                self.net.frames_out,
+                self.net.frames_malformed,
             ));
         }
         s
@@ -161,12 +205,57 @@ impl Metrics {
             .fetch_add((padded_to - requests) as u64, Ordering::Relaxed);
     }
 
+    /// One accepted connection starts being served (bumps the gauge too).
+    #[inline]
+    pub fn record_conn_accepted(&self) {
+        self.conns_accepted.fetch_add(1, Ordering::Relaxed);
+        self.conns_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One connection finished; `on_error` marks protocol/IO failures and
+    /// handler panics (clean client closes pass `false`).
+    #[inline]
+    pub fn record_conn_closed(&self, on_error: bool) {
+        // fetch_update so a stray double-close cannot wrap the gauge
+        let _ = self
+            .conns_active
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+        if on_error {
+            self.conns_closed_on_error.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn record_frame_in(&self) {
+        self.frames_in.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_frame_out(&self) {
+        self.frames_out.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_malformed_frame(&self) {
+        self.frames_malformed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
         self.lat.lock().unwrap().latency.quantile_us(q)
     }
 
     pub fn queue_quantile_us(&self, q: f64) -> f64 {
         self.lat.lock().unwrap().queue.quantile_us(q)
+    }
+
+    /// Batch quantile read: one lock acquisition for any number of
+    /// quantiles (benches and snapshots read p50/p99/p999 together).
+    pub fn latency_quantiles_us(&self, qs: &[f64]) -> Vec<f64> {
+        self.lat.lock().unwrap().latency.quantiles(qs)
+    }
+
+    pub fn queue_quantiles_us(&self, qs: &[f64]) -> Vec<f64> {
+        self.lat.lock().unwrap().queue.quantiles(qs)
     }
 
     /// Mean requests per executed batch (batching efficiency).
@@ -194,14 +283,10 @@ impl Metrics {
                 completed: self.completed_class(p),
             };
         }
-        let (lp50, lp99, qp50, qp99) = {
+        // one lock for all six quantiles (see LatencyHistogram::quantiles)
+        let (lat_q, queue_q) = {
             let l = self.lat.lock().unwrap();
-            (
-                l.latency.quantile_us(0.5),
-                l.latency.quantile_us(0.99),
-                l.queue.quantile_us(0.5),
-                l.queue.quantile_us(0.99),
-            )
+            (l.latency.quantiles(&[0.5, 0.99, 0.999]), l.queue.quantiles(&[0.5, 0.99, 0.999]))
         };
         MetricsSnapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
@@ -214,11 +299,21 @@ impl Metrics {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             padding_slots: self.padding_slots.load(Ordering::Relaxed),
             by_class,
+            net: NetStats {
+                conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
+                conns_active: self.conns_active.load(Ordering::Relaxed),
+                conns_closed_on_error: self.conns_closed_on_error.load(Ordering::Relaxed),
+                frames_in: self.frames_in.load(Ordering::Relaxed),
+                frames_out: self.frames_out.load(Ordering::Relaxed),
+                frames_malformed: self.frames_malformed.load(Ordering::Relaxed),
+            },
             mean_batch_fill: self.mean_batch_fill(),
-            latency_p50_us: lp50,
-            latency_p99_us: lp99,
-            queue_p50_us: qp50,
-            queue_p99_us: qp99,
+            latency_p50_us: lat_q[0],
+            latency_p99_us: lat_q[1],
+            latency_p999_us: lat_q[2],
+            queue_p50_us: queue_q[0],
+            queue_p99_us: queue_q[1],
+            queue_p999_us: queue_q[2],
         }
     }
 
@@ -293,5 +388,59 @@ mod tests {
     #[test]
     fn empty_fill_is_zero() {
         assert_eq!(Metrics::new().mean_batch_fill(), 0.0);
+    }
+
+    #[test]
+    fn net_counters_flow_into_snapshot_and_report() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().net, NetStats::default());
+        assert!(!m.report().contains("net["), "no net line without a front end");
+        m.record_conn_accepted();
+        m.record_conn_accepted();
+        m.record_frame_in();
+        m.record_frame_in();
+        m.record_frame_out();
+        m.record_malformed_frame();
+        m.record_conn_closed(true);
+        let s = m.snapshot();
+        assert_eq!(
+            s.net,
+            NetStats {
+                conns_accepted: 2,
+                conns_active: 1,
+                conns_closed_on_error: 1,
+                frames_in: 2,
+                frames_out: 1,
+                frames_malformed: 1,
+            }
+        );
+        assert!(s.report().contains("net[conns=1/2"), "{}", s.report());
+        // clean close: gauge drops, error counter untouched
+        m.record_conn_closed(false);
+        let s = m.snapshot();
+        assert_eq!(s.net.conns_active, 0);
+        assert_eq!(s.net.conns_closed_on_error, 1);
+        // stray extra close must not wrap the gauge
+        m.record_conn_closed(false);
+        assert_eq!(m.snapshot().net.conns_active, 0);
+    }
+
+    #[test]
+    fn batch_quantiles_match_scalar_reads_including_p999() {
+        let m = Metrics::new();
+        for us in [100, 1_000, 10_000, 100_000] {
+            m.record_completion(Priority::Standard, us, us / 10);
+        }
+        let qs = [0.5, 0.99, 0.999];
+        let lat = m.latency_quantiles_us(&qs);
+        let queue = m.queue_quantiles_us(&qs);
+        for (i, &q) in qs.iter().enumerate() {
+            assert_eq!(lat[i], m.latency_quantile_us(q));
+            assert_eq!(queue[i], m.queue_quantile_us(q));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency_p999_us, lat[2]);
+        assert_eq!(s.queue_p999_us, queue[2]);
+        assert!(s.latency_p99_us <= s.latency_p999_us);
     }
 }

@@ -17,6 +17,14 @@
 //!    │       budgets)         shed expired/    │       cancel/deadline    │
 //!  Ticket                     cancelled)       │       re-check)          │
 //!  wait/poll/cancel                 metrics ◀──┴───────────┴──────────────┘
+//!    ▲                                 ▲
+//!    │ Ticket::try_take (reply pump)   │ conns / frames / malformed
+//!  ┌─┴─────────────────────────────────┴─┐
+//!  │ net::NetServer  (socket boundary)   │   reader + reply pump per conn;
+//!  │   TCP frames ⇄ submit_with/Ticket   │   drain hook: srv.on_shutdown(
+//!  └───▲───────────────────────────────┬─┘     move || net.shutdown())
+//!      │ length-prefixed frames (wire) │
+//!   net::NetClient / net::loadgen  ◀───┘   remote clients over TCP
 //! ```
 //!
 //! Requests carry `Vec<Value>` payloads (one sample-shaped tensor per
@@ -36,7 +44,7 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use metrics::{ClassStats, Metrics, MetricsSnapshot};
+pub use metrics::{ClassStats, Metrics, MetricsSnapshot, NetStats};
 pub use request::{
     Priority, Request, RequestId, Response, ResponseStatus, SubmitOptions, Ticket,
 };

@@ -313,6 +313,25 @@ impl Ticket {
     pub fn try_poll(&self) -> Option<Response> {
         self.rx.try_recv().ok()
     }
+
+    /// Non-blocking probe that distinguishes *pending* from *abandoned*:
+    /// `Ok(Some(r))` — the response arrived; `Ok(None)` — still in
+    /// flight; `Err(_)` — the server was torn down without replying, so
+    /// no response will ever come. Pollers that must terminate (the net
+    /// reply pump draining a connection) need the third case;
+    /// [`try_poll`](Ticket::try_poll) folds it into `None` and would spin
+    /// forever.
+    pub fn try_take(&self) -> anyhow::Result<Option<Response>> {
+        use std::sync::mpsc::TryRecvError;
+        match self.rx.try_recv() {
+            Ok(r) => Ok(Some(r)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow::anyhow!(
+                "server dropped request {:?} without replying",
+                self.id
+            )),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -422,5 +441,21 @@ mod tests {
         drop(tx);
         assert!(t.wait_timeout(Duration::from_millis(10)).is_err());
         assert!(t.wait().is_err());
+    }
+
+    #[test]
+    fn try_take_distinguishes_pending_from_abandoned() {
+        let (tx, rx) = channel();
+        let t = Ticket::new(
+            RequestId(3),
+            Priority::Standard,
+            rx,
+            Arc::new(AtomicBool::new(false)),
+        );
+        assert!(t.try_take().unwrap().is_none(), "pending is Ok(None)");
+        tx.send(Response::expired(RequestId(3))).unwrap();
+        assert_eq!(t.try_take().unwrap().unwrap().status, ResponseStatus::Expired);
+        drop(tx);
+        assert!(t.try_take().is_err(), "abandoned is Err, not a silent None");
     }
 }

@@ -90,6 +90,16 @@ pub trait ServingService {
 
     /// Typed point-in-time metrics for this serving stack.
     fn metrics_snapshot(&self) -> MetricsSnapshot;
+
+    /// The shared [`Metrics`] sink behind this service, when it has one.
+    /// Front ends (the socket layer's
+    /// [`NetServer`](crate::net::NetServer)) record connection/frame
+    /// counters into it so one [`MetricsSnapshot`] covers both the wire
+    /// boundary and serving. Adapters without a shared sink keep the
+    /// default `None`; the front end then falls back to a private sink.
+    fn shared_metrics(&self) -> Option<Arc<Metrics>> {
+        None
+    }
 }
 
 /// Running server; call [`shutdown`](Server::shutdown) to stop cleanly.
@@ -97,6 +107,10 @@ pub struct Server {
     handle: ServerHandle,
     threads: Vec<JoinHandle<()>>,
     stop: Arc<std::sync::atomic::AtomicBool>,
+    /// front-end drain hooks, run at the START of [`shutdown`](Server::shutdown)
+    /// while the batcher/workers are still serving (see
+    /// [`on_shutdown`](Server::on_shutdown))
+    drain_hooks: Mutex<Vec<Box<dyn FnOnce() + Send>>>,
 }
 
 /// Cheap-to-clone submission handle — the [`ServingService`]
@@ -159,6 +173,10 @@ impl ServingService for ServerHandle {
 
     fn metrics_snapshot(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    fn shared_metrics(&self) -> Option<Arc<Metrics>> {
+        Some(self.metrics.clone())
     }
 }
 
@@ -272,6 +290,7 @@ impl Server {
             },
             threads,
             stop,
+            drain_hooks: Mutex::new(Vec::new()),
         }
     }
 
@@ -279,10 +298,26 @@ impl Server {
         self.handle.clone()
     }
 
-    /// Shut down: signal the batcher (which drains queued work), then join
-    /// all threads. Safe even while cloned handles are still alive.
+    /// Register a front-end drain hook, run at the start of
+    /// [`shutdown`](Server::shutdown) *before* the batcher/workers are
+    /// signalled. This is how the socket layer wires drain-on-shutdown:
+    /// `srv.on_shutdown(move || net.shutdown())` makes one
+    /// `srv.shutdown()` call first stop accepting connections and flush
+    /// every in-flight wire request (the coordinator is still answering
+    /// tickets at that point), then stop serving. Hooks run in
+    /// registration order.
+    pub fn on_shutdown(&self, hook: impl FnOnce() + Send + 'static) {
+        self.drain_hooks.lock().unwrap().push(Box::new(hook));
+    }
+
+    /// Shut down: run the registered front-end drain hooks (while still
+    /// serving), then signal the batcher (which drains queued work) and
+    /// join all threads. Safe even while cloned handles are still alive.
     pub fn shutdown(self) {
-        let Server { handle, threads, stop } = self;
+        let Server { handle, threads, stop, drain_hooks } = self;
+        for hook in drain_hooks.into_inner().unwrap() {
+            hook();
+        }
         stop.store(true, std::sync::atomic::Ordering::Release);
         drop(handle);
         for t in threads {
@@ -656,6 +691,33 @@ mod tests {
         assert_eq!(s.rejected, 1);
         assert_eq!(s.class(Priority::Standard).admitted, 0);
         assert_eq!(h.metrics.admitted.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn drain_hooks_run_while_the_coordinator_is_still_serving() {
+        // a front end drains in-flight wire work inside its hook; that
+        // only works if tickets still resolve at hook time
+        let srv = echo_server(ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            max_inflight: 16,
+        });
+        let h = srv.handle();
+        let ran = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        {
+            let h = h.clone();
+            let ran = ran.clone();
+            srv.on_shutdown(move || {
+                let t = h.submit("bert_tiny", vec![Value::tokens(vec![3; 16])]).unwrap();
+                let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+                assert!(r.is_ok(), "hook-time submit must still serve: {:?}", r.status);
+                ran.store(true, std::sync::atomic::Ordering::Release);
+            });
+        }
+        srv.shutdown();
+        assert!(ran.load(std::sync::atomic::Ordering::Acquire), "hook must run");
+        // after shutdown the same handle is rejected
+        assert!(h.submit("bert_tiny", vec![Value::tokens(vec![3; 16])]).is_err());
     }
 
     #[test]

@@ -52,6 +52,16 @@
 //!   per-class admission control, worker pool, metrics
 //!   ([`coordinator::MetricsSnapshot`]) — generic over any
 //!   [`backend::InferenceBackend`].
+//! * [`net`] — the network serving front end over the coordinator: a
+//!   length-prefixed binary frame codec whose request frames carry the
+//!   full QoS surface and whose f32 payloads round-trip bitwise
+//!   ([`net::wire`]), a TCP server binding any
+//!   [`coordinator::ServingService`] behind a socket with bounded
+//!   per-connection threads and drain-on-shutdown ([`net::NetServer`],
+//!   `s4 net-serve`), a blocking pipelined client ([`net::NetClient`]),
+//!   and an open-loop load generator with per-class p50/p99/p999 and
+//!   achieved-vs-offered reporting ([`net::loadgen`], `s4 net-load`,
+//!   `BENCH_net.json`).
 //! * [`util`] — in-repo substrates this environment lacks crates for:
 //!   JSON, deterministic RNG, stats, CLI parsing, a bench harness (with
 //!   the `BENCH_<topic>.json` machine-readable perf-trajectory writer —
@@ -115,6 +125,7 @@ pub mod arch;
 pub mod backend;
 pub mod coordinator;
 pub mod graph;
+pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod sparse;

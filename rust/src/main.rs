@@ -5,6 +5,8 @@
 //! * `simulate --model M [--sparsity S]` — one simulation, with engine breakdown
 //! * `sweep`                             — Fig. 2 (speedup vs sparsity + T4 reference)
 //! * `serve`                             — run the serving stack on the AOT artifacts
+//! * `net-serve --addr A`                — expose the serving stack over TCP (wire protocol)
+//! * `net-load --addr A --rate R`        — open-loop load against a running net-serve
 //! * `residency --model M`               — memory-capacity report
 //!
 //! The richer experiment drivers live in `examples/` (quickstart,
@@ -36,6 +38,8 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "sweep" => cmd_sweep(args),
         "residency" => cmd_residency(args),
         "serve" => cmd_serve(args),
+        "net-serve" => cmd_net_serve(args),
+        "net-load" => cmd_net_load(args),
         "help" | _ => {
             print_help();
             Ok(())
@@ -58,6 +62,13 @@ fn print_help() {
                      [--backend cpu|sim|echo] [--precision f32|int8]\n\
                      [--default-priority interactive|standard|bulk]\n\
                      [--deadline-ms D]\n\
+           net-serve [--addr 127.0.0.1:7450] [--backend cpu|sim|echo]\n\
+                     [--precision f32|int8] [--policy max|dense|fixed:S]\n\
+                     [--max-conns N] [--duration-s T]    (0 = run until killed)\n\
+           net-load  --addr HOST:PORT [--rate RPS] [--duration-s T]\n\
+                     [--connections N] [--model M] [--seq LEN] [--seed S]\n\
+                     [--mix interactive=0.2,standard=0.5,bulk=0.3]\n\
+                     [--deadlines-ms interactive=5,bulk=50]\n\
            help\n\
          \n\
          MODELS: resnet50 resnet152 bert_tiny bert_mini bert_base bert_large"
@@ -162,23 +173,56 @@ fn cmd_residency(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    use s4::backend::Value;
-    use s4::coordinator::{
-        CpuSparseBackend, EchoBackend, InferenceBackend, Precision, Priority, Router,
-        RoutingPolicy, Server, ServerConfig, SimBackend, SubmitOptions,
-    };
-    use s4::runtime::{default_artifact_dir, Manifest};
-    use std::sync::Arc;
-
-    let n = args.get_usize("requests", 64)?;
-    let rate = args.get_f64("rate", 200.0)?;
-    let policy = match args.get_or("policy", "max") {
+/// Routing policy from `--policy max|dense|fixed:S` (shared by `serve`
+/// and `net-serve`).
+fn policy_from_args(args: &Args) -> anyhow::Result<s4::coordinator::RoutingPolicy> {
+    use s4::coordinator::RoutingPolicy;
+    Ok(match args.get_or("policy", "max") {
         "max" => RoutingPolicy::MaxSparsity,
         "dense" => RoutingPolicy::Dense,
         p if p.starts_with("fixed:") => RoutingPolicy::Fixed(p[6..].parse()?),
         p => anyhow::bail!("unknown policy {p:?}"),
+    })
+}
+
+/// Backend from `--backend cpu|sim|echo` + `--precision` (shared by
+/// `serve` and `net-serve`).
+fn backend_from_args(
+    args: &Args,
+    manifest: &s4::runtime::Manifest,
+) -> anyhow::Result<std::sync::Arc<dyn s4::coordinator::InferenceBackend>> {
+    use s4::coordinator::{CpuSparseBackend, EchoBackend, InferenceBackend, Precision, SimBackend};
+    use std::sync::Arc;
+    // precision override for the cpu backend: f32 | int8 (default:
+    // per-artifact from the manifest)
+    let precision = args.get("precision").map(Precision::parse).transpose()?;
+    let backend: Arc<dyn InferenceBackend> = match args.get_or("backend", "cpu") {
+        // real sparse compute through the tiled SpMM engine (f32 or the
+        // quantized int8 packed kernel)
+        "cpu" => match precision {
+            Some(p) => Arc::new(CpuSparseBackend::with_precision(manifest, p)),
+            None => Arc::new(CpuSparseBackend::from_manifest(manifest)),
+        },
+        // simulator-paced pseudo-outputs (latency realism, no compute)
+        "sim" if precision.is_none() => Arc::new(SimBackend::from_manifest(manifest, 1.0)),
+        // instant reflection (coordinator overhead probing)
+        "echo" if precision.is_none() => Arc::new(EchoBackend::from_manifest(manifest)),
+        b @ ("sim" | "echo") => {
+            anyhow::bail!("--precision only applies to --backend cpu (got {b})")
+        }
+        b => anyhow::bail!("unknown backend {b:?} (cpu | sim | echo)"),
     };
+    Ok(backend)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use s4::backend::Value;
+    use s4::coordinator::{Priority, Router, Server, ServerConfig, SubmitOptions};
+    use s4::runtime::{default_artifact_dir, Manifest};
+
+    let n = args.get_usize("requests", 64)?;
+    let rate = args.get_f64("rate", 200.0)?;
+    let policy = policy_from_args(args)?;
     // QoS defaults for every request this driver submits
     let priority = Priority::parse(args.get_or("default-priority", "standard"))?;
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
@@ -187,25 +231,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         opts = opts.with_deadline(std::time::Duration::from_millis(deadline_ms));
     }
     let manifest = Manifest::load(&default_artifact_dir())?;
-    // precision override for the cpu backend: f32 | int8 (default:
-    // per-artifact from the manifest)
-    let precision = args.get("precision").map(Precision::parse).transpose()?;
-    let backend: Arc<dyn InferenceBackend> = match args.get_or("backend", "cpu") {
-        // real sparse compute through the tiled SpMM engine (f32 or the
-        // quantized int8 packed kernel)
-        "cpu" => match precision {
-            Some(p) => Arc::new(CpuSparseBackend::with_precision(&manifest, p)),
-            None => Arc::new(CpuSparseBackend::from_manifest(&manifest)),
-        },
-        // simulator-paced pseudo-outputs (latency realism, no compute)
-        "sim" if precision.is_none() => Arc::new(SimBackend::from_manifest(&manifest, 1.0)),
-        // instant reflection (coordinator overhead probing)
-        "echo" if precision.is_none() => Arc::new(EchoBackend::from_manifest(&manifest)),
-        b @ ("sim" | "echo") => {
-            anyhow::bail!("--precision only applies to --backend cpu (got {b})")
-        }
-        b => anyhow::bail!("unknown backend {b:?} (cpu | sim | echo)"),
-    };
+    let backend = backend_from_args(args, &manifest)?;
     let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
     let h = srv.handle();
     let mut rng = s4::util::rng::Xoshiro256::seed_from_u64(7);
@@ -236,5 +262,90 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     println!("served {ok}/{n} requests ({shed} shed by deadline/cancel)");
     println!("{}", h.metrics_snapshot().report());
     srv.shutdown();
+    Ok(())
+}
+
+/// `s4 net-serve`: the serving stack behind a TCP socket. Runs for
+/// `--duration-s` seconds (0 = until the process is killed); one
+/// shutdown call drains the socket layer first, then the coordinator.
+fn cmd_net_serve(args: &Args) -> anyhow::Result<()> {
+    use s4::coordinator::{Router, Server, ServerConfig};
+    use s4::net::{NetServer, NetServerConfig};
+    use s4::runtime::{default_artifact_dir, Manifest};
+    use std::sync::Arc;
+
+    let addr = args.get_or("addr", "127.0.0.1:7450").to_string();
+    let duration_s = args.get_u64("duration-s", 0)?;
+    let policy = policy_from_args(args)?;
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let backend = backend_from_args(args, &manifest)?;
+    let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
+    let handle = Arc::new(srv.handle());
+
+    let net_cfg = NetServerConfig {
+        max_connections: args.get_usize("max-conns", 64)?,
+        ..NetServerConfig::default()
+    };
+    let net = Arc::new(NetServer::bind(addr.as_str(), handle.clone(), net_cfg)?);
+    println!("net-serve: listening on {}", net.local_addr());
+    {
+        // drain order: stop the socket layer while the coordinator is
+        // still answering tickets, then stop serving
+        let net = net.clone();
+        srv.on_shutdown(move || net.shutdown());
+    }
+
+    if duration_s == 0 {
+        // run until killed; the coordinator drains queued work on signal
+        // death the same way any process exit does
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_s));
+    srv.shutdown();
+    println!("{}", handle.metrics_snapshot().report());
+    Ok(())
+}
+
+/// `s4 net-load`: open-loop load against a running `net-serve`.
+fn cmd_net_load(args: &Args) -> anyhow::Result<()> {
+    use s4::coordinator::Priority;
+    use s4::net::LoadSpec;
+
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("net-load needs --addr HOST:PORT"))?
+        .to_string();
+    let mut spec = LoadSpec {
+        model: args.get_or("model", "bert_tiny").to_string(),
+        rate_rps: args.get_f64("rate", 200.0)?,
+        duration: std::time::Duration::from_secs(args.get_u64("duration-s", 5)?.max(1)),
+        connections: args.get_usize("connections", 2)?,
+        seed: args.get_u64("seed", 0x54_4E45_54)?,
+        ..LoadSpec::default()
+    };
+    let seq = args.get_usize("seq", 32)?;
+    spec.tokens = (0..seq as i32).map(|i| (i * 37 + 11) % 1000).collect();
+    if let Some(kv) = args.get_kv_f64("mix")? {
+        spec.mix = [0.0; 3];
+        for (name, w) in kv {
+            anyhow::ensure!(w >= 0.0, "--mix: negative weight for {name}");
+            spec.mix[Priority::parse(&name)?.idx()] = w;
+        }
+    }
+    if let Some(kv) = args.get_kv_f64("deadlines-ms")? {
+        for (name, ms) in kv {
+            anyhow::ensure!(ms > 0.0, "--deadlines-ms: non-positive deadline for {name}");
+            spec.deadlines[Priority::parse(&name)?.idx()] =
+                Some(std::time::Duration::from_secs_f64(ms / 1000.0));
+        }
+    }
+    println!(
+        "net-load: {} rps for {:?} against {} ({} connection(s), mix {:?})",
+        spec.rate_rps, spec.duration, addr, spec.connections, spec.mix
+    );
+    let report = s4::net::run_open_loop(addr.as_str(), &spec)?;
+    report.print();
     Ok(())
 }

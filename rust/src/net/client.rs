@@ -1,0 +1,117 @@
+//! Blocking TCP client for the [`NetServer`](crate::net::NetServer)
+//! frame protocol.
+//!
+//! Two usage shapes:
+//!
+//! * **call** — [`call_with`](NetClient::call_with) writes one request
+//!   and blocks for its response (simple request/response callers, the
+//!   `s4 net-load` warm-up probe);
+//! * **pipelined** — [`send_with`](NetClient::send_with) then
+//!   [`recv`](NetClient::recv): keep many requests in flight on one
+//!   connection and match responses by correlation id. Responses arrive
+//!   **out of order** when the server finishes them out of order (an
+//!   Interactive reply overtakes queued Bulk on the same socket) — the
+//!   open-loop generator in [`loadgen`](crate::net::loadgen) depends on
+//!   exactly this.
+//!
+//! The client assigns frame ids from a connection-local counter;
+//! [`call_with`](NetClient::call_with) skips responses for other
+//! (abandoned pipelined) ids rather than mis-attributing them.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::wire::{
+    read_frame, write_frame, Frame, ReadEvent, RequestFrame, ResponseFrame, WireError,
+};
+use crate::backend::Value;
+use crate::coordinator::SubmitOptions;
+
+/// Blocking connection to a [`NetServer`](crate::net::NetServer).
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+    recv_timeout: Duration,
+}
+
+impl NetClient {
+    /// Connect; `recv_timeout` bounds every [`recv`](NetClient::recv)
+    /// (and therefore [`call_with`](NetClient::call_with)).
+    pub fn connect(addr: impl ToSocketAddrs, recv_timeout: Duration) -> anyhow::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        // short socket-level tick so recv can poll its own deadline
+        stream.set_read_timeout(Some(Duration::from_millis(20)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+        let writer = stream.try_clone()?;
+        Ok(NetClient { reader: BufReader::new(stream), writer, next_id: 1, recv_timeout })
+    }
+
+    /// Fire one request without waiting; returns the frame id to match
+    /// the eventual response against.
+    pub fn send_with(
+        &mut self,
+        model: &str,
+        inputs: Vec<Value>,
+        opts: &SubmitOptions,
+    ) -> anyhow::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = Frame::Request(RequestFrame {
+            id,
+            model: model.to_string(),
+            priority: opts.priority,
+            deadline: opts.deadline,
+            client_tag: opts.client_tag.clone(),
+            inputs,
+        });
+        write_frame(&mut self.writer, &frame)?;
+        Ok(id)
+    }
+
+    /// Next response frame from the server, whatever its id (pipelined
+    /// callers match ids themselves). Errors on timeout or server close.
+    pub fn recv(&mut self) -> anyhow::Result<ResponseFrame> {
+        let deadline = Instant::now() + self.recv_timeout;
+        loop {
+            match read_frame(&mut self.reader) {
+                Ok(ReadEvent::Frame(Frame::Response(r))) => return Ok(r),
+                Ok(ReadEvent::Frame(Frame::Request(_))) => {
+                    anyhow::bail!("protocol error: server sent a request frame")
+                }
+                Ok(ReadEvent::Idle) => {
+                    if Instant::now() >= deadline {
+                        anyhow::bail!("no response within {:?}", self.recv_timeout);
+                    }
+                }
+                Ok(ReadEvent::Closed) => anyhow::bail!("server closed the connection"),
+                Err(WireError::Io(e)) => return Err(e.into()),
+                Err(e) => return Err(anyhow::anyhow!(e.to_string())),
+            }
+        }
+    }
+
+    /// One blocking round trip with explicit QoS options; skips stale
+    /// responses for older pipelined ids instead of returning them.
+    pub fn call_with(
+        &mut self,
+        model: &str,
+        inputs: Vec<Value>,
+        opts: &SubmitOptions,
+    ) -> anyhow::Result<ResponseFrame> {
+        let id = self.send_with(model, inputs, opts)?;
+        loop {
+            let r = self.recv()?;
+            if r.id == id {
+                return Ok(r);
+            }
+        }
+    }
+
+    /// [`call_with`](NetClient::call_with) under default options.
+    pub fn call(&mut self, model: &str, inputs: Vec<Value>) -> anyhow::Result<ResponseFrame> {
+        self.call_with(model, inputs, &SubmitOptions::default())
+    }
+}

@@ -1,0 +1,647 @@
+//! Open-loop load generator for the serving socket (and, for matched
+//! comparisons, the in-process path).
+//!
+//! **Open-loop means the schedule never waits for the server.** Arrival
+//! times are fixed up front — request `i` fires at `i / rate_rps`
+//! seconds, with its priority class drawn from a seeded RNG — and the
+//! sender fires each one at its scheduled instant whether or not earlier
+//! responses have come back. A closed-loop generator (send → wait →
+//! send) throttles itself exactly when the server saturates, hiding the
+//! queueing collapse this harness exists to measure.
+//!
+//! Latency is measured from the **scheduled** arrival, not the actual
+//! write: if the sender itself falls behind (it shouldn't — writes are
+//! fire-and-forget), that delay is server-induced queueing from the
+//! client's point of view and must count (the coordinated-omission
+//! trap). Tails are reported per class as p50/p99/p999 over exact
+//! samples ([`Summary`]), alongside achieved-vs-offered rate and
+//! shed/expired/rejected counts.
+//!
+//! [`run_open_loop`] drives a [`NetServer`](crate::net::NetServer) over
+//! TCP; [`run_open_loop_local`] replays the *identical* schedule (same
+//! seed → same arrivals, classes, deadlines) straight into a
+//! [`ServingService`], so "what does the socket cost" is a like-for-like
+//! subtraction — the net latency bench holds the two reports side by
+//! side.
+
+use std::collections::HashMap;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::wire::{read_frame, write_frame, Frame, ReadEvent, RequestFrame, WireStatus};
+use crate::backend::Value;
+use crate::coordinator::{Priority, ServingService, SubmitOptions, Ticket};
+use crate::util::rng::Xoshiro256;
+use crate::util::stats::Summary;
+
+/// One load experiment: what to offer, at what rate, with what mix.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    /// model name every request targets
+    pub model: String,
+    /// token payload per request (sample-shaped)
+    pub tokens: Vec<i32>,
+    /// offered arrival rate, requests/second (across all connections)
+    pub rate_rps: f64,
+    /// schedule length; `rate_rps * duration` arrivals total
+    pub duration: Duration,
+    /// connections the schedule is striped across (round-robin)
+    pub connections: usize,
+    /// class mix weights, indexed by [`Priority::idx`]; normalized
+    /// internally (e.g. `[0.2, 0.5, 0.3]`)
+    pub mix: [f64; 3],
+    /// per-class deadline attached to each request, by [`Priority::idx`]
+    pub deadlines: [Option<Duration>; 3],
+    /// after the last scheduled send, how long to keep collecting
+    /// responses before declaring the stragglers lost
+    pub drain_grace: Duration,
+    /// RNG seed for the class draw — same seed, same schedule, so socket
+    /// and in-process runs are compared on identical traffic
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            model: "bert_tiny".into(),
+            tokens: vec![7; 32],
+            rate_rps: 100.0,
+            duration: Duration::from_secs(1),
+            connections: 1,
+            mix: [0.2, 0.5, 0.3],
+            deadlines: [None, None, None],
+            drain_grace: Duration::from_secs(5),
+            seed: 0x54_4E45_54,
+        }
+    }
+}
+
+/// One precomputed arrival: when (offset from run start) and what class.
+#[derive(Clone, Copy, Debug)]
+struct Arrival {
+    offset: Duration,
+    class: Priority,
+}
+
+/// Build the full arrival schedule for a spec — deterministic in
+/// `seed`, uniform spacing at `rate_rps`.
+fn schedule(spec: &LoadSpec) -> Vec<Arrival> {
+    assert!(spec.rate_rps > 0.0, "rate_rps must be positive");
+    let total = (spec.rate_rps * spec.duration.as_secs_f64()).round() as usize;
+    let weight: f64 = spec.mix.iter().sum();
+    assert!(weight > 0.0, "class mix must have positive weight");
+    let mut rng = Xoshiro256::seed_from_u64(spec.seed);
+    (0..total)
+        .map(|i| {
+            let offset = Duration::from_secs_f64(i as f64 / spec.rate_rps);
+            let mut draw = rng.next_f64() * weight;
+            let mut class = Priority::Bulk;
+            for p in Priority::ALL {
+                draw -= spec.mix[p.idx()];
+                if draw < 0.0 {
+                    class = p;
+                    break;
+                }
+            }
+            Arrival { offset, class }
+        })
+        .collect()
+}
+
+/// Per-class accumulator a connection records into while running.
+#[derive(Default)]
+struct ClassAcc {
+    offered: u64,
+    completed: u64,
+    expired: u64,
+    cancelled: u64,
+    rejected: u64,
+    errors: u64,
+    /// latency of each Ok response, µs from *scheduled* arrival
+    latencies_us: Vec<f64>,
+}
+
+impl ClassAcc {
+    fn record_status(&mut self, status: &WireStatus, latency_us: f64) {
+        match status {
+            WireStatus::Ok => {
+                self.completed += 1;
+                self.latencies_us.push(latency_us);
+            }
+            WireStatus::Expired => self.expired += 1,
+            WireStatus::Cancelled => self.cancelled += 1,
+            WireStatus::Rejected(_) => self.rejected += 1,
+            WireStatus::Error(_) => self.errors += 1,
+        }
+    }
+
+    fn merge(&mut self, other: ClassAcc) {
+        self.offered += other.offered;
+        self.completed += other.completed;
+        self.expired += other.expired;
+        self.cancelled += other.cancelled;
+        self.rejected += other.rejected;
+        self.errors += other.errors;
+        self.latencies_us.extend(other.latencies_us);
+    }
+}
+
+/// Final per-class figures for one run.
+#[derive(Clone, Debug, Default)]
+pub struct ClassLoad {
+    pub offered: u64,
+    pub completed: u64,
+    pub expired: u64,
+    pub cancelled: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+}
+
+impl ClassLoad {
+    fn from_acc(acc: &ClassAcc) -> ClassLoad {
+        let (mean, p50, p99, p999) = if acc.latencies_us.is_empty() {
+            (0.0, 0.0, 0.0, 0.0)
+        } else {
+            let s = Summary::of(&acc.latencies_us);
+            (s.mean, s.p50, s.p99, s.p999)
+        };
+        ClassLoad {
+            offered: acc.offered,
+            completed: acc.completed,
+            expired: acc.expired,
+            cancelled: acc.cancelled,
+            rejected: acc.rejected,
+            errors: acc.errors,
+            mean_us: mean,
+            p50_us: p50,
+            p99_us: p99,
+            p999_us: p999,
+        }
+    }
+}
+
+/// Outcome of one open-loop run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// indexed by [`Priority::idx`]
+    pub by_class: [ClassLoad; 3],
+    /// the rate the spec asked for
+    pub offered_rps: f64,
+    /// Ok completions per second of wall time (run start → last
+    /// response) — diverges from `offered_rps` past saturation
+    pub achieved_rps: f64,
+    pub wall_s: f64,
+    /// requests actually written/submitted
+    pub sent: u64,
+    /// requests with no terminal answer by the end of the drain grace
+    pub lost: u64,
+}
+
+impl LoadReport {
+    pub fn completed(&self) -> u64 {
+        self.by_class.iter().map(|c| c.completed).sum()
+    }
+
+    pub fn shed(&self) -> u64 {
+        self.by_class.iter().map(|c| c.expired + c.cancelled + c.rejected).sum()
+    }
+
+    pub fn class(&self, p: Priority) -> &ClassLoad {
+        &self.by_class[p.idx()]
+    }
+
+    pub fn print(&self) {
+        println!(
+            "open-loop: offered {:.0} rps, achieved {:.0} rps over {:.2}s \
+             (sent {}, completed {}, shed {}, lost {})",
+            self.offered_rps,
+            self.achieved_rps,
+            self.wall_s,
+            self.sent,
+            self.completed(),
+            self.shed(),
+            self.lost
+        );
+        for p in Priority::ALL {
+            let c = self.class(p);
+            if c.offered == 0 {
+                continue;
+            }
+            println!(
+                "  {:>11}: offered {:>6}  ok {:>6}  exp {:>4}  rej {:>4}  err {:>3}  \
+                 p50 {:>8.0}µs  p99 {:>8.0}µs  p999 {:>8.0}µs",
+                p.as_str(),
+                c.offered,
+                c.completed,
+                c.expired,
+                c.rejected,
+                c.errors,
+                c.p50_us,
+                c.p99_us,
+                c.p999_us
+            );
+        }
+    }
+}
+
+fn finish_report(
+    accs: [ClassAcc; 3],
+    spec: &LoadSpec,
+    sent: u64,
+    lost: u64,
+    wall: Duration,
+) -> LoadReport {
+    let by_class = [
+        ClassLoad::from_acc(&accs[0]),
+        ClassLoad::from_acc(&accs[1]),
+        ClassLoad::from_acc(&accs[2]),
+    ];
+    let wall_s = wall.as_secs_f64().max(spec.duration.as_secs_f64());
+    let completed: u64 = by_class.iter().map(|c| c.completed).sum();
+    LoadReport {
+        by_class,
+        offered_rps: spec.rate_rps,
+        achieved_rps: completed as f64 / wall_s,
+        wall_s,
+        sent,
+        lost,
+    }
+}
+
+fn opts_for(spec: &LoadSpec, class: Priority) -> SubmitOptions {
+    let mut o = SubmitOptions::default().with_priority(class);
+    if let Some(d) = spec.deadlines[class.idx()] {
+        o = o.with_deadline(d);
+    }
+    o
+}
+
+/// Drive a [`NetServer`](crate::net::NetServer) at `addr` with the
+/// spec's open-loop schedule and collect per-class latency/outcome
+/// figures. Blocks until the schedule finishes and responses drain (or
+/// the grace period gives up on stragglers).
+pub fn run_open_loop(addr: impl ToSocketAddrs, spec: &LoadSpec) -> anyhow::Result<LoadReport> {
+    let addr = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("load target resolved to no address"))?;
+    let arrivals = schedule(spec);
+    let conns = spec.connections.max(1);
+    // stripe the schedule round-robin so each connection still fires at
+    // uniform offsets
+    let mut per_conn: Vec<Vec<Arrival>> = vec![Vec::new(); conns];
+    for (i, a) in arrivals.iter().enumerate() {
+        per_conn[i % conns].push(*a);
+    }
+
+    let start = Instant::now();
+    let mut workers = Vec::new();
+    for plan in per_conn {
+        let spec = spec.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name("s4-loadgen-conn".into())
+                .spawn(move || conn_worker(addr, &spec, plan, start))
+                .expect("spawn loadgen connection"),
+        );
+    }
+
+    let mut accs: [ClassAcc; 3] = Default::default();
+    let mut sent = 0u64;
+    let mut lost = 0u64;
+    let mut last_resp = start;
+    for w in workers {
+        let out = w.join().map_err(|_| anyhow::anyhow!("loadgen connection panicked"))?;
+        let out = out?;
+        for (dst, src) in accs.iter_mut().zip(out.accs) {
+            dst.merge(src);
+        }
+        sent += out.sent;
+        lost += out.lost;
+        last_resp = last_resp.max(out.last_resp);
+    }
+    Ok(finish_report(accs, spec, sent, lost, last_resp - start))
+}
+
+/// What one socket connection hands back to the aggregator.
+struct ConnOutcome {
+    accs: [ClassAcc; 3],
+    sent: u64,
+    lost: u64,
+    last_resp: Instant,
+}
+
+fn conn_worker(
+    addr: std::net::SocketAddr,
+    spec: &LoadSpec,
+    plan: Vec<Arrival>,
+    start: Instant,
+) -> anyhow::Result<ConnOutcome> {
+    let stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    stream.set_read_timeout(Some(Duration::from_millis(50)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let mut writer = stream.try_clone()?;
+
+    // id → (scheduled arrival, class); inserted BEFORE the write so the
+    // reader can never see a response for an unknown id
+    let inflight: Arc<Mutex<HashMap<u64, (Instant, Priority)>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let sender_done = Arc::new(AtomicBool::new(false));
+
+    let reader_thread = {
+        let inflight = inflight.clone();
+        let sender_done = sender_done.clone();
+        let grace = spec.drain_grace;
+        let mut reader = stream;
+        std::thread::Builder::new()
+            .name("s4-loadgen-read".into())
+            .spawn(move || -> ([ClassAcc; 3], Instant) {
+                let mut accs: [ClassAcc; 3] = Default::default();
+                let mut last_resp = start;
+                let mut drain_deadline: Option<Instant> = None;
+                loop {
+                    if sender_done.load(Ordering::Acquire) {
+                        let dl = *drain_deadline.get_or_insert_with(|| Instant::now() + grace);
+                        if inflight.lock().unwrap().is_empty() {
+                            break;
+                        }
+                        if Instant::now() >= dl {
+                            break; // leftovers counted as lost below
+                        }
+                    }
+                    match read_frame(&mut reader) {
+                        Ok(ReadEvent::Idle) => continue,
+                        Ok(ReadEvent::Closed) => break,
+                        Ok(ReadEvent::Frame(Frame::Response(r))) => {
+                            let now = Instant::now();
+                            let sched = inflight.lock().unwrap().remove(&r.id);
+                            if let Some((sched_at, class)) = sched {
+                                // from the *scheduled* arrival — queueing
+                                // the sender suffered counts too
+                                let us = now.duration_since(sched_at).as_micros() as f64;
+                                accs[class.idx()].record_status(&r.status, us);
+                                last_resp = now;
+                            }
+                        }
+                        // a request frame from the server, or a transport
+                        // error: this connection is done collecting
+                        Ok(ReadEvent::Frame(Frame::Request(_))) => break,
+                        Err(_) => break,
+                    }
+                }
+                (accs, last_resp)
+            })
+            .expect("spawn loadgen reader")
+    };
+
+    // open-loop sender: fire at each scheduled offset, never waiting for
+    // responses; a send error stops this connection's schedule
+    let mut sent = 0u64;
+    let mut next_id = 1u64;
+    for a in &plan {
+        let target = start + a.offset;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let opts = opts_for(spec, a.class);
+        let id = next_id;
+        next_id += 1;
+        inflight.lock().unwrap().insert(id, (target, a.class));
+        let frame = Frame::Request(RequestFrame {
+            id,
+            model: spec.model.clone(),
+            priority: a.class,
+            deadline: opts.deadline,
+            client_tag: None,
+            inputs: vec![Value::tokens(spec.tokens.clone())],
+        });
+        if write_frame(&mut writer, &frame).is_err() {
+            // connection died mid-run: schedule entries never written
+            // surface through `lost` (plan - sent) below
+            inflight.lock().unwrap().remove(&id);
+            break;
+        }
+        sent += 1;
+    }
+    sender_done.store(true, Ordering::Release);
+
+    let (mut accs, last_resp) =
+        reader_thread.join().map_err(|_| anyhow::anyhow!("loadgen reader panicked"))?;
+    // every scheduled arrival is "offered", answered or not
+    for a in &plan {
+        accs[a.class.idx()].offered += 1;
+    }
+    let leftovers = inflight.lock().unwrap().len() as u64;
+    Ok(ConnOutcome { accs, sent, lost: leftovers + (plan.len() as u64 - sent), last_resp })
+}
+
+/// Replay the same open-loop schedule **in process** against a
+/// [`ServingService`] — the socket-free baseline the net bench compares
+/// against. Same seed ⇒ identical arrivals, classes, and deadlines as
+/// [`run_open_loop`].
+pub fn run_open_loop_local<S>(svc: &Arc<S>, spec: &LoadSpec) -> anyhow::Result<LoadReport>
+where
+    S: ServingService + Send + Sync + 'static,
+{
+    let arrivals = schedule(spec);
+    let start = Instant::now();
+
+    // poller thread: polls tickets like the net reply pump does, so the
+    // two paths measure the same completion discipline
+    let (tx, rx) = channel::<(Ticket, Instant, Priority)>();
+    let grace = spec.drain_grace;
+    let poller = std::thread::Builder::new()
+        .name("s4-loadgen-poll".into())
+        .spawn(move || -> ([ClassAcc; 3], Instant, u64) {
+            let mut accs: [ClassAcc; 3] = Default::default();
+            let mut pending: Vec<(Ticket, Instant, Priority)> = Vec::new();
+            let mut last_resp = start;
+            let mut open = true;
+            let mut drain_deadline: Option<Instant> = None;
+            loop {
+                while open {
+                    match rx.try_recv() {
+                        Ok(item) => pending.push(item),
+                        Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                        Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                            open = false;
+                            drain_deadline = Some(Instant::now() + grace);
+                        }
+                    }
+                }
+                let mut i = 0;
+                while i < pending.len() {
+                    let (ticket, sched_at, class) = &pending[i];
+                    match ticket.try_take() {
+                        Ok(None) => i += 1,
+                        Ok(Some(resp)) => {
+                            let now = Instant::now();
+                            let us = now.duration_since(*sched_at).as_micros() as f64;
+                            accs[class.idx()]
+                                .record_status(&WireStatus::from_status(&resp.status), us);
+                            last_resp = now;
+                            pending.swap_remove(i);
+                        }
+                        Err(_) => {
+                            accs[class.idx()].errors += 1;
+                            pending.swap_remove(i);
+                        }
+                    }
+                }
+                if !open && pending.is_empty() {
+                    break;
+                }
+                if let Some(dl) = drain_deadline {
+                    if Instant::now() >= dl {
+                        break;
+                    }
+                }
+                if pending.is_empty() && open {
+                    match rx.recv_timeout(Duration::from_millis(20)) {
+                        Ok(item) => pending.push(item),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            drain_deadline = Some(Instant::now() + grace);
+                        }
+                    }
+                } else {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+            (accs, last_resp, pending.len() as u64)
+        })
+        .expect("spawn local load poller");
+
+    let mut sent = 0u64;
+    let mut rejected_by_class = [0u64; 3];
+    for a in &arrivals {
+        let target = start + a.offset;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        match svc.submit_with(&spec.model, vec![Value::tokens(spec.tokens.clone())], opts_for(spec, a.class)) {
+            Ok(ticket) => {
+                sent += 1;
+                if tx.send((ticket, target, a.class)).is_err() {
+                    break;
+                }
+            }
+            Err(_) => {
+                sent += 1;
+                rejected_by_class[a.class.idx()] += 1;
+            }
+        }
+    }
+    drop(tx);
+    let (mut accs, last_resp, lost) =
+        poller.join().map_err(|_| anyhow::anyhow!("load poller panicked"))?;
+    for a in &arrivals {
+        accs[a.class.idx()].offered += 1;
+    }
+    for (acc, rej) in accs.iter_mut().zip(rejected_by_class) {
+        acc.rejected += rej;
+    }
+    Ok(finish_report(accs, spec, sent, lost, last_resp - start))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_uniform_and_mix_weighted() {
+        let spec = LoadSpec {
+            rate_rps: 1000.0,
+            duration: Duration::from_secs(2),
+            mix: [0.25, 0.5, 0.25],
+            seed: 42,
+            ..LoadSpec::default()
+        };
+        let a = schedule(&spec);
+        let b = schedule(&spec);
+        assert_eq!(a.len(), 2000);
+        // deterministic: same seed, same classes and offsets
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.offset, y.offset);
+            assert_eq!(x.class, y.class);
+        }
+        // uniform spacing at exactly 1/rate
+        assert_eq!(a[0].offset, Duration::ZERO);
+        assert_eq!(a[1000].offset, Duration::from_secs(1));
+        // mix roughly honoured (±10 points at n=2000)
+        let mut counts = [0usize; 3];
+        for x in &a {
+            counts[x.class.idx()] += 1;
+        }
+        let frac = |i: usize| counts[i] as f64 / a.len() as f64;
+        assert!((frac(0) - 0.25).abs() < 0.1, "interactive frac {}", frac(0));
+        assert!((frac(1) - 0.5).abs() < 0.1, "standard frac {}", frac(1));
+        // different seed, different draw
+        let c = schedule(&LoadSpec { seed: 43, ..spec });
+        assert!(a.iter().zip(&c).any(|(x, y)| x.class != y.class));
+    }
+
+    #[test]
+    fn zero_weight_classes_never_appear() {
+        let spec = LoadSpec {
+            rate_rps: 500.0,
+            duration: Duration::from_secs(1),
+            mix: [1.0, 0.0, 0.0],
+            ..LoadSpec::default()
+        };
+        assert!(schedule(&spec).iter().all(|a| a.class == Priority::Interactive));
+    }
+
+    #[test]
+    fn class_acc_records_each_status_where_it_belongs() {
+        let mut acc = ClassAcc::default();
+        acc.record_status(&WireStatus::Ok, 100.0);
+        acc.record_status(&WireStatus::Ok, 300.0);
+        acc.record_status(&WireStatus::Expired, 0.0);
+        acc.record_status(&WireStatus::Rejected("full".into()), 0.0);
+        acc.record_status(&WireStatus::Error("x".into()), 0.0);
+        acc.record_status(&WireStatus::Cancelled, 0.0);
+        assert_eq!(acc.completed, 2);
+        assert_eq!(acc.expired, 1);
+        assert_eq!(acc.rejected, 1);
+        assert_eq!(acc.errors, 1);
+        assert_eq!(acc.cancelled, 1);
+        // only Ok responses contribute latency samples
+        assert_eq!(acc.latencies_us, vec![100.0, 300.0]);
+        let c = ClassLoad::from_acc(&acc);
+        assert_eq!(c.completed, 2);
+        assert_eq!(c.p50_us, 200.0);
+    }
+
+    #[test]
+    fn report_aggregates_across_classes() {
+        let mut accs: [ClassAcc; 3] = Default::default();
+        accs[0].offered = 10;
+        accs[0].completed = 9;
+        accs[0].rejected = 1;
+        accs[0].latencies_us = (1..=9).map(|i| i as f64 * 100.0).collect();
+        accs[2].offered = 5;
+        accs[2].expired = 5;
+        let spec = LoadSpec { rate_rps: 15.0, duration: Duration::from_secs(1), ..Default::default() };
+        let r = finish_report(accs, &spec, 15, 0, Duration::from_secs(1));
+        assert_eq!(r.completed(), 9);
+        assert_eq!(r.shed(), 6);
+        assert_eq!(r.class(Priority::Interactive).offered, 10);
+        assert_eq!(r.class(Priority::Bulk).expired, 5);
+        assert!((r.achieved_rps - 9.0).abs() < 1e-9);
+        // empty class reports zeroed percentiles rather than panicking
+        assert_eq!(r.class(Priority::Standard).p999_us, 0.0);
+        r.print();
+    }
+}

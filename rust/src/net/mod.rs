@@ -1,0 +1,42 @@
+//! Network serving front end (Layer 4): the socket boundary over the
+//! coordinator, plus the load harness that drives it.
+//!
+//! Pieces, client to server:
+//!
+//! * [`wire`] — the length-prefixed binary frame codec. Request frames
+//!   carry the full QoS submission surface (model, typed [`Value`]
+//!   tensors, priority/deadline/client-tag); response frames carry the
+//!   typed outcome, output tensors, and server-side timing. f32 payloads
+//!   round-trip **bitwise**, so logits served over the socket are
+//!   byte-identical to in-process serving.
+//! * [`client`] — [`NetClient`], a blocking client supporting both
+//!   call-style round trips and pipelined send/recv with correlation
+//!   ids.
+//! * [`server`] — [`NetServer`], a `TcpListener` front end over **any**
+//!   [`ServingService`](crate::coordinator::ServingService): one
+//!   acceptor thread, two bounded threads per connection (frame reader +
+//!   reply pump), per-connection failure containment, drain-on-shutdown.
+//! * [`loadgen`] — the open-loop generator: pre-scheduled fixed-rate
+//!   arrivals that never wait for responses, per-class p50/p99/p999 from
+//!   scheduled (not sent) timestamps, achieved-vs-offered rate, and an
+//!   in-process twin ([`run_open_loop_local`]) replaying the identical
+//!   schedule for socket-overhead subtraction.
+//!
+//! CLI entry points: `s4 net-serve` binds a [`NetServer`] over the
+//! serving stack; `s4 net-load` points the generator at one. The
+//! `net_latency` bench emits `BENCH_net.json` from the same pieces.
+//!
+//! [`Value`]: crate::backend::Value
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use client::NetClient;
+pub use loadgen::{run_open_loop, run_open_loop_local, ClassLoad, LoadReport, LoadSpec};
+pub use server::{NetServer, NetServerConfig};
+pub use wire::{
+    read_frame, write_frame, Frame, ReadEvent, RequestFrame, ResponseFrame, WireError, WireStatus,
+    MAGIC, MAX_FRAME_BYTES,
+};

@@ -1,0 +1,707 @@
+//! TCP front end over any [`ServingService`] — the socket boundary of
+//! the serving stack.
+//!
+//! Thread shape (std only, no async runtime in this environment): one
+//! acceptor thread owns the listener; each connection gets exactly two
+//! threads, a **reader** and a **reply pump**, so the thread count is
+//! bounded by `2 × max_connections` regardless of how many requests a
+//! client pipelines:
+//!
+//! * the reader decodes request frames and submits them through
+//!   [`ServingService::submit_with`] (admission happens there, exactly
+//!   as for in-process callers), handing the returned [`Ticket`] to the
+//!   pump — it never blocks on a response, so a client can keep dozens
+//!   of requests in flight on one connection;
+//! * the pump polls its pending tickets ([`Ticket::try_take`]) and
+//!   writes each response frame the moment it resolves — **out of
+//!   order** when the coordinator finishes them out of order (an
+//!   Interactive reply overtakes a queued Bulk one on the same socket),
+//!   which is why frames carry correlation ids.
+//!
+//! Failure containment: a malformed frame (bad magic, garbage payload,
+//! oversized length) gets a best-effort rejection frame and closes
+//! **that connection only**; a panic inside the service is caught per
+//! frame, answered as an error frame, and the connection keeps serving
+//! (the admission slot is freed by the coordinator's worker-side
+//! completion, so a panicking handler cannot leak capacity).
+//!
+//! Shutdown drains: [`NetServer::shutdown`] stops the acceptor, lets
+//! every reader finish its current frame, and the pumps keep polling
+//! until all in-flight tickets resolve (bounded by
+//! [`NetServerConfig::drain_timeout`]). Wire it as a coordinator drain
+//! hook — `srv.on_shutdown(move || net.shutdown())` — so the flush
+//! happens while the coordinator is still answering tickets.
+//!
+//! Connection/frame counters land in the service's own
+//! [`Metrics`] sink (via [`ServingService::shared_metrics`]) so one
+//! [`MetricsSnapshot`](crate::coordinator::MetricsSnapshot) covers both
+//! the wire boundary and serving.
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::wire::{
+    read_frame, write_frame, Frame, ReadEvent, RequestFrame, ResponseFrame, WireError, WireStatus,
+};
+use crate::coordinator::{AdmissionDecision, Metrics, Response, ServingService, Ticket};
+
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// concurrent connections; one past this is answered with a
+    /// rejection frame and closed immediately
+    pub max_connections: usize,
+    /// reader idle tick: how long a blocking read waits before checking
+    /// the stop flag (also the latency bound on noticing a shutdown)
+    pub read_timeout: Duration,
+    /// per-frame write budget; a peer that stops reading loses its
+    /// connection rather than wedging the pump
+    pub write_timeout: Duration,
+    /// pump polling cadence while tickets are pending
+    pub poll_interval: Duration,
+    /// after the reader stops, how long the pump keeps polling
+    /// unresolved tickets before abandoning the drain
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            max_connections: 64,
+            read_timeout: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+            poll_interval: Duration::from_micros(200),
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// What the reader hands the reply pump for one decoded frame.
+enum PumpItem {
+    /// an admitted request: poll the ticket, reply when it resolves
+    Pending { id: u64, ticket: Ticket, received: Instant },
+    /// an already-decided outcome (admission rejection, handler panic,
+    /// malformed-frame notice): write it on the next pump pass
+    Immediate(ResponseFrame),
+}
+
+/// A running TCP front end; bind with [`NetServer::bind`], stop with
+/// [`shutdown`](NetServer::shutdown) (idempotent, also runs on drop).
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    shut: AtomicBool,
+    metrics: Arc<Metrics>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use port 0 to let the OS pick — then
+    /// [`local_addr`](NetServer::local_addr) reports the real port, so
+    /// tests never race on fixed ports) and start accepting.
+    pub fn bind<S>(
+        addr: impl ToSocketAddrs,
+        svc: Arc<S>,
+        cfg: NetServerConfig,
+    ) -> anyhow::Result<NetServer>
+    where
+        S: ServingService + Send + Sync + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        // record into the service's own sink when it has one, so net and
+        // serving counters appear in the same snapshot/report
+        let metrics = svc.shared_metrics().unwrap_or_else(|| Arc::new(Metrics::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let acceptor = {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            std::thread::Builder::new()
+                .name("s4-net-acceptor".into())
+                .spawn(move || accept_loop(listener, svc, metrics, stop, cfg))
+                .expect("spawn net acceptor")
+        };
+        Ok(NetServer {
+            local_addr,
+            stop,
+            acceptor: Mutex::new(Some(acceptor)),
+            shut: AtomicBool::new(false),
+            metrics,
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The metrics sink this front end records into — the service's own
+    /// sink when it exposes one, otherwise a private fallback.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Stop accepting, let each connection drain its in-flight tickets,
+    /// and join all threads. Idempotent; callable from a coordinator
+    /// drain hook (`&self`, no consumption).
+    pub fn shutdown(&self) {
+        if self.shut.swap(true, Ordering::AcqRel) {
+            return;
+        }
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop<S>(
+    listener: TcpListener,
+    svc: Arc<S>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    cfg: NetServerConfig,
+) where
+    S: ServingService + Send + Sync + 'static,
+{
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    let mut conn_seq = 0u64;
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                conns.retain(|h| !h.is_finished());
+                metrics.record_conn_accepted();
+                if active.load(Ordering::Acquire) >= cfg.max_connections {
+                    // over capacity: tell the peer why, then close; the
+                    // listener itself keeps running
+                    let _ = write_frame(
+                        &mut stream,
+                        &Frame::Response(ResponseFrame::rejected(
+                            0,
+                            "server at connection capacity",
+                        )),
+                    );
+                    metrics.record_conn_closed(true);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::AcqRel);
+                conn_seq += 1;
+                let svc = svc.clone();
+                let metrics = metrics.clone();
+                let stop = stop.clone();
+                let cfg = cfg.clone();
+                let active = active.clone();
+                conns.push(
+                    std::thread::Builder::new()
+                        .name(format!("s4-net-conn{conn_seq}"))
+                        .spawn(move || {
+                            // pump-side write failures count as error
+                            // closes even though the reader then sees a
+                            // clean local shutdown
+                            let pump_err = Arc::new(AtomicBool::new(false));
+                            let res = catch_unwind(AssertUnwindSafe(|| {
+                                handle_conn(stream, &svc, &metrics, &stop, &cfg, &pump_err)
+                            }));
+                            let on_error = match res {
+                                Ok(Ok(())) => pump_err.load(Ordering::Acquire),
+                                Ok(Err(_)) => true,
+                                // a handler panic must not leak the
+                                // connection's accounting either
+                                Err(_) => true,
+                            };
+                            metrics.record_conn_closed(on_error);
+                            active.fetch_sub(1, Ordering::AcqRel);
+                        })
+                        .expect("spawn net connection handler"),
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                // transient accept failure (EMFILE, aborted handshake):
+                // back off and keep listening
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn reject_reason(d: &AdmissionDecision) -> String {
+    match d {
+        AdmissionDecision::Admit => "admitted".into(), // unreachable on the Err path
+        AdmissionDecision::RejectQueueFull(p) => format!("queue full ({})", p.as_str()),
+        AdmissionDecision::RejectRateLimited(p) => format!("rate limited ({})", p.as_str()),
+    }
+}
+
+/// One connection's reader loop: decode frames, submit, hand tickets to
+/// the pump. `Ok(())` is a clean close (peer hung up or server stop);
+/// `Err` closes this connection with an error — never the listener.
+fn handle_conn<S: ServingService>(
+    stream: TcpStream,
+    svc: &Arc<S>,
+    metrics: &Arc<Metrics>,
+    stop: &Arc<AtomicBool>,
+    cfg: &NetServerConfig,
+    pump_err: &Arc<AtomicBool>,
+) -> Result<(), WireError> {
+    // accepted sockets don't reliably inherit blocking mode from the
+    // nonblocking listener — force it before installing timeouts
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
+    let _ = stream.set_nodelay(true);
+
+    let writer = stream.try_clone()?;
+    let (ptx, prx) = channel::<PumpItem>();
+    let pump = {
+        let metrics = metrics.clone();
+        let cfg = cfg.clone();
+        let pump_err = pump_err.clone();
+        std::thread::Builder::new()
+            .name("s4-net-pump".into())
+            .spawn(move || pump_loop(writer, prx, metrics, cfg, pump_err))
+            .expect("spawn net reply pump")
+    };
+
+    let mut reader = BufReader::new(stream);
+    let result = loop {
+        if stop.load(Ordering::Acquire) {
+            break Ok(());
+        }
+        match read_frame(&mut reader) {
+            Ok(ReadEvent::Idle) => continue,
+            Ok(ReadEvent::Closed) => break Ok(()),
+            Ok(ReadEvent::Frame(Frame::Request(rf))) => {
+                metrics.record_frame_in();
+                let received = Instant::now();
+                let RequestFrame { id, model, inputs, .. } = &rf;
+                let opts = rf.options();
+                let (model, inputs) = (model.clone(), inputs.clone());
+                // panic fence: a service that panics mid-submit answers
+                // this frame as an error and keeps the connection (and
+                // listener) alive; if the inner submission had already
+                // been admitted, the coordinator's worker still answers
+                // the dropped ticket and completes the admission slot
+                let outcome =
+                    catch_unwind(AssertUnwindSafe(|| svc.submit_with(&model, inputs, opts)));
+                let item = match outcome {
+                    Ok(Ok(ticket)) => PumpItem::Pending { id: *id, ticket, received },
+                    Ok(Err(decision)) => {
+                        PumpItem::Immediate(ResponseFrame::rejected(*id, reject_reason(&decision)))
+                    }
+                    Err(_) => PumpItem::Immediate(ResponseFrame {
+                        id: *id,
+                        status: WireStatus::Error("internal error: handler panicked".into()),
+                        ..ResponseFrame::rejected(*id, "")
+                    }),
+                };
+                if ptx.send(item).is_err() {
+                    // pump exited (write failure); it already flagged the
+                    // error and shut the socket down
+                    break Ok(());
+                }
+            }
+            Ok(ReadEvent::Frame(Frame::Response(_))) => {
+                metrics.record_malformed_frame();
+                let _ = ptx.send(PumpItem::Immediate(ResponseFrame::rejected(
+                    0,
+                    "protocol error: client sent a response frame",
+                )));
+                break Err(WireError::Malformed("client sent a response frame".into()));
+            }
+            Err(e @ (WireError::Malformed(_) | WireError::TooLarge(_))) => {
+                metrics.record_malformed_frame();
+                // best-effort: tell the peer why before hanging up on it
+                let _ = ptx
+                    .send(PumpItem::Immediate(ResponseFrame::rejected(0, e.to_string())));
+                break Err(e);
+            }
+            Err(e) => break Err(e),
+        }
+    };
+    // reader done: close the intake, then wait for the pump to flush
+    // every pending ticket (bounded by drain_timeout)
+    drop(ptx);
+    let _ = pump.join();
+    result
+}
+
+fn response_frame(id: u64, resp: Response, server_us: u64) -> ResponseFrame {
+    ResponseFrame {
+        id,
+        status: WireStatus::from_status(&resp.status),
+        outputs: resp.outputs,
+        served_by: resp.served_by.to_string(),
+        batch_size: resp.batch_size as u32,
+        latency_us: resp.latency_us,
+        queue_us: resp.queue_us,
+        server_us,
+    }
+}
+
+/// Reply pump: single writer for one connection. Ingests items from the
+/// reader, polls pending tickets, writes responses as they resolve
+/// (out of order), and drains after the reader closes the channel.
+fn pump_loop(
+    mut w: TcpStream,
+    rx: Receiver<PumpItem>,
+    metrics: Arc<Metrics>,
+    cfg: NetServerConfig,
+    pump_err: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<(u64, Ticket, Instant)> = Vec::new();
+    let mut open = true;
+    let mut drain_deadline: Option<Instant> = None;
+
+    let fail = |w: &TcpStream, pump_err: &AtomicBool| {
+        pump_err.store(true, Ordering::Release);
+        // unblock the reader (its blocking read returns 0) so the
+        // connection tears down promptly instead of idling out
+        let _ = w.shutdown(Shutdown::Both);
+    };
+
+    'outer: loop {
+        // ingest whatever the reader has queued
+        while open {
+            match rx.try_recv() {
+                Ok(PumpItem::Pending { id, ticket, received }) => {
+                    pending.push((id, ticket, received))
+                }
+                Ok(PumpItem::Immediate(f)) => {
+                    if write_frame(&mut w, &Frame::Response(f)).is_err() {
+                        fail(&w, &pump_err);
+                        break 'outer;
+                    }
+                    metrics.record_frame_out();
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    drain_deadline = Some(Instant::now() + cfg.drain_timeout);
+                }
+            }
+        }
+        // poll pending tickets; write each response the moment it lands
+        let mut i = 0;
+        while i < pending.len() {
+            let (id, ticket, received) = &pending[i];
+            match ticket.try_take() {
+                Ok(None) => i += 1,
+                Ok(Some(resp)) => {
+                    let f = response_frame(*id, resp, received.elapsed().as_micros() as u64);
+                    pending.swap_remove(i);
+                    if write_frame(&mut w, &Frame::Response(f)).is_err() {
+                        fail(&w, &pump_err);
+                        break 'outer;
+                    }
+                    metrics.record_frame_out();
+                }
+                Err(e) => {
+                    // coordinator torn down without answering: the peer
+                    // still deserves a terminal frame for this id
+                    let f = ResponseFrame {
+                        id: *id,
+                        status: WireStatus::Error(e.to_string()),
+                        ..ResponseFrame::rejected(*id, "")
+                    };
+                    pending.swap_remove(i);
+                    if write_frame(&mut w, &Frame::Response(f)).is_err() {
+                        fail(&w, &pump_err);
+                        break 'outer;
+                    }
+                    metrics.record_frame_out();
+                }
+            }
+        }
+        if !open && pending.is_empty() {
+            break; // fully drained
+        }
+        if let Some(dl) = drain_deadline {
+            if Instant::now() >= dl && !pending.is_empty() {
+                // drain abandoned: answer what's left so the peer isn't
+                // left waiting on ids that will never resolve
+                for (id, _t, _r) in pending.drain(..) {
+                    let f = ResponseFrame {
+                        id,
+                        status: WireStatus::Error("server drain timeout".into()),
+                        ..ResponseFrame::rejected(id, "")
+                    };
+                    if write_frame(&mut w, &Frame::Response(f)).is_err() {
+                        break;
+                    }
+                    metrics.record_frame_out();
+                }
+                fail(&w, &pump_err);
+                break;
+            }
+        }
+        // wait for work: block on the channel when idle, poll fast when
+        // tickets are in flight
+        if pending.is_empty() && open {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(PumpItem::Pending { id, ticket, received }) => {
+                    pending.push((id, ticket, received))
+                }
+                Ok(PumpItem::Immediate(f)) => {
+                    if write_frame(&mut w, &Frame::Response(f)).is_err() {
+                        fail(&w, &pump_err);
+                        break;
+                    }
+                    metrics.record_frame_out();
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    open = false;
+                    drain_deadline = Some(Instant::now() + cfg.drain_timeout);
+                }
+            }
+        } else if !pending.is_empty() {
+            std::thread::sleep(cfg.poll_interval);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::Value;
+    use crate::coordinator::{
+        MetricsSnapshot, Priority, RequestId, ResponseStatus, SubmitOptions,
+    };
+    use std::sync::atomic::AtomicU64;
+
+    /// Answers every submission instantly by echoing the inputs back —
+    /// a ServingService small enough for socket-layer unit tests.
+    struct InstantEcho {
+        metrics: Arc<Metrics>,
+        next: AtomicU64,
+    }
+
+    impl InstantEcho {
+        fn new() -> Arc<InstantEcho> {
+            Arc::new(InstantEcho { metrics: Arc::new(Metrics::new()), next: AtomicU64::new(1) })
+        }
+    }
+
+    impl ServingService for InstantEcho {
+        fn submit_with(
+            &self,
+            model: &str,
+            inputs: Vec<Value>,
+            opts: SubmitOptions,
+        ) -> Result<Ticket, AdmissionDecision> {
+            if model == "boom" {
+                panic!("backend exploded");
+            }
+            if model == "full" {
+                return Err(AdmissionDecision::RejectQueueFull(opts.priority));
+            }
+            let id = RequestId(self.next.fetch_add(1, Ordering::Relaxed));
+            let (tx, rx) = channel();
+            let ticket = Ticket::new(id, opts.priority, rx, Arc::new(AtomicBool::new(false)));
+            tx.send(Response {
+                id,
+                outputs: inputs,
+                served_by: Arc::from("stub_artifact"),
+                batch_size: 1,
+                latency_us: 7,
+                queue_us: 3,
+                status: ResponseStatus::Ok,
+            })
+            .unwrap();
+            Ok(ticket)
+        }
+
+        fn metrics_snapshot(&self) -> MetricsSnapshot {
+            self.metrics.snapshot()
+        }
+
+        fn shared_metrics(&self) -> Option<Arc<Metrics>> {
+            Some(self.metrics.clone())
+        }
+    }
+
+    fn request(id: u64, model: &str, tokens: Vec<i32>) -> Frame {
+        Frame::Request(RequestFrame {
+            id,
+            model: model.into(),
+            priority: Priority::Interactive,
+            deadline: None,
+            client_tag: None,
+            inputs: vec![Value::tokens(tokens)],
+        })
+    }
+
+    fn call(stream: &mut TcpStream, f: &Frame) -> ResponseFrame {
+        write_frame(stream, f).expect("write");
+        loop {
+            match read_frame(stream).expect("read") {
+                ReadEvent::Frame(Frame::Response(r)) => return r,
+                ReadEvent::Idle => continue,
+                other => panic!("expected response, got {other:?}"),
+            }
+        }
+    }
+
+    fn bind_echo(cfg: NetServerConfig) -> (NetServer, Arc<InstantEcho>) {
+        let svc = InstantEcho::new();
+        let net = NetServer::bind("127.0.0.1:0", svc.clone(), cfg).expect("bind");
+        (net, svc)
+    }
+
+    #[test]
+    fn binds_port_zero_and_echoes_through_the_socket() {
+        let (net, svc) = bind_echo(NetServerConfig::default());
+        assert_ne!(net.local_addr().port(), 0, "port 0 must resolve to a real port");
+        let mut c = TcpStream::connect(net.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let r = call(&mut c, &request(41, "m", vec![1, 2, 3]));
+        assert_eq!(r.id, 41);
+        assert!(r.is_ok(), "{:?}", r.status);
+        assert_eq!(r.outputs, vec![Value::I32(vec![1, 2, 3])]);
+        assert_eq!(r.served_by, "stub_artifact");
+        drop(c);
+        net.shutdown();
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.net.frames_in, 1);
+        assert_eq!(s.net.frames_out, 1);
+        assert_eq!(s.net.conns_accepted, 1);
+        assert_eq!(s.net.conns_active, 0, "closed connection must release the gauge");
+    }
+
+    #[test]
+    fn garbage_closes_only_that_connection() {
+        let (net, svc) = bind_echo(NetServerConfig::default());
+        let mut bad = TcpStream::connect(net.local_addr()).unwrap();
+        bad.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        std::io::Write::write_all(&mut bad, b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // the server answers with a rejection frame, then closes
+        match read_frame(&mut bad).expect("rejection frame") {
+            ReadEvent::Frame(Frame::Response(r)) => {
+                assert_eq!(r.id, 0);
+                assert!(matches!(r.status, WireStatus::Rejected(_)), "{:?}", r.status);
+            }
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        let mut probe = [0u8; 1];
+        loop {
+            match std::io::Read::read(&mut bad, &mut probe) {
+                Ok(0) => break, // closed, as promised
+                Ok(_) => panic!("unexpected bytes after rejection"),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                    ) =>
+                {
+                    break
+                }
+                Err(e) => panic!("probe: {e}"),
+            }
+        }
+        // a well-behaved connection still serves
+        let mut good = TcpStream::connect(net.local_addr()).unwrap();
+        good.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        assert!(call(&mut good, &request(7, "m", vec![9])).is_ok());
+        drop(good);
+        net.shutdown();
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.net.frames_malformed, 1);
+        assert_eq!(s.net.conns_closed_on_error, 1);
+        assert_eq!(s.net.conns_accepted, 2);
+    }
+
+    #[test]
+    fn admission_rejection_comes_back_as_a_rejected_frame() {
+        let (net, _svc) = bind_echo(NetServerConfig::default());
+        let mut c = TcpStream::connect(net.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let r = call(&mut c, &request(5, "full", vec![1]));
+        assert_eq!(r.id, 5);
+        match &r.status {
+            WireStatus::Rejected(m) => assert!(m.contains("queue full"), "{m}"),
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        drop(c);
+        net.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_answers_an_error_frame_and_keeps_the_connection() {
+        let (net, _svc) = bind_echo(NetServerConfig::default());
+        let mut c = TcpStream::connect(net.local_addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let r = call(&mut c, &request(1, "boom", vec![1]));
+        assert_eq!(r.id, 1);
+        assert!(matches!(&r.status, WireStatus::Error(m) if m.contains("panic")), "{:?}", r.status);
+        // same connection, next frame: still served
+        let r2 = call(&mut c, &request(2, "m", vec![4]));
+        assert!(r2.is_ok(), "{:?}", r2.status);
+        drop(c);
+        net.shutdown();
+    }
+
+    #[test]
+    fn over_capacity_connection_is_refused_with_a_frame() {
+        let (net, svc) = bind_echo(NetServerConfig {
+            max_connections: 1,
+            ..NetServerConfig::default()
+        });
+        let mut held = TcpStream::connect(net.local_addr()).unwrap();
+        held.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        // prove the first connection's handler is up before connecting again
+        assert!(call(&mut held, &request(1, "m", vec![1])).is_ok());
+        let mut extra = TcpStream::connect(net.local_addr()).unwrap();
+        extra.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        match read_frame(&mut extra).expect("capacity frame") {
+            ReadEvent::Frame(Frame::Response(r)) => {
+                assert!(
+                    matches!(&r.status, WireStatus::Rejected(m) if m.contains("capacity")),
+                    "{:?}",
+                    r.status
+                );
+            }
+            other => panic!("expected capacity rejection, got {other:?}"),
+        }
+        // the held connection is unaffected
+        assert!(call(&mut held, &request(2, "m", vec![2])).is_ok());
+        drop(held);
+        drop(extra);
+        net.shutdown();
+        let s = svc.metrics.snapshot();
+        assert_eq!(s.net.conns_accepted, 2);
+        assert_eq!(s.net.conns_closed_on_error, 1);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_runs_on_drop() {
+        let (net, _svc) = bind_echo(NetServerConfig::default());
+        let addr = net.local_addr();
+        net.shutdown();
+        net.shutdown(); // second call is a no-op, not a double-join
+        drop(net); // drop after explicit shutdown is fine too
+        // the listener is really gone: a fresh bind on the same port works
+        let _relisten = TcpListener::bind(addr).expect("port released after shutdown");
+    }
+}

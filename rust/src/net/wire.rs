@@ -1,0 +1,742 @@
+//! Length-prefixed binary frame codec for the serving socket boundary.
+//!
+//! One frame on the wire is
+//!
+//! ```text
+//! ┌────────────┬─────────┬──────────────┬─────────────────┐
+//! │ magic "S4N1" │ type u8 │ payload len  │ payload         │
+//! │ 4 bytes      │ 1=req   │ u32 LE       │ `len` bytes     │
+//! │              │ 2=resp  │ ≤ 16 MiB     │                 │
+//! └────────────┴─────────┴──────────────┴─────────────────┘
+//! ```
+//!
+//! Request payloads carry the **full QoS submission surface** — model
+//! name, [`Priority`] class, deadline, client tag (the
+//! [`SubmitOptions`] fields), and typed input tensors ([`Value`], raw
+//! little-endian element bytes, so an `f32` logits round trip is
+//! bitwise). Response payloads carry the typed outcome ([`WireStatus`],
+//! which is [`ResponseStatus`] plus wire-only `Rejected` for admission
+//! refusals), output tensors, and server-side timing (coordinator
+//! latency/queue plus the net layer's own decode→reply wall time).
+//!
+//! Anything that fails to decode — wrong magic, unknown type or dtype
+//! tag, a declared length past [`MAX_FRAME_BYTES`], truncated or
+//! trailing payload bytes — is a [`WireError::Malformed`] /
+//! [`WireError::TooLarge`]; the server answers with a best-effort error
+//! frame and closes **that connection only** (never the listener).
+//! Integers are little-endian throughout; the codec allocates nothing
+//! beyond the payload buffers themselves.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use crate::backend::Value;
+use crate::coordinator::{Priority, ResponseStatus, SubmitOptions};
+
+/// Frame preamble — rejects non-protocol peers (HTTP probes, garbage)
+/// on the first four bytes.
+pub const MAGIC: [u8; 4] = *b"S4N1";
+
+/// Upper bound on one frame's payload; a declared length past this is
+/// rejected *before* any allocation, so a hostile header cannot OOM the
+/// server.
+pub const MAX_FRAME_BYTES: usize = 16 << 20;
+
+const TYPE_REQUEST: u8 = 1;
+const TYPE_RESPONSE: u8 = 2;
+
+const DTYPE_S32: u8 = 0;
+const DTYPE_F32: u8 = 1;
+
+/// Codec failure. `Io` is transport-level (including mid-frame timeouts
+/// — once a frame has started, a stall is a broken peer); the other two
+/// are protocol violations by a live peer.
+#[derive(Debug)]
+pub enum WireError {
+    Io(io::Error),
+    /// bad magic, unknown tag, truncated/trailing payload bytes, ...
+    Malformed(String),
+    /// declared payload length exceeds [`MAX_FRAME_BYTES`]
+    TooLarge(usize),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io: {e}"),
+            WireError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            WireError::TooLarge(n) => {
+                write!(f, "frame payload {n} bytes exceeds max {MAX_FRAME_BYTES}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// One inference request as it crosses the socket: the
+/// [`SubmitOptions`] surface plus typed inputs, with a client-chosen
+/// correlation id echoed back on the response (responses may complete
+/// out of order across priorities).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub model: String,
+    pub priority: Priority,
+    pub deadline: Option<Duration>,
+    pub client_tag: Option<String>,
+    /// one sample-shaped value per model input
+    pub inputs: Vec<Value>,
+}
+
+impl RequestFrame {
+    /// The in-process [`SubmitOptions`] this frame asks for.
+    pub fn options(&self) -> SubmitOptions {
+        let mut o = SubmitOptions::default().with_priority(self.priority);
+        if let Some(d) = self.deadline {
+            o = o.with_deadline(d);
+        }
+        if let Some(t) = &self.client_tag {
+            o = o.with_client_tag(t.clone());
+        }
+        o
+    }
+}
+
+/// Wire-level outcome: [`ResponseStatus`] plus `Rejected`, which
+/// in-process is an `Err(AdmissionDecision)` *before* any ticket exists
+/// and therefore has no `ResponseStatus` to map to.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireStatus {
+    Ok,
+    Error(String),
+    Expired,
+    Cancelled,
+    /// admission refused the request: nothing was queued or executed
+    Rejected(String),
+}
+
+impl WireStatus {
+    pub fn from_status(s: &ResponseStatus) -> WireStatus {
+        match s {
+            ResponseStatus::Ok => WireStatus::Ok,
+            ResponseStatus::Error(m) => WireStatus::Error(m.clone()),
+            ResponseStatus::Expired => WireStatus::Expired,
+            ResponseStatus::Cancelled => WireStatus::Cancelled,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, WireStatus::Ok)
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WireStatus::Ok => "ok",
+            WireStatus::Error(_) => "error",
+            WireStatus::Expired => "expired",
+            WireStatus::Cancelled => "cancelled",
+            WireStatus::Rejected(_) => "rejected",
+        }
+    }
+}
+
+/// One response as it crosses the socket. `latency_us`/`queue_us` are
+/// the coordinator's own serving telemetry; `server_us` is the net
+/// layer's wall time from frame decode to reply write — subtracting the
+/// two isolates socket-side overhead without a synchronized clock.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResponseFrame {
+    /// correlation id echoed from the request (0 when the request was
+    /// too malformed to carry one)
+    pub id: u64,
+    pub status: WireStatus,
+    /// one sample-shaped value per model output
+    pub outputs: Vec<Value>,
+    pub served_by: String,
+    pub batch_size: u32,
+    /// coordinator end-to-end latency (submit → demux), µs
+    pub latency_us: u64,
+    /// time queued before execution, µs
+    pub queue_us: u64,
+    /// net-layer wall time (frame decoded → response written), µs
+    pub server_us: u64,
+}
+
+impl ResponseFrame {
+    /// Unserved outcome (rejection / protocol error) for `id`.
+    pub fn rejected(id: u64, reason: impl Into<String>) -> ResponseFrame {
+        ResponseFrame {
+            id,
+            status: WireStatus::Rejected(reason.into()),
+            outputs: Vec::new(),
+            served_by: String::new(),
+            batch_size: 0,
+            latency_us: 0,
+            queue_us: 0,
+            server_us: 0,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status.is_ok()
+    }
+
+    /// First f32 output — mirrors
+    /// [`Response::logits`](crate::coordinator::Response::logits).
+    pub fn logits(&self) -> &[f32] {
+        self.outputs.iter().find_map(|v| v.as_f32()).unwrap_or(&[])
+    }
+}
+
+/// A decoded frame, either direction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Request(RequestFrame),
+    Response(ResponseFrame),
+}
+
+/// Outcome of one read attempt on a connection with a read timeout set.
+#[derive(Debug)]
+pub enum ReadEvent {
+    Frame(Frame),
+    /// no bytes arrived within the read timeout — an idle poll tick, not
+    /// an error (the caller checks its stop flag and reads again)
+    Idle,
+    /// the peer closed cleanly between frames
+    Closed,
+}
+
+// ---- encoding ----
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) -> Result<(), WireError> {
+    let b = s.as_bytes();
+    if b.len() > u16::MAX as usize {
+        return Err(WireError::Malformed(format!("string field {} bytes > u16", b.len())));
+    }
+    put_u16(buf, b.len() as u16);
+    buf.extend_from_slice(b);
+    Ok(())
+}
+
+fn put_opt_str(buf: &mut Vec<u8>, s: Option<&str>) -> Result<(), WireError> {
+    match s {
+        None => buf.push(0),
+        Some(s) => {
+            buf.push(1);
+            put_str(buf, s)?;
+        }
+    }
+    Ok(())
+}
+
+fn put_value(buf: &mut Vec<u8>, v: &Value) -> Result<(), WireError> {
+    if v.len() > u32::MAX as usize {
+        return Err(WireError::Malformed(format!("tensor {} elems > u32", v.len())));
+    }
+    match v {
+        Value::I32(xs) => {
+            buf.push(DTYPE_S32);
+            put_u32(buf, xs.len() as u32);
+            for x in xs {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Value::F32(xs) => {
+            buf.push(DTYPE_F32);
+            put_u32(buf, xs.len() as u32);
+            for x in xs {
+                // raw bit pattern: the logits round trip is bitwise
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn put_values(buf: &mut Vec<u8>, vs: &[Value]) -> Result<(), WireError> {
+    if vs.len() > u16::MAX as usize {
+        return Err(WireError::Malformed(format!("{} tensors > u16", vs.len())));
+    }
+    put_u16(buf, vs.len() as u16);
+    for v in vs {
+        put_value(buf, v)?;
+    }
+    Ok(())
+}
+
+/// Serialize one frame (header + payload) into a buffer ready for a
+/// single `write_all`.
+pub fn encode_frame(f: &Frame) -> Result<Vec<u8>, WireError> {
+    let mut payload = Vec::new();
+    let ty = match f {
+        Frame::Request(r) => {
+            put_u64(&mut payload, r.id);
+            put_str(&mut payload, &r.model)?;
+            payload.push(r.priority.idx() as u8);
+            match r.deadline {
+                None => payload.push(0),
+                Some(d) => {
+                    payload.push(1);
+                    put_u64(&mut payload, d.as_micros() as u64);
+                }
+            }
+            put_opt_str(&mut payload, r.client_tag.as_deref())?;
+            put_values(&mut payload, &r.inputs)?;
+            TYPE_REQUEST
+        }
+        Frame::Response(r) => {
+            put_u64(&mut payload, r.id);
+            let (code, msg): (u8, Option<&str>) = match &r.status {
+                WireStatus::Ok => (0, None),
+                WireStatus::Error(m) => (1, Some(m)),
+                WireStatus::Expired => (2, None),
+                WireStatus::Cancelled => (3, None),
+                WireStatus::Rejected(m) => (4, Some(m)),
+            };
+            payload.push(code);
+            put_opt_str(&mut payload, msg)?;
+            put_str(&mut payload, &r.served_by)?;
+            put_u32(&mut payload, r.batch_size);
+            put_u64(&mut payload, r.latency_us);
+            put_u64(&mut payload, r.queue_us);
+            put_u64(&mut payload, r.server_us);
+            put_values(&mut payload, &r.outputs)?;
+            TYPE_RESPONSE
+        }
+    };
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge(payload.len()));
+    }
+    let mut out = Vec::with_capacity(MAGIC.len() + 5 + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(ty);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Encode and write one frame (single `write_all` + flush).
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> Result<(), WireError> {
+    let bytes = encode_frame(f)?;
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---- decoding ----
+
+/// Bounds-checked payload cursor.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.b.len() - self.pos < n {
+            return Err(WireError::Malformed(format!(
+                "payload truncated: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| WireError::Malformed("string field is not UTF-8".into()))
+    }
+
+    fn opt_str(&mut self) -> Result<Option<String>, WireError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.str()?)),
+            t => Err(WireError::Malformed(format!("bad option tag {t}"))),
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, WireError> {
+        let tag = self.u8()?;
+        let n = self.u32()? as usize;
+        // `take` bounds n*4 against the remaining payload, so a hostile
+        // element count cannot drive a huge allocation
+        let bytes = self.take(n * 4)?;
+        Ok(match tag {
+            DTYPE_S32 => Value::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DTYPE_F32 => Value::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            t => return Err(WireError::Malformed(format!("unknown dtype tag {t}"))),
+        })
+    }
+
+    fn values(&mut self) -> Result<Vec<Value>, WireError> {
+        let n = self.u16()? as usize;
+        (0..n).map(|_| self.value()).collect()
+    }
+
+    /// Trailing payload bytes are a protocol violation, not slack.
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::Malformed(format!(
+                "{} trailing payload bytes",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn decode_payload(ty: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cur { b: payload, pos: 0 };
+    let f = match ty {
+        TYPE_REQUEST => {
+            let id = c.u64()?;
+            let model = c.str()?;
+            let priority = match c.u8()? {
+                0 => Priority::Interactive,
+                1 => Priority::Standard,
+                2 => Priority::Bulk,
+                p => return Err(WireError::Malformed(format!("bad priority {p}"))),
+            };
+            let deadline = match c.u8()? {
+                0 => None,
+                1 => Some(Duration::from_micros(c.u64()?)),
+                t => return Err(WireError::Malformed(format!("bad deadline tag {t}"))),
+            };
+            let client_tag = c.opt_str()?;
+            let inputs = c.values()?;
+            Frame::Request(RequestFrame { id, model, priority, deadline, client_tag, inputs })
+        }
+        TYPE_RESPONSE => {
+            let id = c.u64()?;
+            let code = c.u8()?;
+            let msg = c.opt_str()?;
+            let status = match (code, msg) {
+                (0, None) => WireStatus::Ok,
+                (1, Some(m)) => WireStatus::Error(m),
+                (2, None) => WireStatus::Expired,
+                (3, None) => WireStatus::Cancelled,
+                (4, Some(m)) => WireStatus::Rejected(m),
+                (c2, m) => {
+                    return Err(WireError::Malformed(format!(
+                        "bad status code {c2} (msg present: {})",
+                        m.is_some()
+                    )))
+                }
+            };
+            let served_by = c.str()?;
+            let batch_size = c.u32()?;
+            let latency_us = c.u64()?;
+            let queue_us = c.u64()?;
+            let server_us = c.u64()?;
+            let outputs = c.values()?;
+            Frame::Response(ResponseFrame {
+                id,
+                status,
+                outputs,
+                served_by,
+                batch_size,
+                latency_us,
+                queue_us,
+                server_us,
+            })
+        }
+        t => return Err(WireError::Malformed(format!("unknown frame type {t}"))),
+    };
+    c.done()?;
+    Ok(f)
+}
+
+/// `read_exact` that retries `Interrupted` but treats a timeout
+/// (`WouldBlock`/`TimedOut`) as an error: once a frame has started, a
+/// stalled peer is a broken peer (the slow-trickle defence).
+fn read_exact_frame(r: &mut impl Read, buf: &mut [u8]) -> Result<(), WireError> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(WireError::Malformed(format!(
+                    "peer closed mid-frame ({} of {} bytes)",
+                    filled,
+                    buf.len()
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame from a stream whose read timeout doubles as the idle
+/// poll tick. A timeout **before the first byte** is [`ReadEvent::Idle`]
+/// (nothing was in flight); a clean close there is [`ReadEvent::Closed`].
+/// After the first byte, truncation, stalls, and garbage are errors.
+pub fn read_frame(r: &mut impl Read) -> Result<ReadEvent, WireError> {
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(ReadEvent::Closed),
+            Ok(_) => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                return Ok(ReadEvent::Idle)
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    // rest of magic (3) + type (1) + payload len (4)
+    let mut hdr = [0u8; 8];
+    read_exact_frame(r, &mut hdr)?;
+    if first[0] != MAGIC[0] || hdr[..3] != MAGIC[1..] {
+        return Err(WireError::Malformed("bad magic".into()));
+    }
+    let ty = hdr[3];
+    let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_frame(r, &mut payload)?;
+    Ok(ReadEvent::Frame(decode_payload(ty, &payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode_frame(f).expect("encode");
+        let mut cur = io::Cursor::new(bytes);
+        match read_frame(&mut cur).expect("decode") {
+            ReadEvent::Frame(g) => g,
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    fn gen_value(g: &mut Gen) -> Value {
+        let n = g.usize_in(0, 64);
+        if g.bool() {
+            Value::I32((0..n).map(|_| g.rng.next_u64() as i32).collect())
+        } else {
+            // arbitrary bit patterns except NaN-breaking PartialEq: use
+            // finite values spanning sign/exponent range
+            Value::F32((0..n).map(|_| (g.f64_in(-1e9, 1e9)) as f32).collect())
+        }
+    }
+
+    #[test]
+    fn prop_request_frames_roundtrip_bitwise() {
+        check("request frame roundtrip", 200, |g| {
+            let inputs = (0..g.usize_in(0, 4)).map(|_| gen_value(g)).collect::<Vec<_>>();
+            let f = Frame::Request(RequestFrame {
+                id: g.rng.next_u64(),
+                model: format!("model_{}", g.usize_in(0, 999)),
+                priority: *g.pick(&Priority::ALL),
+                deadline: if g.bool() {
+                    Some(Duration::from_micros(g.rng.next_u64() >> 20))
+                } else {
+                    None
+                },
+                client_tag: if g.bool() { Some(format!("tag-{}", g.usize_in(0, 99))) } else { None },
+                inputs,
+            });
+            let back = roundtrip(&f);
+            crate::prop_assert!(back == f, "roundtrip drifted: {back:?} != {f:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_response_frames_roundtrip_bitwise() {
+        check("response frame roundtrip", 200, |g| {
+            let status = match g.usize_in(0, 4) {
+                0 => WireStatus::Ok,
+                1 => WireStatus::Error(format!("e{}", g.usize_in(0, 9))),
+                2 => WireStatus::Expired,
+                3 => WireStatus::Cancelled,
+                _ => WireStatus::Rejected(format!("r{}", g.usize_in(0, 9))),
+            };
+            let f = Frame::Response(ResponseFrame {
+                id: g.rng.next_u64(),
+                status,
+                outputs: (0..g.usize_in(0, 3)).map(|_| gen_value(g)).collect(),
+                served_by: format!("artifact_{}", g.usize_in(0, 99)),
+                batch_size: g.usize_in(0, 64) as u32,
+                latency_us: g.rng.next_u64() >> 32,
+                queue_us: g.rng.next_u64() >> 32,
+                server_us: g.rng.next_u64() >> 32,
+            });
+            let back = roundtrip(&f);
+            crate::prop_assert!(back == f, "roundtrip drifted: {back:?} != {f:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f32_payloads_roundtrip_bit_exact() {
+        // exact bit patterns incl. subnormals, -0.0, and ±inf
+        let xs = vec![0.0f32, -0.0, f32::MIN_POSITIVE / 2.0, f32::INFINITY, -1.5e-42, 3.25];
+        let f = Frame::Request(RequestFrame {
+            id: 1,
+            model: "m".into(),
+            priority: Priority::Interactive,
+            deadline: Some(Duration::from_millis(5)),
+            client_tag: None,
+            inputs: vec![Value::F32(xs.clone())],
+        });
+        let Frame::Request(r) = roundtrip(&f) else { panic!("type flipped") };
+        let back = r.inputs[0].as_f32().unwrap();
+        for (a, b) in back.iter().zip(&xs) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bitwise drift: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn options_carry_the_full_submit_surface() {
+        let rf = RequestFrame {
+            id: 9,
+            model: "bert_tiny".into(),
+            priority: Priority::Bulk,
+            deadline: Some(Duration::from_micros(1500)),
+            client_tag: Some("cam-3".into()),
+            inputs: vec![],
+        };
+        let o = rf.options();
+        assert_eq!(o.priority, Priority::Bulk);
+        assert_eq!(o.deadline, Some(Duration::from_micros(1500)));
+        assert_eq!(o.client_tag.as_deref(), Some("cam-3"));
+        let o = RequestFrame { deadline: None, client_tag: None, ..rf }.options();
+        assert!(o.deadline.is_none() && o.client_tag.is_none());
+    }
+
+    #[test]
+    fn garbage_bytes_are_malformed_not_a_panic() {
+        let mut cur = io::Cursor::new(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n".to_vec());
+        match read_frame(&mut cur) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("magic"), "{m}"),
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected() {
+        let full = encode_frame(&Frame::Request(RequestFrame {
+            id: 3,
+            model: "bert_tiny".into(),
+            priority: Priority::Standard,
+            deadline: None,
+            client_tag: None,
+            inputs: vec![Value::I32(vec![1, 2, 3])],
+        }))
+        .unwrap();
+        // every strict prefix after the first byte must fail loudly
+        for cut in 1..full.len() {
+            let mut cur = io::Cursor::new(full[..cut].to_vec());
+            match read_frame(&mut cur) {
+                Err(WireError::Malformed(_)) | Err(WireError::Io(_)) => {}
+                Ok(ReadEvent::Frame(_)) => panic!("decoded a {cut}-byte prefix"),
+                other => panic!("prefix {cut}: unexpected {other:?}"),
+            }
+        }
+        // cut == 0 is a clean close, not an error
+        let mut empty = io::Cursor::new(Vec::new());
+        assert!(matches!(read_frame(&mut empty).unwrap(), ReadEvent::Closed));
+    }
+
+    #[test]
+    fn oversized_declared_length_is_rejected_before_allocation() {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(TYPE_REQUEST);
+        bytes.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cur = io::Cursor::new(bytes);
+        match read_frame(&mut cur) {
+            Err(WireError::TooLarge(n)) => assert_eq!(n, u32::MAX as usize),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hostile_element_count_is_bounded_by_payload() {
+        // payload claims 2^30 f32 elems but carries 4 bytes: the cursor
+        // must reject without allocating 4 GiB
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 1); // id
+        put_str(&mut payload, "m").unwrap();
+        payload.push(1); // standard
+        payload.push(0); // no deadline
+        payload.push(0); // no tag
+        put_u16(&mut payload, 1); // one input
+        payload.push(DTYPE_F32);
+        put_u32(&mut payload, 1 << 30);
+        payload.extend_from_slice(&[0u8; 4]);
+        match decode_payload(TYPE_REQUEST, &payload) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("truncated"), "{m}"),
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_payload_bytes_are_rejected() {
+        let full = encode_frame(&Frame::Response(ResponseFrame::rejected(1, "x"))).unwrap();
+        let mut bytes = full.clone();
+        // grow the declared length and append junk
+        let len = u32::from_le_bytes(bytes[5..9].try_into().unwrap()) + 2;
+        bytes[5..9].copy_from_slice(&len.to_le_bytes());
+        bytes.extend_from_slice(&[0xAA, 0xBB]);
+        let mut cur = io::Cursor::new(bytes);
+        match read_frame(&mut cur) {
+            Err(WireError::Malformed(m)) => assert!(m.contains("trailing"), "{m}"),
+            other => panic!("expected malformed, got {other:?}"),
+        }
+    }
+}

@@ -97,6 +97,30 @@ impl Args {
         }
     }
 
+    /// Comma-separated `key=value` numeric pairs, e.g.
+    /// `--mix interactive=0.2,standard=0.5,bulk=0.3`. Returns the pairs
+    /// in input order; key validity is the caller's concern.
+    pub fn get_kv_f64(&self, key: &str) -> anyhow::Result<Option<Vec<(String, f64)>>> {
+        let Some(v) = self.get(key) else { return Ok(None) };
+        let mut out = Vec::new();
+        for pair in v.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (k, val) = pair.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("--{key}: expected name=number, got {pair:?}")
+            })?;
+            let val: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key}: bad number in {pair:?}"))?;
+            out.push((k.trim().to_string(), val));
+        }
+        anyhow::ensure!(!out.is_empty(), "--{key}: no name=number pairs given");
+        Ok(Some(out))
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -132,6 +156,23 @@ mod tests {
     fn bad_value_is_error() {
         let a = parse("--batch eight");
         assert!(a.get_usize("batch", 1).is_err());
+    }
+
+    #[test]
+    fn kv_pairs_parse_in_order() {
+        let a = parse("--mix interactive=0.2,standard=0.5,bulk=0.3");
+        let kv = a.get_kv_f64("mix").unwrap().unwrap();
+        assert_eq!(
+            kv,
+            vec![
+                ("interactive".to_string(), 0.2),
+                ("standard".to_string(), 0.5),
+                ("bulk".to_string(), 0.3)
+            ]
+        );
+        assert!(parse("").get_kv_f64("mix").unwrap().is_none());
+        assert!(parse("--mix interactive").get_kv_f64("mix").is_err());
+        assert!(parse("--mix interactive=lots").get_kv_f64("mix").is_err());
     }
 
     #[test]

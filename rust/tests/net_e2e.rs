@@ -1,0 +1,324 @@
+//! End-to-end: the network front end over the *real* serving stack —
+//! BERT-family requests through [`NetClient`] → TCP loopback →
+//! [`NetServer`] → coordinator → [`CpuSparseBackend`] tiled sparse
+//! compute → back over the wire. The headline invariant: logits served
+//! over the socket are **bitwise identical** to direct in-process
+//! submission, so the wire is a transparent transport, not a lossy one.
+//! Recorded in EXPERIMENTS.md §E2E.
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s4::backend::{CpuSparseBackend, Value};
+use s4::coordinator::{
+    AdmissionDecision, BatcherConfig, Metrics, MetricsSnapshot, Router, RoutingPolicy, Server,
+    ServerConfig, ServerHandle, ServingService, SubmitOptions, Ticket,
+};
+use s4::net::{
+    read_frame, Frame, NetClient, NetServer, NetServerConfig, ReadEvent, WireStatus, MAGIC,
+    MAX_FRAME_BYTES,
+};
+use s4::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b4", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 4, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [4, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+fn server(m: Manifest) -> Server {
+    let backend = Arc::new(CpuSparseBackend::from_manifest(&m));
+    Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            workers: 2,
+            max_inflight: 64,
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    )
+}
+
+fn tokens(seed: i32) -> Vec<i32> {
+    (0..16).map(|t| (seed * 31 + t * 7) % 997).collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn logits_over_the_socket_are_bitwise_identical_to_direct_submission() {
+    let srv = server(manifest());
+    let handle = Arc::new(srv.handle());
+
+    // direct, in-process
+    let ids = tokens(11);
+    let t = handle.submit("bert_tiny", vec![Value::tokens(ids.clone())]).unwrap();
+    let direct = t.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert!(direct.is_ok(), "{:?}", direct.status);
+    let direct_logits = direct.logits().to_vec();
+
+    // same payload over TCP loopback
+    let net =
+        NetServer::bind("127.0.0.1:0", handle.clone(), NetServerConfig::default()).unwrap();
+    let mut c = NetClient::connect(net.local_addr(), Duration::from_secs(10)).unwrap();
+    let r = c.call("bert_tiny", vec![Value::tokens(ids)]).unwrap();
+    assert!(r.is_ok(), "{:?}", r.status);
+    assert!(!r.served_by.is_empty(), "response carries the serving artifact");
+    assert_eq!(
+        bits(r.logits()),
+        bits(&direct_logits),
+        "socket logits must be bit-for-bit the in-process logits"
+    );
+
+    net.shutdown();
+    srv.shutdown();
+}
+
+#[test]
+fn pipelined_mixed_priorities_correlate_by_id_not_arrival_order() {
+    let srv = server(manifest());
+    let handle = Arc::new(srv.handle());
+    let net =
+        NetServer::bind("127.0.0.1:0", handle.clone(), NetServerConfig::default()).unwrap();
+    let mut c = NetClient::connect(net.local_addr(), Duration::from_secs(10)).unwrap();
+
+    // ground truth per payload, computed in-process
+    let expect = |seed: i32| {
+        let t = handle.submit("bert_tiny", vec![Value::tokens(tokens(seed))]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r.is_ok(), "{:?}", r.status);
+        bits(r.logits())
+    };
+    let want = [expect(1), expect(2), expect(3)];
+
+    // 9 requests in flight at once on one connection, classes cycling;
+    // responses may arrive in any order and must re-associate by id
+    let classes = [
+        SubmitOptions::interactive(),
+        SubmitOptions::default(),
+        SubmitOptions::bulk(),
+    ];
+    let mut sent = Vec::new();
+    for i in 0..9 {
+        let seed = 1 + (i % 3) as i32;
+        let id = c
+            .send_with("bert_tiny", vec![Value::tokens(tokens(seed))], &classes[i / 3])
+            .unwrap();
+        sent.push((id, seed));
+    }
+    let mut got = 0;
+    while got < sent.len() {
+        let r = c.recv().unwrap();
+        let (_, seed) = *sent.iter().find(|(id, _)| *id == r.id).expect("known id");
+        assert!(r.is_ok(), "{:?}", r.status);
+        assert_eq!(
+            bits(r.logits()),
+            want[(seed - 1) as usize],
+            "response {} must carry the logits of the payload submitted under its id",
+            r.id
+        );
+        got += 1;
+    }
+
+    net.shutdown();
+    srv.shutdown();
+}
+
+/// Read server frames off a raw socket until it closes; returns the
+/// statuses seen. Panics if the server neither answers nor closes.
+fn drain_raw(stream: TcpStream) -> Vec<WireStatus> {
+    stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    let mut r = BufReader::new(stream);
+    let mut seen = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match read_frame(&mut r) {
+            Ok(ReadEvent::Frame(Frame::Response(f))) => seen.push(f.status),
+            Ok(ReadEvent::Frame(Frame::Request(_))) => panic!("server sent a request frame"),
+            Ok(ReadEvent::Idle) => assert!(Instant::now() < deadline, "server never closed"),
+            Ok(ReadEvent::Closed) => return seen,
+            Err(e) => panic!("client-side read error: {e}"),
+        }
+    }
+}
+
+#[test]
+fn malformed_bytes_close_only_the_offending_connection() {
+    let srv = server(manifest());
+    let handle = Arc::new(srv.handle());
+    let net =
+        NetServer::bind("127.0.0.1:0", handle.clone(), NetServerConfig::default()).unwrap();
+    let addr = net.local_addr();
+
+    // a healthy connection opened *before* the attack…
+    let mut healthy = NetClient::connect(addr, Duration::from_secs(10)).unwrap();
+    assert!(healthy.call("bert_tiny", vec![Value::tokens(tokens(5))]).unwrap().is_ok());
+
+    // …an HTTP client wanders in
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.write_all(b"GET / HTTP/1.1\r\nHost: s4\r\n\r\n").unwrap();
+    raw.flush().unwrap();
+    let seen = drain_raw(raw);
+    assert!(
+        seen.iter().any(|s| matches!(s, WireStatus::Rejected(_))),
+        "malformed bytes must be answered with a Rejected frame, got {seen:?}"
+    );
+
+    // …and the healthy connection is untouched
+    assert!(healthy.call("bert_tiny", vec![Value::tokens(tokens(6))]).unwrap().is_ok());
+    let snap = net.metrics().snapshot();
+    assert!(snap.net.frames_malformed >= 1, "{:?}", snap.net);
+    assert!(snap.net.conns_closed_on_error >= 1, "{:?}", snap.net);
+
+    net.shutdown();
+    srv.shutdown();
+}
+
+#[test]
+fn oversized_declared_length_closes_the_connection_before_allocation() {
+    let srv = server(manifest());
+    let handle = Arc::new(srv.handle());
+    let net =
+        NetServer::bind("127.0.0.1:0", handle.clone(), NetServerConfig::default()).unwrap();
+    let addr = net.local_addr();
+
+    // a syntactically valid header declaring an absurd payload
+    let mut raw = TcpStream::connect(addr).unwrap();
+    let mut hdr = Vec::new();
+    hdr.extend_from_slice(&MAGIC);
+    hdr.push(1); // request
+    hdr.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+    raw.write_all(&hdr).unwrap();
+    raw.flush().unwrap();
+    let seen = drain_raw(raw);
+    assert!(
+        seen.iter().any(|s| matches!(s, WireStatus::Rejected(_))),
+        "oversized frame must be answered with a Rejected frame, got {seen:?}"
+    );
+
+    // the listener is still serving fresh connections
+    let mut c = NetClient::connect(addr, Duration::from_secs(10)).unwrap();
+    assert!(c.call("bert_tiny", vec![Value::tokens(tokens(7))]).unwrap().is_ok());
+
+    net.shutdown();
+    srv.shutdown();
+}
+
+/// Delegates to the real stack but panics *after* the inner submission
+/// admitted a request — the nastiest spot for a handler panic, because a
+/// leaked admission slot would wedge a `max_inflight = 1` server forever.
+struct PanickyService {
+    inner: Arc<ServerHandle>,
+}
+
+impl ServingService for PanickyService {
+    fn submit_with(
+        &self,
+        model: &str,
+        inputs: Vec<Value>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, AdmissionDecision> {
+        if model == "boom" {
+            // consume a slot for real, then die before returning the ticket
+            let _ = self.inner.submit_with("bert_tiny", inputs, opts);
+            panic!("handler blew up after admission");
+        }
+        self.inner.submit_with(model, inputs, opts)
+    }
+
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        self.inner.metrics_snapshot()
+    }
+
+    fn shared_metrics(&self) -> Option<Arc<Metrics>> {
+        self.inner.shared_metrics()
+    }
+}
+
+#[test]
+fn handler_panic_answers_an_error_and_does_not_leak_the_admission_slot() {
+    // regression (ISSUE PR 6 satellite): a panicking connection handler
+    // must neither kill the connection nor strand its admission slot
+    let m = manifest();
+    let backend = Arc::new(CpuSparseBackend::from_manifest(&m));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            max_inflight: 1, // one leaked slot == a wedged server
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let svc = Arc::new(PanickyService { inner: Arc::new(srv.handle()) });
+    let net = NetServer::bind("127.0.0.1:0", svc, NetServerConfig::default()).unwrap();
+    let mut c = NetClient::connect(net.local_addr(), Duration::from_secs(10)).unwrap();
+
+    let r = c.call("boom", vec![Value::tokens(tokens(9))]).unwrap();
+    assert!(
+        matches!(r.status, WireStatus::Error(_)),
+        "panic must surface as an Error frame, got {:?}",
+        r.status
+    );
+
+    // same connection; the orphaned request drains worker-side, freeing
+    // the only slot — a follow-up must eventually be served
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = c.call("bert_tiny", vec![Value::tokens(tokens(9))]).unwrap();
+        if r.is_ok() {
+            break;
+        }
+        assert!(
+            matches!(r.status, WireStatus::Rejected(_)),
+            "only transient admission rejection is acceptable, got {:?}",
+            r.status
+        );
+        assert!(
+            Instant::now() < deadline,
+            "admission slot leaked: server still rejecting 10s after the panic"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    net.shutdown();
+    srv.shutdown();
+}
+
+#[test]
+fn server_shutdown_drains_the_socket_front_end_via_the_hook() {
+    let srv = server(manifest());
+    let handle = Arc::new(srv.handle());
+    let net = Arc::new(
+        NetServer::bind("127.0.0.1:0", handle.clone(), NetServerConfig::default()).unwrap(),
+    );
+    let addr = net.local_addr();
+    {
+        let net = net.clone();
+        srv.on_shutdown(move || net.shutdown());
+    }
+
+    let mut c = NetClient::connect(addr, Duration::from_secs(10)).unwrap();
+    assert!(c.call("bert_tiny", vec![Value::tokens(tokens(2))]).unwrap().is_ok());
+
+    // ONE call tears down the whole stack, socket boundary first
+    srv.shutdown();
+
+    let after = NetClient::connect(addr, Duration::from_secs(1))
+        .and_then(|mut c| c.call("bert_tiny", vec![Value::tokens(tokens(2))]));
+    assert!(after.is_err(), "socket front end must be down after Server::shutdown");
+}
