@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             },
             workers: 2,
             max_inflight: 512,
+            ..Default::default()
         },
         manifest,
         Router::new(policy),

@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
             workers: 2,
             max_inflight: 512,
+            ..Default::default()
         },
         manifest,
         Router::new(RoutingPolicy::MaxSparsity),

@@ -1,0 +1,238 @@
+//! Bench: serving throughput through a fault storm, with a
+//! machine-readable recovery trajectory.
+//!
+//! Emits `BENCH_fault.json` (schema `s4-bench-v1`, see EXPERIMENTS.md
+//! §Robustness): one serving stack, one run, three phases over a
+//! fixed-service-time backend wrapped in a deterministic
+//! [`FaultingBackend`] —
+//!
+//! * **pre** — clean burst, measuring baseline throughput;
+//! * **storm** — scheduled worker-killing panics plus an error burst
+//!   that trips the health breaker; goodput and typed-failure accounting
+//!   are recorded while the supervisor respawns workers and the breaker
+//!   sheds/probes;
+//! * **post** — the identical clean burst again, after recovery.
+//!
+//! The trajectory point each PR defends:
+//! `post_recovery_throughput_ratio` ≥ 0.9 — a storm may cost its own
+//! window, but it must not permanently shrink capacity (leaked slots,
+//! unreplaced workers, a stuck-open breaker would all show up here) —
+//! with `worker_restarts` ≥ 1 proving the storm actually killed and
+//! replaced workers rather than being absorbed trivially.
+//!
+//! ```bash
+//! cargo bench --bench fault_recovery            # full
+//! cargo bench --bench fault_recovery -- --smoke # CI trajectory point
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s4::backend::{EchoBackend, InferenceBackend, TensorSpec, Value};
+use s4::coordinator::{
+    AdmissionDecision, BatcherConfig, BreakerConfig, Router, RoutingPolicy, Server, ServerConfig,
+    ServerHandle, Ticket,
+};
+use s4::fault::{FaultPlan, FaultingBackend};
+use s4::runtime::Manifest;
+use s4::util::bench::JsonReport;
+use s4::util::cli::Args;
+use s4::util::json::Json;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+/// Echo with a fixed service time, so throughput is service-bound and the
+/// pre/post ratio is stable rather than scheduler noise.
+struct ThrottledEcho {
+    inner: EchoBackend,
+    service: Duration,
+}
+
+impl InferenceBackend for ThrottledEcho {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.input_specs(artifact)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.output_specs(artifact)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        std::thread::sleep(self.service);
+        self.inner.run_batch(artifact, inputs)
+    }
+}
+
+/// Burst-submit `n` clean requests and wait for all; returns throughput
+/// (completions/s). Used identically for the pre and post phases.
+fn clean_burst(h: &ServerHandle, n: usize) -> anyhow::Result<f64> {
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(n);
+    for i in 0..n {
+        tickets.push(
+            h.submit("bert_tiny", vec![Value::tokens(vec![i as i32 % 997; 32])])
+                .map_err(|d| anyhow::anyhow!("clean burst rejected: {d:?}"))?,
+        );
+    }
+    for t in &tickets {
+        let r = t.wait_timeout(Duration::from_secs(120))?;
+        anyhow::ensure!(r.is_ok(), "clean burst request failed: {:?}", r.status);
+    }
+    Ok(n as f64 / t0.elapsed().as_secs_f64())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let (n, service) = if smoke {
+        (150, Duration::from_micros(200))
+    } else {
+        (800, Duration::from_micros(500))
+    };
+
+    // storm scheduled by backend call index: the pre burst consumes
+    // exactly `n` calls (max_batch 1 → one call per request), then two
+    // worker-killing panics and an error burst long enough to trip the
+    // breaker even counting from zero
+    let breaker =
+        BreakerConfig { failure_threshold: 4, probe_after_sheds: 2, close_after_probes: 2 };
+    let storm_start = n as u64;
+    let plan = FaultPlan::new()
+        .with_panic_at(storm_start)
+        .with_panic_at(storm_start + 1)
+        .with_error_burst(storm_start + 2, 4);
+    let storm_len = plan.len() as u64;
+
+    let m = manifest();
+    let throttled: Arc<dyn InferenceBackend> =
+        Arc::new(ThrottledEcho { inner: EchoBackend::from_manifest(&m), service });
+    // keep a typed handle for injection accounting; the server gets a clone
+    let faulting = Arc::new(FaultingBackend::new(throttled, plan));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(500) },
+            workers: 2,
+            max_inflight: 4 * n,
+            breaker,
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        faulting.clone(),
+    );
+    let h = srv.handle();
+
+    println!("== fault recovery ({n} requests/phase, {service:?}/call, storm {storm_len} faults) ==");
+    let pre_rps = clean_burst(&h, n)?;
+    println!("bench fault/pre            {pre_rps:>8.0} req/s clean");
+
+    // the storm: one request at a time until every scheduled fault has
+    // actually fired; breaker sheds are retried (they consume no call)
+    let t_storm = Instant::now();
+    let (mut storm_ok, mut storm_failed, mut storm_shed) = (0u64, 0u64, 0u64);
+    loop {
+        let (p, e, s) = faulting.injected();
+        if p + e + s >= storm_len {
+            break;
+        }
+        anyhow::ensure!(
+            t_storm.elapsed() < Duration::from_secs(60),
+            "storm never drained: {:?} of {storm_len} faults fired",
+            faulting.injected()
+        );
+        match h.submit("bert_tiny", vec![Value::tokens(vec![1; 32])]) {
+            Ok(t) => {
+                let r = t.wait_timeout(Duration::from_secs(120))?;
+                if r.is_ok() {
+                    storm_ok += 1;
+                } else {
+                    storm_failed += 1;
+                }
+            }
+            Err(AdmissionDecision::RejectUnhealthy(_)) => storm_shed += 1,
+            Err(d) => anyhow::bail!("unexpected rejection during the storm: {d:?}"),
+        }
+    }
+    // recovery: first clean completion after the last fault fired
+    let t_recover = Instant::now();
+    loop {
+        anyhow::ensure!(
+            t_recover.elapsed() < Duration::from_secs(60),
+            "stack never recovered after the storm"
+        );
+        match h.submit("bert_tiny", vec![Value::tokens(vec![2; 32])]) {
+            Ok(t) => {
+                if t.wait_timeout(Duration::from_secs(120))?.is_ok() {
+                    break;
+                }
+            }
+            Err(AdmissionDecision::RejectUnhealthy(_)) => storm_shed += 1,
+            Err(d) => anyhow::bail!("unexpected rejection during recovery: {d:?}"),
+        }
+    }
+    let recovery_ms = t_recover.elapsed().as_secs_f64() * 1e3;
+    let storm_attempts = storm_ok + storm_failed + storm_shed;
+    let goodput = storm_ok as f64 / (storm_attempts.max(1)) as f64;
+    println!(
+        "bench fault/storm          {storm_attempts} attempts: {storm_ok} ok, \
+         {storm_failed} typed failures, {storm_shed} breaker sheds  \
+         goodput {:.0}%  recovery {recovery_ms:.1}ms",
+        goodput * 100.0
+    );
+
+    let post_rps = clean_burst(&h, n)?;
+    let ratio = post_rps / pre_rps;
+    println!("bench fault/post           {post_rps:>8.0} req/s clean  ratio {ratio:.3}");
+
+    let snap = h.metrics_snapshot();
+    let inflight = h.inflight();
+    srv.shutdown();
+
+    let mut report = JsonReport::new("fault");
+    report.set("smoke", Json::Bool(smoke));
+    report.set_effective_workers(2);
+    report.set("requests_per_phase", Json::Num(n as f64));
+    report.set("service_us_per_call", Json::Num(service.as_micros() as f64));
+    report.set("storm_faults", Json::Num(storm_len as f64));
+    report.set("pre_throughput_rps", Json::Num(pre_rps));
+    report.set("post_throughput_rps", Json::Num(post_rps));
+    report.set("post_recovery_throughput_ratio", Json::Num(ratio));
+    report.set("storm_goodput", Json::Num(goodput));
+    report.set("storm_breaker_sheds", Json::Num(storm_shed as f64));
+    report.set("recovery_ms", Json::Num(recovery_ms));
+    report.set("worker_panics", Json::Num(snap.worker_panics as f64));
+    report.set("worker_restarts", Json::Num(snap.worker_restarts as f64));
+    report.set("breaker_opens", Json::Num(snap.breaker_opens as f64));
+
+    // the contract this bench exists to defend
+    anyhow::ensure!(
+        ratio >= 0.9,
+        "post-recovery throughput ratio {ratio:.3} < 0.9: the storm permanently \
+         degraded the stack (pre {pre_rps:.0} vs post {post_rps:.0} req/s)"
+    );
+    anyhow::ensure!(
+        snap.worker_restarts >= 1,
+        "the storm must actually kill and respawn a worker: {}",
+        snap.report()
+    );
+    anyhow::ensure!(snap.worker_panics >= 1, "{}", snap.report());
+    anyhow::ensure!(snap.breaker_opens >= 1, "the error burst must trip the breaker");
+    anyhow::ensure!(
+        snap.answered() == snap.admitted,
+        "no ticket lost through the storm: {}",
+        snap.report()
+    );
+    anyhow::ensure!(inflight == 0, "leaked admission slots: {inflight}");
+
+    let path = report.write()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -82,6 +82,7 @@ fn serve_stack(service: Duration) -> (Server, Arc<ServerHandle>) {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
             workers: 1,
             max_inflight: 256,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),

@@ -105,6 +105,7 @@ fn run_burst(n: usize, service: Duration, qos: bool, bulk_deadline: Duration) ->
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
             workers: 1,
             max_inflight: 4 * n, // admission out of the picture: this bench measures scheduling
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),

@@ -33,6 +33,7 @@ fn run_closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
             workers: 4,
             max_inflight: 4096,
+            ..Default::default()
         },
         manifest(),
         Router::new(RoutingPolicy::MaxSparsity),

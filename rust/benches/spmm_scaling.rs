@@ -144,6 +144,7 @@ fn closed_loop(backend: Arc<dyn InferenceBackend>, n: usize, label: &str) -> Jso
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_micros(500) },
             workers: 4,
             max_inflight: 4096,
+            ..Default::default()
         },
         serving_manifest(),
         Router::new(RoutingPolicy::MaxSparsity),

@@ -23,6 +23,12 @@ pub enum AdmissionDecision {
     Admit,
     RejectQueueFull(Priority),
     RejectRateLimited(Priority),
+    /// Shed by the backend-health circuit breaker
+    /// ([`Breaker`](super::health::Breaker)): the backend is failing and
+    /// queueing more work behind it would only strand tickets. Explicitly
+    /// retryable — the breaker probes its way back to `Closed` and healthy
+    /// traffic resumes without operator action.
+    RejectUnhealthy(Priority),
 }
 
 #[derive(Debug)]

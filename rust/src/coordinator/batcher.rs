@@ -272,7 +272,7 @@ impl DynamicBatcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{RequestId, Response, ResponseStatus};
+    use crate::coordinator::request::{ReplySlot, RequestId, Response, ResponseStatus};
     use std::sync::mpsc;
 
     fn req(id: u64, model: &str) -> (Request, mpsc::Receiver<Response>) {
@@ -297,7 +297,7 @@ mod tests {
                 deadline: deadline.map(|d| now + d),
                 cancelled: Arc::new(AtomicBool::new(false)),
                 client_tag: None,
-                reply: tx,
+                reply: ReplySlot::new(tx),
             },
             rx,
         )

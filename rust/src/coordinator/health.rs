@@ -1,0 +1,320 @@
+//! Backend health state machine: a consecutive-failure circuit breaker
+//! with graceful degradation.
+//!
+//! When the backend starts failing every call (bad artifact hot-swap,
+//! resource exhaustion, a poisoned dependency), queueing more work behind
+//! it only converts healthy clients into timed-out clients. The breaker
+//! watches execution outcomes from the workers and trips after
+//! [`failure_threshold`](BreakerConfig::failure_threshold) *consecutive*
+//! failures:
+//!
+//! ```text
+//!            failures >= failure_threshold
+//!   Closed ───────────────────────────────▶ Open
+//!     ▲                                      │ sheds_since_open >=
+//!     │ probe_successes >=                   │ probe_after_sheds
+//!     │ close_after_probes                   ▼
+//!     └──────────────────────────────── HalfOpen
+//!                  (any failure in HalfOpen re-opens)
+//! ```
+//!
+//! While **Open**, every submission is shed at the front door with the
+//! typed, retryable
+//! [`AdmissionDecision::RejectUnhealthy`](super::admission::AdmissionDecision::RejectUnhealthy)
+//! — the client learns immediately instead of holding a doomed ticket.
+//! After [`probe_after_sheds`](BreakerConfig::probe_after_sheds) sheds the
+//! breaker moves to **HalfOpen** and lets non-Bulk traffic through as
+//! probes; [`close_after_probes`](BreakerConfig::close_after_probes)
+//! consecutive probe successes close it again, any probe failure re-opens
+//! it. `Bulk` is shed for the whole degraded window (Open *and* HalfOpen):
+//! graceful degradation sacrifices throughput traffic first and recovers
+//! latency-critical classes first.
+//!
+//! Every transition is driven by deterministic *counts* — consecutive
+//! failures, shed counts, probe successes — never wall-clock timers, so a
+//! seeded fault schedule (see [`crate::fault`]) produces the exact same
+//! open/probe/close trace on every run. That determinism is what lets
+//! `tests/chaos.rs` assert breaker behavior bit-for-bit.
+
+use std::sync::Mutex;
+
+use super::request::Priority;
+
+/// Tuning knobs for the [`Breaker`]. All thresholds are counts (no
+/// durations): deterministic under seeded fault injection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Consecutive backend failures that trip `Closed → Open`. Clamped to
+    /// at least 1.
+    pub failure_threshold: u32,
+    /// Submissions shed while `Open` before the breaker moves to
+    /// `HalfOpen` and starts probing. Bounds how much traffic is turned
+    /// away before recovery is even attempted.
+    pub probe_after_sheds: u32,
+    /// Consecutive successful probes in `HalfOpen` that close the
+    /// breaker. Clamped to at least 1.
+    pub close_after_probes: u32,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 8,
+            probe_after_sheds: 4,
+            close_after_probes: 2,
+        }
+    }
+}
+
+/// Where the breaker currently is (observability + tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: everything passes.
+    Closed,
+    /// Tripped: everything is shed until enough sheds trigger probing.
+    Open,
+    /// Probing: non-Bulk passes (each a probe), Bulk still shed.
+    HalfOpen,
+}
+
+/// Per-submission decision from [`Breaker::admit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerVerdict {
+    /// Healthy path: admit normally.
+    Pass,
+    /// Degraded path: admit, and this request's outcome decides whether
+    /// the breaker closes or re-opens.
+    Probe,
+    /// Shed with a typed retryable rejection; no admission slot consumed.
+    Shed,
+}
+
+#[derive(Debug)]
+struct Inner {
+    state: BreakerState,
+    consecutive_failures: u32,
+    sheds_since_open: u32,
+    probe_successes: u32,
+}
+
+/// Consecutive-failure circuit breaker shared between the submission
+/// surface (which consults [`admit`](Breaker::admit)) and the workers
+/// (which report [`record_success`](Breaker::record_success) /
+/// [`record_failure`](Breaker::record_failure) per placement execution).
+#[derive(Debug)]
+pub struct Breaker {
+    cfg: BreakerConfig,
+    inner: Mutex<Inner>,
+}
+
+impl Breaker {
+    pub fn new(cfg: BreakerConfig) -> Breaker {
+        Breaker {
+            cfg,
+            inner: Mutex::new(Inner {
+                state: BreakerState::Closed,
+                consecutive_failures: 0,
+                sheds_since_open: 0,
+                probe_successes: 0,
+            }),
+        }
+    }
+
+    /// A breaker panic (impossible today: transitions don't panic) must
+    /// not take down every submission path with it — recover the poison,
+    /// same pattern as the arena locks in `backend/cpu.rs`.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.lock().state
+    }
+
+    /// Decide the fate of one incoming `class` submission. Called before
+    /// admission so a shed consumes neither an admission slot nor an
+    /// `admitted` count — `answered() == admitted` stays an invariant
+    /// through a breaker-open window.
+    pub fn admit(&self, class: Priority) -> BreakerVerdict {
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::Closed => BreakerVerdict::Pass,
+            BreakerState::Open => {
+                // Bulk never probes: degraded capacity goes to the
+                // latency-critical classes first.
+                if class != Priority::Bulk && g.sheds_since_open >= self.cfg.probe_after_sheds {
+                    g.state = BreakerState::HalfOpen;
+                    g.probe_successes = 0;
+                    BreakerVerdict::Probe
+                } else {
+                    g.sheds_since_open += 1;
+                    BreakerVerdict::Shed
+                }
+            }
+            BreakerState::HalfOpen => {
+                if class == Priority::Bulk {
+                    BreakerVerdict::Shed
+                } else {
+                    BreakerVerdict::Probe
+                }
+            }
+        }
+    }
+
+    /// One placement executed cleanly.
+    pub fn record_success(&self) {
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::Closed => g.consecutive_failures = 0,
+            BreakerState::HalfOpen => {
+                g.probe_successes += 1;
+                if g.probe_successes >= self.cfg.close_after_probes.max(1) {
+                    g.state = BreakerState::Closed;
+                    g.consecutive_failures = 0;
+                }
+            }
+            // stragglers admitted before the trip finishing now carry no
+            // signal about post-trip health
+            BreakerState::Open => {}
+        }
+    }
+
+    /// One placement failed (backend error or worker panic). Returns
+    /// `true` when this failure newly opened the breaker, so the caller
+    /// can count `breaker_opens` exactly once per trip.
+    pub fn record_failure(&self) -> bool {
+        let mut g = self.lock();
+        match g.state {
+            BreakerState::Closed => {
+                g.consecutive_failures += 1;
+                if g.consecutive_failures >= self.cfg.failure_threshold.max(1) {
+                    g.state = BreakerState::Open;
+                    g.sheds_since_open = 0;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                g.state = BreakerState::Open;
+                g.sheds_since_open = 0;
+                g.consecutive_failures = 0;
+                true
+            }
+            BreakerState::Open => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(th: u32, sheds: u32, probes: u32) -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: th,
+            probe_after_sheds: sheds,
+            close_after_probes: probes,
+        }
+    }
+
+    #[test]
+    fn stays_closed_below_threshold_and_success_resets_the_streak() {
+        let b = Breaker::new(cfg(3, 2, 1));
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        b.record_success(); // streak broken
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Pass);
+        assert!(b.record_failure(), "third consecutive failure trips");
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn open_sheds_then_probes_then_closes() {
+        let b = Breaker::new(cfg(1, 2, 2));
+        assert!(b.record_failure());
+        // first two submissions shed, third becomes the probe
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Shed);
+        assert_eq!(b.admit(Priority::Interactive), BreakerVerdict::Shed);
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Probe);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::HalfOpen, "needs 2 probe successes");
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Probe);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.admit(Priority::Bulk), BreakerVerdict::Pass);
+    }
+
+    #[test]
+    fn bulk_is_shed_for_the_whole_degraded_window() {
+        let b = Breaker::new(cfg(1, 0, 1));
+        assert!(b.record_failure());
+        // probe_after_sheds = 0: the first non-Bulk submission probes, but
+        // Bulk neither probes nor passes until the breaker closes
+        assert_eq!(b.admit(Priority::Bulk), BreakerVerdict::Shed);
+        assert_eq!(b.admit(Priority::Interactive), BreakerVerdict::Probe);
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert_eq!(b.admit(Priority::Bulk), BreakerVerdict::Shed);
+        b.record_success();
+        assert_eq!(b.admit(Priority::Bulk), BreakerVerdict::Pass);
+    }
+
+    #[test]
+    fn probe_failure_reopens() {
+        let b = Breaker::new(cfg(2, 1, 1));
+        assert!(!b.record_failure());
+        assert!(b.record_failure());
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Shed);
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Probe);
+        assert!(b.record_failure(), "probe failure re-opens (counts as a new open)");
+        assert_eq!(b.state(), BreakerState::Open);
+        // the shed quota starts over
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Shed);
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Probe);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn open_ignores_straggler_outcomes() {
+        let b = Breaker::new(cfg(1, 5, 1));
+        assert!(b.record_failure());
+        // in-flight work admitted before the trip drains while Open;
+        // neither outcome moves the state machine
+        b.record_success();
+        assert!(!b.record_failure());
+        assert_eq!(b.state(), BreakerState::Open);
+    }
+
+    #[test]
+    fn zero_thresholds_are_clamped_not_divergent() {
+        let b = Breaker::new(cfg(0, 0, 0));
+        assert!(b.record_failure(), "threshold 0 behaves like 1");
+        assert_eq!(b.admit(Priority::Standard), BreakerVerdict::Probe);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed, "close_after 0 behaves like 1");
+    }
+
+    #[test]
+    fn deterministic_trace_under_a_fixed_schedule() {
+        // same outcome schedule → same verdict trace, twice
+        let trace = || {
+            let b = Breaker::new(cfg(2, 1, 1));
+            let mut v = Vec::new();
+            for step in 0..12 {
+                if step % 3 == 0 {
+                    b.record_failure();
+                } else if step % 7 == 0 {
+                    b.record_success();
+                }
+                v.push((b.admit(Priority::Standard), b.state()));
+            }
+            v
+        };
+        assert_eq!(trace(), trace());
+    }
+}

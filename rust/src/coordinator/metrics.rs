@@ -47,6 +47,19 @@ pub struct Metrics {
     /// frames rejected by the codec (bad magic, oversized, truncated,
     /// undecodable payload); each also closes its connection
     pub frames_malformed: AtomicU64,
+    /// batches whose execution panicked inside a worker's `catch_unwind`
+    /// fence (every request in the batch is answered with a typed error)
+    pub worker_panics: AtomicU64,
+    /// replacement worker threads spawned by the supervisor after a panic
+    /// — capacity never shrinks, so this tracks `worker_panics` unless a
+    /// panic races shutdown
+    pub worker_restarts: AtomicU64,
+    /// health breaker transitions into `Open` (consecutive-failure trips
+    /// and probe-failure re-opens both count)
+    pub breaker_opens: AtomicU64,
+    /// submissions shed at the front door with `RejectUnhealthy` while the
+    /// breaker was degraded (also counted in `rejected`)
+    pub breaker_shed: AtomicU64,
     admitted_by_class: [AtomicU64; 3],
     completed_by_class: [AtomicU64; 3],
     lat: Mutex<Latencies>,
@@ -87,6 +100,14 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub batched_requests: u64,
     pub padding_slots: u64,
+    /// batches that panicked inside the worker fence (answered typed)
+    pub worker_panics: u64,
+    /// replacement workers respawned by the supervisor
+    pub worker_restarts: u64,
+    /// breaker transitions into `Open`
+    pub breaker_opens: u64,
+    /// submissions shed with `RejectUnhealthy` (subset of `rejected`)
+    pub breaker_shed: u64,
     /// indexed by [`Priority::idx`]
     pub by_class: [ClassStats; 3],
     /// socket-boundary counters (all zero without a net front end)
@@ -135,6 +156,12 @@ impl MetricsSnapshot {
                 p.as_str(),
                 c.completed,
                 c.admitted
+            ));
+        }
+        if self.worker_panics > 0 || self.worker_restarts > 0 || self.breaker_opens > 0 {
+            s.push_str(&format!(
+                " fault[panics={} restarts={} breaker_opens={} breaker_shed={}]",
+                self.worker_panics, self.worker_restarts, self.breaker_opens, self.breaker_shed,
             ));
         }
         if self.net.conns_accepted > 0 {
@@ -240,6 +267,32 @@ impl Metrics {
         self.frames_malformed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One batch panicked inside a worker's `catch_unwind` fence.
+    #[inline]
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The supervisor respawned a replacement worker thread.
+    #[inline]
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The health breaker transitioned into `Open`.
+    #[inline]
+    pub fn record_breaker_open(&self) {
+        self.breaker_opens.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One submission shed with `RejectUnhealthy`. Counted in `rejected`
+    /// too, so `admitted + rejected` still covers every submission.
+    #[inline]
+    pub fn record_breaker_shed(&self) {
+        self.breaker_shed.fetch_add(1, Ordering::Relaxed);
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
         self.lat.lock().unwrap().latency.quantile_us(q)
     }
@@ -298,6 +351,10 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             padding_slots: self.padding_slots.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_shed: self.breaker_shed.load(Ordering::Relaxed),
             by_class,
             net: NetStats {
                 conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
@@ -383,6 +440,33 @@ mod tests {
         assert_eq!(s.admitted, 0);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.class(Priority::Interactive).admitted, 0);
+    }
+
+    #[test]
+    fn fault_counters_flow_into_snapshot_and_report() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.worker_panics, s.worker_restarts, s.breaker_opens, s.breaker_shed),
+            (0, 0, 0, 0)
+        );
+        assert!(!s.report().contains("fault["), "no fault line when healthy");
+        m.record_worker_panic();
+        m.record_worker_restart();
+        m.record_breaker_open();
+        m.record_breaker_shed();
+        m.record_breaker_shed();
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.breaker_shed, 2);
+        assert_eq!(s.rejected, 2, "breaker sheds count as rejections");
+        assert!(
+            s.report().contains("fault[panics=1 restarts=1 breaker_opens=1 breaker_shed=2]"),
+            "{}",
+            s.report()
+        );
     }
 
     #[test]

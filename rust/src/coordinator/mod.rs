@@ -12,11 +12,11 @@
 //!
 //! ```text
 //!            ServingService::submit_with(model, inputs, SubmitOptions)
-//! client ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ InferenceBackend
-//!    ▲      (per-class       (priority seed,   │      (pre-exec shed:     │
-//!    │       budgets)         shed expired/    │       cancel/deadline    │
-//!  Ticket                     cancelled)       │       re-check)          │
-//!  wait/poll/cancel                 metrics ◀──┴───────────┴──────────────┘
+//! client ─▶ breaker ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ InferenceBackend
+//!    ▲      (health    (per-class       (priority seed,   │      (pre-exec shed:     │
+//!    │       shed)      budgets)         shed expired/    │       cancel/deadline    │
+//!  Ticket                                cancelled)       │       re-check)          │
+//!  wait/poll/cancel                            metrics ◀──┴───────────┴──────────────┘
 //!    ▲                                 ▲
 //!    │ Ticket::try_take (reply pump)   │ conns / frames / malformed
 //!  ┌─┴─────────────────────────────────┴─┐
@@ -25,6 +25,32 @@
 //!  └───▲───────────────────────────────┬─┘     move || net.shutdown())
 //!      │ length-prefixed frames (wire) │
 //!   net::NetClient / net::loadgen  ◀───┘   remote clients over TCP
+//! ```
+//!
+//! **Supervision (fault path).** Each worker executes every batch inside a
+//! `catch_unwind` fence; a backend panic answers the batch's unanswered
+//! tickets with a typed `ResponseStatus::Error`, releases their admission
+//! slots, reports the failure to the health [`Breaker`], and then lets the
+//! thread die — the supervisor wrapper respawns a replacement so capacity
+//! never shrinks. The batch hand-off mutex recovers poison on acquisition,
+//! so one panicked worker can no longer cascade-kill the rest:
+//!
+//! ```text
+//!            ┌────────────── spawn_worker (supervisor) ──────────────┐
+//!            │  worker_loop:                                         │
+//!            │    batch_rx.lock()  ── poison-recovering acquisition  │
+//!            │    catch_unwind(serve_batch)                          │
+//!            │      Ok  ─▶ breaker.record_success/failure per        │
+//!            │             placement; tickets answered by serve_batch│
+//!            │      Err ─▶ answer unanswered tickets (typed Error),  │
+//!            │             worker_panics++, breaker.record_failure,  │
+//!            │             release slots, resume_unwind              │
+//!            │  on panic && !stopping: worker_restarts++,            │
+//!            │    respawn replacement thread ────────────────────────┼──▶ loop
+//!            └───────────────────────────────────────────────────────┘
+//!   breaker: Closed ─(N consecutive failures)─▶ Open ─(sheds)─▶ HalfOpen
+//!            ▲  shed Bulk first; RejectUnhealthy is typed + retryable │
+//!            └──────────────(probe successes)─────────────────────────┘
 //! ```
 //!
 //! Requests carry `Vec<Value>` payloads (one sample-shaped tensor per
@@ -37,6 +63,7 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod health;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -44,9 +71,10 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use health::{Breaker, BreakerConfig, BreakerState, BreakerVerdict};
 pub use metrics::{ClassStats, Metrics, MetricsSnapshot, NetStats};
 pub use request::{
-    Priority, Request, RequestId, Response, ResponseStatus, SubmitOptions, Ticket,
+    Priority, ReplySlot, Request, RequestId, Response, ResponseStatus, SubmitOptions, Ticket,
 };
 pub use router::{Placement, Router, RoutingPolicy};
 pub use server::{Server, ServerConfig, ServerHandle, ServingService};

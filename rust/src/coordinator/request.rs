@@ -135,8 +135,51 @@ pub struct Request {
     pub cancelled: Arc<AtomicBool>,
     /// client label from [`SubmitOptions::client_tag`]
     pub client_tag: Option<Arc<str>>,
-    /// where the response goes (per-client channel)
-    pub reply: Sender<Response>,
+    /// where the response goes (per-client channel, exactly-once)
+    pub reply: ReplySlot,
+}
+
+/// Exactly-once reply channel for one request.
+///
+/// The supervised worker loop answers a panicked batch *after* the fact,
+/// from clones of the requests' reply handles captured before execution —
+/// but `serve_batch` may already have answered some of those requests
+/// (pre-execution shed, placement demux) before the panic hit. A bare
+/// `Sender<Response>` would let the fence double-answer them, breaking the
+/// one-response-per-[`Ticket`] contract that `wait()` relies on.
+/// `ReplySlot` closes that race: the first [`send`](ReplySlot::send) wins,
+/// every later send on any clone is a silent no-op, so fences and fallback
+/// paths can always answer defensively without counting.
+#[derive(Clone, Debug)]
+pub struct ReplySlot {
+    tx: Sender<Response>,
+    answered: Arc<AtomicBool>,
+}
+
+impl ReplySlot {
+    pub fn new(tx: Sender<Response>) -> ReplySlot {
+        ReplySlot { tx, answered: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Deliver the response if this slot (across all clones) has not
+    /// answered yet. Returns `true` only for the winning call — callers
+    /// use that to keep metrics accounting exactly-once too, so the
+    /// return means "this was the answer", not "the client saw it": a
+    /// disconnected client (dropped [`Ticket`]) still consumes the slot
+    /// and still returns `true`, matching how the serving path has always
+    /// counted answers regardless of delivery.
+    pub fn send(&self, resp: Response) -> bool {
+        if self.answered.swap(true, Ordering::AcqRel) {
+            return false;
+        }
+        let _ = self.tx.send(resp);
+        true
+    }
+
+    /// Whether some clone of this slot already answered.
+    pub fn is_answered(&self) -> bool {
+        self.answered.load(Ordering::Acquire)
+    }
 }
 
 impl Request {
@@ -402,7 +445,7 @@ mod tests {
             deadline: deadline.map(|d| now + d),
             cancelled: cancelled.clone(),
             client_tag: None,
-            reply: tx,
+            reply: ReplySlot::new(tx),
         };
         (r, rx, cancelled)
     }
@@ -441,6 +484,33 @@ mod tests {
         drop(tx);
         assert!(t.wait_timeout(Duration::from_millis(10)).is_err());
         assert!(t.wait().is_err());
+    }
+
+    #[test]
+    fn reply_slot_is_exactly_once_across_clones() {
+        let (tx, rx) = channel();
+        let slot = ReplySlot::new(tx);
+        let fence_copy = slot.clone();
+        assert!(!slot.is_answered());
+        assert!(slot.send(Response::error(RequestId(1), "real answer")));
+        assert!(slot.is_answered() && fence_copy.is_answered());
+        // the fence's late defensive answer is a no-op, not a double reply
+        assert!(!fence_copy.send(Response::error(RequestId(1), "fence answer")));
+        assert_eq!(rx.recv().unwrap().error_message(), Some("real answer"));
+        assert!(rx.try_recv().is_err(), "exactly one response delivered");
+    }
+
+    #[test]
+    fn reply_slot_disconnected_client_still_counts_as_the_answer() {
+        let (tx, rx) = channel();
+        let slot = ReplySlot::new(tx);
+        drop(rx); // client dropped its Ticket
+        assert!(
+            slot.send(Response::expired(RequestId(2))),
+            "winning call answers (and is counted) even if nobody is listening"
+        );
+        assert!(slot.is_answered());
+        assert!(!slot.send(Response::expired(RequestId(2))), "slot consumed");
     }
 
     #[test]

@@ -29,16 +29,18 @@
 //! multiply core usage for the big batches — the pool already owns the
 //! cores — so a handful of workers is enough.
 
-use std::sync::mpsc::{channel, Sender};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::admission::{Admission, AdmissionDecision};
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
+use super::health::{Breaker, BreakerConfig, BreakerState, BreakerVerdict};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{
-    Priority, Request, RequestId, Response, SubmitOptions, Ticket,
+    Priority, ReplySlot, Request, RequestId, Response, SubmitOptions, Ticket,
 };
 use super::router::{Placement, Router};
 use crate::backend::{InferenceBackend, Value};
@@ -49,6 +51,10 @@ pub struct ServerConfig {
     pub batcher: BatcherConfig,
     pub workers: usize,
     pub max_inflight: usize,
+    /// Backend-health circuit breaker thresholds (always on; the default
+    /// only trips on a sustained consecutive-failure streak, so healthy
+    /// stacks never notice it).
+    pub breaker: BreakerConfig,
 }
 
 impl Default for ServerConfig {
@@ -57,6 +63,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             workers: 2,
             max_inflight: 256,
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -105,7 +112,10 @@ pub trait ServingService {
 /// Running server; call [`shutdown`](Server::shutdown) to stop cleanly.
 pub struct Server {
     handle: ServerHandle,
-    threads: Vec<JoinHandle<()>>,
+    /// shared with the worker supervisors: a respawned replacement pushes
+    /// its own [`JoinHandle`] here so [`shutdown`](Server::shutdown) joins
+    /// every generation of every worker, not just the original spawns
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
     stop: Arc<std::sync::atomic::AtomicBool>,
     /// front-end drain hooks, run at the START of [`shutdown`](Server::shutdown)
     /// while the batcher/workers are still serving (see
@@ -119,6 +129,7 @@ pub struct Server {
 pub struct ServerHandle {
     tx: Sender<Request>,
     admission: Arc<Admission>,
+    breaker: Arc<Breaker>,
     pub metrics: Arc<Metrics>,
     next_id: Arc<std::sync::atomic::AtomicU64>,
 }
@@ -131,6 +142,13 @@ impl ServingService for ServerHandle {
         opts: SubmitOptions,
     ) -> Result<Ticket, AdmissionDecision> {
         let class = opts.priority;
+        // Health gate first: a breaker shed consumes neither an admission
+        // slot nor an `admitted` count, so `answered() == admitted` holds
+        // straight through a degraded window.
+        if self.breaker.admit(class) == BreakerVerdict::Shed {
+            self.metrics.record_breaker_shed();
+            return Err(AdmissionDecision::RejectUnhealthy(class));
+        }
         match self.admission.try_admit(class) {
             AdmissionDecision::Admit => {}
             other => {
@@ -155,7 +173,7 @@ impl ServingService for ServerHandle {
             deadline: opts.deadline.map(|d| now + d),
             cancelled: cancelled.clone(),
             client_tag: opts.client_tag.map(Arc::from),
-            reply: rtx,
+            reply: ReplySlot::new(rtx),
         };
         // channel send can only fail after shutdown; surface as queue-full
         // AND fix the books: the request was never enqueued, so it is a
@@ -199,6 +217,17 @@ impl ServerHandle {
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         ServingService::metrics_snapshot(self)
     }
+
+    /// Admission slots currently held (0 when the stack is idle) — the
+    /// leak detector chaos tests assert on after a fault storm.
+    pub fn inflight(&self) -> i64 {
+        self.admission.inflight()
+    }
+
+    /// Current health-breaker state (observability + tests).
+    pub fn breaker_state(&self) -> BreakerState {
+        self.breaker.state()
+    }
 }
 
 impl Server {
@@ -218,19 +247,19 @@ impl Server {
         // requests are shed. Formation is µs-cheap vs execution, so one
         // batch of slack never starves the workers.
         let (batch_tx, batch_rx) = std::sync::mpsc::sync_channel::<Batch>(1);
-        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::depth_only(cfg.max_inflight));
+        let breaker = Arc::new(Breaker::new(cfg.breaker));
 
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let mut threads = Vec::new();
+        let threads = Arc::new(Mutex::new(Vec::new()));
         // batcher thread
         {
             let bcfg = cfg.batcher;
             let stop = stop.clone();
             let metrics = metrics.clone();
             let admission = admission.clone();
-            threads.push(
+            lock_threads(&threads).push(
                 std::thread::Builder::new()
                     .name("s4-batcher".into())
                     .spawn(move || {
@@ -245,46 +274,27 @@ impl Server {
                     .expect("spawn batcher"),
             );
         }
-        // workers
-        let manifest = Arc::new(manifest);
-        let router = Arc::new(router);
+        // supervised workers
+        let ctx = Arc::new(WorkerCtx {
+            batch_rx: Mutex::new(batch_rx),
+            backend,
+            manifest: Arc::new(manifest),
+            router: Arc::new(router),
+            metrics: metrics.clone(),
+            admission: admission.clone(),
+            breaker: breaker.clone(),
+            stop: stop.clone(),
+            threads: threads.clone(),
+        });
         for w in 0..cfg.workers.max(1) {
-            let batch_rx = batch_rx.clone();
-            let backend = backend.clone();
-            let manifest = manifest.clone();
-            let router = router.clone();
-            let metrics = metrics.clone();
-            let admission = admission.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("s4-worker{w}"))
-                    .spawn(move || {
-                        loop {
-                            let batch = {
-                                let rx = batch_rx.lock().unwrap();
-                                rx.recv()
-                            };
-                            let Ok(batch) = batch else { break };
-                            // every request in the batch holds an
-                            // admission slot; serve_batch answers each
-                            // exactly once (served, failed, or shed), so
-                            // complete per class afterwards
-                            let classes: Vec<Priority> =
-                                batch.requests.iter().map(|r| r.priority).collect();
-                            serve_batch(batch, &manifest, &router, &*backend, &metrics);
-                            for c in classes {
-                                admission.complete(c);
-                            }
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+            spawn_worker(&ctx, w);
         }
 
         Server {
             handle: ServerHandle {
                 tx: req_tx,
                 admission,
+                breaker,
                 metrics,
                 next_id: Arc::new(std::sync::atomic::AtomicU64::new(1)),
             },
@@ -313,27 +323,161 @@ impl Server {
     /// Shut down: run the registered front-end drain hooks (while still
     /// serving), then signal the batcher (which drains queued work) and
     /// join all threads. Safe even while cloned handles are still alive.
+    ///
+    /// Each drain hook runs inside a `catch_unwind` fence: a panicking
+    /// front end must not abort shutdown with serving threads unjoined
+    /// (they'd hold the process open forever). Remaining hooks still run,
+    /// threads still join, and the first panic is re-raised afterwards so
+    /// the bug stays loud.
     pub fn shutdown(self) {
         let Server { handle, threads, stop, drain_hooks } = self;
-        for hook in drain_hooks.into_inner().unwrap() {
-            hook();
+        let hooks = drain_hooks.into_inner().unwrap_or_else(|p| p.into_inner());
+        let mut first_panic = None;
+        for hook in hooks {
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(hook)) {
+                first_panic.get_or_insert(payload);
+            }
         }
         stop.store(true, std::sync::atomic::Ordering::Release);
         drop(handle);
-        for t in threads {
+        // Pop-then-join (without holding the lock): a panicked worker's
+        // supervisor may be pushing its replacement's handle concurrently,
+        // and joining the dying thread while holding the registry lock
+        // would deadlock against that push. Looping until the registry
+        // stays empty also catches replacements spawned mid-join.
+        loop {
+            let Some(t) = lock_threads(&threads).pop() else { break };
             let _ = t.join();
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
         }
     }
 }
 
+/// Shared registry lock, poison-recovering: a panicking supervisor must
+/// not make shutdown unjoinable.
+fn lock_threads(
+    threads: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) -> std::sync::MutexGuard<'_, Vec<JoinHandle<()>>> {
+    threads.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Everything one worker generation needs — bundled so a supervisor can
+/// hand the identical context to its replacement.
+struct WorkerCtx {
+    batch_rx: Mutex<Receiver<Batch>>,
+    backend: Arc<dyn InferenceBackend>,
+    manifest: Arc<Manifest>,
+    router: Arc<Router>,
+    metrics: Arc<Metrics>,
+    admission: Arc<Admission>,
+    breaker: Arc<Breaker>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+/// Spawn worker `w` under supervision: if its loop dies by panic while the
+/// server is still running, count the restart and spawn an identical
+/// replacement, so a panicking backend can never shrink serving capacity.
+fn spawn_worker(ctx: &Arc<WorkerCtx>, w: usize) {
+    let ctx2 = ctx.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("s4-worker{w}"))
+        .spawn(move || {
+            let died = catch_unwind(AssertUnwindSafe(|| worker_loop(&ctx2))).is_err();
+            if died && !ctx2.stop.load(std::sync::atomic::Ordering::Acquire) {
+                ctx2.metrics.record_worker_restart();
+                spawn_worker(&ctx2, w);
+            }
+        })
+        .expect("spawn worker");
+    lock_threads(&ctx.threads).push(handle);
+}
+
+/// One worker generation: pull batches and execute each inside a
+/// `catch_unwind` fence that upholds the serving invariants even when the
+/// backend panics mid-batch:
+/// * every request is answered exactly once (typed `Error` for the ones
+///   `serve_batch` hadn't answered before the panic — [`ReplySlot`] makes
+///   the late defensive answers no-ops for the already-answered ones);
+/// * every admission slot is released;
+/// * the panic is counted (`worker_panics`) and reported to the breaker.
+///
+/// The panic is then *re-raised*: this generation dies loudly and the
+/// supervisor in [`spawn_worker`] replaces it. Killing the thread (rather
+/// than looping here) keeps any state the unwind may have skipped-over
+/// confined to the dead generation.
+fn worker_loop(ctx: &WorkerCtx) {
+    loop {
+        let batch = {
+            // poison-recovering acquisition: a worker killed between
+            // `lock()` and `recv()` must not cascade-kill every other
+            // worker that touches this mutex afterwards (same pattern as
+            // the ActivationArena locks in backend/cpu.rs)
+            let rx = ctx.batch_rx.lock().unwrap_or_else(|p| p.into_inner());
+            rx.recv()
+        };
+        let Ok(batch) = batch else { break };
+        // capture per-request stubs before execution: the fence answers
+        // and releases from these after a panic consumed the batch
+        let stubs: Vec<(RequestId, Priority, ReplySlot)> = batch
+            .requests
+            .iter()
+            .map(|r| (r.id, r.priority, r.reply.clone()))
+            .collect();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            serve_batch(
+                batch,
+                &ctx.manifest,
+                &ctx.router,
+                &*ctx.backend,
+                &ctx.metrics,
+                &ctx.breaker,
+            )
+        }));
+        // slots release on both paths — serve_batch answered everything on
+        // Ok, the fence below answers the remainder on Err
+        for (_, class, _) in &stubs {
+            ctx.admission.complete(*class);
+        }
+        if let Err(payload) = result {
+            ctx.metrics.record_worker_panic();
+            if ctx.breaker.record_failure() {
+                ctx.metrics.record_breaker_open();
+            }
+            let msg = format!("worker panicked: {}", panic_message(&payload));
+            for (id, _, slot) in &stubs {
+                if slot.send(Response::error(*id, msg.clone())) {
+                    ctx.metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Best-effort text of a panic payload (`panic!` with a string literal or
+/// a formatted message covers everything the backends throw).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
 /// Execute one formed batch: shed dead requests, plan placements, pack,
-/// run, demux responses.
+/// run, demux responses. Each placement's outcome feeds the health
+/// `breaker` (routing errors do not — an unknown model says nothing about
+/// backend health).
 fn serve_batch(
     batch: Batch,
     manifest: &Manifest,
     router: &Router,
     backend: &dyn InferenceBackend,
     metrics: &Metrics,
+    breaker: &Breaker,
 ) {
     let Batch { model, requests, formed_at } = batch;
     // pre-execution shed: the cancel/deadline re-check closest to the
@@ -369,10 +513,15 @@ fn serve_batch(
         cursor += p.fill;
         metrics.record_batch(p.fill, p.batch_capacity);
         if let Err(e) = run_placement(&p, reqs, backend, formed_at, metrics) {
+            if breaker.record_failure() {
+                metrics.record_breaker_open();
+            }
             for r in reqs {
                 metrics.failed.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let _ = r.reply.send(Response::error(r.id, format!("backend: {e}")));
             }
+        } else {
+            breaker.record_success();
         }
     }
 }
@@ -567,6 +716,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
             workers: 1,
             max_inflight: 16,
+            ..Default::default()
         });
         let h = srv.handle();
         let t = h.submit("bert_tiny", vec![Value::tokens(vec![42; 16])]).unwrap();
@@ -582,6 +732,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
             workers: 1,
             max_inflight: 16,
+            ..Default::default()
         });
         let h = srv.handle();
         let mut pixels = vec![0.0f32; 48];
@@ -601,6 +752,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
             workers: 1,
             max_inflight: 64,
+            ..Default::default()
         });
         let h = srv.handle();
         let tickets: Vec<_> = (0..16)
@@ -633,6 +785,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) },
             workers: 1,
             max_inflight: 16,
+            ..Default::default()
         });
         let h = srv.handle();
         // an f32 payload for a token model rides the same batch as a good
@@ -666,6 +819,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(50) },
             workers: 1,
             max_inflight: 1,
+            ..Default::default()
         });
         let h = srv.handle();
         let _t1 = h.submit("bert_tiny", vec![Value::tokens(vec![1; 16])]).unwrap();
@@ -701,6 +855,7 @@ mod tests {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
             workers: 1,
             max_inflight: 16,
+            ..Default::default()
         });
         let h = srv.handle();
         let ran = Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -756,7 +911,7 @@ mod tests {
             deadline: Some(now), // expired immediately
             cancelled: Arc::new(std::sync::atomic::AtomicBool::new(false)),
             client_tag: None,
-            reply: tx,
+            reply: ReplySlot::new(tx),
         };
         let metrics = Metrics::new();
         let batch = Batch {
@@ -771,12 +926,154 @@ mod tests {
             &Router::new(RoutingPolicy::MaxSparsity),
             &backend,
             &metrics,
+            &Breaker::new(BreakerConfig::default()),
         );
         let resp = rx.try_recv().unwrap();
         assert_eq!(resp.status, ResponseStatus::Expired);
         assert_eq!(metrics.expired.load(std::sync::atomic::Ordering::Relaxed), 1);
         assert_eq!(metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 0);
         assert_eq!(metrics.batches.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    fn faulty_server(cfg: ServerConfig, plan: crate::fault::FaultPlan) -> Server {
+        let m = manifest();
+        let inner: Arc<dyn InferenceBackend> = Arc::new(EchoBackend::from_manifest(&m));
+        let backend = Arc::new(crate::fault::FaultingBackend::new(inner, plan));
+        Server::start(cfg, m, Router::new(RoutingPolicy::MaxSparsity), backend)
+    }
+
+    #[test]
+    fn worker_panic_answers_typed_releases_slots_and_respawns() {
+        let srv = faulty_server(
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                workers: 1,
+                max_inflight: 16,
+                ..Default::default()
+            },
+            crate::fault::FaultPlan::new().with_panic_at(0),
+        );
+        let h = srv.handle();
+        let t = h.submit("bert_tiny", vec![Value::tokens(vec![1; 16])]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!r.is_ok(), "panicked batch must answer typed, not hang");
+        assert!(
+            r.error_message().unwrap().contains("worker panicked"),
+            "{:?}",
+            r.status
+        );
+        // the supervisor respawned the only worker: the stack still serves
+        let t = h.submit("bert_tiny", vec![Value::tokens(vec![2; 16])]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.is_ok(), "respawned worker must serve: {:?}", r.status);
+        assert_eq!(r.logits()[0], 2.0);
+        let s = h.metrics_snapshot();
+        assert_eq!(s.worker_panics, 1, "{}", s.report());
+        assert_eq!(s.worker_restarts, 1, "{}", s.report());
+        assert_eq!(s.answered(), s.admitted, "{}", s.report());
+        assert_eq!(h.inflight(), 0, "panicked batch must release its slots");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn one_panicked_worker_does_not_cascade_kill_the_rest() {
+        // satellite regression: with the old `batch_rx.lock().unwrap()`,
+        // one worker death could propagate; at workers=4 the other three
+        // (plus the respawn) must keep serving everything afterwards
+        let srv = faulty_server(
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                workers: 4,
+                max_inflight: 64,
+                ..Default::default()
+            },
+            crate::fault::FaultPlan::new().with_panic_at(0),
+        );
+        let h = srv.handle();
+        let t = h.submit("bert_tiny", vec![Value::tokens(vec![9; 16])]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.error_message().unwrap_or("").contains("worker panicked"), "{:?}", r.status);
+        for i in 0..12 {
+            let t = h.submit("bert_tiny", vec![Value::tokens(vec![i; 16])]).unwrap();
+            let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert!(r.is_ok(), "request {i} after the panic: {:?}", r.status);
+        }
+        let s = h.metrics_snapshot();
+        assert_eq!(s.completed, 12, "{}", s.report());
+        assert_eq!(s.answered(), s.admitted, "{}", s.report());
+        assert_eq!(h.inflight(), 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fences_hook_panics_joins_threads_then_reraises() {
+        let srv = echo_server(ServerConfig::default());
+        let h = srv.handle();
+        let later_ran = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        srv.on_shutdown(|| panic!("first hook detonates"));
+        {
+            let later_ran = later_ran.clone();
+            srv.on_shutdown(move || later_ran.store(true, std::sync::atomic::Ordering::Release));
+        }
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| srv.shutdown()));
+        let payload = caught.expect_err("first hook panic must re-raise after joins");
+        assert_eq!(
+            payload.downcast_ref::<&str>().copied(),
+            Some("first hook detonates")
+        );
+        assert!(
+            later_ran.load(std::sync::atomic::Ordering::Acquire),
+            "hooks after the panicking one must still run"
+        );
+        // threads were joined: the serving stack is really gone
+        assert!(h.submit("bert_tiny", vec![Value::tokens(vec![1; 16])]).is_err());
+    }
+
+    #[test]
+    fn breaker_trips_on_error_burst_sheds_then_probes_closed() {
+        let srv = faulty_server(
+            ServerConfig {
+                batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+                workers: 1,
+                max_inflight: 16,
+                breaker: BreakerConfig {
+                    failure_threshold: 3,
+                    probe_after_sheds: 2,
+                    close_after_probes: 1,
+                },
+            },
+            crate::fault::FaultPlan::new().with_error_burst(0, 3),
+        );
+        let h = srv.handle();
+        // the burst: three consecutive backend errors, each answered typed
+        for i in 0..3 {
+            let t = h.submit("bert_tiny", vec![Value::tokens(vec![i; 16])]).unwrap();
+            let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert!(
+                r.error_message().unwrap_or("").contains("injected fault"),
+                "burst request {i}: {:?}",
+                r.status
+            );
+        }
+        assert_eq!(h.breaker_state(), BreakerState::Open);
+        // while open: typed retryable shed, no slot, no admitted count
+        for _ in 0..2 {
+            match h.submit("bert_tiny", vec![Value::tokens(vec![0; 16])]) {
+                Err(AdmissionDecision::RejectUnhealthy(Priority::Standard)) => {}
+                other => panic!("expected RejectUnhealthy, got {other:?}"),
+            }
+        }
+        // probe passes, succeeds, and closes the breaker
+        let t = h.submit("bert_tiny", vec![Value::tokens(vec![7; 16])]).unwrap();
+        let r = t.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.is_ok(), "probe must serve: {:?}", r.status);
+        assert_eq!(h.breaker_state(), BreakerState::Closed);
+        let s = h.metrics_snapshot();
+        assert_eq!(s.breaker_opens, 1, "{}", s.report());
+        assert_eq!(s.breaker_shed, 2, "{}", s.report());
+        assert_eq!(s.answered(), s.admitted, "sheds consume no admission: {}", s.report());
+        assert_eq!(h.inflight(), 0);
+        srv.shutdown();
     }
 
     #[test]

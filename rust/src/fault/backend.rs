@@ -1,0 +1,145 @@
+//! [`FaultingBackend`]: any [`InferenceBackend`] plus a [`FaultPlan`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::backend::{InferenceBackend, TensorSpec, Value};
+use crate::fault::plan::{FaultKind, FaultPlan};
+
+/// Wraps an inner backend and injects the planned fault at each scheduled
+/// `run_batch` call index. Spec introspection (`input_specs` /
+/// `output_specs`) always delegates cleanly — the plan models *execution*
+/// faults, and routing needs working specs to even reach execution.
+///
+/// The call counter covers every `run_batch` arrival across all worker
+/// threads (one atomic increment each), so under a multi-worker
+/// coordinator the *set* of injected faults is exactly the plan even
+/// though which worker draws which index depends on scheduling.
+pub struct FaultingBackend {
+    inner: Arc<dyn InferenceBackend>,
+    plan: FaultPlan,
+    calls: AtomicU64,
+    injected_panics: AtomicU64,
+    injected_errors: AtomicU64,
+    injected_slow: AtomicU64,
+}
+
+impl FaultingBackend {
+    pub fn new(inner: Arc<dyn InferenceBackend>, plan: FaultPlan) -> FaultingBackend {
+        FaultingBackend {
+            inner,
+            plan,
+            calls: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_errors: AtomicU64::new(0),
+            injected_slow: AtomicU64::new(0),
+        }
+    }
+
+    /// Total `run_batch` calls observed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Injections actually performed so far, as (panics, errors, slows) —
+    /// tests assert the storm they scheduled really happened.
+    pub fn injected(&self) -> (u64, u64, u64) {
+        (
+            self.injected_panics.load(Ordering::Relaxed),
+            self.injected_errors.load(Ordering::Relaxed),
+            self.injected_slow.load(Ordering::Relaxed),
+        )
+    }
+}
+
+impl InferenceBackend for FaultingBackend {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.input_specs(artifact)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.output_specs(artifact)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        let idx = self.calls.fetch_add(1, Ordering::Relaxed);
+        match self.plan.at(idx) {
+            Some(FaultKind::Panic) => {
+                self.injected_panics.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: panic at backend call {idx} ({artifact})");
+            }
+            Some(FaultKind::Error) => {
+                self.injected_errors.fetch_add(1, Ordering::Relaxed);
+                anyhow::bail!("injected fault: error at backend call {idx} ({artifact})");
+            }
+            Some(FaultKind::Slow(d)) => {
+                self.injected_slow.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(*d);
+                self.inner.run_batch(artifact, inputs)
+            }
+            None => self.inner.run_batch(artifact, inputs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::EchoBackend;
+    use crate::runtime::manifest::Manifest;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::path::Path;
+    use std::time::Duration;
+
+    fn echo() -> Arc<dyn InferenceBackend> {
+        let text = r#"{"artifacts": [
+          {"name": "m_b1", "file": "x", "family": "m", "model": "m",
+           "sparsity": 8, "batch": 1, "seq": 4,
+           "inputs": [{"name": "ids", "shape": [1, 4], "dtype": "s32"}],
+           "outputs": [{"shape": [1, 2], "dtype": "f32"}]}
+        ]}"#;
+        let m = Manifest::parse(Path::new("/tmp"), text).unwrap();
+        Arc::new(EchoBackend::from_manifest(&m))
+    }
+
+    fn run(b: &FaultingBackend) -> anyhow::Result<Vec<Value>> {
+        b.run_batch("m_b1", &[Value::I32(vec![1, 2, 3, 4])])
+    }
+
+    #[test]
+    fn faults_fire_at_their_scheduled_call_index_only() {
+        let plan = FaultPlan::new()
+            .with_error_at(1)
+            .with_panic_at(2)
+            .with_slow_at(3, Duration::from_millis(1));
+        let b = FaultingBackend::new(echo(), plan);
+        assert!(run(&b).is_ok(), "call 0 unscheduled → clean");
+        let e = run(&b).unwrap_err();
+        assert!(e.to_string().contains("injected fault: error at backend call 1"), "{e}");
+        let p = catch_unwind(AssertUnwindSafe(|| run(&b)));
+        assert!(p.is_err(), "call 2 panics");
+        let t = std::time::Instant::now();
+        assert!(run(&b).is_ok(), "slow call still succeeds");
+        assert!(t.elapsed() >= Duration::from_millis(1));
+        assert!(run(&b).is_ok(), "past the schedule → clean again");
+        assert_eq!(b.calls(), 5);
+        assert_eq!(b.injected(), (1, 1, 1));
+    }
+
+    #[test]
+    fn specs_delegate_even_under_an_all_fault_plan() {
+        let b = FaultingBackend::new(echo(), FaultPlan::new().with_panic_at(0));
+        assert!(b.input_specs("m_b1").is_ok());
+        assert!(b.output_specs("m_b1").is_ok());
+        assert_eq!(b.batch_capacity("m_b1").unwrap(), 1);
+        assert!(b.input_specs("nope").is_err(), "unknown artifact still errs");
+    }
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let b = FaultingBackend::new(echo(), FaultPlan::new());
+        let out = run(&b).unwrap();
+        assert_eq!(out[0].as_f32().unwrap()[0], 1.0, "echo passes through");
+        assert_eq!(b.injected(), (0, 0, 0));
+    }
+}

@@ -1,0 +1,32 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Chaos testing is only trustworthy when the chaos replays: every
+//! injection point here is scheduled by *call index* from a seeded
+//! [`FaultPlan`] (RNG: [`Xoshiro256`](crate::util::rng::Xoshiro256), no
+//! wall-clock anywhere), so a failing chaos run reproduces bit-for-bit
+//! from its seed.
+//!
+//! Three injection surfaces:
+//! * [`FaultingBackend`] — wraps any
+//!   [`InferenceBackend`](crate::backend::InferenceBackend) and injects
+//!   panics, errors, and slow executions at the planned `run_batch` call
+//!   indices. This is what exercises the coordinator's supervised worker
+//!   fence, the respawn path, and the health breaker.
+//! * [`net`] — client-side connection chaos against a live listener:
+//!   dropped connections, garbled (non-protocol) bytes, truncated frames.
+//!   This is what exercises the net layer's per-connection failure
+//!   containment.
+//! * [`FaultPlan`] itself — pure data, so tests can also hand-place
+//!   faults (`with_panic_at(3)`) when an exact scenario matters more than
+//!   seeded coverage.
+//!
+//! The module is plain library code (no test-only gating): benches
+//! (`benches/fault_recovery.rs`) and the chaos suite (`tests/chaos.rs`)
+//! both drive it, and operators can reuse it for staging burn-in.
+
+pub mod backend;
+pub mod net;
+pub mod plan;
+
+pub use backend::FaultingBackend;
+pub use plan::{FaultKind, FaultPlan};

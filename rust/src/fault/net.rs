@@ -1,0 +1,152 @@
+//! Client-side connection chaos against a live listener.
+//!
+//! These helpers play the misbehaving peers a production front end meets:
+//! connections that open and vanish, peers that speak a different (or no)
+//! protocol, and frames cut off mid-payload by a dying client. The
+//! [`NetServer`](crate::net::NetServer) must contain each to its own
+//! connection — `tests/chaos.rs` interleaves these with real traffic and
+//! asserts the real traffic never notices.
+//!
+//! All randomness is seeded ([`Xoshiro256`](crate::util::rng::Xoshiro256));
+//! none of the helpers block longer than their socket timeouts.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::net::wire::{encode_frame, Frame, MAGIC};
+use crate::util::rng::Xoshiro256;
+
+fn connect(addr: SocketAddr) -> io::Result<TcpStream> {
+    let s = TcpStream::connect_timeout(&addr, Duration::from_secs(5))?;
+    s.set_write_timeout(Some(Duration::from_secs(5)))?;
+    s.set_read_timeout(Some(Duration::from_millis(200)))?;
+    Ok(s)
+}
+
+/// Open a connection and drop it without sending a byte — the classic
+/// port-scanner / crashed-before-first-request peer.
+pub fn drop_connection(addr: SocketAddr) -> io::Result<()> {
+    let _ = connect(addr)?;
+    Ok(())
+}
+
+/// Send `len` seeded random bytes that are guaranteed NOT to start with
+/// the protocol [`MAGIC`], then linger briefly for the server's reaction
+/// (it should reject the frame and close). Returns the bytes the server
+/// sent back before closing (usually a rejection frame or nothing).
+pub fn send_garbage(addr: SocketAddr, seed: u64, len: usize) -> io::Result<Vec<u8>> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut bytes: Vec<u8> = (0..len.max(4)).map(|_| rng.next_u64() as u8).collect();
+    // make the magic check fail deterministically regardless of the draw
+    bytes[0] = !MAGIC[0];
+    let mut s = connect(addr)?;
+    s.write_all(&bytes)?;
+    let _ = s.flush();
+    let mut reply = Vec::new();
+    let mut buf = [0u8; 256];
+    // drain until close or read timeout; either way the server survived
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => reply.extend_from_slice(&buf[..n]),
+            Err(_) => break,
+        }
+    }
+    Ok(reply)
+}
+
+/// Encode a real frame, send only its first `keep_fraction` of bytes
+/// (clamped to at least the header so the server commits to reading a
+/// payload), then drop the connection mid-frame.
+pub fn send_truncated_frame(
+    addr: SocketAddr,
+    frame: &Frame,
+    keep_fraction: f64,
+) -> io::Result<()> {
+    let full = encode_frame(frame)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    let keep = ((full.len() as f64 * keep_fraction.clamp(0.0, 1.0)) as usize)
+        .clamp(MAGIC.len() + 1, full.len().saturating_sub(1).max(MAGIC.len() + 1));
+    let mut s = connect(addr)?;
+    s.write_all(&full[..keep])?;
+    let _ = s.flush();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    // Protocol-level behavior against a real NetServer lives in
+    // tests/chaos.rs; here we only pin the helpers' own contracts against
+    // a raw listener.
+
+    fn listener() -> (TcpListener, SocketAddr) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        (l, addr)
+    }
+
+    #[test]
+    fn garbage_never_starts_with_magic_and_is_seed_stable() {
+        let (l, addr) = listener();
+        let srv = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            for _ in 0..2 {
+                let (mut s, _) = l.accept().unwrap();
+                let mut buf = Vec::new();
+                s.read_to_end(&mut buf).unwrap();
+                got.push(buf);
+            }
+            got
+        });
+        send_garbage(addr, 99, 64).unwrap();
+        send_garbage(addr, 99, 64).unwrap();
+        let got = srv.join().unwrap();
+        assert_eq!(got[0].len(), 64);
+        assert_ne!(&got[0][..4], &MAGIC, "must not look like a real frame");
+        assert_eq!(got[0], got[1], "same seed → same garbage");
+    }
+
+    #[test]
+    fn truncated_frame_sends_a_strict_prefix() {
+        use crate::backend::Value;
+        use crate::net::wire::RequestFrame;
+        let f = Frame::Request(RequestFrame {
+            id: 7,
+            model: "m".into(),
+            priority: crate::coordinator::Priority::Standard,
+            deadline: None,
+            client_tag: None,
+            inputs: vec![Value::I32(vec![1, 2, 3, 4])],
+        });
+        let full = encode_frame(&f).unwrap();
+        let (l, addr) = listener();
+        let srv = std::thread::spawn(move || {
+            let (mut s, _) = l.accept().unwrap();
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).unwrap();
+            buf
+        });
+        send_truncated_frame(addr, &f, 0.5).unwrap();
+        let got = srv.join().unwrap();
+        assert!(!got.is_empty() && got.len() < full.len(), "strict prefix");
+        assert_eq!(&got[..4], &MAGIC, "header intact so the server commits");
+        assert_eq!(got[..], full[..got.len()]);
+    }
+
+    #[test]
+    fn drop_connection_completes_against_a_listener() {
+        let (l, addr) = listener();
+        let srv = std::thread::spawn(move || {
+            let (mut s, _) = l.accept().unwrap();
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).unwrap();
+            buf.len()
+        });
+        drop_connection(addr).unwrap();
+        assert_eq!(srv.join().unwrap(), 0, "no bytes were sent");
+    }
+}

@@ -1,0 +1,164 @@
+//! The fault schedule: which backend call misbehaves, and how.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+/// One injected misbehavior.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` inside `run_batch` — exercises the worker fence and the
+    /// supervisor respawn path.
+    Panic,
+    /// `Err` from `run_batch` — the clean failure path; bursts of these
+    /// trip the health breaker.
+    Error,
+    /// Delay execution by the given duration, then run normally —
+    /// exercises deadline shedding and queueing collapse without failing
+    /// anything.
+    Slow(Duration),
+}
+
+impl FaultKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Error => "error",
+            FaultKind::Slow(_) => "slow",
+        }
+    }
+}
+
+/// A deterministic schedule mapping backend call index (0-based count of
+/// `run_batch` invocations) to the fault injected there. Pure data: build
+/// it by hand for exact scenarios, or from a seed for coverage. Calls not
+/// in the schedule execute normally.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    schedule: BTreeMap<u64, FaultKind>,
+}
+
+impl FaultPlan {
+    /// Empty plan: injects nothing.
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Seeded plan over the first `calls` backend calls: each call
+    /// independently faults with probability `fault_rate`, the kind drawn
+    /// uniformly from {panic, error, slow(`slow`)}. Same seed → same
+    /// schedule, always.
+    pub fn seeded(seed: u64, calls: u64, fault_rate: f64, slow: Duration) -> FaultPlan {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut plan = FaultPlan::new();
+        for idx in 0..calls {
+            if rng.next_f64() < fault_rate {
+                let kind = match rng.next_below(3) {
+                    0 => FaultKind::Panic,
+                    1 => FaultKind::Error,
+                    _ => FaultKind::Slow(slow),
+                };
+                plan.schedule.insert(idx, kind);
+            }
+        }
+        plan
+    }
+
+    pub fn with_panic_at(mut self, idx: u64) -> FaultPlan {
+        self.schedule.insert(idx, FaultKind::Panic);
+        self
+    }
+
+    pub fn with_error_at(mut self, idx: u64) -> FaultPlan {
+        self.schedule.insert(idx, FaultKind::Error);
+        self
+    }
+
+    /// `len` consecutive errors starting at `start` — the shape that
+    /// trips a consecutive-failure breaker.
+    pub fn with_error_burst(mut self, start: u64, len: u64) -> FaultPlan {
+        for idx in start..start + len {
+            self.schedule.insert(idx, FaultKind::Error);
+        }
+        self
+    }
+
+    pub fn with_slow_at(mut self, idx: u64, delay: Duration) -> FaultPlan {
+        self.schedule.insert(idx, FaultKind::Slow(delay));
+        self
+    }
+
+    /// The fault scheduled at call `idx`, if any.
+    pub fn at(&self, idx: u64) -> Option<&FaultKind> {
+        self.schedule.get(&idx)
+    }
+
+    /// Number of scheduled faults.
+    pub fn len(&self) -> usize {
+        self.schedule.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.schedule.is_empty()
+    }
+
+    /// Scheduled (index, kind) pairs in call order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &FaultKind)> {
+        self.schedule.iter().map(|(i, k)| (*i, k))
+    }
+
+    /// Count of scheduled faults matching `kind`'s discriminant name.
+    pub fn count_of(&self, name: &str) -> usize {
+        self.schedule.values().filter(|k| k.as_str() == name).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_built_schedule_places_exactly_what_was_asked() {
+        let p = FaultPlan::new()
+            .with_panic_at(3)
+            .with_error_burst(10, 4)
+            .with_slow_at(20, Duration::from_millis(5));
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.at(3), Some(&FaultKind::Panic));
+        for i in 10..14 {
+            assert_eq!(p.at(i), Some(&FaultKind::Error), "burst covers {i}");
+        }
+        assert_eq!(p.at(14), None);
+        assert_eq!(p.at(20), Some(&FaultKind::Slow(Duration::from_millis(5))));
+        assert_eq!(p.at(0), None);
+        assert_eq!(p.count_of("error"), 4);
+        assert_eq!(p.count_of("panic"), 1);
+        assert_eq!(p.count_of("slow"), 1);
+    }
+
+    #[test]
+    fn later_insert_overrides_earlier_at_same_index() {
+        let p = FaultPlan::new().with_panic_at(5).with_error_at(5);
+        assert_eq!(p.at(5), Some(&FaultKind::Error));
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn seeded_plan_is_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::seeded(42, 1000, 0.1, Duration::from_millis(1));
+        let b = FaultPlan::seeded(42, 1000, 0.1, Duration::from_millis(1));
+        let c = FaultPlan::seeded(43, 1000, 0.1, Duration::from_millis(1));
+        assert_eq!(a, b, "same seed → identical schedule");
+        assert_ne!(a, c, "different seed → different schedule");
+        // rate 0.1 over 1000 calls lands in a loose but non-degenerate band
+        assert!(a.len() > 40 && a.len() < 250, "got {} faults", a.len());
+        assert!(a.iter().all(|(i, _)| i < 1000));
+    }
+
+    #[test]
+    fn seeded_rate_edges() {
+        assert!(FaultPlan::seeded(7, 100, 0.0, Duration::ZERO).is_empty());
+        assert_eq!(FaultPlan::seeded(7, 100, 1.1, Duration::ZERO).len(), 100);
+    }
+}

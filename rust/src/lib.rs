@@ -49,9 +49,20 @@
 //!   [`coordinator::Ticket`] wait/poll/cancel handles, typed
 //!   [`coordinator::ResponseStatus`] outcomes), request router,
 //!   priority-aware dynamic batcher with deadline/cancel shedding,
-//!   per-class admission control, worker pool, metrics
+//!   per-class admission control, supervised worker pool (per-batch
+//!   panic fence + automatic respawn, so a panicking backend never
+//!   strands a ticket or shrinks capacity), a consecutive-failure
+//!   backend-health circuit breaker with typed retryable shedding
+//!   ([`coordinator::Breaker`]), metrics
 //!   ([`coordinator::MetricsSnapshot`]) — generic over any
 //!   [`backend::InferenceBackend`].
+//! * [`fault`] — deterministic seeded fault injection for all of the
+//!   above: call-indexed [`fault::FaultPlan`] schedules,
+//!   [`fault::FaultingBackend`] wrapping any backend with
+//!   panic/error/slow injections, and client-side connection chaos
+//!   helpers ([`fault::net`]: dropped, garbled, truncated peers). Drives
+//!   `tests/chaos.rs` and `benches/fault_recovery.rs`
+//!   (`BENCH_fault.json`); reusable for staging burn-in.
 //! * [`net`] — the network serving front end over the coordinator: a
 //!   length-prefixed binary frame codec whose request frames carry the
 //!   full QoS surface and whose f32 payloads round-trip bitwise
@@ -124,6 +135,7 @@
 pub mod arch;
 pub mod backend;
 pub mod coordinator;
+pub mod fault;
 pub mod graph;
 pub mod net;
 pub mod runtime;

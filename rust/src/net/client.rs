@@ -27,6 +27,55 @@ use super::wire::{
 };
 use crate::backend::Value;
 use crate::coordinator::SubmitOptions;
+use crate::util::rng::Xoshiro256;
+
+/// Connect-retry policy for [`NetClient::connect_retrying`]: capped
+/// exponential backoff with seeded jitter, so a restarting server (a
+/// supervisor respawning the serving process, a deploy rolling the
+/// front end) is ridden out instead of surfaced to the caller — and so
+/// a thundering herd of reconnecting clients decorrelates.
+///
+/// All timing is derived from the policy (no wall-clock randomness):
+/// the jitter stream comes from `seed`, so a given policy produces the
+/// same backoff trace on every run.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total connect attempts, including the first (clamped to ≥ 1).
+    pub attempts: u32,
+    /// Backoff before the second attempt; doubles every retry after.
+    pub base: Duration,
+    /// Ceiling on any single backoff sleep (pre-jitter).
+    pub cap: Duration,
+    /// Per-attempt TCP connect timeout (see
+    /// [`NetClient::connect_timeout`]).
+    pub connect_timeout: Duration,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(1),
+            connect_timeout: Duration::from_secs(2),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep before retry number `attempt` (0-based count of failures so
+    /// far): `min(cap, base << attempt)` scaled by a jitter factor drawn
+    /// from `rng` in `[0.5, 1.0)`. Exposed so tests can pin the exact
+    /// deterministic trace [`connect_retrying`](NetClient::connect_retrying)
+    /// will sleep.
+    pub fn backoff(&self, attempt: u32, rng: &mut Xoshiro256) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(20)).min(self.cap);
+        exp.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
+}
 
 /// Blocking connection to a [`NetServer`](crate::net::NetServer).
 pub struct NetClient {
@@ -37,16 +86,68 @@ pub struct NetClient {
 }
 
 impl NetClient {
-    /// Connect; `recv_timeout` bounds every [`recv`](NetClient::recv)
-    /// (and therefore [`call_with`](NetClient::call_with)).
-    pub fn connect(addr: impl ToSocketAddrs, recv_timeout: Duration) -> anyhow::Result<NetClient> {
-        let stream = TcpStream::connect(addr)?;
+    /// Shared post-connect setup: every `connect*` front door funnels its
+    /// freshly opened stream through here.
+    fn from_stream(stream: TcpStream, recv_timeout: Duration) -> anyhow::Result<NetClient> {
         let _ = stream.set_nodelay(true);
         // short socket-level tick so recv can poll its own deadline
         stream.set_read_timeout(Some(Duration::from_millis(20)))?;
         stream.set_write_timeout(Some(Duration::from_secs(5)))?;
         let writer = stream.try_clone()?;
         Ok(NetClient { reader: BufReader::new(stream), writer, next_id: 1, recv_timeout })
+    }
+
+    /// Connect; `recv_timeout` bounds every [`recv`](NetClient::recv)
+    /// (and therefore [`call_with`](NetClient::call_with)).
+    pub fn connect(addr: impl ToSocketAddrs, recv_timeout: Duration) -> anyhow::Result<NetClient> {
+        NetClient::from_stream(TcpStream::connect(addr)?, recv_timeout)
+    }
+
+    /// [`connect`](NetClient::connect) with a bound on the TCP connect
+    /// itself — a blackholed address (down host, dropped SYNs) returns an
+    /// error after `timeout` per resolved address instead of hanging for
+    /// the OS default (minutes). Tries each resolved address in order and
+    /// returns the last error if none accepts.
+    pub fn connect_timeout(
+        addr: impl ToSocketAddrs,
+        timeout: Duration,
+        recv_timeout: Duration,
+    ) -> anyhow::Result<NetClient> {
+        let mut last: Option<std::io::Error> = None;
+        for sa in addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&sa, timeout) {
+                Ok(stream) => return NetClient::from_stream(stream, recv_timeout),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => e.into(),
+            None => anyhow::anyhow!("address resolved to no socket addresses"),
+        })
+    }
+
+    /// [`connect_timeout`](NetClient::connect_timeout) under a
+    /// [`RetryPolicy`]: up to `policy.attempts` tries, sleeping
+    /// [`policy.backoff`](RetryPolicy::backoff) between them. Returns the
+    /// last connect error if every attempt fails.
+    pub fn connect_retrying(
+        addr: impl ToSocketAddrs,
+        policy: &RetryPolicy,
+        recv_timeout: Duration,
+    ) -> anyhow::Result<NetClient> {
+        let mut rng = Xoshiro256::seed_from_u64(policy.seed);
+        let attempts = policy.attempts.max(1);
+        let mut last = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(policy.backoff(attempt - 1, &mut rng));
+            }
+            match NetClient::connect_timeout(&addr, policy.connect_timeout, recv_timeout) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow::anyhow!("zero connect attempts")))
     }
 
     /// Fire one request without waiting; returns the frame id to match
@@ -113,5 +214,105 @@ impl NetClient {
     /// [`call_with`](NetClient::call_with) under default options.
     pub fn call(&mut self, model: &str, inputs: Vec<Value>) -> anyhow::Result<ResponseFrame> {
         self.call_with(model, inputs, &SubmitOptions::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    // Full request/response round trips live in tests/net_e2e.rs and
+    // tests/chaos.rs; here we pin the connect/retry surface only.
+
+    #[test]
+    fn connect_timeout_succeeds_against_a_live_listener() {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let c = NetClient::connect_timeout(addr, Duration::from_secs(2), Duration::from_secs(1));
+        assert!(c.is_ok(), "{:?}", c.err());
+    }
+
+    #[test]
+    fn connect_timeout_fails_bounded_when_nothing_listens() {
+        // grab a port, then free it so the connect is refused
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let t = Instant::now();
+        let c = NetClient::connect_timeout(addr, Duration::from_millis(500), Duration::from_secs(1));
+        assert!(c.is_err(), "connect to a freed port must fail");
+        // loopback refusal is immediate; the point is we returned promptly
+        // instead of hanging for the OS default connect timeout
+        assert!(t.elapsed() < Duration::from_secs(5), "took {:?}", t.elapsed());
+    }
+
+    #[test]
+    fn backoff_trace_is_deterministic_capped_and_jittered() {
+        let p = RetryPolicy {
+            attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(80),
+            ..RetryPolicy::default()
+        };
+        let trace = |seed: u64| -> Vec<Duration> {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            (0..7).map(|k| p.backoff(k, &mut rng)).collect()
+        };
+        assert_eq!(trace(p.seed), trace(p.seed), "same seed → same trace");
+        let t = trace(p.seed);
+        for (k, d) in t.iter().enumerate() {
+            let exp = p.base.saturating_mul(1 << k).min(p.cap);
+            assert!(*d >= exp.mul_f64(0.5), "retry {k}: {d:?} below half of {exp:?}");
+            assert!(*d <= exp, "retry {k}: {d:?} over nominal {exp:?}");
+            assert!(*d <= p.cap, "retry {k}: {d:?} over cap");
+        }
+        // exponent saturates at the cap: late retries sleep ≤ cap, not 2^k
+        assert!(t[6] <= p.cap);
+    }
+
+    #[test]
+    fn connect_retrying_rides_out_a_restarting_server() {
+        // bind, learn the port, free it — then resurrect the listener
+        // while the client is mid-backoff
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let rebinder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            let l = TcpListener::bind(addr).expect("rebind the freed port");
+            // hold the listener long enough for the client's retries
+            std::thread::sleep(Duration::from_millis(500));
+            drop(l);
+        });
+        let policy = RetryPolicy {
+            attempts: 10,
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(50),
+            ..RetryPolicy::default()
+        };
+        let c = NetClient::connect_retrying(addr, &policy, Duration::from_secs(1));
+        assert!(c.is_ok(), "server came back within the retry budget: {:?}", c.err());
+        rebinder.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retrying_gives_up_with_the_last_error() {
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let policy = RetryPolicy {
+            attempts: 3,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(4),
+            ..RetryPolicy::default()
+        };
+        let t = Instant::now();
+        let c = NetClient::connect_retrying(addr, &policy, Duration::from_secs(1));
+        assert!(c.is_err(), "no listener ever appears → all attempts fail");
+        assert!(t.elapsed() < Duration::from_secs(5), "gave up promptly");
     }
 }

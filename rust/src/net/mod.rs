@@ -11,7 +11,8 @@
 //!   byte-identical to in-process serving.
 //! * [`client`] — [`NetClient`], a blocking client supporting both
 //!   call-style round trips and pipelined send/recv with correlation
-//!   ids.
+//!   ids, bounded connect timeouts, and seeded capped-exponential
+//!   connect retry ([`RetryPolicy`]) for riding out server restarts.
 //! * [`server`] — [`NetServer`], a `TcpListener` front end over **any**
 //!   [`ServingService`](crate::coordinator::ServingService): one
 //!   acceptor thread, two bounded threads per connection (frame reader +
@@ -33,7 +34,7 @@ pub mod loadgen;
 pub mod server;
 pub mod wire;
 
-pub use client::NetClient;
+pub use client::{NetClient, RetryPolicy};
 pub use loadgen::{run_open_loop, run_open_loop_local, ClassLoad, LoadReport, LoadSpec};
 pub use server::{NetServer, NetServerConfig};
 pub use wire::{

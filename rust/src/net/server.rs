@@ -250,6 +250,9 @@ fn reject_reason(d: &AdmissionDecision) -> String {
         AdmissionDecision::Admit => "admitted".into(), // unreachable on the Err path
         AdmissionDecision::RejectQueueFull(p) => format!("queue full ({})", p.as_str()),
         AdmissionDecision::RejectRateLimited(p) => format!("rate limited ({})", p.as_str()),
+        AdmissionDecision::RejectUnhealthy(p) => {
+            format!("backend unhealthy (retryable, {})", p.as_str())
+        }
     }
 }
 

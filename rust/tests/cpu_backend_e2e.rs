@@ -32,6 +32,7 @@ fn server(m: Manifest) -> Server {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
             workers: 2,
             max_inflight: 64,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),

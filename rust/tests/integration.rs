@@ -163,6 +163,7 @@ fn serving_stack_under_simulated_load() {
             batcher: BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
             workers: 2,
             max_inflight: 128,
+            ..Default::default()
         },
         manifest,
         Router::new(RoutingPolicy::MaxSparsity),
@@ -238,6 +239,7 @@ fn tokens_and_images_serve_through_one_inference_backend() {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
             workers: 2,
             max_inflight: 64,
+            ..Default::default()
         },
         manifest,
         Router::new(RoutingPolicy::MaxSparsity),

@@ -43,6 +43,7 @@ fn server(m: Manifest) -> Server {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
             workers: 2,
             max_inflight: 64,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),
@@ -259,6 +260,7 @@ fn handler_panic_answers_an_error_and_does_not_leak_the_admission_slot() {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
             workers: 1,
             max_inflight: 1, // one leaked slot == a wedged server
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),

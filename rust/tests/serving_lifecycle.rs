@@ -39,6 +39,7 @@ fn echo_server(max_wait_ms: u64) -> Server {
             },
             workers: 2,
             max_inflight: 64,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),
@@ -178,6 +179,7 @@ fn bulk_admission_budget_protects_the_queue() {
             },
             workers: 1,
             max_inflight: 16,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),
@@ -241,6 +243,7 @@ fn serving_service_matches_direct_backend_execution() {
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
             workers: 2,
             max_inflight: 64,
+            ..Default::default()
         },
         manifest(),
         Router::new(RoutingPolicy::MaxSparsity),
@@ -274,6 +277,7 @@ fn shed_requests_release_admission_capacity() {
             batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
             workers: 1,
             max_inflight: 4,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),
