@@ -1,0 +1,343 @@
+//! Bench: response cache + single-flight coalescing under Zipf-skewed
+//! open-loop traffic, with a machine-readable hit-rate/throughput
+//! trajectory.
+//!
+//! Emits `BENCH_cache.json` (schema `s4-bench-v1`, see EXPERIMENTS.md
+//! §Perf): one fixed-service-time backend, offered load pinned at ~2×
+//! backend capacity, payload keys drawn from a seeded [`Zipf`] over a
+//! small universe — the heavy-tailed shape of hot-input traffic from a
+//! large user population. The sweep crosses skew (`s = 0.6` mild,
+//! `s = 1.1` classic web skew) with cache off/on.
+//!
+//! Trajectory points each PR defends (at `s = 1.1`, cache on):
+//! * hit-path p50 < miss-path p50 — a hit must actually be faster than
+//!   going through the batcher and backend;
+//! * achieved throughput at the same offered load rises vs cache-off
+//!   (ratio > 1.05) — hits return compute to the misses;
+//! * accounting: `admitted + cache_hits + coalesced == n` and
+//!   `answered() == admitted` — nothing double-counted, nothing lost;
+//! * exactness: a repeated payload's cached logits are bitwise-identical
+//!   to the miss that populated them.
+//!
+//! ```bash
+//! cargo bench --bench cache_hit_rate            # full
+//! cargo bench --bench cache_hit_rate -- --smoke # CI trajectory point
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use s4::backend::{EchoBackend, InferenceBackend, TensorSpec, Value};
+use s4::coordinator::{
+    BatcherConfig, CacheConfig, Router, RoutingPolicy, Server, ServerConfig, ServerHandle, Ticket,
+};
+use s4::runtime::Manifest;
+use s4::util::bench::JsonReport;
+use s4::util::cli::Args;
+use s4::util::json::Json;
+use s4::util::rng::Xoshiro256;
+use s4::util::stats::{Summary, Zipf};
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+/// Echo with a fixed service time, so backend capacity is exact
+/// (`workers / service`) and the hit-vs-miss latency gap is real compute
+/// avoided, not scheduler noise.
+struct ThrottledEcho {
+    inner: EchoBackend,
+    service: Duration,
+}
+
+impl InferenceBackend for ThrottledEcho {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.input_specs(artifact)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.output_specs(artifact)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        std::thread::sleep(self.service);
+        self.inner.run_batch(artifact, inputs)
+    }
+}
+
+/// Deterministic payload for hot-key rank `k` (32 tokens).
+fn payload(k: usize) -> Vec<Value> {
+    let tokens: Vec<i32> = (0..32).map(|t| ((k * 131 + t * 7) % 997) as i32).collect();
+    vec![Value::tokens(tokens)]
+}
+
+struct RunOutcome {
+    achieved_rps: f64,
+    hit_p50_us: f64,
+    miss_p50_us: f64,
+    hits: u64,
+    coalesced: u64,
+    admitted: u64,
+    hit_rate: f64,
+}
+
+/// One open-loop run: `n` arrivals at `rate` rps, keys Zipf(s)-sampled
+/// over `universe` hot payloads. Latency is measured from *scheduled*
+/// arrival time; pending tickets are harvested concurrently with the
+/// send loop so an already-answered cache hit is observed promptly, not
+/// after the whole schedule has been sent.
+fn run_once(
+    n: usize,
+    rate: f64,
+    service: Duration,
+    universe: usize,
+    s: f64,
+    cache: Option<CacheConfig>,
+) -> anyhow::Result<RunOutcome> {
+    let m = manifest();
+    let backend: Arc<dyn InferenceBackend> =
+        Arc::new(ThrottledEcho { inner: EchoBackend::from_manifest(&m), service });
+    let cache_on = cache.is_some();
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(300) },
+            workers: 2,
+            max_inflight: 4 * n,
+            cache,
+            ..Default::default()
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h: ServerHandle = srv.handle();
+
+    let zipf = Zipf::new(universe, s);
+    let mut rng = Xoshiro256::seed_from_u64(0xCACE + (s * 1000.0) as u64);
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    // (scheduled arrival, ticket) still awaiting a response
+    let mut pending: Vec<(Instant, Ticket)> = Vec::with_capacity(n);
+    let mut hit_us: Vec<f64> = Vec::new();
+    let mut miss_us: Vec<f64> = Vec::new();
+
+    // classify and record one completed response
+    let mut record = |due: Instant, served_by: &str, now: Instant| {
+        let lat = now.saturating_duration_since(due).as_secs_f64() * 1e6;
+        if served_by.starts_with("cache:") {
+            hit_us.push(lat);
+        } else {
+            miss_us.push(lat);
+        }
+    };
+
+    let start = Instant::now();
+    for i in 0..n {
+        let due = start + interval.mul_f64(i as f64);
+        // harvest completions while waiting for this arrival's slot
+        loop {
+            let now = Instant::now();
+            if now >= due {
+                break;
+            }
+            let mut progressed = false;
+            pending.retain(|(d, t)| match t.try_take() {
+                Ok(Some(r)) => {
+                    record(*d, &r.served_by, Instant::now());
+                    progressed = true;
+                    false
+                }
+                _ => true,
+            });
+            if !progressed {
+                let nap = due.saturating_duration_since(Instant::now()).min(Duration::from_micros(50));
+                if !nap.is_zero() {
+                    std::thread::sleep(nap);
+                }
+            }
+        }
+        let k = zipf.sample(&mut rng);
+        let t = h
+            .submit("bert_tiny", payload(k))
+            .map_err(|d| anyhow::anyhow!("open-loop arrival rejected: {d:?}"))?;
+        pending.push((due, t));
+    }
+    // drain the tail
+    for (due, t) in &pending {
+        let r = t.wait_timeout(Duration::from_secs(120))?;
+        anyhow::ensure!(r.is_ok(), "request failed: {:?}", r.status);
+        record(*due, &r.served_by, Instant::now());
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+
+    let snap = h.metrics_snapshot();
+    let inflight = h.inflight();
+    srv.shutdown();
+
+    anyhow::ensure!(
+        snap.answered() == snap.admitted,
+        "core invariant violated: {}",
+        snap.report()
+    );
+    anyhow::ensure!(
+        snap.admitted + snap.cache_hits + snap.coalesced == n as u64,
+        "every arrival is admitted, a hit, or coalesced: {}",
+        snap.report()
+    );
+    anyhow::ensure!(inflight == 0, "leaked admission slots: {inflight}");
+    anyhow::ensure!(
+        cache_on || (snap.cache_hits == 0 && snap.coalesced == 0),
+        "cache-off run recorded cache traffic: {}",
+        snap.report()
+    );
+    anyhow::ensure!(
+        hit_us.len() as u64 == snap.cache_hits,
+        "served_by 'cache:' marks exactly the hits: {} observed vs {} counted",
+        hit_us.len(),
+        snap.cache_hits
+    );
+
+    let p50 = |xs: &Vec<f64>| if xs.is_empty() { 0.0 } else { Summary::of(xs).p50 };
+    Ok(RunOutcome {
+        achieved_rps: n as f64 / elapsed,
+        hit_p50_us: p50(&hit_us),
+        miss_p50_us: p50(&miss_us),
+        hits: snap.cache_hits,
+        coalesced: snap.coalesced,
+        admitted: snap.admitted,
+        hit_rate: (snap.cache_hits + snap.coalesced) as f64 / n as f64,
+    })
+}
+
+/// Sequential exactness probe: the same payload twice through a
+/// cache-enabled stack must hit, be marked, and return bitwise-identical
+/// logits.
+fn exactness_probe() -> anyhow::Result<()> {
+    let m = manifest();
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_micros(100) },
+            workers: 1,
+            max_inflight: 8,
+            cache: Some(CacheConfig::default()),
+            ..Default::default()
+        },
+        m.clone(),
+        Router::new(RoutingPolicy::MaxSparsity),
+        Arc::new(EchoBackend::from_manifest(&m)),
+    );
+    let h = srv.handle();
+    let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    let first = h.submit("bert_tiny", payload(3)).unwrap().wait_timeout(Duration::from_secs(30))?;
+    anyhow::ensure!(first.is_ok(), "miss must serve: {:?}", first.status);
+    let second = h.submit("bert_tiny", payload(3)).unwrap().wait_timeout(Duration::from_secs(30))?;
+    anyhow::ensure!(second.is_ok(), "hit must serve: {:?}", second.status);
+    anyhow::ensure!(
+        second.served_by.starts_with("cache:"),
+        "repeat must be served by the cache, got {:?}",
+        second.served_by
+    );
+    anyhow::ensure!(
+        bits(first.logits()) == bits(second.logits()),
+        "cached logits must be bitwise-identical to the miss that populated them"
+    );
+    srv.shutdown();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let (n, service, universe) = if smoke {
+        (2_000, Duration::from_micros(300), 48)
+    } else {
+        (12_000, Duration::from_micros(400), 64)
+    };
+    let workers = 2.0;
+    let capacity_rps = workers / service.as_secs_f64();
+    let rate = 2.0 * capacity_rps; // pinned past saturation: misses queue
+
+    exactness_probe()?;
+    println!("== cache hit rate (n={n}, {service:?}/call, offered {rate:.0} rps ≈ 2× capacity) ==");
+
+    let mut report = JsonReport::new("cache");
+    report.set("smoke", Json::Bool(smoke));
+    report.set_effective_workers(2);
+    report.set("requests_per_run", Json::Num(n as f64));
+    report.set("service_us_per_call", Json::Num(service.as_micros() as f64));
+    report.set("key_universe", Json::Num(universe as f64));
+    report.set("offered_rps", Json::Num(rate));
+
+    // the headline comparison: classic web skew, cache off vs on
+    let mut headline: Option<(RunOutcome, RunOutcome)> = None;
+    for &s in &[0.6, 1.1] {
+        let off = run_once(n, rate, service, universe, s, None)?;
+        let on = run_once(n, rate, service, universe, s, Some(CacheConfig::default()))?;
+        let ratio = on.achieved_rps / off.achieved_rps;
+        println!(
+            "bench cache/zipf{s:.1}  off {:>7.0} rps | on {:>7.0} rps (×{ratio:.2})  \
+             hit_rate {:.0}% ({} hits + {} coalesced)  hit p50 {:>6.0}µs vs miss p50 {:>8.0}µs",
+            off.achieved_rps,
+            on.achieved_rps,
+            on.hit_rate * 100.0,
+            on.hits,
+            on.coalesced,
+            on.hit_p50_us,
+            on.miss_p50_us,
+        );
+        report.push(Json::obj(vec![
+            ("zipf_s", Json::Num(s)),
+            ("off_achieved_rps", Json::Num(off.achieved_rps)),
+            ("on_achieved_rps", Json::Num(on.achieved_rps)),
+            ("throughput_ratio", Json::Num(ratio)),
+            ("hit_rate", Json::Num(on.hit_rate)),
+            ("cache_hits", Json::Num(on.hits as f64)),
+            ("coalesced", Json::Num(on.coalesced as f64)),
+            ("admitted", Json::Num(on.admitted as f64)),
+            ("hit_p50_us", Json::Num(on.hit_p50_us)),
+            ("miss_p50_us", Json::Num(on.miss_p50_us)),
+        ]));
+        if s == 1.1 {
+            headline = Some((off, on));
+        }
+    }
+
+    let (off, on) = headline.expect("s=1.1 ran");
+    let throughput_ratio = on.achieved_rps / off.achieved_rps;
+    report.set("headline_zipf_s", Json::Num(1.1));
+    report.set("headline_hit_rate", Json::Num(on.hit_rate));
+    report.set("headline_hit_p50_us", Json::Num(on.hit_p50_us));
+    report.set("headline_miss_p50_us", Json::Num(on.miss_p50_us));
+    report.set("headline_throughput_ratio", Json::Num(throughput_ratio));
+
+    // the contract this bench exists to defend
+    anyhow::ensure!(on.hits > 0, "skewed traffic must produce resolved hits");
+    anyhow::ensure!(
+        on.hit_rate > 0.25,
+        "zipf(1.1) hit rate {:.3} <= 0.25: the cache is not catching the hot keys",
+        on.hit_rate
+    );
+    anyhow::ensure!(
+        on.hit_p50_us < on.miss_p50_us,
+        "hit-path p50 {:.0}µs must beat miss-path p50 {:.0}µs",
+        on.hit_p50_us,
+        on.miss_p50_us
+    );
+    anyhow::ensure!(
+        throughput_ratio > 1.05,
+        "cache-on throughput {:.0} rps must beat cache-off {:.0} rps by >5% at the same \
+         offered load (ratio {throughput_ratio:.3})",
+        on.achieved_rps,
+        off.achieved_rps
+    );
+
+    let path = report.write()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

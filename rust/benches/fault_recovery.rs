@@ -123,6 +123,7 @@ fn main() -> anyhow::Result<()> {
             workers: 2,
             max_inflight: 4 * n,
             breaker,
+            ..Default::default()
         },
         m,
         Router::new(RoutingPolicy::MaxSparsity),

@@ -1,0 +1,510 @@
+//! Exact response cache + single-flight coalescing — the first new
+//! [`IngressStage`](super::ingress::IngressStage).
+//!
+//! Heavy traffic from millions of users is heavy-tailed: the same hot
+//! inputs recur, and recomputing them wastes exactly the cycles the
+//! sparse kernels saved. Deterministic logits (pinned by
+//! `cpu_backend_e2e.rs`) make caching *exact*, not approximate — a rare
+//! luxury — so the key is the bitwise content of the request:
+//! `hash(model, dtype-tagged input payloads)`, with f32 elements keyed
+//! by `to_bits()` (`0.0` and `-0.0` are different keys, NaNs compare by
+//! payload; bitwise in, bitwise out).
+//!
+//! Two mechanisms share one map:
+//!
+//! * **Resolved hits** — a fresh `Ok` response for the same key is
+//!   answered immediately from the submitting thread: no admission
+//!   slot, no batch seat, no backend call. `served_by` is rewritten to
+//!   `cache:<original>` so hits are observable end to end (including
+//!   over the wire — the net layer copies `served_by` into the frame).
+//! * **Single-flight coalescing** — while a key's *leader* is still in
+//!   flight, concurrent identical submissions attach to its
+//!   [`SharedReply`] and receive per-waiter clones of the leader's one
+//!   reply. Followers hold ordinary [`Ticket`]s with independent cancel
+//!   flags; a follower cancelling never disturbs the leader.
+//!
+//! Bounded by TTL + `max_entries` (stale and settled entries are evicted
+//! first; pending leaders are never evicted — when the map is full of
+//! them, a newcomer simply proceeds uncoalesced). Only `Ok` responses
+//! are ever served from the cache: errors, expirations, and
+//! cancellations settle their followers but are dropped from the map, so
+//! a fault never gets replayed to a later caller.
+//!
+//! Accounting: hits and coalesced attaches are answered **without**
+//! being admitted, so the core invariant `answered() == admitted` is
+//! untouched; the extended identity is
+//! `served() == answered() + cache_hits + coalesced`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::ingress::{IngressRequest, IngressStage, ReplyAttachment, StageOutcome};
+use super::metrics::Metrics;
+use super::request::{AttachOutcome, RequestId, Response, SharedReply, Ticket};
+use crate::backend::Value;
+
+/// Size/age bounds for [`ResponseCache`].
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Hard bound on map entries (resolved + in-flight). Clamped to ≥ 1.
+    pub max_entries: usize,
+    /// Resolved entries older than this are misses (and evicted on
+    /// sight). `Duration::ZERO` disables reuse entirely — every
+    /// submission re-executes — while coalescing of genuinely concurrent
+    /// identical requests still applies.
+    pub ttl: Duration,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig { max_entries: 1024, ttl: Duration::from_secs(60) }
+    }
+}
+
+/// Bitwise-exact identity of a submission. Full payload is stored (not
+/// just a hash), so distinct inputs can never collide into a wrong
+/// answer.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct CacheKey {
+    model: Box<str>,
+    /// dtype-tagged flattened payload: per input `[tag, len, elems...]`
+    /// with i32 elements zero-extended and f32 elements by `to_bits()`
+    words: Box<[u64]>,
+}
+
+impl CacheKey {
+    fn of(model: &str, inputs: &[Value]) -> CacheKey {
+        let mut words = Vec::new();
+        for v in inputs {
+            match v {
+                Value::I32(xs) => {
+                    words.push(1);
+                    words.push(xs.len() as u64);
+                    words.extend(xs.iter().map(|&x| x as u32 as u64));
+                }
+                Value::F32(xs) => {
+                    words.push(2);
+                    words.push(xs.len() as u64);
+                    words.extend(xs.iter().map(|&x| x.to_bits() as u64));
+                }
+            }
+        }
+        CacheKey { model: model.into(), words: words.into() }
+    }
+}
+
+enum Entry {
+    /// A leader is executing this key; followers attach here.
+    InFlight(Arc<SharedReply>),
+    /// A fresh `Ok` response, promoted after the leader settled.
+    Resolved { resp: Response, at: Instant },
+}
+
+struct CacheShared {
+    cfg: CacheConfig,
+    metrics: Arc<Metrics>,
+    /// the server's id mint — hits and coalesced attaches get real,
+    /// unique [`RequestId`]s from the same sequence as admitted requests
+    next_id: Arc<AtomicU64>,
+    map: Mutex<HashMap<CacheKey, Entry>>,
+}
+
+/// The cache stage. Cheap to clone; one instance is shared between the
+/// ingress chain and any observer.
+#[derive(Clone)]
+pub struct ResponseCache {
+    inner: Arc<CacheShared>,
+}
+
+impl ResponseCache {
+    pub fn new(
+        cfg: CacheConfig,
+        metrics: Arc<Metrics>,
+        next_id: Arc<AtomicU64>,
+    ) -> ResponseCache {
+        let cfg = CacheConfig { max_entries: cfg.max_entries.max(1), ..cfg };
+        ResponseCache {
+            inner: Arc::new(CacheShared {
+                cfg,
+                metrics,
+                next_id,
+                map: Mutex::new(HashMap::new()),
+            }),
+        }
+    }
+
+    /// Current entry count (resolved + in-flight), for tests/observers.
+    pub fn len(&self) -> usize {
+        self.lock_map().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn lock_map(&self) -> std::sync::MutexGuard<'_, HashMap<CacheKey, Entry>> {
+        self.inner.map.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn mint_id(&self) -> RequestId {
+        RequestId(self.inner.next_id.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Answer immediately with a clone of `template` re-stamped for this
+    /// caller: its own fresh id, `served_by` marked `cache:<origin>`,
+    /// zero queue/latency (the whole point of a hit).
+    fn hit_ticket(&self, template: &Response, req: &IngressRequest<'_>) -> Ticket {
+        let id = self.mint_id();
+        let mut resp = template.clone();
+        resp.id = id;
+        let (tx, rx) = channel();
+        let _ = tx.send(resp);
+        Ticket::new(id, req.opts.priority, rx, Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Rewrite a settled leader response into the resolved-entry
+    /// template: cache-marked origin, no residual latency attribution.
+    fn promote(resp: &Response) -> Response {
+        let mut r = resp.clone();
+        if !r.served_by.starts_with("cache:") {
+            r.served_by = Arc::from(format!("cache:{}", r.served_by).as_str());
+        }
+        r.latency_us = 0;
+        r.queue_us = 0;
+        r
+    }
+
+    /// Evict entries to make room for one more: first anything stale,
+    /// settled, or aborted; then the oldest resolved entry. Pending
+    /// leaders are never evicted. Returns whether an insert now fits.
+    fn make_room(map: &mut HashMap<CacheKey, Entry>, cfg: &CacheConfig, now: Instant) -> bool {
+        if map.len() < cfg.max_entries {
+            return true;
+        }
+        map.retain(|_, e| match e {
+            Entry::Resolved { at, .. } => now.duration_since(*at) < cfg.ttl,
+            Entry::InFlight(sr) => sr.is_pending(),
+        });
+        if map.len() < cfg.max_entries {
+            return true;
+        }
+        let oldest = map
+            .iter()
+            .filter_map(|(k, e)| match e {
+                Entry::Resolved { at, .. } => Some((k.clone(), *at)),
+                Entry::InFlight(_) => None,
+            })
+            .min_by_key(|(_, at)| *at)
+            .map(|(k, _)| k);
+        if let Some(k) = oldest {
+            map.remove(&k);
+        }
+        map.len() < cfg.max_entries
+    }
+
+    fn publish_size(&self, len: usize) {
+        self.inner.metrics.set_cache_size(len as u64);
+    }
+}
+
+impl IngressStage for ResponseCache {
+    fn name(&self) -> &'static str {
+        "cache"
+    }
+
+    fn admit(&self, req: &IngressRequest<'_>) -> StageOutcome {
+        let key = CacheKey::of(req.model, req.inputs);
+        let now = Instant::now();
+        let mut map = self.lock_map();
+
+        // Probe. A settled in-flight entry is promoted lazily here — no
+        // background thread touches the map.
+        match map.get(&key) {
+            Some(Entry::Resolved { resp, at }) => {
+                if now.duration_since(*at) < self.inner.cfg.ttl {
+                    let t = self.hit_ticket(resp, req);
+                    drop(map);
+                    self.inner.metrics.record_cache_hit();
+                    return StageOutcome::Answer(t);
+                }
+                map.remove(&key); // stale: fall through to miss
+            }
+            Some(Entry::InFlight(sr)) => {
+                let sr = sr.clone();
+                let id = self.mint_id();
+                // attach() is atomic w.r.t. settle/abort: either we join
+                // the in-flight wait or we see the final outcome here.
+                match sr.attach(id) {
+                    AttachOutcome::Attached(rx) => {
+                        drop(map);
+                        self.inner.metrics.record_coalesced();
+                        return StageOutcome::Answer(Ticket::new(
+                            id,
+                            req.opts.priority,
+                            rx,
+                            Arc::new(AtomicBool::new(false)),
+                        ));
+                    }
+                    AttachOutcome::Settled(resp, at) => {
+                        // leader finished between enqueue and our probe
+                        if resp.is_ok() {
+                            let promoted = Self::promote(&resp);
+                            map.insert(
+                                key,
+                                Entry::Resolved { resp: promoted.clone(), at },
+                            );
+                            if now.duration_since(at) < self.inner.cfg.ttl {
+                                let t = self.hit_ticket(&promoted, req);
+                                drop(map);
+                                self.inner.metrics.record_cache_hit();
+                                return StageOutcome::Answer(t);
+                            }
+                        } else {
+                            // faults are never replayed from the cache
+                            map.remove(&key);
+                        }
+                    }
+                    AttachOutcome::Aborted(_) => {
+                        map.remove(&key);
+                    }
+                }
+            }
+            None => {}
+        }
+
+        // Miss: try to register this submission as the key's leader so
+        // concurrent identical requests coalesce onto it.
+        self.inner.metrics.record_cache_miss();
+        if !Self::make_room(&mut map, &self.inner.cfg, now) {
+            // map full of pending leaders — proceed uncoalesced
+            let len = map.len();
+            drop(map);
+            self.publish_size(len);
+            return StageOutcome::Continue(None);
+        }
+        let sr = Arc::new(SharedReply::new());
+        map.insert(key.clone(), Entry::InFlight(sr.clone()));
+        let len = map.len();
+        drop(map);
+        self.publish_size(len);
+
+        let cache = self.clone();
+        let abort_sr = sr.clone();
+        let on_abort = Box::new(move || {
+            // The leader never enqueued (post-chain shutdown race):
+            // unregister the key — but only if it still holds *our*
+            // SharedReply — then answer any already-attached followers.
+            // Map lock is released before touching the SharedReply lock
+            // (lock order: map → reply, never both held across settle).
+            let mut map = cache.lock_map();
+            if matches!(map.get(&key), Some(Entry::InFlight(e)) if Arc::ptr_eq(e, &abort_sr)) {
+                map.remove(&key);
+            }
+            let len = map.len();
+            drop(map);
+            cache.publish_size(len);
+            abort_sr.abort("request was not enqueued");
+        });
+        StageOutcome::Continue(Some(ReplyAttachment { fanout: sr, on_abort }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{ResponseStatus, SubmitOptions};
+
+    fn cache(max_entries: usize, ttl: Duration) -> ResponseCache {
+        ResponseCache::new(
+            CacheConfig { max_entries, ttl },
+            Arc::new(Metrics::default()),
+            Arc::new(AtomicU64::new(1)),
+        )
+    }
+
+    fn ireq<'a>(
+        model: &'a str,
+        inputs: &'a [Value],
+        opts: &'a SubmitOptions,
+    ) -> IngressRequest<'a> {
+        IngressRequest { model, inputs, opts }
+    }
+
+    fn ok_response(id: u64, logits: Vec<f32>) -> Response {
+        let mut r = Response::error(RequestId(id), "x");
+        r.status = ResponseStatus::Ok;
+        r.served_by = Arc::from("bert_tiny_s8_b1");
+        r.outputs = vec![Value::F32(logits)];
+        r.latency_us = 123;
+        r.queue_us = 45;
+        r
+    }
+
+    /// Drive a leader through the stage: miss → attachment installed.
+    fn lead(c: &ResponseCache, model: &str, inputs: &[Value]) -> Arc<SharedReply> {
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq(model, inputs, &opts)) {
+            StageOutcome::Continue(Some(a)) => a.fanout,
+            other => panic!("expected leader registration, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cache_key_is_bitwise_exact() {
+        let a = CacheKey::of("m", &[Value::F32(vec![0.0])]);
+        let b = CacheKey::of("m", &[Value::F32(vec![-0.0])]);
+        assert_ne!(a, b, "0.0 and -0.0 are different keys");
+        let c = CacheKey::of("m", &[Value::I32(vec![1, 2])]);
+        let d = CacheKey::of("m", &[Value::I32(vec![1]), Value::I32(vec![2])]);
+        assert_ne!(c, d, "tensor boundaries are part of the key");
+        let e = CacheKey::of("m2", &[Value::I32(vec![1, 2])]);
+        assert_ne!(c, e, "model is part of the key");
+        assert_eq!(c, CacheKey::of("m", &[Value::I32(vec![1, 2])]));
+    }
+
+    #[test]
+    fn cache_hit_after_settle_is_promoted_and_restamped() {
+        let metrics = Arc::new(Metrics::default());
+        let c = ResponseCache::new(
+            CacheConfig::default(),
+            metrics.clone(),
+            Arc::new(AtomicU64::new(100)),
+        );
+        let inputs = [Value::I32(vec![1, 2, 3])];
+        let sr = lead(&c, "m", &inputs);
+        sr.settle(&ok_response(1, vec![0.5, -0.25]));
+        let opts = SubmitOptions::interactive();
+        let t = match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Answer(t) => t,
+            other => panic!("expected Answer, got {other:?}"),
+        };
+        let r = t.wait().unwrap();
+        assert!(r.is_ok());
+        assert_eq!(r.id, t.id(), "hit carries the caller's own fresh id");
+        assert_eq!(&*r.served_by, "cache:bert_tiny_s8_b1");
+        assert_eq!((r.latency_us, r.queue_us), (0, 0));
+        assert_eq!(
+            r.logits().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            [0.5f32, -0.25].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "bitwise-identical logits"
+        );
+        let s = metrics.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses), (1, 1));
+        assert_eq!(s.admitted, 0, "hits never touch admission");
+    }
+
+    #[test]
+    fn coalesced_attach_joins_the_inflight_leader() {
+        let metrics = Arc::new(Metrics::default());
+        let c = ResponseCache::new(
+            CacheConfig::default(),
+            metrics.clone(),
+            Arc::new(AtomicU64::new(1)),
+        );
+        let inputs = [Value::I32(vec![7])];
+        let sr = lead(&c, "m", &inputs);
+        let opts = SubmitOptions::default();
+        let follower = match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Answer(t) => t,
+            other => panic!("expected coalesced Answer, got {other:?}"),
+        };
+        assert!(follower.try_poll().is_none(), "leader still in flight");
+        sr.settle(&ok_response(1, vec![1.0]));
+        let r = follower.wait().unwrap();
+        assert!(r.is_ok());
+        assert_eq!(r.id, follower.id());
+        assert_eq!(metrics.snapshot().coalesced, 1);
+    }
+
+    #[test]
+    fn errors_are_settled_to_followers_but_never_cached() {
+        let c = cache(16, Duration::from_secs(60));
+        let inputs = [Value::I32(vec![9])];
+        let sr = lead(&c, "m", &inputs);
+        sr.settle(&Response::error(RequestId(1), "worker panicked"));
+        // next identical submission is a fresh miss, not a replayed error
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Continue(Some(_)) => {}
+            other => panic!("expected fresh leader, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn ttl_zero_never_reuses_a_resolved_response() {
+        let c = cache(16, Duration::ZERO);
+        let inputs = [Value::I32(vec![4])];
+        let sr = lead(&c, "m", &inputs);
+        sr.settle(&ok_response(1, vec![2.0]));
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Continue(Some(_)) => {}
+            other => panic!("expected re-execution, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn abort_unregisters_the_key_and_answers_followers() {
+        let c = cache(16, Duration::from_secs(60));
+        let inputs = [Value::I32(vec![5])];
+        let opts = SubmitOptions::default();
+        let attachment = match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Continue(Some(a)) => a,
+            other => panic!("expected leader registration, got {other:?}"),
+        };
+        let rx = match attachment.fanout.attach(RequestId(50)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        (attachment.on_abort)();
+        assert_eq!(c.len(), 0, "aborted leader unregistered");
+        let r = rx.recv().unwrap();
+        assert_eq!(r.error_message(), Some("request was not enqueued"));
+        // the key is free again for a new leader
+        match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Continue(Some(_)) => {}
+            other => panic!("expected fresh leader, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn eviction_bounds_the_map_and_spares_pending_leaders() {
+        let c = cache(2, Duration::from_secs(60));
+        let a = [Value::I32(vec![1])];
+        let b = [Value::I32(vec![2])];
+        let x = [Value::I32(vec![3])];
+        let sr_a = lead(&c, "m", &a);
+        sr_a.settle(&ok_response(1, vec![1.0]));
+        let _sr_b = lead(&c, "m", &b); // still pending
+        assert_eq!(c.len(), 2);
+        // third key: map full → oldest resolved (a) evicted, pending b kept
+        let _sr_x = lead(&c, "m", &x);
+        assert_eq!(c.len(), 2);
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq("m", &b, &opts)) {
+            StageOutcome::Answer(_) => {} // b still coalescable
+            other => panic!("pending leader must survive eviction, got {other:?}"),
+        }
+        match c.admit(&ireq("m", &a, &opts)) {
+            StageOutcome::Continue(_) => {} // a was evicted → miss
+            other => panic!("expected a evicted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_map_of_pending_leaders_degrades_to_uncoalesced() {
+        let c = cache(1, Duration::from_secs(60));
+        let a = [Value::I32(vec![1])];
+        let b = [Value::I32(vec![2])];
+        let _sr_a = lead(&c, "m", &a); // occupies the single slot, pending
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq("m", &b, &opts)) {
+            StageOutcome::Continue(None) => {} // no registration, no coalescing
+            other => panic!("expected uncoalesced Continue(None), got {other:?}"),
+        }
+        assert_eq!(c.len(), 1);
+    }
+}

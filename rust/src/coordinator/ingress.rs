@@ -1,0 +1,314 @@
+//! Staged ingress pipeline — the composable front door of the serving
+//! stack.
+//!
+//! [`ServerHandle::submit_with`](super::server::ServerHandle) used to be
+//! a hardcoded monolith (breaker gate → admission → id mint → enqueue);
+//! every new front-door policy meant editing it in place. This module
+//! factors the gating part into an explicit chain of [`IngressStage`]s,
+//! each of which can:
+//!
+//! * **[`Shed`](StageOutcome::Shed)** the submission with a typed
+//!   [`AdmissionDecision`] (breaker open, budget exhausted);
+//! * **[`Answer`](StageOutcome::Answer)** it immediately with a
+//!   [`Ticket`] that never touches admission or the batcher (a response
+//!   cache hit, a coalesced attach to an in-flight leader);
+//! * **[`Continue`](StageOutcome::Continue)** to the next stage,
+//!   optionally installing a [`ReplyAttachment`] on the request that
+//!   eventually enqueues (how the cache registers itself as the
+//!   single-flight leader for a key).
+//!
+//! The default chain `[BreakerGate, AdmissionGate]` reproduces the
+//! pre-refactor behavior bitwise — same outcomes, same metrics, same
+//! ordering — so with no cache configured nothing observable changes.
+//! [`ResponseCache`](super::cache::ResponseCache) slots in front as the
+//! first stage when [`ServerConfig::cache`](super::server::ServerConfig)
+//! is set.
+
+use std::sync::Arc;
+
+use super::admission::{Admission, AdmissionDecision};
+use super::health::{Breaker, BreakerVerdict};
+use super::metrics::Metrics;
+use super::request::{SharedReply, SubmitOptions, Ticket};
+use crate::backend::Value;
+
+/// Borrowed view of one submission, handed to each stage in turn.
+pub struct IngressRequest<'a> {
+    pub model: &'a str,
+    pub inputs: &'a [Value],
+    pub opts: &'a SubmitOptions,
+}
+
+/// Side-car a stage installs on a submission that proceeds to enqueue:
+/// the request becomes a coalescing *leader* whose reply fans out through
+/// `fanout`, and `on_abort` runs if the submission fails to enqueue after
+/// the chain passed (shutdown race), so the stage can unregister it and
+/// answer any already-attached followers instead of stranding them.
+pub struct ReplyAttachment {
+    pub fanout: Arc<SharedReply>,
+    pub on_abort: Box<dyn FnOnce() + Send>,
+}
+
+impl std::fmt::Debug for ReplyAttachment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplyAttachment").field("fanout", &self.fanout).finish()
+    }
+}
+
+/// What one [`IngressStage`] decided for a submission.
+#[derive(Debug)]
+pub enum StageOutcome {
+    /// Reject now with this typed decision; later stages never run.
+    Shed(AdmissionDecision),
+    /// Answer now with this ticket; the request never reaches admission
+    /// or the batcher (cache hit / coalesced attach).
+    Answer(Ticket),
+    /// Pass to the next stage, optionally installing a fan-out
+    /// attachment on the request if it ultimately enqueues.
+    Continue(Option<ReplyAttachment>),
+}
+
+/// One composable front-door policy. Stages are synchronous and cheap —
+/// they run on the submitting thread, before the request exists.
+pub trait IngressStage: Send + Sync {
+    /// Stable name for diagnostics.
+    fn name(&self) -> &'static str;
+    /// Decide this submission's fate at this stage.
+    fn admit(&self, req: &IngressRequest<'_>) -> StageOutcome;
+}
+
+/// Terminal result of running a whole [`IngressChain`].
+#[derive(Debug)]
+pub enum ChainOutcome {
+    /// Some stage shed the submission.
+    Shed(AdmissionDecision),
+    /// Some stage answered it without enqueueing.
+    Answer(Ticket),
+    /// Every stage passed; enqueue, carrying at most one attachment.
+    Proceed(Option<ReplyAttachment>),
+}
+
+/// An ordered chain of [`IngressStage`]s, run front to back.
+pub struct IngressChain {
+    stages: Vec<Box<dyn IngressStage>>,
+}
+
+impl IngressChain {
+    pub fn new(stages: Vec<Box<dyn IngressStage>>) -> IngressChain {
+        IngressChain { stages }
+    }
+
+    /// Run the chain. A `Shed` after an earlier stage installed an
+    /// attachment fires that attachment's abort hook — the leader
+    /// registration must not outlive a submission that never enqueued.
+    pub fn run(&self, req: &IngressRequest<'_>) -> ChainOutcome {
+        let mut attachment: Option<ReplyAttachment> = None;
+        for stage in &self.stages {
+            match stage.admit(req) {
+                StageOutcome::Continue(None) => {}
+                StageOutcome::Continue(Some(a)) => {
+                    debug_assert!(
+                        attachment.is_none(),
+                        "at most one stage may install a ReplyAttachment"
+                    );
+                    attachment = Some(a);
+                }
+                StageOutcome::Answer(t) => return ChainOutcome::Answer(t),
+                StageOutcome::Shed(d) => {
+                    if let Some(a) = attachment.take() {
+                        (a.on_abort)();
+                    }
+                    return ChainOutcome::Shed(d);
+                }
+            }
+        }
+        ChainOutcome::Proceed(attachment)
+    }
+}
+
+/// The health gate, extracted verbatim from the old `submit_with`: a
+/// breaker shed consumes neither an admission slot nor an `admitted`
+/// count, so `answered() == admitted` holds straight through a degraded
+/// window.
+pub struct BreakerGate {
+    breaker: Arc<Breaker>,
+    metrics: Arc<Metrics>,
+}
+
+impl BreakerGate {
+    pub fn new(breaker: Arc<Breaker>, metrics: Arc<Metrics>) -> BreakerGate {
+        BreakerGate { breaker, metrics }
+    }
+}
+
+impl IngressStage for BreakerGate {
+    fn name(&self) -> &'static str {
+        "breaker"
+    }
+
+    fn admit(&self, req: &IngressRequest<'_>) -> StageOutcome {
+        let class = req.opts.priority;
+        if self.breaker.admit(class) == BreakerVerdict::Shed {
+            self.metrics.record_breaker_shed();
+            return StageOutcome::Shed(AdmissionDecision::RejectUnhealthy(class));
+        }
+        StageOutcome::Continue(None)
+    }
+}
+
+/// The per-class admission budget, extracted verbatim from the old
+/// `submit_with`: a pass records `admitted` and holds a slot the serving
+/// path must `complete` exactly once.
+pub struct AdmissionGate {
+    admission: Arc<Admission>,
+    metrics: Arc<Metrics>,
+}
+
+impl AdmissionGate {
+    pub fn new(admission: Arc<Admission>, metrics: Arc<Metrics>) -> AdmissionGate {
+        AdmissionGate { admission, metrics }
+    }
+}
+
+impl IngressStage for AdmissionGate {
+    fn name(&self) -> &'static str {
+        "admission"
+    }
+
+    fn admit(&self, req: &IngressRequest<'_>) -> StageOutcome {
+        let class = req.opts.priority;
+        match self.admission.try_admit(class) {
+            AdmissionDecision::Admit => {
+                self.metrics.record_admitted(class);
+                StageOutcome::Continue(None)
+            }
+            other => {
+                self.metrics.record_rejected();
+                StageOutcome::Shed(other)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::health::BreakerConfig;
+    use crate::coordinator::request::Priority;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    fn req<'a>(opts: &'a SubmitOptions) -> IngressRequest<'a> {
+        IngressRequest { model: "m", inputs: &[], opts }
+    }
+
+    #[test]
+    fn breaker_gate_sheds_when_open_without_touching_admitted() {
+        let breaker = Arc::new(Breaker::new(BreakerConfig {
+            failure_threshold: 1,
+            ..BreakerConfig::default()
+        }));
+        let metrics = Arc::new(Metrics::default());
+        let gate = BreakerGate::new(breaker.clone(), metrics.clone());
+        assert_eq!(gate.name(), "breaker");
+        let opts = SubmitOptions::default();
+        assert!(matches!(gate.admit(&req(&opts)), StageOutcome::Continue(None)));
+        breaker.record_failure();
+        match gate.admit(&req(&opts)) {
+            StageOutcome::Shed(AdmissionDecision::RejectUnhealthy(Priority::Standard)) => {}
+            other => panic!("expected RejectUnhealthy, got {other:?}"),
+        }
+        let s = metrics.snapshot();
+        assert_eq!(s.breaker_shed, 1);
+        assert_eq!(s.admitted, 0, "breaker sheds never count as admitted");
+    }
+
+    #[test]
+    fn admission_gate_admits_then_rejects_at_capacity() {
+        let admission = Arc::new(Admission::depth_only(1));
+        let metrics = Arc::new(Metrics::default());
+        let gate = AdmissionGate::new(admission.clone(), metrics.clone());
+        assert_eq!(gate.name(), "admission");
+        let opts = SubmitOptions::default();
+        assert!(matches!(gate.admit(&req(&opts)), StageOutcome::Continue(None)));
+        match gate.admit(&req(&opts)) {
+            StageOutcome::Shed(AdmissionDecision::RejectQueueFull(Priority::Standard)) => {}
+            other => panic!("expected RejectQueueFull, got {other:?}"),
+        }
+        let s = metrics.snapshot();
+        assert_eq!((s.admitted, s.rejected), (1, 1));
+        admission.complete(Priority::Standard);
+        assert_eq!(admission.inflight(), 0);
+    }
+
+    struct FixedStage(StageOutcomeKind);
+    enum StageOutcomeKind {
+        Continue,
+        Shed,
+        Attach(Arc<SharedReply>, Arc<AtomicBool>),
+    }
+
+    impl IngressStage for FixedStage {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn admit(&self, req: &IngressRequest<'_>) -> StageOutcome {
+            match &self.0 {
+                StageOutcomeKind::Continue => StageOutcome::Continue(None),
+                StageOutcomeKind::Shed => {
+                    StageOutcome::Shed(AdmissionDecision::RejectQueueFull(req.opts.priority))
+                }
+                StageOutcomeKind::Attach(sr, aborted) => {
+                    let (sr, aborted) = (sr.clone(), aborted.clone());
+                    let fanout = sr.clone();
+                    StageOutcome::Continue(Some(ReplyAttachment {
+                        fanout,
+                        on_abort: Box::new(move || {
+                            aborted.store(true, Ordering::Release);
+                            sr.abort("not enqueued");
+                        }),
+                    }))
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_carries_attachment_through_to_proceed() {
+        let sr = Arc::new(SharedReply::new());
+        let aborted = Arc::new(AtomicBool::new(false));
+        let chain = IngressChain::new(vec![
+            Box::new(FixedStage(StageOutcomeKind::Attach(sr, aborted.clone()))),
+            Box::new(FixedStage(StageOutcomeKind::Continue)),
+        ]);
+        let opts = SubmitOptions::default();
+        match chain.run(&req(&opts)) {
+            ChainOutcome::Proceed(Some(_)) => {}
+            other => panic!("expected Proceed(Some), got {other:?}"),
+        }
+        assert!(!aborted.load(Ordering::Acquire));
+    }
+
+    #[test]
+    fn chain_shed_after_attach_runs_the_abort_hook() {
+        let sr = Arc::new(SharedReply::new());
+        let aborted = Arc::new(AtomicBool::new(false));
+        let chain = IngressChain::new(vec![
+            Box::new(FixedStage(StageOutcomeKind::Attach(sr.clone(), aborted.clone()))),
+            Box::new(FixedStage(StageOutcomeKind::Shed)),
+        ]);
+        let opts = SubmitOptions::default();
+        match chain.run(&req(&opts)) {
+            ChainOutcome::Shed(AdmissionDecision::RejectQueueFull(_)) => {}
+            other => panic!("expected Shed, got {other:?}"),
+        }
+        assert!(aborted.load(Ordering::Acquire), "leader registration torn down on shed");
+        assert!(!sr.is_pending(), "followers would now see Aborted");
+    }
+
+    #[test]
+    fn empty_chain_proceeds_bare() {
+        let chain = IngressChain::new(Vec::new());
+        let opts = SubmitOptions::default();
+        assert!(matches!(chain.run(&req(&opts)), ChainOutcome::Proceed(None)));
+    }
+}

@@ -60,6 +60,18 @@ pub struct Metrics {
     /// submissions shed at the front door with `RejectUnhealthy` while the
     /// breaker was degraded (also counted in `rejected`)
     pub breaker_shed: AtomicU64,
+    /// submissions answered from a fresh resolved cache entry — never
+    /// admitted, so `answered() == admitted` is untouched; the extended
+    /// identity is [`MetricsSnapshot::served`]
+    pub cache_hits: AtomicU64,
+    /// submissions that probed the cache and found no usable entry (the
+    /// request then proceeds through breaker/admission as usual)
+    pub cache_misses: AtomicU64,
+    /// submissions attached to an identical in-flight leader
+    /// (single-flight coalescing) — like hits, answered without admission
+    pub coalesced: AtomicU64,
+    /// gauge: response-cache entries currently held (resolved + in-flight)
+    pub cache_size: AtomicU64,
     admitted_by_class: [AtomicU64; 3],
     completed_by_class: [AtomicU64; 3],
     lat: Mutex<Latencies>,
@@ -108,6 +120,14 @@ pub struct MetricsSnapshot {
     pub breaker_opens: u64,
     /// submissions shed with `RejectUnhealthy` (subset of `rejected`)
     pub breaker_shed: u64,
+    /// submissions answered from the response cache (never admitted)
+    pub cache_hits: u64,
+    /// cache probes that found no usable entry
+    pub cache_misses: u64,
+    /// submissions coalesced onto an identical in-flight leader
+    pub coalesced: u64,
+    /// gauge: cache entries currently held
+    pub cache_size: u64,
     /// indexed by [`Priority::idx`]
     pub by_class: [ClassStats; 3],
     /// socket-boundary counters (all zero without a net front end)
@@ -129,6 +149,14 @@ impl MetricsSnapshot {
     /// Every admitted request is eventually answered exactly once.
     pub fn answered(&self) -> u64 {
         self.completed + self.failed + self.expired + self.cancelled
+    }
+
+    /// Everything that received a response: the admitted pipeline
+    /// ([`answered`](MetricsSnapshot::answered), which must equal
+    /// `admitted`) plus cache hits and coalesced attaches, which are
+    /// answered without ever being admitted.
+    pub fn served(&self) -> u64 {
+        self.answered() + self.cache_hits + self.coalesced
     }
 
     pub fn report(&self) -> String {
@@ -162,6 +190,12 @@ impl MetricsSnapshot {
             s.push_str(&format!(
                 " fault[panics={} restarts={} breaker_opens={} breaker_shed={}]",
                 self.worker_panics, self.worker_restarts, self.breaker_opens, self.breaker_shed,
+            ));
+        }
+        if self.cache_hits > 0 || self.cache_misses > 0 || self.coalesced > 0 {
+            s.push_str(&format!(
+                " cache[hits={} misses={} coalesced={} size={}]",
+                self.cache_hits, self.cache_misses, self.coalesced, self.cache_size,
             ));
         }
         if self.net.conns_accepted > 0 {
@@ -293,6 +327,30 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One submission answered from a fresh resolved cache entry.
+    #[inline]
+    pub fn record_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One cache probe found no usable entry.
+    #[inline]
+    pub fn record_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One submission attached to an identical in-flight leader.
+    #[inline]
+    pub fn record_coalesced(&self) {
+        self.coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish the cache's current entry count (gauge, not a counter).
+    #[inline]
+    pub fn set_cache_size(&self, n: u64) {
+        self.cache_size.store(n, Ordering::Relaxed);
+    }
+
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
         self.lat.lock().unwrap().latency.quantile_us(q)
     }
@@ -355,6 +413,10 @@ impl Metrics {
             worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
             breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
             breaker_shed: self.breaker_shed.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            cache_size: self.cache_size.load(Ordering::Relaxed),
             by_class,
             net: NetStats {
                 conns_accepted: self.conns_accepted.load(Ordering::Relaxed),
@@ -507,6 +569,33 @@ mod tests {
         // stray extra close must not wrap the gauge
         m.record_conn_closed(false);
         assert_eq!(m.snapshot().net.conns_active, 0);
+    }
+
+    #[test]
+    fn cache_counters_flow_into_snapshot_report_and_served() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses, s.coalesced, s.cache_size), (0, 0, 0, 0));
+        assert!(!s.report().contains("cache["), "no cache line when the cache is off");
+        // one admitted+completed execution, then 2 hits + 1 coalesced on it
+        m.record_admitted(Priority::Standard);
+        m.record_completion(Priority::Standard, 100, 10);
+        m.record_cache_miss();
+        m.record_cache_hit();
+        m.record_cache_hit();
+        m.record_coalesced();
+        m.set_cache_size(1);
+        let s = m.snapshot();
+        assert_eq!((s.cache_hits, s.cache_misses, s.coalesced, s.cache_size), (2, 1, 1, 1));
+        assert_eq!(s.answered(), s.admitted, "hits/coalesced never touch the core invariant");
+        assert_eq!(s.served(), 4, "1 answered + 2 hits + 1 coalesced");
+        assert!(
+            s.report().contains("cache[hits=2 misses=1 coalesced=1 size=1]"),
+            "{}",
+            s.report()
+        );
+        m.set_cache_size(0);
+        assert_eq!(m.snapshot().cache_size, 0, "size is a gauge, not a counter");
     }
 
     #[test]

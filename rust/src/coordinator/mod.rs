@@ -10,22 +10,38 @@
 //! [`Response`] whose [`ResponseStatus`] is `Ok`, `Error`, `Expired`, or
 //! `Cancelled`.
 //!
+//! Submission runs a staged **ingress chain** ([`ingress`]): each
+//! [`IngressStage`] can *shed* (typed rejection), *answer* immediately
+//! (cache hit / coalesced attach — no admission slot, no batch seat), or
+//! *continue*. The default chain `[breaker, admission]` is the
+//! pre-cache behavior, bitwise; [`ServerConfig::cache`] prepends the
+//! exact response cache ([`cache`]).
+//!
 //! ```text
 //!            ServingService::submit_with(model, inputs, SubmitOptions)
-//! client ─▶ breaker ─▶ admission ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ InferenceBackend
-//!    ▲      (health    (per-class       (priority seed,   │      (pre-exec shed:     │
-//!    │       shed)      budgets)         shed expired/    │       cancel/deadline    │
-//!  Ticket                                cancelled)       │       re-check)          │
-//!  wait/poll/cancel                            metrics ◀──┴───────────┴──────────────┘
-//!    ▲                                 ▲
-//!    │ Ticket::try_take (reply pump)   │ conns / frames / malformed
-//!  ┌─┴─────────────────────────────────┴─┐
-//!  │ net::NetServer  (socket boundary)   │   reader + reply pump per conn;
-//!  │   TCP frames ⇄ submit_with/Ticket   │   drain hook: srv.on_shutdown(
-//!  └───▲───────────────────────────────┬─┘     move || net.shutdown())
-//!      │ length-prefixed frames (wire) │
-//!   net::NetClient / net::loadgen  ◀───┘   remote clients over TCP
+//!            ┌───────── ingress chain ──────────┐
+//! client ─▶ [cache?] ─▶ [breaker] ─▶ [admission] ─▶ queue ─▶ batcher ─▶ router ─▶ worker pool ─▶ InferenceBackend
+//!    ▲        │  │       (health      (per-class       (priority seed,   │      (pre-exec shed:     │
+//!    │  hit ──┘  │        shed)        budgets)         shed expired/    │       cancel/deadline    │
+//!    │  (exact,  └─ coalesce: attach to               cancelled)       │       re-check)          │
+//!  Ticket (bitwise)  identical in-flight leader;           metrics ◀───┴───────────┴──────────────┘
+//!  wait/poll/cancel  leader's ReplySlot fans out       ▲
+//!    ▲               one reply to all waiters          │ conns / frames / malformed
+//!    │ Ticket::try_take (reply pump)                   │
+//!  ┌─┴─────────────────────────────────────────────────┴─┐
+//!  │ net::NetServer  (socket boundary)                   │   reader + reply pump per conn;
+//!  │   TCP frames ⇄ submit_with/Ticket                   │   drain hook: srv.on_shutdown(
+//!  └───▲───────────────────────────────────────────────┬─┘     move || net.shutdown())
+//!      │ length-prefixed frames (wire)                 │
+//!   net::NetClient / net::loadgen  ◀───────────────────┘   remote clients over TCP
 //! ```
+//!
+//! Cache hits and coalesced attaches are answered without being
+//! admitted, so the core accounting invariant `answered() == admitted`
+//! is untouched; the extended identity is
+//! `served() == answered() + cache_hits + coalesced`
+//! ([`MetricsSnapshot::served`]). A hit's `served_by` reads
+//! `cache:<artifact>` end to end, including over the wire.
 //!
 //! **Supervision (fault path).** Each worker executes every batch inside a
 //! `catch_unwind` fence; a backend panic answers the batch's unanswered
@@ -63,7 +79,9 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod cache;
 pub mod health;
+pub mod ingress;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -71,10 +89,16 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionDecision};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use cache::{CacheConfig, ResponseCache};
 pub use health::{Breaker, BreakerConfig, BreakerState, BreakerVerdict};
+pub use ingress::{
+    AdmissionGate, BreakerGate, ChainOutcome, IngressChain, IngressRequest, IngressStage,
+    ReplyAttachment, StageOutcome,
+};
 pub use metrics::{ClassStats, Metrics, MetricsSnapshot, NetStats};
 pub use request::{
-    Priority, ReplySlot, Request, RequestId, Response, ResponseStatus, SubmitOptions, Ticket,
+    AttachOutcome, Priority, ReplySlot, Request, RequestId, Response, ResponseStatus, SharedReply,
+    SubmitOptions, Ticket,
 };
 pub use router::{Placement, Router, RoutingPolicy};
 pub use server::{Server, ServerConfig, ServerHandle, ServingService};

@@ -19,8 +19,8 @@
 //!   `Cancelled`) replacing the old `ok: bool` + `Option<String>` pair.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::backend::Value;
@@ -154,11 +154,22 @@ pub struct Request {
 pub struct ReplySlot {
     tx: Sender<Response>,
     answered: Arc<AtomicBool>,
+    /// optional coalescing fan-out: when present, the winning send also
+    /// settles the [`SharedReply`], delivering per-waiter clones of the
+    /// same response to every attached follower (and recording it for
+    /// the response cache to promote)
+    fanout: Option<Arc<SharedReply>>,
 }
 
 impl ReplySlot {
     pub fn new(tx: Sender<Response>) -> ReplySlot {
-        ReplySlot { tx, answered: Arc::new(AtomicBool::new(false)) }
+        ReplySlot { tx, answered: Arc::new(AtomicBool::new(false)), fanout: None }
+    }
+
+    /// A slot whose winning send also settles `fanout` — how a coalescing
+    /// leader's single reply reaches every attached follower.
+    pub fn with_fanout(tx: Sender<Response>, fanout: Arc<SharedReply>) -> ReplySlot {
+        ReplySlot { tx, answered: Arc::new(AtomicBool::new(false)), fanout: Some(fanout) }
     }
 
     /// Deliver the response if this slot (across all clones) has not
@@ -172,6 +183,9 @@ impl ReplySlot {
         if self.answered.swap(true, Ordering::AcqRel) {
             return false;
         }
+        if let Some(fanout) = &self.fanout {
+            fanout.settle(&resp);
+        }
         let _ = self.tx.send(resp);
         true
     }
@@ -179,6 +193,120 @@ impl ReplySlot {
     /// Whether some clone of this slot already answered.
     pub fn is_answered(&self) -> bool {
         self.answered.load(Ordering::Acquire)
+    }
+}
+
+/// Multi-waiter fan-out for one in-flight reply — the mechanism under
+/// single-flight request coalescing (`coordinator::cache`).
+///
+/// One *leader* request executes; any number of *followers* [`attach`]
+/// while it is in flight. The leader's [`ReplySlot::send`] settles this
+/// object exactly once, delivering each follower a clone of the same
+/// response stamped with the follower's own [`RequestId`]. Followers hold
+/// ordinary [`Ticket`]s with **independent** `cancelled` flags, so a
+/// follower cancelling or timing out never disturbs the leader (the flag
+/// is simply not wired into the execution pipeline — coalesced cancel is
+/// a no-op once attached, and the follower still receives the leader's
+/// outcome, consistent with the cooperative-cancel contract: work that
+/// completes anyway answers `Ok`).
+///
+/// A leader whose submission fails to enqueue (post-registration shed,
+/// channel closed at shutdown) [`abort`]s instead: every attached
+/// follower is answered with a typed [`ResponseStatus::Error`], never
+/// left hanging.
+///
+/// [`attach`]: SharedReply::attach
+/// [`abort`]: SharedReply::abort
+#[derive(Debug, Default)]
+pub struct SharedReply {
+    inner: Mutex<SharedInner>,
+}
+
+#[derive(Debug, Default)]
+struct SharedInner {
+    waiters: Vec<(RequestId, Sender<Response>)>,
+    /// the leader's response + when it settled (TTL anchor for the cache)
+    settled: Option<(Response, Instant)>,
+    aborted: Option<String>,
+}
+
+/// What [`SharedReply::attach`] found.
+#[derive(Debug)]
+pub enum AttachOutcome {
+    /// Still in flight: the follower waits on this receiver.
+    Attached(Receiver<Response>),
+    /// Already settled with this response at this instant.
+    Settled(Response, Instant),
+    /// The leader never enqueued; the reason it was dropped.
+    Aborted(String),
+}
+
+impl SharedReply {
+    pub fn new() -> SharedReply {
+        SharedReply::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, SharedInner> {
+        // poison-recovering: a follower panicking mid-attach must not
+        // strand every other waiter on this reply
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Register one follower (identified by its own fresh `id`), or
+    /// report the already-settled/aborted outcome. Atomic with respect to
+    /// [`settle`](SharedReply::settle): a follower either receives the
+    /// response through its channel or sees it here — never neither.
+    pub fn attach(&self, id: RequestId) -> AttachOutcome {
+        let mut inner = self.lock();
+        if let Some((resp, at)) = &inner.settled {
+            return AttachOutcome::Settled(resp.clone(), *at);
+        }
+        if let Some(msg) = &inner.aborted {
+            return AttachOutcome::Aborted(msg.clone());
+        }
+        let (tx, rx) = channel();
+        inner.waiters.push((id, tx));
+        AttachOutcome::Attached(rx)
+    }
+
+    /// Whether the leader is still in flight (not settled, not aborted).
+    pub fn is_pending(&self) -> bool {
+        let inner = self.lock();
+        inner.settled.is_none() && inner.aborted.is_none()
+    }
+
+    /// The settled response, when there is one (cache promotion probe).
+    pub fn settled(&self) -> Option<(Response, Instant)> {
+        self.lock().settled.clone()
+    }
+
+    /// Deliver the leader's response to every attached follower (each
+    /// clone re-stamped with the follower's own id) and record it.
+    /// Idempotent; called by the winning [`ReplySlot::send`].
+    pub(crate) fn settle(&self, resp: &Response) {
+        let mut inner = self.lock();
+        if inner.settled.is_some() || inner.aborted.is_some() {
+            return;
+        }
+        for (id, tx) in inner.waiters.drain(..) {
+            let mut r = resp.clone();
+            r.id = id;
+            let _ = tx.send(r);
+        }
+        inner.settled = Some((resp.clone(), Instant::now()));
+    }
+
+    /// The leader's submission never enqueued: answer every attached
+    /// follower with a typed error so no coalesced ticket hangs.
+    pub(crate) fn abort(&self, msg: &str) {
+        let mut inner = self.lock();
+        if inner.settled.is_some() || inner.aborted.is_some() {
+            return;
+        }
+        for (id, tx) in inner.waiters.drain(..) {
+            let _ = tx.send(Response::error(id, msg));
+        }
+        inner.aborted = Some(msg.to_string());
     }
 }
 
@@ -511,6 +639,89 @@ mod tests {
         );
         assert!(slot.is_answered());
         assert!(!slot.send(Response::expired(RequestId(2))), "slot consumed");
+    }
+
+    #[test]
+    fn shared_reply_settle_fans_out_with_per_waiter_ids() {
+        let sr = Arc::new(SharedReply::new());
+        assert!(sr.is_pending());
+        let rx_a = match sr.attach(RequestId(10)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        let rx_b = match sr.attach(RequestId(11)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        let mut leader = Response::error(RequestId(1), "x");
+        leader.status = ResponseStatus::Ok;
+        leader.outputs = vec![Value::F32(vec![0.5, -0.5])];
+        sr.settle(&leader);
+        sr.settle(&leader); // idempotent
+        assert!(!sr.is_pending());
+        let a = rx_a.recv().unwrap();
+        let b = rx_b.recv().unwrap();
+        assert_eq!(a.id, RequestId(10), "follower keeps its own id");
+        assert_eq!(b.id, RequestId(11));
+        assert_eq!(a.logits(), leader.logits());
+        assert_eq!(b.logits(), leader.logits());
+        assert!(rx_a.try_recv().is_err(), "exactly one response per follower");
+        let (resp, _at) = sr.settled().unwrap();
+        assert_eq!(resp.id, RequestId(1), "recorded response keeps the leader id");
+    }
+
+    #[test]
+    fn shared_reply_attach_after_settle_sees_the_response() {
+        let sr = SharedReply::new();
+        let mut leader = Response::error(RequestId(1), "x");
+        leader.status = ResponseStatus::Ok;
+        sr.settle(&leader);
+        match sr.attach(RequestId(2)) {
+            AttachOutcome::Settled(resp, _at) => assert!(resp.is_ok()),
+            other => panic!("expected Settled, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shared_reply_abort_answers_every_follower_typed() {
+        let sr = SharedReply::new();
+        let rx = match sr.attach(RequestId(5)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        sr.abort("request was not enqueued");
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, RequestId(5));
+        assert_eq!(r.error_message(), Some("request was not enqueued"));
+        match sr.attach(RequestId(6)) {
+            AttachOutcome::Aborted(msg) => assert_eq!(msg, "request was not enqueued"),
+            other => panic!("expected Aborted, got {other:?}"),
+        }
+        // abort after abort, settle after abort: both no-ops
+        sr.abort("second");
+        sr.settle(&Response::error(RequestId(1), "late"));
+        assert!(sr.settled().is_none());
+    }
+
+    #[test]
+    fn reply_slot_with_fanout_settles_followers_exactly_once() {
+        let sr = Arc::new(SharedReply::new());
+        let follower = match sr.attach(RequestId(21)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        let (tx, rx) = channel();
+        let slot = ReplySlot::with_fanout(tx, sr.clone());
+        let fence = slot.clone();
+        let mut resp = Response::error(RequestId(20), "x");
+        resp.status = ResponseStatus::Ok;
+        assert!(slot.send(resp.clone()));
+        assert!(!fence.send(Response::error(RequestId(20), "fence")), "still exactly-once");
+        assert!(rx.recv().unwrap().is_ok(), "leader got the real answer");
+        let f = follower.recv().unwrap();
+        assert!(f.is_ok());
+        assert_eq!(f.id, RequestId(21));
+        assert!(sr.settled().is_some(), "cache can promote the settled response");
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! surface.
 //!
 //! Wire-up (std threads, no async runtime in this environment):
-//! * clients submit through [`ServingService::submit_with`] (admission
-//!   happens there) and hold the returned [`Ticket`];
+//! * clients submit through [`ServingService::submit_with`], which runs
+//!   the staged [`ingress`](super::ingress) chain (optional response
+//!   cache, breaker gate, admission) and holds the returned [`Ticket`];
 //! * one batcher thread forms [`Batch`]es — priority-aware, shedding
 //!   cancelled/expired requests at formation time;
 //! * `workers` threads pull batches from a shared channel, re-check the
@@ -37,7 +38,12 @@ use std::time::Instant;
 
 use super::admission::{Admission, AdmissionDecision};
 use super::batcher::{Batch, BatcherConfig, DynamicBatcher};
-use super::health::{Breaker, BreakerConfig, BreakerState, BreakerVerdict};
+use super::cache::{CacheConfig, ResponseCache};
+use super::health::{Breaker, BreakerConfig, BreakerState};
+use super::ingress::{
+    AdmissionGate, BreakerGate, ChainOutcome, IngressChain, IngressRequest, IngressStage,
+    ReplyAttachment,
+};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{
     Priority, ReplySlot, Request, RequestId, Response, SubmitOptions, Ticket,
@@ -55,6 +61,11 @@ pub struct ServerConfig {
     /// only trips on a sustained consecutive-failure streak, so healthy
     /// stacks never notice it).
     pub breaker: BreakerConfig,
+    /// Exact response cache + single-flight coalescing
+    /// ([`ResponseCache`]), installed as the first ingress stage when
+    /// set. `None` (the default) leaves the ingress chain exactly
+    /// `[breaker, admission]` — pre-cache behavior, bitwise.
+    pub cache: Option<CacheConfig>,
 }
 
 impl Default for ServerConfig {
@@ -64,6 +75,7 @@ impl Default for ServerConfig {
             workers: 2,
             max_inflight: 256,
             breaker: BreakerConfig::default(),
+            cache: None,
         }
     }
 }
@@ -132,6 +144,9 @@ pub struct ServerHandle {
     breaker: Arc<Breaker>,
     pub metrics: Arc<Metrics>,
     next_id: Arc<std::sync::atomic::AtomicU64>,
+    /// the staged front door: `[cache?, breaker, admission]` — see
+    /// [`ingress`](super::ingress)
+    chain: Arc<IngressChain>,
 }
 
 impl ServingService for ServerHandle {
@@ -142,21 +157,19 @@ impl ServingService for ServerHandle {
         opts: SubmitOptions,
     ) -> Result<Ticket, AdmissionDecision> {
         let class = opts.priority;
-        // Health gate first: a breaker shed consumes neither an admission
-        // slot nor an `admitted` count, so `answered() == admitted` holds
-        // straight through a degraded window.
-        if self.breaker.admit(class) == BreakerVerdict::Shed {
-            self.metrics.record_breaker_shed();
-            return Err(AdmissionDecision::RejectUnhealthy(class));
-        }
-        match self.admission.try_admit(class) {
-            AdmissionDecision::Admit => {}
-            other => {
-                self.metrics.record_rejected();
-                return Err(other);
+        // Run the ingress chain. `Shed`/`Answer` short-circuit (typed
+        // rejection / cache hit or coalesced attach); `Proceed` means the
+        // terminal AdmissionGate passed — this submission now holds an
+        // admission slot and an `admitted` count, optionally carrying a
+        // coalescing-leader attachment installed by the cache stage.
+        let attachment = {
+            let req = IngressRequest { model, inputs: &inputs, opts: &opts };
+            match self.chain.run(&req) {
+                ChainOutcome::Shed(d) => return Err(d),
+                ChainOutcome::Answer(t) => return Ok(t),
+                ChainOutcome::Proceed(a) => a,
             }
-        }
-        self.metrics.record_admitted(class);
+        };
         let id = RequestId(
             self.next_id
                 .fetch_add(1, std::sync::atomic::Ordering::Relaxed),
@@ -164,6 +177,12 @@ impl ServingService for ServerHandle {
         let (rtx, rrx) = channel();
         let cancelled = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let now = Instant::now();
+        let (reply, on_abort) = match attachment {
+            Some(ReplyAttachment { fanout, on_abort }) => {
+                (ReplySlot::with_fanout(rtx, fanout), Some(on_abort))
+            }
+            None => (ReplySlot::new(rtx), None),
+        };
         let req = Request {
             id,
             model: Arc::from(model),
@@ -173,17 +192,22 @@ impl ServingService for ServerHandle {
             deadline: opts.deadline.map(|d| now + d),
             cancelled: cancelled.clone(),
             client_tag: opts.client_tag.map(Arc::from),
-            reply: ReplySlot::new(rtx),
+            reply,
         };
         // channel send can only fail after shutdown; surface as queue-full
         // AND fix the books: the request was never enqueued, so it is a
         // rejection — back out the admitted count (the old code left
         // `admitted` incremented here, skewing admitted vs
-        // completed+rejected forever after a shutdown race).
+        // completed+rejected forever after a shutdown race). A coalescing
+        // leader also tears down its cache registration so attached
+        // followers get a typed error instead of hanging.
         if self.tx.send(req).is_err() {
             self.admission.complete(class);
             self.metrics.unrecord_admitted(class);
             self.metrics.record_rejected();
+            if let Some(abort) = on_abort {
+                abort();
+            }
             return Err(AdmissionDecision::RejectQueueFull(class));
         }
         Ok(Ticket::new(id, class, rrx, cancelled))
@@ -198,26 +222,44 @@ impl ServingService for ServerHandle {
     }
 }
 
+/// Generate inherent mirrors of the [`ServingService`] methods on a
+/// concrete handle type, each one a literal delegation to the trait
+/// method of the same name — so call sites holding the concrete type
+/// don't need the trait in scope, and the two surfaces cannot drift
+/// (there is exactly one body per method, in the trait impl).
+macro_rules! mirror_serving_service {
+    ($ty:ty) => {
+        impl $ty {
+            /// Inherent mirror of [`ServingService::submit_with`].
+            pub fn submit_with(
+                &self,
+                model: &str,
+                inputs: Vec<Value>,
+                opts: SubmitOptions,
+            ) -> Result<Ticket, AdmissionDecision> {
+                ServingService::submit_with(self, model, inputs, opts)
+            }
+
+            /// Inherent mirror of [`ServingService::submit`].
+            pub fn submit(
+                &self,
+                model: &str,
+                inputs: Vec<Value>,
+            ) -> Result<Ticket, AdmissionDecision> {
+                ServingService::submit(self, model, inputs)
+            }
+
+            /// Inherent mirror of [`ServingService::metrics_snapshot`].
+            pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+                ServingService::metrics_snapshot(self)
+            }
+        }
+    };
+}
+
+mirror_serving_service!(ServerHandle);
+
 impl ServerHandle {
-    /// Inherent mirrors of the [`ServingService`] methods, so call sites
-    /// holding a concrete handle don't need the trait in scope.
-    pub fn submit_with(
-        &self,
-        model: &str,
-        inputs: Vec<Value>,
-        opts: SubmitOptions,
-    ) -> Result<Ticket, AdmissionDecision> {
-        ServingService::submit_with(self, model, inputs, opts)
-    }
-
-    pub fn submit(&self, model: &str, inputs: Vec<Value>) -> Result<Ticket, AdmissionDecision> {
-        ServingService::submit(self, model, inputs)
-    }
-
-    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
-        ServingService::metrics_snapshot(self)
-    }
-
     /// Admission slots currently held (0 when the stack is idle) — the
     /// leak detector chaos tests assert on after a fault storm.
     pub fn inflight(&self) -> i64 {
@@ -250,6 +292,24 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let admission = Arc::new(Admission::depth_only(cfg.max_inflight));
         let breaker = Arc::new(Breaker::new(cfg.breaker));
+        // One id mint shared by the ingress chain and submit_with: cache
+        // hits and coalesced attaches get real unique RequestIds from the
+        // same sequence as admitted requests.
+        let next_id = Arc::new(std::sync::atomic::AtomicU64::new(1));
+        // Staged front door. Cache runs FIRST so hot keys are answered
+        // even while the breaker is degraded (a hit needs no backend);
+        // the [breaker, admission] tail is the pre-refactor path, bitwise.
+        let mut stages: Vec<Box<dyn IngressStage>> = Vec::new();
+        if let Some(ccfg) = cfg.cache.clone() {
+            stages.push(Box::new(ResponseCache::new(
+                ccfg,
+                metrics.clone(),
+                next_id.clone(),
+            )));
+        }
+        stages.push(Box::new(BreakerGate::new(breaker.clone(), metrics.clone())));
+        stages.push(Box::new(AdmissionGate::new(admission.clone(), metrics.clone())));
+        let chain = Arc::new(IngressChain::new(stages));
 
         let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let threads = Arc::new(Mutex::new(Vec::new()));
@@ -296,7 +356,8 @@ impl Server {
                 admission,
                 breaker,
                 metrics,
-                next_id: Arc::new(std::sync::atomic::AtomicU64::new(1)),
+                next_id,
+                chain,
             },
             threads,
             stop,
@@ -1041,6 +1102,7 @@ mod tests {
                     probe_after_sheds: 2,
                     close_after_probes: 1,
                 },
+                ..Default::default()
             },
             crate::fault::FaultPlan::new().with_error_burst(0, 3),
         );

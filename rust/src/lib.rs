@@ -47,13 +47,16 @@
 //!   [`coordinator::ServingService`] submission surface
 //!   ([`coordinator::SubmitOptions`] priority/deadline/tag,
 //!   [`coordinator::Ticket`] wait/poll/cancel handles, typed
-//!   [`coordinator::ResponseStatus`] outcomes), request router,
+//!   [`coordinator::ResponseStatus`] outcomes), a staged ingress
+//!   pipeline ([`coordinator::IngressStage`] chain: optional exact
+//!   response cache with single-flight coalescing
+//!   ([`coordinator::ResponseCache`], `--cache-entries`/`--cache-ttl-ms`),
+//!   breaker gate, per-class admission control), request router,
 //!   priority-aware dynamic batcher with deadline/cancel shedding,
-//!   per-class admission control, supervised worker pool (per-batch
-//!   panic fence + automatic respawn, so a panicking backend never
-//!   strands a ticket or shrinks capacity), a consecutive-failure
-//!   backend-health circuit breaker with typed retryable shedding
-//!   ([`coordinator::Breaker`]), metrics
+//!   supervised worker pool (per-batch panic fence + automatic respawn,
+//!   so a panicking backend never strands a ticket or shrinks capacity),
+//!   a consecutive-failure backend-health circuit breaker with typed
+//!   retryable shedding ([`coordinator::Breaker`]), metrics
 //!   ([`coordinator::MetricsSnapshot`]) — generic over any
 //!   [`backend::InferenceBackend`].
 //! * [`fault`] — deterministic seeded fault injection for all of the

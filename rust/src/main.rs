@@ -62,9 +62,11 @@ fn print_help() {
                      [--backend cpu|sim|echo] [--precision f32|int8]\n\
                      [--default-priority interactive|standard|bulk]\n\
                      [--deadline-ms D]\n\
+                     [--cache-entries N] [--cache-ttl-ms T]   (response cache)\n\
            net-serve [--addr 127.0.0.1:7450] [--backend cpu|sim|echo]\n\
                      [--precision f32|int8] [--policy max|dense|fixed:S]\n\
                      [--max-conns N] [--duration-s T]    (0 = run until killed)\n\
+                     [--cache-entries N] [--cache-ttl-ms T]   (response cache)\n\
            net-load  --addr HOST:PORT [--rate RPS] [--duration-s T]\n\
                      [--connections N] [--model M] [--seq LEN] [--seed S]\n\
                      [--mix interactive=0.2,standard=0.5,bulk=0.3]\n\
@@ -185,6 +187,27 @@ fn policy_from_args(args: &Args) -> anyhow::Result<s4::coordinator::RoutingPolic
     })
 }
 
+/// Response-cache config from `--cache-entries N` / `--cache-ttl-ms T`
+/// (shared by `serve` and `net-serve`). Either flag alone enables the
+/// cache with the other bound at its default; neither flag leaves it off
+/// (the ingress chain is then exactly the pre-cache `[breaker,
+/// admission]` path).
+fn cache_from_args(args: &Args) -> anyhow::Result<Option<s4::coordinator::CacheConfig>> {
+    let entries = args.get_usize("cache-entries", 0)?;
+    let ttl_ms = args.get_u64("cache-ttl-ms", 0)?;
+    if entries == 0 && ttl_ms == 0 {
+        return Ok(None);
+    }
+    let mut cfg = s4::coordinator::CacheConfig::default();
+    if entries > 0 {
+        cfg.max_entries = entries;
+    }
+    if ttl_ms > 0 {
+        cfg.ttl = std::time::Duration::from_millis(ttl_ms);
+    }
+    Ok(Some(cfg))
+}
+
 /// Backend from `--backend cpu|sim|echo` + `--precision` (shared by
 /// `serve` and `net-serve`).
 fn backend_from_args(
@@ -232,7 +255,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     let manifest = Manifest::load(&default_artifact_dir())?;
     let backend = backend_from_args(args, &manifest)?;
-    let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
+    let cfg = ServerConfig { cache: cache_from_args(args)?, ..Default::default() };
+    let srv = Server::start(cfg, manifest, Router::new(policy), backend);
     let h = srv.handle();
     let mut rng = s4::util::rng::Xoshiro256::seed_from_u64(7);
     let mut tickets = Vec::new();
@@ -279,7 +303,8 @@ fn cmd_net_serve(args: &Args) -> anyhow::Result<()> {
     let policy = policy_from_args(args)?;
     let manifest = Manifest::load(&default_artifact_dir())?;
     let backend = backend_from_args(args, &manifest)?;
-    let srv = Server::start(ServerConfig::default(), manifest, Router::new(policy), backend);
+    let cfg = ServerConfig { cache: cache_from_args(args)?, ..Default::default() };
+    let srv = Server::start(cfg, manifest, Router::new(policy), backend);
     let handle = Arc::new(srv.handle());
 
     let net_cfg = NetServerConfig {

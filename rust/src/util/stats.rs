@@ -1,4 +1,8 @@
-//! Descriptive statistics used by the bench harness and serving metrics.
+//! Descriptive statistics used by the bench harness and serving metrics,
+//! plus the seeded [`Zipf`] sampler the traffic generators draw hot-key
+//! distributions from.
+
+use crate::util::rng::Xoshiro256;
 
 /// Summary of a sample (times, latencies, ...). All values in the unit of
 /// the input.
@@ -191,6 +195,54 @@ impl LatencyHistogram {
     }
 }
 
+/// Zipf(s) distribution over ranks `0..n` — the shape of hot-key traffic
+/// from a large user population (rank k drawn with probability
+/// ∝ 1/(k+1)^s). Sampling is a binary search over the precomputed CDF,
+/// driven by any [`Xoshiro256`], so generated traffic is seeded and
+/// reproducible. `s = 0` degenerates to uniform; `s ≈ 1` is the classic
+/// web-traffic skew the response-cache bench sweeps.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    /// cdf[k] = P(rank ≤ k); last element pinned to exactly 1.0
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Zipf {
+        assert!(n > 0, "Zipf over an empty universe");
+        let mut cdf: Vec<f64> = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 0..n {
+            acc += 1.0 / ((k + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        // pin the top so u ∈ [0,1) can never fall past the last bucket
+        *cdf.last_mut().unwrap() = 1.0;
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn len(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // n > 0 by construction
+    }
+
+    /// Draw one rank in `0..len()`.
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let u = rng.next_f64();
+        self.cdf
+            .partition_point(|&c| c < u)
+            .min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -308,5 +360,68 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn summary_empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn zipf_shape_matches_the_power_law() {
+        // s = 1 over 50 ranks: P(0)/P(1) = 2 exactly; check the empirical
+        // ratio and the qualitative shape on a large seeded draw
+        let z = Zipf::new(50, 1.0);
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let mut counts = [0u64; 50];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let ratio = counts[0] as f64 / counts[1] as f64;
+        assert!((1.8..=2.2).contains(&ratio), "rank0/rank1 = {ratio}");
+        assert!(
+            counts[0] > counts[1] && counts[1] > counts[2] && counts[2] > counts[3],
+            "head must be strictly ordered: {:?}",
+            &counts[..4]
+        );
+        assert!(
+            counts[0] > 10 * counts[49],
+            "head must dwarf the tail: {} vs {}",
+            counts[0],
+            counts[49]
+        );
+        assert!(counts.iter().all(|&c| c > 0), "every rank reachable in 200k draws");
+    }
+
+    #[test]
+    fn zipf_s_zero_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut counts = [0u64; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let expect = n as f64 / 10.0;
+        for (k, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 0.1 * expect,
+                "rank {k}: {c} vs uniform {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn zipf_is_seed_deterministic_and_in_range() {
+        let z = Zipf::new(17, 1.3);
+        assert_eq!(z.len(), 17);
+        let draw = |seed| {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            (0..1000).map(|_| z.sample(&mut rng)).collect::<Vec<_>>()
+        };
+        let a = draw(123);
+        assert_eq!(a, draw(123), "same seed, same stream");
+        assert_ne!(a, draw(124), "different seed, different stream");
+        assert!(a.iter().all(|&k| k < 17));
+        // single-rank universe: every draw is rank 0
+        let one = Zipf::new(1, 2.0);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        assert!((0..100).all(|_| one.sample(&mut rng) == 0));
     }
 }

@@ -68,6 +68,7 @@ fn serial_cfg(breaker: BreakerConfig) -> ServerConfig {
         workers: 2,
         max_inflight: 32,
         breaker,
+        ..Default::default()
     }
 }
 
@@ -226,6 +227,76 @@ fn connection_chaos_is_invisible_to_healthy_traffic() {
 }
 
 #[test]
+fn worker_panic_mid_coalesced_flight_answers_every_waiter_typed() {
+    // The cache's single-flight contract under the worst fault: the
+    // worker executing a coalesced flight panics. Every waiter — the
+    // leader AND all attached followers — must receive the same typed
+    // error (no follower hangs on a dead flight), exactly one admission
+    // slot is released, and the failed flight is NOT cached: the next
+    // identical submission re-executes and succeeds.
+    use s4::coordinator::CacheConfig;
+
+    let m = manifest();
+    let inner: Arc<dyn InferenceBackend> = Arc::new(EchoBackend::from_manifest(&m));
+    let backend = Arc::new(FaultingBackend::new(inner, FaultPlan::new().with_panic_at(0)));
+    let srv = Server::start(
+        ServerConfig {
+            // wide batch window: the leader sits stashed while the
+            // followers attach, then call 0 panics under all four waiters
+            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(150) },
+            workers: 1,
+            max_inflight: 32,
+            cache: Some(CacheConfig::default()),
+            ..Default::default()
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+
+    let payload = || vec![Value::tokens(tokens(3))];
+    let leader = h.submit("bert_tiny", payload()).unwrap();
+    let followers: Vec<_> = (0..3).map(|_| h.submit("bert_tiny", payload()).unwrap()).collect();
+
+    let r = leader.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert!(!r.is_ok(), "leader of the panicked flight must fail typed");
+    assert!(
+        r.error_message().unwrap_or("").contains("worker panicked"),
+        "leader error: {:?}",
+        r.status
+    );
+    for (i, f) in followers.iter().enumerate() {
+        let r = f.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert!(!r.is_ok(), "follower {i} must share the flight's typed error");
+        assert!(
+            r.error_message().unwrap_or("").contains("worker panicked"),
+            "follower {i} error: {:?}",
+            r.status
+        );
+    }
+
+    let snap = h.metrics_snapshot();
+    assert_eq!(snap.admitted, 1, "one flight admitted: {}", snap.report());
+    assert_eq!(snap.coalesced, 3, "three followers attached: {}", snap.report());
+    assert_eq!(snap.answered(), snap.admitted, "no ticket lost: {}", snap.report());
+    assert_eq!(snap.served(), 4, "all four waiters answered: {}", snap.report());
+    assert_eq!(snap.cache_hits, 0, "a failed flight must never be cached");
+    assert_eq!(h.inflight(), 0, "exactly one admission slot released");
+
+    // the error is not replayed: the retry re-executes (fault plan only
+    // panics call 0) and succeeds with real logits
+    let retry = h.submit("bert_tiny", payload()).unwrap();
+    let r = retry.wait_timeout(Duration::from_secs(10)).unwrap();
+    assert!(r.is_ok(), "retry after the panicked flight: {:?}", r.status);
+    assert!(!r.logits().is_empty(), "retry must carry real output");
+    let snap = h.metrics_snapshot();
+    assert_eq!(snap.admitted, 2, "retry re-executes, not replayed: {}", snap.report());
+    assert_eq!(snap.cache_hits, 0, "{}", snap.report());
+    srv.shutdown();
+}
+
+#[test]
 fn every_submission_resolves_under_seeded_random_chaos() {
     // Property (PR 7 satellite): N submissions under a random mix of
     // injected panics/errors/slow calls, client cancels, and tight
@@ -259,6 +330,7 @@ fn every_submission_resolves_under_seeded_random_chaos() {
                     probe_after_sheds: 1,
                     close_after_probes: 1,
                 },
+                ..Default::default()
             },
             m,
             Router::new(RoutingPolicy::MaxSparsity),

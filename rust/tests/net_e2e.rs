@@ -13,8 +13,8 @@ use std::time::{Duration, Instant};
 
 use s4::backend::{CpuSparseBackend, Value};
 use s4::coordinator::{
-    AdmissionDecision, BatcherConfig, Metrics, MetricsSnapshot, Router, RoutingPolicy, Server,
-    ServerConfig, ServerHandle, ServingService, SubmitOptions, Ticket,
+    AdmissionDecision, BatcherConfig, CacheConfig, Metrics, MetricsSnapshot, Router,
+    RoutingPolicy, Server, ServerConfig, ServerHandle, ServingService, SubmitOptions, Ticket,
 };
 use s4::net::{
     read_frame, Frame, NetClient, NetServer, NetServerConfig, ReadEvent, WireStatus, MAGIC,
@@ -83,6 +83,62 @@ fn logits_over_the_socket_are_bitwise_identical_to_direct_submission() {
         bits(&direct_logits),
         "socket logits must be bit-for-bit the in-process logits"
     );
+
+    net.shutdown();
+    srv.shutdown();
+}
+
+#[test]
+fn cache_hits_are_transparent_over_the_wire() {
+    // The response cache sits below the socket boundary: a remote client
+    // repeating a payload gets a cache hit whose logits are bitwise
+    // identical to the executed response, distinguishable only by the
+    // `cache:`-prefixed served_by marker — the wire protocol needs no
+    // changes and no client cooperation.
+    let m = manifest();
+    let backend = Arc::new(CpuSparseBackend::from_manifest(&m));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+            workers: 2,
+            max_inflight: 64,
+            cache: Some(CacheConfig::default()),
+            ..Default::default()
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let handle = Arc::new(srv.handle());
+    let net =
+        NetServer::bind("127.0.0.1:0", handle.clone(), NetServerConfig::default()).unwrap();
+    let mut c = NetClient::connect(net.local_addr(), Duration::from_secs(10)).unwrap();
+
+    let ids = tokens(21);
+    let first = c.call("bert_tiny", vec![Value::tokens(ids.clone())]).unwrap();
+    assert!(first.is_ok(), "{:?}", first.status);
+    assert!(
+        !first.served_by.starts_with("cache:"),
+        "first submission must execute, served_by {:?}",
+        first.served_by
+    );
+
+    let second = c.call("bert_tiny", vec![Value::tokens(ids)]).unwrap();
+    assert!(second.is_ok(), "{:?}", second.status);
+    assert!(
+        second.served_by.starts_with("cache:"),
+        "repeat payload must be served from cache, served_by {:?}",
+        second.served_by
+    );
+    assert_eq!(
+        bits(second.logits()),
+        bits(first.logits()),
+        "cached logits over the wire must be bit-for-bit the executed logits"
+    );
+
+    let snap = handle.metrics_snapshot();
+    assert_eq!(snap.cache_hits, 1, "{}", snap.report());
+    assert_eq!(snap.admitted, 1, "the hit must not re-execute: {}", snap.report());
 
     net.shutdown();
     srv.shutdown();

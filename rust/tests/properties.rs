@@ -68,7 +68,9 @@ fn prop_batch_formation_never_seeds_past_a_stashed_interactive() {
     // higher-urgency request (for ANY model) is still stashed — and no
     // request is ever lost across batches
     use s4::backend::Value;
-    use s4::coordinator::{BatcherConfig, DynamicBatcher, Priority, Request, RequestId};
+    use s4::coordinator::{
+        BatcherConfig, DynamicBatcher, Priority, ReplySlot, Request, RequestId,
+    };
     use std::sync::atomic::AtomicBool;
     use std::sync::{mpsc, Arc};
     use std::time::{Duration, Instant};
@@ -90,7 +92,7 @@ fn prop_batch_formation_never_seeds_past_a_stashed_interactive() {
                 deadline: None,
                 cancelled: Arc::new(AtomicBool::new(false)),
                 client_tag: None,
-                reply: rtx,
+                reply: ReplySlot::new(rtx),
             };
             tx.send(r).map_err(|e| e.to_string())?;
             replies.push(rrx);
@@ -120,6 +122,108 @@ fn prop_batch_formation_never_seeds_past_a_stashed_interactive() {
             }
         }
         prop_assert!(total == n, "lost requests: batched {total} of {n}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coalesced_waiters_get_identical_outputs_exactly_one_execution() {
+    // the single-flight contract of the response cache: N concurrent
+    // identical submissions — one leader plus N-1 coalesced followers,
+    // some of whom cancel while the flight is pending — produce exactly
+    // one backend execution, and every waiter (cancelled or not; a
+    // coalesced cancel is a no-op once attached) receives an Ok response
+    // whose logits are bitwise identical to the leader's, stamped with
+    // its own request id. The ticket ledger stays exact: answered() ==
+    // admitted and served() == answered() + cache_hits + coalesced == N.
+    use s4::backend::{EchoBackend, Value};
+    use s4::coordinator::{
+        BatcherConfig, CacheConfig, Router, RoutingPolicy, Server, ServerConfig, Ticket,
+    };
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let manifest = Manifest::parse(
+        std::path::Path::new("/tmp"),
+        r#"{"artifacts": [
+          {"name": "m_s8_b1", "file": "x", "family": "bert",
+           "model": "m", "sparsity": 8, "batch": 1, "seq": 32,
+           "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+           "outputs": [{"shape": [1, 2], "dtype": "f32"}]}
+        ]}"#,
+    )
+    .unwrap();
+    check("cache single-flight coalescing", 20, |g: &mut Gen| {
+        let backend = Arc::new(EchoBackend::from_manifest(&manifest));
+        let srv = Server::start(
+            ServerConfig {
+                // batch window far above the submit burst, so every
+                // follower attaches while the leader is still stashed
+                batcher: BatcherConfig {
+                    max_batch: 16,
+                    max_wait: Duration::from_millis(100),
+                },
+                workers: 1,
+                max_inflight: 64,
+                cache: Some(CacheConfig::default()),
+                ..Default::default()
+            },
+            manifest.clone(),
+            Router::new(RoutingPolicy::MaxSparsity),
+            backend,
+        );
+        let h = srv.handle();
+
+        let n = g.usize_in(2, 8);
+        let payload = vec![Value::tokens(vec![g.usize_in(0, 996) as i32; 32])];
+        let mut tickets: Vec<Ticket> = Vec::with_capacity(n);
+        for _ in 0..n {
+            tickets.push(
+                h.submit("m", payload.clone())
+                    .map_err(|d| format!("rejected: {d:?}"))?,
+            );
+        }
+        // random follower cancels mid-flight (never the leader slot 0)
+        for t in tickets.iter().skip(1) {
+            if g.bool() {
+                t.cancel();
+            }
+        }
+
+        let mut bits: Vec<Vec<u32>> = Vec::with_capacity(n);
+        let mut ids = std::collections::HashSet::new();
+        for t in &tickets {
+            let r = t
+                .wait_timeout(Duration::from_secs(30))
+                .map_err(|e| e.to_string())?;
+            prop_assert!(r.is_ok(), "waiter failed: {:?} (n={n})", r.status);
+            prop_assert!(ids.insert(r.id), "duplicate response id {:?}", r.id);
+            let logits = r.logits();
+            prop_assert!(!logits.is_empty(), "waiter got empty logits (n={n})");
+            bits.push(logits.iter().map(|x| x.to_bits()).collect());
+        }
+        for b in &bits[1..] {
+            prop_assert!(b == &bits[0], "coalesced outputs diverge (n={n})");
+        }
+
+        let s = h.metrics_snapshot();
+        let inflight = h.inflight();
+        srv.shutdown();
+        prop_assert!(s.admitted == 1, "admitted {} != 1 (n={n})", s.admitted);
+        prop_assert!(s.completed == 1, "completed {} != 1 (n={n})", s.completed);
+        prop_assert!(
+            s.coalesced == (n - 1) as u64,
+            "coalesced {} != {} (n={n})",
+            s.coalesced,
+            n - 1
+        );
+        prop_assert!(
+            s.answered() == s.admitted,
+            "ticket ledger broken: {}",
+            s.report()
+        );
+        prop_assert!(s.served() == n as u64, "served {} != {n}", s.served());
+        prop_assert!(inflight == 0, "leaked admission slots: {inflight}");
         Ok(())
     });
 }

@@ -9,8 +9,8 @@ use std::time::Duration;
 
 use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, Value};
 use s4::coordinator::{
-    BatcherConfig, Priority, ResponseStatus, Router, RoutingPolicy, Server, ServerConfig,
-    ServingService, SubmitOptions,
+    BatcherConfig, CacheConfig, Priority, ResponseStatus, Router, RoutingPolicy, Server,
+    ServerConfig, ServingService, SubmitOptions,
 };
 use s4::runtime::Manifest;
 
@@ -314,5 +314,196 @@ fn shed_requests_release_admission_capacity() {
         s.admitted,
         "snapshot mirrors raw counters"
     );
+    srv.shutdown();
+}
+
+/// Echo server with the response cache enabled. `max_wait_ms` doubles as
+/// the coalescing window: with `max_batch` above the submission count,
+/// a leader sits in the batcher stash for up to `max_wait_ms` while
+/// identical followers attach to it.
+fn cached_server(max_batch: usize, max_wait_ms: u64, cache: CacheConfig) -> Server {
+    let m = manifest();
+    let backend = Arc::new(EchoBackend::from_manifest(&m));
+    Server::start(
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+            workers: 1,
+            max_inflight: 64,
+            cache: Some(cache),
+            ..Default::default()
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    )
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn cache_hit_returns_bitwise_identical_logits() {
+    let srv = cached_server(1, 1, CacheConfig::default());
+    let h = srv.handle();
+    let first = h
+        .submit("bert_tiny", vec![Value::tokens(tokens(5))])
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(first.is_ok(), "{:?}", first.status);
+    let second = h
+        .submit("bert_tiny", vec![Value::tokens(tokens(5))])
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(second.is_ok(), "{:?}", second.status);
+    assert!(
+        second.served_by.starts_with("cache:"),
+        "hit must be marked, got {:?}",
+        second.served_by
+    );
+    assert_eq!(
+        bits(first.logits()),
+        bits(second.logits()),
+        "cached logits must be bitwise-identical to the miss that populated them"
+    );
+    assert_ne!(first.id, second.id, "each caller keeps its own request id");
+    let s = h.metrics_snapshot();
+    assert_eq!((s.cache_hits, s.cache_misses), (1, 1), "{}", s.report());
+    assert_eq!(s.admitted, 1, "the hit never touched admission");
+    assert_eq!(s.answered(), s.admitted, "{}", s.report());
+    assert_eq!(s.served(), 2, "one executed + one hit");
+    assert_eq!(s.cache_size, 1);
+    // a different payload is a miss, not a collision
+    let other = h
+        .submit("bert_tiny", vec![Value::tokens(tokens(6))])
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(!other.served_by.starts_with("cache:"));
+    srv.shutdown();
+}
+
+#[test]
+fn coalesced_followers_share_one_execution() {
+    // max_batch 8 with a 200 ms fill window: the leader sits in the
+    // batcher stash while identical followers attach through the cache
+    let srv = cached_server(8, 200, CacheConfig::default());
+    let h = srv.handle();
+    let leader = h.submit("bert_tiny", vec![Value::tokens(tokens(7))]).unwrap();
+    let followers: Vec<_> = (0..3)
+        .map(|_| h.submit("bert_tiny", vec![Value::tokens(tokens(7))]).unwrap())
+        .collect();
+    let lead_resp = leader.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert!(lead_resp.is_ok(), "{:?}", lead_resp.status);
+    for f in &followers {
+        let r = f.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.is_ok(), "{:?}", r.status);
+        assert_eq!(r.id, f.id(), "follower keeps its own id");
+        assert_eq!(
+            bits(r.logits()),
+            bits(lead_resp.logits()),
+            "every coalesced waiter gets the leader's bits"
+        );
+    }
+    let s = h.metrics_snapshot();
+    assert_eq!(s.coalesced, 3, "{}", s.report());
+    assert_eq!(s.admitted, 1, "exactly one backend execution admitted");
+    assert_eq!(s.completed, 1, "{}", s.report());
+    assert_eq!(s.answered(), s.admitted, "{}", s.report());
+    assert_eq!(s.served(), 4);
+    assert_eq!(h.inflight(), 0);
+    srv.shutdown();
+}
+
+#[test]
+fn follower_cancel_does_not_disturb_the_leader() {
+    let srv = cached_server(8, 200, CacheConfig::default());
+    let h = srv.handle();
+    let leader = h.submit("bert_tiny", vec![Value::tokens(tokens(8))]).unwrap();
+    let follower = h.submit("bert_tiny", vec![Value::tokens(tokens(8))]).unwrap();
+    // cancel the follower while the leader is still stashed: a coalesced
+    // cancel is a no-op — it must not propagate to the leader's flag
+    follower.cancel();
+    assert!(follower.is_cancelled());
+    let lead_resp = leader.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert!(
+        lead_resp.is_ok(),
+        "follower cancel must not shed the leader: {:?}",
+        lead_resp.status
+    );
+    // the follower still receives the leader's outcome (work that
+    // completes anyway answers Ok — the cooperative-cancel contract)
+    let f_resp = follower.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert!(f_resp.is_ok(), "{:?}", f_resp.status);
+    let s = h.metrics_snapshot();
+    assert_eq!(s.cancelled, 0, "nothing was shed: {}", s.report());
+    assert_eq!((s.admitted, s.coalesced), (1, 1));
+    srv.shutdown();
+}
+
+#[test]
+fn ttl_zero_always_re_executes() {
+    let srv = cached_server(1, 1, CacheConfig { ttl: Duration::ZERO, ..CacheConfig::default() });
+    let h = srv.handle();
+    for _ in 0..2 {
+        let r = h
+            .submit("bert_tiny", vec![Value::tokens(tokens(9))])
+            .unwrap()
+            .wait_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert!(r.is_ok(), "{:?}", r.status);
+        assert!(!r.served_by.starts_with("cache:"), "ttl=0 disables reuse");
+    }
+    let s = h.metrics_snapshot();
+    assert_eq!(s.admitted, 2, "both executed: {}", s.report());
+    assert_eq!(s.cache_hits, 0);
+    assert_eq!(s.cache_misses, 2);
+    srv.shutdown();
+}
+
+#[test]
+fn cache_never_replays_an_error_response() {
+    // backend errors on its first call only: the error must answer the
+    // first caller but never be served from the cache to the second
+    let m = manifest();
+    let backend = Arc::new(s4::fault::FaultingBackend::new(
+        Arc::new(EchoBackend::from_manifest(&m)) as Arc<dyn InferenceBackend>,
+        s4::fault::FaultPlan::new().with_error_burst(0, 1),
+    ));
+    let srv = Server::start(
+        ServerConfig {
+            batcher: BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) },
+            workers: 1,
+            max_inflight: 8,
+            cache: Some(CacheConfig::default()),
+            ..Default::default()
+        },
+        m,
+        Router::new(RoutingPolicy::MaxSparsity),
+        backend,
+    );
+    let h = srv.handle();
+    let first = h
+        .submit("bert_tiny", vec![Value::tokens(tokens(3))])
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(!first.is_ok(), "fault must surface to the first caller");
+    let second = h
+        .submit("bert_tiny", vec![Value::tokens(tokens(3))])
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(second.is_ok(), "the error was not cached: {:?}", second.status);
+    assert!(!second.served_by.starts_with("cache:"), "re-executed, not replayed");
+    let s = h.metrics_snapshot();
+    assert_eq!(s.cache_hits, 0, "{}", s.report());
+    assert_eq!(s.admitted, 2);
+    assert_eq!(s.answered(), s.admitted, "{}", s.report());
     srv.shutdown();
 }
