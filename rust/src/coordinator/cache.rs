@@ -23,8 +23,19 @@
 //!   reply. Followers hold ordinary [`Ticket`]s with independent cancel
 //!   flags; a follower cancelling never disturbs the leader.
 //!
-//! Bounded by TTL + `max_entries` (stale and settled entries are evicted
-//! first; pending leaders are never evicted — when the map is full of
+//! A coalesced follower's own `SubmitOptions::deadline` is **not**
+//! enforced: the follower never enters the batcher/worker pipeline, so
+//! deadline shedding does not apply to it and `Ticket::wait` resolves
+//! whenever the leader settles, however long that takes. Callers that
+//! need a hard local bound should use [`Ticket::wait_timeout`]. The
+//! converse also holds: a leader shed for *its* cancel/deadline settles
+//! followers with a distinct retryable error rather than a
+//! `Cancelled`/`Expired` they did not cause (see [`SharedReply::settle`]).
+//!
+//! Bounded by TTL + `max_entries` (stale entries and settled-non-`Ok`
+//! flights are evicted first — a settled-`Ok` flight is *promoted* to a
+//! resolved entry rather than discarded, then the oldest resolved entry
+//! goes; pending leaders are never evicted — when the map is full of
 //! them, a newcomer simply proceeds uncoalesced). Only `Ok` responses
 //! are ever served from the cache: errors, expirations, and
 //! cancellations settle their followers but are dropped from the map, so
@@ -177,17 +188,39 @@ impl ResponseCache {
         r
     }
 
-    /// Evict entries to make room for one more: first anything stale,
-    /// settled, or aborted; then the oldest resolved entry. Pending
-    /// leaders are never evicted. Returns whether an insert now fits.
+    /// Evict entries to make room for one more: settled-`Ok` in-flight
+    /// entries are *promoted* to `Resolved` (they are values the stack
+    /// just paid to compute — discarding them would gut the hit rate;
+    /// they stay TTL-bound and evictable like any resolved entry), while
+    /// stale resolved entries and settled-non-`Ok`/aborted flights are
+    /// dropped; then, if still full, the oldest resolved entry goes.
+    /// Pending leaders are never evicted. Returns whether an insert now
+    /// fits.
     fn make_room(map: &mut HashMap<CacheKey, Entry>, cfg: &CacheConfig, now: Instant) -> bool {
         if map.len() < cfg.max_entries {
             return true;
         }
-        map.retain(|_, e| match e {
+        let mut promotions: Vec<(CacheKey, Response, Instant)> = Vec::new();
+        map.retain(|k, e| match e {
             Entry::Resolved { at, .. } => now.duration_since(*at) < cfg.ttl,
-            Entry::InFlight(sr) => sr.is_pending(),
+            Entry::InFlight(sr) => {
+                if sr.is_pending() {
+                    return true;
+                }
+                match sr.settled() {
+                    Some((resp, at))
+                        if resp.is_ok() && now.duration_since(at) < cfg.ttl =>
+                    {
+                        promotions.push((k.clone(), resp, at));
+                        true
+                    }
+                    _ => false,
+                }
+            }
         });
+        for (k, resp, at) in promotions {
+            map.insert(k, Entry::Resolved { resp: Self::promote(&resp), at });
+        }
         if map.len() < cfg.max_entries {
             return true;
         }
@@ -226,7 +259,9 @@ impl IngressStage for ResponseCache {
             Some(Entry::Resolved { resp, at }) => {
                 if now.duration_since(*at) < self.inner.cfg.ttl {
                     let t = self.hit_ticket(resp, req);
+                    let len = map.len();
                     drop(map);
+                    self.publish_size(len);
                     self.inner.metrics.record_cache_hit();
                     return StageOutcome::Answer(t);
                 }
@@ -250,22 +285,20 @@ impl IngressStage for ResponseCache {
                     }
                     AttachOutcome::Settled(resp, at) => {
                         // leader finished between enqueue and our probe
-                        if resp.is_ok() {
+                        if resp.is_ok() && now.duration_since(at) < self.inner.cfg.ttl {
                             let promoted = Self::promote(&resp);
-                            map.insert(
-                                key,
-                                Entry::Resolved { resp: promoted.clone(), at },
-                            );
-                            if now.duration_since(at) < self.inner.cfg.ttl {
-                                let t = self.hit_ticket(&promoted, req);
-                                drop(map);
-                                self.inner.metrics.record_cache_hit();
-                                return StageOutcome::Answer(t);
-                            }
-                        } else {
-                            // faults are never replayed from the cache
-                            map.remove(&key);
+                            let t = self.hit_ticket(&promoted, req);
+                            map.insert(key, Entry::Resolved { resp: promoted, at });
+                            let len = map.len();
+                            drop(map);
+                            self.publish_size(len);
+                            self.inner.metrics.record_cache_hit();
+                            return StageOutcome::Answer(t);
                         }
+                        // stale Ok (e.g. ttl = 0), error, expired,
+                        // cancelled: never replayed — drop the settled
+                        // flight and fall through to a fresh miss.
+                        map.remove(&key);
                     }
                     AttachOutcome::Aborted(_) => {
                         map.remove(&key);
@@ -491,6 +524,34 @@ mod tests {
         match c.admit(&ireq("m", &a, &opts)) {
             StageOutcome::Continue(_) => {} // a was evicted → miss
             other => panic!("expected a evicted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn full_map_promotes_settled_ok_flights_instead_of_discarding() {
+        // two settled-Ok flights fill the map; a third key arriving must
+        // not throw both just-computed values away — the newer one is
+        // promoted to a resolved entry and still serves a hit
+        let c = cache(2, Duration::from_secs(60));
+        let a = [Value::I32(vec![1])];
+        let b = [Value::I32(vec![2])];
+        let x = [Value::I32(vec![3])];
+        let sr_a = lead(&c, "m", &a);
+        let sr_b = lead(&c, "m", &b);
+        sr_a.settle(&ok_response(1, vec![1.0]));
+        std::thread::sleep(Duration::from_millis(1)); // order the settle stamps
+        sr_b.settle(&ok_response(2, vec![2.0]));
+        let _sr_x = lead(&c, "m", &x);
+        assert_eq!(c.len(), 2, "oldest promoted entry evicted, newest kept");
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq("m", &b, &opts)) {
+            StageOutcome::Answer(t) => {
+                let r = t.wait().unwrap();
+                assert!(r.is_ok());
+                assert_eq!(&*r.served_by, "cache:bert_tiny_s8_b1");
+                assert_eq!(r.logits(), &[2.0]);
+            }
+            other => panic!("settled-Ok flight must be promoted, got {other:?}"),
         }
     }
 

@@ -98,7 +98,7 @@ pub use ingress::{
 pub use metrics::{ClassStats, Metrics, MetricsSnapshot, NetStats};
 pub use request::{
     AttachOutcome, Priority, ReplySlot, Request, RequestId, Response, ResponseStatus, SharedReply,
-    SubmitOptions, Ticket,
+    SubmitOptions, Ticket, COALESCED_LEADER_CANCELLED, COALESCED_LEADER_EXPIRED,
 };
 pub use router::{Placement, Router, RoutingPolicy};
 pub use server::{Server, ServerConfig, ServerHandle, ServingService};

@@ -210,6 +210,13 @@ impl ReplySlot {
 /// outcome, consistent with the cooperative-cancel contract: work that
 /// completes anyway answers `Ok`).
 ///
+/// The isolation is symmetric: when the *leader* is shed for its own
+/// cancel or deadline, followers — who never cancelled and may hold
+/// looser deadlines — are settled with a distinct retryable
+/// [`ResponseStatus::Error`] ([`COALESCED_LEADER_CANCELLED`] /
+/// [`COALESCED_LEADER_EXPIRED`]) instead of inheriting a
+/// `Cancelled`/`Expired` they did not cause.
+///
 /// A leader whose submission fails to enqueue (post-registration shed,
 /// channel closed at shutdown) [`abort`]s instead: every attached
 /// follower is answered with a typed [`ResponseStatus::Error`], never
@@ -221,6 +228,16 @@ impl ReplySlot {
 pub struct SharedReply {
     inner: Mutex<SharedInner>,
 }
+
+/// Typed error a coalesced follower receives when the leader's client
+/// cancelled the flight: retryable, and distinct from the follower's own
+/// [`ResponseStatus::Cancelled`] (which only its own [`Ticket::cancel`]
+/// can cause).
+pub const COALESCED_LEADER_CANCELLED: &str = "coalesced leader cancelled; retry";
+
+/// Typed error a coalesced follower receives when the leader's (possibly
+/// tighter) deadline expired before execution.
+pub const COALESCED_LEADER_EXPIRED: &str = "coalesced leader deadline expired; retry";
 
 #[derive(Debug, Default)]
 struct SharedInner {
@@ -283,14 +300,29 @@ impl SharedReply {
     /// Deliver the leader's response to every attached follower (each
     /// clone re-stamped with the follower's own id) and record it.
     /// Idempotent; called by the winning [`ReplySlot::send`].
+    ///
+    /// A `Cancelled`/`Expired` settle is the *leader's* shed, not the
+    /// followers': each follower gets a retryable typed error instead,
+    /// so client code keying on [`ResponseStatus::Cancelled`] never
+    /// misattributes someone else's cancel to itself. The recorded
+    /// response keeps the leader's original status — it is non-`Ok`, so
+    /// the cache drops the entry and the next identical submission
+    /// re-executes.
     pub(crate) fn settle(&self, resp: &Response) {
         let mut inner = self.lock();
         if inner.settled.is_some() || inner.aborted.is_some() {
             return;
         }
         for (id, tx) in inner.waiters.drain(..) {
-            let mut r = resp.clone();
-            r.id = id;
+            let r = match &resp.status {
+                ResponseStatus::Cancelled => Response::error(id, COALESCED_LEADER_CANCELLED),
+                ResponseStatus::Expired => Response::error(id, COALESCED_LEADER_EXPIRED),
+                _ => {
+                    let mut r = resp.clone();
+                    r.id = id;
+                    r
+                }
+            };
             let _ = tx.send(r);
         }
         inner.settled = Some((resp.clone(), Instant::now()));
@@ -701,6 +733,34 @@ mod tests {
         sr.abort("second");
         sr.settle(&Response::error(RequestId(1), "late"));
         assert!(sr.settled().is_none());
+    }
+
+    #[test]
+    fn shared_reply_translates_leader_shed_into_retryable_errors() {
+        // leader cancelled: the follower never cancelled, so it must not
+        // see Cancelled — it gets the retryable typed error instead
+        let sr = SharedReply::new();
+        let rx = match sr.attach(RequestId(30)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        sr.settle(&Response::cancelled(RequestId(29)));
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, RequestId(30));
+        assert_eq!(r.error_message(), Some(COALESCED_LEADER_CANCELLED));
+        // the record keeps the leader's own status (non-Ok, so the cache
+        // drops it and never replays the shed)
+        let (resp, _at) = sr.settled().unwrap();
+        assert_eq!(resp.status, ResponseStatus::Cancelled);
+
+        // leader deadline expired: same translation, distinct message
+        let sr = SharedReply::new();
+        let rx = match sr.attach(RequestId(31)) {
+            AttachOutcome::Attached(rx) => rx,
+            other => panic!("expected Attached, got {other:?}"),
+        };
+        sr.settle(&Response::expired(RequestId(29)));
+        assert_eq!(rx.recv().unwrap().error_message(), Some(COALESCED_LEADER_EXPIRED));
     }
 
     #[test]

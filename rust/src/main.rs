@@ -189,21 +189,27 @@ fn policy_from_args(args: &Args) -> anyhow::Result<s4::coordinator::RoutingPolic
 
 /// Response-cache config from `--cache-entries N` / `--cache-ttl-ms T`
 /// (shared by `serve` and `net-serve`). Either flag alone enables the
-/// cache with the other bound at its default; neither flag leaves it off
-/// (the ingress chain is then exactly the pre-cache `[breaker,
-/// admission]` path).
+/// cache with the other bound at its default; neither flag — or an
+/// explicit `--cache-entries 0` — leaves it off (the ingress chain is
+/// then exactly the pre-cache `[breaker, admission]` path). An explicit
+/// `--cache-ttl-ms 0` is the coalescing-only mode: concurrent identical
+/// requests still share one execution, but settled responses are never
+/// reused — distinguished from the flag being absent, which keeps the
+/// default TTL.
 fn cache_from_args(args: &Args) -> anyhow::Result<Option<s4::coordinator::CacheConfig>> {
-    let entries = args.get_usize("cache-entries", 0)?;
-    let ttl_ms = args.get_u64("cache-ttl-ms", 0)?;
-    if entries == 0 && ttl_ms == 0 {
+    let entries =
+        args.has("cache-entries").then(|| args.get_usize("cache-entries", 0)).transpose()?;
+    let ttl_ms =
+        args.has("cache-ttl-ms").then(|| args.get_u64("cache-ttl-ms", 0)).transpose()?;
+    if (entries.is_none() && ttl_ms.is_none()) || entries == Some(0) {
         return Ok(None);
     }
     let mut cfg = s4::coordinator::CacheConfig::default();
-    if entries > 0 {
-        cfg.max_entries = entries;
+    if let Some(n) = entries {
+        cfg.max_entries = n;
     }
-    if ttl_ms > 0 {
-        cfg.ttl = std::time::Duration::from_millis(ttl_ms);
+    if let Some(t) = ttl_ms {
+        cfg.ttl = std::time::Duration::from_millis(t);
     }
     Ok(Some(cfg))
 }
@@ -373,4 +379,32 @@ fn cmd_net_load(args: &Args) -> anyhow::Result<()> {
     let report = s4::net::run_open_loop(addr.as_str(), &spec)?;
     report.print();
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn cache_flags_distinguish_absent_from_explicit_zero() {
+        let default = s4::coordinator::CacheConfig::default();
+        assert!(cache_from_args(&args("")).unwrap().is_none());
+        let c = cache_from_args(&args("--cache-entries 64")).unwrap().unwrap();
+        assert_eq!((c.max_entries, c.ttl), (64, default.ttl));
+        // explicit ttl 0 is the coalescing-only mode, not the 60s default
+        let c = cache_from_args(&args("--cache-entries 64 --cache-ttl-ms 0")).unwrap().unwrap();
+        assert_eq!(c.ttl, std::time::Duration::ZERO);
+        // ttl alone enables the cache with default entries
+        let c = cache_from_args(&args("--cache-ttl-ms 250")).unwrap().unwrap();
+        assert_eq!(c.max_entries, default.max_entries);
+        assert_eq!(c.ttl, std::time::Duration::from_millis(250));
+        // explicit --cache-entries 0 is off, whatever else is set
+        assert!(cache_from_args(&args("--cache-entries 0 --cache-ttl-ms 250"))
+            .unwrap()
+            .is_none());
+    }
 }

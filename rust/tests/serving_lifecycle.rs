@@ -10,7 +10,7 @@ use std::time::Duration;
 use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, Value};
 use s4::coordinator::{
     BatcherConfig, CacheConfig, Priority, ResponseStatus, Router, RoutingPolicy, Server,
-    ServerConfig, ServingService, SubmitOptions,
+    ServerConfig, ServingService, SubmitOptions, COALESCED_LEADER_CANCELLED,
 };
 use s4::runtime::Manifest;
 
@@ -443,6 +443,46 @@ fn follower_cancel_does_not_disturb_the_leader() {
     let s = h.metrics_snapshot();
     assert_eq!(s.cancelled, 0, "nothing was shed: {}", s.report());
     assert_eq!((s.admitted, s.coalesced), (1, 1));
+    srv.shutdown();
+}
+
+#[test]
+fn leader_cancel_settles_followers_retryable_not_cancelled() {
+    // the mirror of follower_cancel_does_not_disturb_the_leader: when the
+    // LEADER's client cancels, a coalesced follower — who never cancelled
+    // — must not receive ResponseStatus::Cancelled; it gets the distinct
+    // retryable error and a clean resubmission executes fresh
+    let srv = cached_server(8, 200, CacheConfig::default());
+    let h = srv.handle();
+    let leader = h.submit("bert_tiny", vec![Value::tokens(tokens(11))]).unwrap();
+    let follower = h.submit("bert_tiny", vec![Value::tokens(tokens(11))]).unwrap();
+    leader.cancel();
+    let lead_resp = leader.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert_eq!(
+        lead_resp.status,
+        ResponseStatus::Cancelled,
+        "the leader's own cancel is its own outcome"
+    );
+    let f_resp = follower.wait_timeout(Duration::from_secs(5)).unwrap();
+    assert_ne!(
+        f_resp.status,
+        ResponseStatus::Cancelled,
+        "a follower must never inherit someone else's cancel"
+    );
+    assert_eq!(f_resp.error_message(), Some(COALESCED_LEADER_CANCELLED));
+    assert_eq!(f_resp.id, follower.id());
+    // the shed was never cached: a retry is a fresh miss that executes
+    let retry = h
+        .submit("bert_tiny", vec![Value::tokens(tokens(11))])
+        .unwrap()
+        .wait_timeout(Duration::from_secs(5))
+        .unwrap();
+    assert!(retry.is_ok(), "retry must execute fresh: {:?}", retry.status);
+    assert!(!retry.served_by.starts_with("cache:"));
+    let s = h.metrics_snapshot();
+    assert_eq!(s.cancelled, 1, "exactly the leader was shed: {}", s.report());
+    assert_eq!(s.coalesced, 1, "{}", s.report());
+    assert_eq!(s.answered(), s.admitted, "{}", s.report());
     srv.shutdown();
 }
 
