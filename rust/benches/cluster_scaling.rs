@@ -1,0 +1,218 @@
+//! Bench: cluster throughput scaling — N sharded nodes behind the
+//! router tier vs one node, identical per-node capacity.
+//!
+//! Emits `BENCH_cluster.json` (schema `s4-bench-v1`, see EXPERIMENTS.md
+//! §Perf "Cluster scaling"). Each node is the fixed-service-time stack
+//! from the net bench (ThrottledEcho behind one worker ⇒ capacity =
+//! `max_batch / service` rps per node, by construction), fronted by a
+//! real loopback [`NetServer`]; the [`RouterServer`] rotates replicas
+//! over pooled connections. The open-loop generator drives the router at
+//! ~85% of the *fleet's* aggregate capacity for N=1 and N=target, and
+//! the trajectory point each PR defends is the achieved-throughput
+//! ratio:
+//!
+//! * `n3_vs_n1_throughput_ratio ≥ 1.8` — three nodes must buy at least
+//!   1.8× one node's achieved rate through the same router (0.6 × N in
+//!   general; the router must spread load, not serialize it);
+//! * every run drains clean: `lost == 0` and the router ledger
+//!   reconciles (`answered() == admitted`).
+//!
+//! ```bash
+//! cargo bench --bench cluster_scaling                      # full, N=3
+//! cargo bench --bench cluster_scaling -- --smoke --nodes 2 # CI point
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use s4::backend::{EchoBackend, InferenceBackend, TensorSpec, Value};
+use s4::cluster::{spawn_local_cluster_cfg, LocalCluster, RouterConfig, RouterServer};
+use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, ServerConfig};
+use s4::net::{run_open_loop_local, LoadReport, LoadSpec, NetServerConfig, RetryPolicy};
+use s4::runtime::Manifest;
+use s4::util::bench::JsonReport;
+use s4::util::cli::Args;
+use s4::util::json::Json;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+/// Echo semantics with a fixed service time per batch — one worker per
+/// node gives each node a deterministic `max_batch / service` rps
+/// capacity, so fleet capacity is exactly N× and the offered rate can be
+/// pinned at a fixed utilization for every N.
+struct ThrottledEcho {
+    inner: EchoBackend,
+    service: Duration,
+}
+
+impl InferenceBackend for ThrottledEcho {
+    fn input_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.input_specs(artifact)
+    }
+
+    fn output_specs(&self, artifact: &str) -> anyhow::Result<&[TensorSpec]> {
+        self.inner.output_specs(artifact)
+    }
+
+    fn run_batch(&self, artifact: &str, inputs: &[Value]) -> anyhow::Result<Vec<Value>> {
+        std::thread::sleep(self.service);
+        self.inner.run_batch(artifact, inputs)
+    }
+}
+
+const MAX_BATCH: usize = 8;
+
+fn fleet(n: usize, service: Duration) -> anyhow::Result<LocalCluster> {
+    spawn_local_cluster_cfg(
+        n,
+        NetServerConfig { max_connections: 512, ..Default::default() },
+        move |_i| {
+            let m = manifest();
+            let backend: Arc<dyn InferenceBackend> =
+                Arc::new(ThrottledEcho { inner: EchoBackend::from_manifest(&m), service });
+            let cfg = ServerConfig {
+                batcher: BatcherConfig { max_batch: MAX_BATCH, max_wait: Duration::from_micros(500) },
+                workers: 1,
+                max_inflight: 512,
+                ..Default::default()
+            };
+            (cfg, m, Router::new(RoutingPolicy::MaxSparsity), backend)
+        },
+    )
+}
+
+/// One scaling point: fresh N-node fleet, fresh router, open-loop load
+/// at `utilization` × fleet capacity, full drain, clean teardown.
+fn run_point(
+    n: usize,
+    service: Duration,
+    utilization: f64,
+    duration: Duration,
+) -> anyhow::Result<(LoadReport, f64)> {
+    let cluster = fleet(n, service)?;
+    let router = Arc::new(RouterServer::new(
+        cluster.spec(),
+        RouterConfig {
+            replication: n,
+            pool_per_node: 256,
+            retry: RetryPolicy { attempts: 2, connect_timeout: Duration::from_millis(500), ..Default::default() },
+            ..Default::default()
+        },
+    )?);
+    let capacity_rps = n as f64 * MAX_BATCH as f64 / service.as_secs_f64();
+    let spec = LoadSpec {
+        model: "bert_tiny".into(),
+        tokens: (0..32).map(|i| (i * 37 + 11) % 1000).collect(),
+        rate_rps: utilization * capacity_rps,
+        duration,
+        connections: 4,
+        mix: [0.2, 0.5, 0.3],
+        deadlines: [None, None, None],
+        drain_grace: Duration::from_secs(20),
+        seed: 0xC1_5CA1E,
+    };
+    let report = run_open_loop_local(&router, &spec)?;
+    let snap = router.metrics_snapshot();
+    anyhow::ensure!(report.lost == 0, "N={n}: open-loop harness lost tickets");
+    anyhow::ensure!(
+        snap.answered() == snap.admitted,
+        "N={n}: router ledger must reconcile (answered {} vs admitted {})",
+        snap.answered(),
+        snap.admitted
+    );
+    println!(
+        "bench cluster/N={n}  offered {:>7.0} rps  achieved {:>7.0} rps  \
+         completed {:<6} forwards {:<6} failovers {}",
+        report.offered_rps,
+        report.achieved_rps,
+        report.completed(),
+        snap.cluster.forwards,
+        snap.cluster.failovers
+    );
+    cluster.shutdown();
+    Ok((report, capacity_rps))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.has("smoke")
+        || std::env::var("S4_BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false);
+    let n = args.get_usize("nodes", 3)?;
+    anyhow::ensure!(n >= 2, "scaling needs at least 2 nodes (got {n})");
+    // per-node capacity with one worker = max_batch / service
+    let (service, duration) = if smoke {
+        (Duration::from_millis(4), Duration::from_millis(900))
+    } else {
+        (Duration::from_millis(4), Duration::from_secs(2))
+    };
+    let utilization = 0.85;
+
+    println!(
+        "== cluster scaling (service {service:?}/batch, {:.0} rps/node, N=1 vs N={n}, \
+         {utilization:.0}% load, {duration:?}/point) ==",
+        MAX_BATCH as f64 / service.as_secs_f64(),
+        utilization = utilization * 100.0
+    );
+
+    let mut report = JsonReport::new("cluster");
+    report.set("smoke", Json::Bool(smoke));
+    report.set("nodes", Json::Num(n as f64));
+    report.set("service_us_per_batch", Json::Num(service.as_micros() as f64));
+    report.set("utilization", Json::Num(utilization));
+    report.set("duration_s_per_point", Json::Num(duration.as_secs_f64()));
+
+    let (single, cap1) = run_point(1, service, utilization, duration)?;
+    let (fleet_r, capn) = run_point(n, service, utilization, duration)?;
+
+    for (label, cap, r) in [("n1", cap1, &single), ("fleet", capn, &fleet_r)] {
+        report.push(Json::obj(vec![
+            ("point", Json::Str(label.into())),
+            ("capacity_rps", Json::Num(cap)),
+            ("offered_rps", Json::Num(r.offered_rps)),
+            ("achieved_rps", Json::Num(r.achieved_rps)),
+            ("completed", Json::Num(r.completed() as f64)),
+        ]));
+    }
+
+    let ratio = fleet_r.achieved_rps / single.achieved_rps.max(1.0);
+    report.set("throughput_ratio_vs_single", Json::Num(ratio));
+    if n == 3 {
+        // the canonical trajectory key EXPERIMENTS.md tracks
+        report.set("n3_vs_n1_throughput_ratio", Json::Num(ratio));
+    }
+
+    println!(
+        "bench cluster/summary  N=1 achieved {:.0} rps, N={n} achieved {:.0} rps \
+         (ratio {ratio:.2}x, floor {:.2}x)",
+        single.achieved_rps,
+        fleet_r.achieved_rps,
+        0.6 * n as f64
+    );
+
+    // the headline claim: N nodes through the same router must buy at
+    // least 0.6×N the single-node achieved rate (N=3 ⇒ 1.8×)
+    anyhow::ensure!(
+        ratio >= 0.6 * n as f64,
+        "cluster must scale: N={n} achieved only {ratio:.2}x of single-node \
+         ({:.0} vs {:.0} rps; floor {:.2}x)",
+        fleet_r.achieved_rps,
+        single.achieved_rps,
+        0.6 * n as f64
+    );
+
+    let path = report.write()?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

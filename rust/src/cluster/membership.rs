@@ -1,0 +1,310 @@
+//! Static cluster membership: who the nodes are, what they host, and
+//! whether each one is currently believed healthy.
+//!
+//! Membership is **static by design** for this PR: the fleet is declared
+//! up front (a `--nodes` flag list or a minimal TOML file) and never
+//! changes while the router runs. Liveness, by contrast, is dynamic —
+//! per-node health is tracked with the same consecutive-failure
+//! [`Breaker`] the single-node coordinator uses for its backend, fed by
+//! real forward outcomes (and optionally by an active TCP probe, see
+//! [`RouterServer::probe`](crate::cluster::RouterServer::probe)): a node
+//! that keeps failing transport is opened and shed, a node that answers
+//! again is closed. Dynamic membership (join/leave, artifact hand-off)
+//! is deliberately out of scope and tracked in ROADMAP.md.
+//!
+//! Two declaration formats, both parsed here with zero dependencies:
+//!
+//! ```text
+//! --nodes n0=127.0.0.1:7450:bert_tiny+resnet50,n1=127.0.0.1:7451
+//! ```
+//!
+//! (`id=host:port[:model+model+...]`; an entry with no model list hosts
+//! *every* model), or a TOML subset:
+//!
+//! ```toml
+//! [[node]]
+//! id = "n0"
+//! addr = "127.0.0.1:7450"
+//! models = ["bert_tiny", "resnet50"]
+//! ```
+
+use std::path::Path;
+
+use crate::coordinator::health::{Breaker, BreakerConfig, BreakerState};
+
+/// One declared node: identity, dial address, hosted model set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeSpec {
+    /// Stable node id (`n0`, `blue`, ...) — used in metrics and logs.
+    pub id: String,
+    /// Dial address, `host:port`.
+    pub addr: String,
+    /// Models this node serves. **Empty means "hosts every model"** —
+    /// the common homogeneous-replica fleet needs no per-node list.
+    pub models: Vec<String>,
+}
+
+impl NodeSpec {
+    /// Does this node host `model`? (Empty model list = hosts all.)
+    pub fn hosts(&self, model: &str) -> bool {
+        self.models.is_empty() || self.models.iter().any(|m| m == model)
+    }
+}
+
+/// The static fleet declaration: an ordered list of [`NodeSpec`]s.
+/// Order matters — placement hashes index into this order, so two
+/// routers handed the same spec agree on every routing decision.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+}
+
+impl ClusterSpec {
+    /// Parse the `--nodes` flag format:
+    /// `id=host:port[:model+model+...]` entries separated by commas.
+    ///
+    /// The third `:`-field is a model list only when it is not all
+    /// digits — `n0=localhost:7450` is an addr with a port, not a model
+    /// named `7450`.
+    pub fn parse_flag(s: &str) -> anyhow::Result<ClusterSpec> {
+        let mut nodes = Vec::new();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (id, rest) = entry
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("node entry `{entry}`: expected id=addr[:models]"))?;
+            anyhow::ensure!(!id.trim().is_empty(), "node entry `{entry}`: empty id");
+            let (addr, models) = match rest.rsplit_once(':') {
+                // `host:port` — the suffix is the port, not a model list
+                Some((_, tail)) if !tail.is_empty() && tail.bytes().all(|b| b.is_ascii_digit()) => {
+                    (rest.to_string(), Vec::new())
+                }
+                Some((addr, tail)) => {
+                    let models: Vec<String> = tail
+                        .split('+')
+                        .map(str::trim)
+                        .filter(|m| !m.is_empty())
+                        .map(str::to_string)
+                        .collect();
+                    (addr.to_string(), models)
+                }
+                None => anyhow::bail!("node entry `{entry}`: addr must be host:port"),
+            };
+            anyhow::ensure!(
+                addr.contains(':'),
+                "node entry `{entry}`: addr `{addr}` must be host:port"
+            );
+            nodes.push(NodeSpec { id: id.trim().to_string(), addr, models });
+        }
+        let spec = ClusterSpec { nodes };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse the TOML subset shown in the module docs: `[[node]]` tables
+    /// with `id`, `addr`, and an optional `models` string array. No
+    /// general TOML — no dependencies — just what a fleet file needs.
+    pub fn parse_toml(text: &str) -> anyhow::Result<ClusterSpec> {
+        let mut nodes: Vec<NodeSpec> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[node]]" {
+                nodes.push(NodeSpec { id: String::new(), addr: String::new(), models: Vec::new() });
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("cluster file line {}: expected key = value", lineno + 1)
+            })?;
+            let node = nodes.last_mut().ok_or_else(|| {
+                anyhow::anyhow!("cluster file line {}: key before any [[node]]", lineno + 1)
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "id" => node.id = unquote(value, lineno)?,
+                "addr" => node.addr = unquote(value, lineno)?,
+                "models" => {
+                    let inner = value
+                        .strip_prefix('[')
+                        .and_then(|v| v.strip_suffix(']'))
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "cluster file line {}: models must be [\"a\", ...]",
+                                lineno + 1
+                            )
+                        })?;
+                    node.models = inner
+                        .split(',')
+                        .map(str::trim)
+                        .filter(|m| !m.is_empty())
+                        .map(|m| unquote(m, lineno))
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                }
+                other => anyhow::bail!(
+                    "cluster file line {}: unknown key `{other}` (id/addr/models)",
+                    lineno + 1
+                ),
+            }
+        }
+        let spec = ClusterSpec { nodes };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a TOML fleet file from disk.
+    pub fn load(path: &Path) -> anyhow::Result<ClusterSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read cluster file {}: {e}", path.display()))?;
+        ClusterSpec::parse_toml(&text)
+    }
+
+    /// Non-empty, unique ids, well-formed addrs.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.nodes.is_empty(), "cluster spec declares no nodes");
+        for (i, n) in self.nodes.iter().enumerate() {
+            anyhow::ensure!(!n.id.is_empty(), "node #{i}: empty id");
+            anyhow::ensure!(n.addr.contains(':'), "node `{}`: addr must be host:port", n.id);
+            anyhow::ensure!(
+                !self.nodes[..i].iter().any(|m| m.id == n.id),
+                "duplicate node id `{}`",
+                n.id
+            );
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, id: &str) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+}
+
+/// Membership + liveness: the static [`ClusterSpec`] paired with one
+/// health [`Breaker`] per node, indexed in spec order. The breakers are
+/// fed by whoever talks to the nodes (the router's forward path, an
+/// active prober); this type just owns them so every consumer sees one
+/// consistent health view.
+pub struct Membership {
+    spec: ClusterSpec,
+    health: Vec<Breaker>,
+}
+
+impl Membership {
+    pub fn new(spec: ClusterSpec, breaker: BreakerConfig) -> Membership {
+        let health = spec.nodes.iter().map(|_| Breaker::new(breaker)).collect();
+        Membership { spec, health }
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    pub fn node(&self, idx: usize) -> &NodeSpec {
+        &self.spec.nodes[idx]
+    }
+
+    /// The health breaker for node `idx` (spec order).
+    pub fn breaker(&self, idx: usize) -> &Breaker {
+        &self.health[idx]
+    }
+
+    /// Is node `idx` currently believed live? `Open` means "shedding";
+    /// `Closed`/`HalfOpen` both still admit traffic (HalfOpen is how an
+    /// opened node earns its way back).
+    pub fn live(&self, idx: usize) -> bool {
+        self.health[idx].state() != BreakerState::Open
+    }
+
+    /// Number of nodes currently believed live.
+    pub fn live_count(&self) -> usize {
+        (0..self.spec.nodes.len()).filter(|&i| self.live(i)).count()
+    }
+}
+
+fn unquote(v: &str, lineno: usize) -> anyhow::Result<String> {
+    v.strip_prefix('"')
+        .and_then(|v| v.strip_suffix('"'))
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("cluster file line {}: expected \"quoted\" string", lineno + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_format_parses_ids_addrs_and_model_lists() {
+        let spec = ClusterSpec::parse_flag(
+            "n0=127.0.0.1:7450:bert_tiny+resnet50, n1=127.0.0.1:7451, n2=host:9:m",
+        )
+        .unwrap();
+        assert_eq!(spec.len(), 3);
+        assert_eq!(spec.nodes[0].id, "n0");
+        assert_eq!(spec.nodes[0].addr, "127.0.0.1:7450");
+        assert_eq!(spec.nodes[0].models, vec!["bert_tiny", "resnet50"]);
+        // no model list → hosts everything
+        assert_eq!(spec.nodes[1].addr, "127.0.0.1:7451");
+        assert!(spec.nodes[1].models.is_empty());
+        assert!(spec.nodes[1].hosts("anything"));
+        assert_eq!(spec.nodes[2].models, vec!["m"]);
+        assert!(spec.nodes[0].hosts("bert_tiny"));
+        assert!(!spec.nodes[0].hosts("gpt"));
+    }
+
+    #[test]
+    fn flag_format_rejects_malformed_entries() {
+        assert!(ClusterSpec::parse_flag("").is_err(), "no nodes");
+        assert!(ClusterSpec::parse_flag("n0=noport").is_err(), "addr without port");
+        assert!(ClusterSpec::parse_flag("justaddr:80").is_err(), "missing id=");
+        assert!(
+            ClusterSpec::parse_flag("n0=h:1,n0=h:2").is_err(),
+            "duplicate ids must be rejected"
+        );
+    }
+
+    #[test]
+    fn toml_subset_round_trips_the_module_doc_example() {
+        let spec = ClusterSpec::parse_toml(
+            r#"
+            # fleet file
+            [[node]]
+            id = "n0"
+            addr = "127.0.0.1:7450"
+            models = ["bert_tiny", "resnet50"]
+
+            [[node]]
+            id = "n1"
+            addr = "127.0.0.1:7451"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.len(), 2);
+        assert_eq!(spec.node("n0").unwrap().models, vec!["bert_tiny", "resnet50"]);
+        assert!(spec.node("n1").unwrap().models.is_empty());
+        assert!(ClusterSpec::parse_toml("id = \"x\"").is_err(), "key before [[node]]");
+        assert!(ClusterSpec::parse_toml("[[node]]\nid = unquoted").is_err());
+    }
+
+    #[test]
+    fn membership_tracks_per_node_liveness_with_breakers() {
+        let spec = ClusterSpec::parse_flag("a=h:1,b=h:2").unwrap();
+        let cfg = BreakerConfig { failure_threshold: 2, ..BreakerConfig::default() };
+        let m = Membership::new(spec, cfg);
+        assert_eq!(m.live_count(), 2);
+        // consecutive failures on one node open only that node
+        m.breaker(0).record_failure();
+        assert!(m.live(0), "below threshold stays live");
+        m.breaker(0).record_failure();
+        assert!(!m.live(0), "threshold reached → open → shed");
+        assert!(m.live(1), "other node untouched");
+        assert_eq!(m.live_count(), 1);
+    }
+}

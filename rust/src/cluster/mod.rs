@@ -1,0 +1,56 @@
+//! Multi-node sharded serving (Layer 5): a router tier over a static
+//! fleet of single-node serving stacks.
+//!
+//! The single-node coordinator ([`crate::coordinator`]) plus its socket
+//! front end ([`crate::net`]) make one machine a serving node. This
+//! layer composes N of them into a cluster without touching either:
+//!
+//! * [`membership`] — the static fleet declaration ([`ClusterSpec`]:
+//!   node id, dial address, hosted model set; `--nodes` flag or TOML
+//!   subset) paired with per-node liveness ([`Membership`]), tracked
+//!   with the same consecutive-failure [`Breaker`] the coordinator uses
+//!   for its backend.
+//! * [`placement`] — deterministic cluster-wide placement
+//!   ([`ClusterPlacement`]): hash-by-model with replication factor R,
+//!   answering "which node(s), what fill" with zero coordination.
+//! * [`router`] — [`RouterServer`], a [`ServingService`] that forwards
+//!   each submission to a replica over pooled [`NetClient`]s, rotating
+//!   the replica set for load spread, failing over on transport errors,
+//!   and shedding typed-retryable when no replica is healthy. It is
+//!   wire-transparent: put a [`NetServer`] in front and every existing
+//!   client drives the whole fleet unchanged.
+//!
+//! ```text
+//!                          s4 cluster-route / tests / benches
+//!                                      │
+//!   clients (NetClient,     ┌──────────▼──────────┐
+//!   s4 net-load, loadgen) ─▶│ NetServer           │   the same socket
+//!                           │  └─ RouterServer    │   boundary a single
+//!                           │      placement ── membership (breaker/node)
+//!                           └──────┬───────┬──────┘
+//!                    pooled NetClient│       │failover on open breaker
+//!                           ┌──────▼─┐   ┌─▼──────┐
+//!                           │ node 0 │   │ node 1 │  ... (NetServer +
+//!                           │ Server │   │ Server │       coordinator each)
+//!                           └────────┘   └────────┘
+//! ```
+//!
+//! Membership is static for this layer (dynamic join/leave is future
+//! work, see ROADMAP.md); health is dynamic — breakers open on real
+//! forward failures and earn their way closed again.
+//!
+//! [`Breaker`]: crate::coordinator::health::Breaker
+//! [`ServingService`]: crate::coordinator::ServingService
+//! [`NetClient`]: crate::net::NetClient
+//! [`NetServer`]: crate::net::NetServer
+
+pub mod membership;
+pub mod placement;
+pub mod router;
+
+pub use membership::{ClusterSpec, Membership, NodeSpec};
+pub use placement::{ClusterPlacement, NodeShare};
+pub use router::{
+    spawn_local_cluster, spawn_local_cluster_cfg, LocalCluster, LocalNode, RouterConfig,
+    RouterServer,
+};

@@ -1,0 +1,192 @@
+//! Cluster-wide placement: which node(s) serve a model, and how a batch
+//! of work splits across them.
+//!
+//! This is the fleet-level analogue of the single-node
+//! [`coordinator::router`](crate::coordinator::router): that layer picks
+//! compiled *artifacts* inside one process; this one picks *nodes*
+//! across the fleet. The policy is deterministic sharding with
+//! replication — **hash-by-model with replication factor R**:
+//!
+//! 1. collect the nodes whose [`NodeSpec`] hosts the model (an empty
+//!    per-node model list hosts everything), in spec order;
+//! 2. hash the model name (FNV-1a, stable across runs and platforms) to
+//!    pick a start offset into that host list;
+//! 3. the replica set is the next `R` hosts ring-wise from the offset.
+//!
+//! Every router handed the same [`ClusterSpec`] and the same R computes
+//! the same replica set for every model — no coordination channel, no
+//! shared state, which is what makes a *static* membership tier viable.
+//! [`ClusterPlacement::plan`] additionally answers the capacity
+//! question ("this many samples → which node gets how many") by
+//! round-robin splitting fill across the replica set, mirroring the
+//! shape of the single-node planner's `Vec<Placement>` answer.
+
+use super::membership::ClusterSpec;
+
+/// One node's share of a cluster-level plan: node index (spec order),
+/// the model routed, and how many of the `n` requested samples land
+/// there.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeShare {
+    /// Index into [`ClusterSpec::nodes`].
+    pub node: usize,
+    /// The model being routed (nodes resolve it to an artifact locally).
+    pub model: String,
+    /// Samples assigned to this node.
+    pub fill: usize,
+}
+
+/// Deterministic shard/replicate view over a [`ClusterSpec`].
+#[derive(Clone, Debug)]
+pub struct ClusterPlacement {
+    /// Hosted-model sets, one per node, spec order. `None` = hosts all.
+    hosted: Vec<Option<Vec<String>>>,
+    /// Replication factor R (clamped to ≥ 1, and per-model to the number
+    /// of hosts).
+    replication: usize,
+}
+
+impl ClusterPlacement {
+    pub fn new(spec: &ClusterSpec, replication: usize) -> ClusterPlacement {
+        let hosted = spec
+            .nodes
+            .iter()
+            .map(|n| if n.models.is_empty() { None } else { Some(n.models.clone()) })
+            .collect();
+        ClusterPlacement { hosted, replication: replication.max(1) }
+    }
+
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// The replica set for `model`: node indices in preference order
+    /// (primary first), empty when no node hosts the model. The order is
+    /// a pure function of (spec, R, model) — see the module docs.
+    pub fn replicas(&self, model: &str) -> Vec<usize> {
+        let hosts: Vec<usize> = self
+            .hosted
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| match m {
+                None => true,
+                Some(list) => list.iter().any(|h| h == model),
+            })
+            .map(|(i, _)| i)
+            .collect();
+        if hosts.is_empty() {
+            return Vec::new();
+        }
+        let start = (fnv1a(model.as_bytes()) as usize) % hosts.len();
+        let r = self.replication.min(hosts.len());
+        (0..r).map(|k| hosts[(start + k) % hosts.len()]).collect()
+    }
+
+    /// Cluster-wide plan for `n` samples of `model`: which node(s),
+    /// which model, what fill. Fill is split round-robin across the
+    /// replica set starting at the primary, so `Σ fill == n` and no
+    /// replica gets more than `ceil(n / R)` — the fleet-level mirror of
+    /// the single-node planner's exact-cover invariant.
+    pub fn plan(&self, model: &str, n: usize) -> anyhow::Result<Vec<NodeShare>> {
+        let reps = self.replicas(model);
+        anyhow::ensure!(!reps.is_empty(), "no cluster node hosts model `{model}`");
+        let mut fills = vec![0usize; reps.len()];
+        for i in 0..n {
+            fills[i % reps.len()] += 1;
+        }
+        Ok(reps
+            .into_iter()
+            .zip(fills)
+            .filter(|(_, f)| *f > 0)
+            .map(|(node, fill)| NodeShare { node, model: model.to_string(), fill })
+            .collect())
+    }
+}
+
+/// FNV-1a 64-bit — tiny, stable, and plenty for spreading model names
+/// over a handful of nodes. Not a DoS-resistant hash; membership is a
+/// trusted config, not attacker input.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(flag: &str) -> ClusterSpec {
+        ClusterSpec::parse_flag(flag).unwrap()
+    }
+
+    #[test]
+    fn replicas_are_deterministic_and_bounded_by_r() {
+        let s = spec("a=h:1,b=h:2,c=h:3");
+        let p = ClusterPlacement::new(&s, 2);
+        let r1 = p.replicas("bert_tiny");
+        let r2 = p.replicas("bert_tiny");
+        assert_eq!(r1, r2, "same spec + model → same replica set");
+        assert_eq!(r1.len(), 2, "replication factor honoured");
+        assert_ne!(r1[0], r1[1], "replicas are distinct nodes");
+        // R larger than the fleet clamps instead of repeating nodes
+        let p = ClusterPlacement::new(&s, 9);
+        let r = p.replicas("bert_tiny");
+        assert_eq!(r.len(), 3);
+        let mut sorted = r.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "no node appears twice");
+    }
+
+    #[test]
+    fn hosted_model_lists_constrain_the_replica_set() {
+        let s = spec("a=h:1:bert,b=h:2:gpt,c=h:3");
+        let p = ClusterPlacement::new(&s, 3);
+        let bert = p.replicas("bert");
+        assert!(bert.contains(&0), "a hosts bert");
+        assert!(bert.contains(&2), "c hosts everything");
+        assert!(!bert.contains(&1), "b hosts only gpt");
+        assert!(p.replicas("llama").contains(&2), "only the host-all node");
+        assert_eq!(p.replicas("llama").len(), 1);
+    }
+
+    #[test]
+    fn different_models_spread_across_the_fleet() {
+        // with enough models, hashing must not pin every primary to one
+        // node — that would be a broken shard function
+        let s = spec("a=h:1,b=h:2,c=h:3,d=h:4");
+        let p = ClusterPlacement::new(&s, 1);
+        let mut primaries = std::collections::HashSet::new();
+        for m in ["bert_tiny", "bert_base", "resnet50", "gpt2", "t5", "vit", "llama", "mixtral"] {
+            primaries.insert(p.replicas(m)[0]);
+        }
+        assert!(primaries.len() >= 2, "8 models all hashed to one primary: {primaries:?}");
+    }
+
+    #[test]
+    fn plan_covers_n_exactly_and_caps_per_replica_skew() {
+        let s = spec("a=h:1,b=h:2,c=h:3");
+        let p = ClusterPlacement::new(&s, 3);
+        for n in [1usize, 2, 3, 7, 24] {
+            let shares = p.plan("bert_tiny", n).unwrap();
+            let total: usize = shares.iter().map(|s| s.fill).sum();
+            assert_eq!(total, n, "Σ fill == n for n={n}");
+            let max = shares.iter().map(|s| s.fill).max().unwrap();
+            assert!(max <= (n + 2) / 3, "n={n}: share {max} exceeds ceil(n/R)");
+        }
+        assert!(p.plan("unhosted", 1).is_ok(), "host-all nodes pick it up");
+        let constrained = ClusterPlacement::new(&spec("a=h:1:x"), 1);
+        assert!(constrained.plan("y", 1).is_err(), "no host → typed error");
+    }
+
+    #[test]
+    fn fnv1a_is_the_reference_function() {
+        // reference vectors for 64-bit FNV-1a
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

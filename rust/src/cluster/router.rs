@@ -1,0 +1,821 @@
+//! The router tier: a [`ServingService`] that fronts a static fleet of
+//! serving nodes over TCP.
+//!
+//! [`RouterServer`] is **wire-transparent**: it implements the same
+//! [`ServingService`] trait as a single-node [`ServerHandle`], so it can
+//! sit behind a [`NetServer`] and every existing client — `s4 net-load`,
+//! [`NetClient`], the load harness — drives it unchanged. Internally a
+//! submission is:
+//!
+//! 1. **placed** — [`ClusterPlacement::replicas`] answers which nodes
+//!    host the model (deterministic hash-by-model, replication R);
+//! 2. **rotated** — the replica set is rotated round-robin per request,
+//!    so replicas share load instead of the primary serving alone; the
+//!    rest of the rotated order is the failover sequence;
+//! 3. **health-gated** — each candidate's [`Breaker`] is consulted
+//!    ([`Membership`]); an open node is shed from the candidate list.
+//!    All candidates open → a typed, retryable
+//!    [`AdmissionDecision::RejectUnhealthy`] at the door;
+//! 4. **forwarded** — a forwarder thread replays the submission over a
+//!    pooled [`NetClient`] to the first candidate, failing over down the
+//!    rotated order on transport errors (each failure feeds that node's
+//!    breaker). The node's answer flows back bitwise: outputs,
+//!    `served_by`, timing, and typed status are preserved verbatim, so
+//!    routed logits are byte-identical to direct submission.
+//!
+//! The ledger invariant holds at the router exactly as it does on a
+//! node: every admitted submission is answered exactly once
+//! (`answered() == admitted`), with forwards/failovers/no-healthy
+//! counted per node in [`MetricsSnapshot::cluster`].
+//!
+//! Client-side cancellation and deadlines are honoured at the router:
+//! the minted [`Ticket`] carries the submission's own deadline
+//! (synthesizing a typed `Expired` if the fleet is slower), and a
+//! cancel observed before the forward starts short-circuits to
+//! `Cancelled` without touching the network.
+//!
+//! [`Breaker`]: crate::coordinator::health::Breaker
+//! [`ServerHandle`]: crate::coordinator::ServerHandle
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::backend::{InferenceBackend, Value};
+use crate::coordinator::admission::AdmissionDecision;
+use crate::coordinator::health::{BreakerConfig, BreakerVerdict};
+use crate::coordinator::metrics::{Metrics, MetricsSnapshot, NodeRouterStats};
+use crate::coordinator::request::{
+    Priority, RequestId, Response, ResponseStatus, SubmitOptions, Ticket,
+};
+use crate::coordinator::router::Router as NodeRouter;
+use crate::coordinator::server::{mirror_serving_service, Server, ServerConfig, ServerHandle};
+use crate::coordinator::ServingService;
+use crate::net::client::{NetClient, RetryPolicy};
+use crate::net::server::{NetServer, NetServerConfig};
+use crate::net::wire::{ResponseFrame, WireStatus};
+use crate::runtime::Manifest;
+
+use super::membership::{ClusterSpec, Membership, NodeSpec};
+use super::placement::ClusterPlacement;
+
+/// Router-tier tunables.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Replication factor R handed to [`ClusterPlacement`]: how many
+    /// nodes back each model (clamped per model to its host count).
+    pub replication: usize,
+    /// Per-node health breaker config (same state machine as the
+    /// single-node backend breaker).
+    pub breaker: BreakerConfig,
+    /// Connect retry policy for dialing nodes.
+    pub retry: RetryPolicy,
+    /// Per-forward response wait bound.
+    pub recv_timeout: Duration,
+    /// Idle pooled connections retained per node.
+    pub pool_per_node: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            replication: 2,
+            breaker: BreakerConfig::default(),
+            retry: RetryPolicy::default(),
+            recv_timeout: Duration::from_secs(10),
+            pool_per_node: 32,
+        }
+    }
+}
+
+/// Per-node runtime state: the connection pool and the per-node router
+/// counters surfaced in [`MetricsSnapshot::cluster`].
+#[derive(Default)]
+struct NodeRuntime {
+    pool: Mutex<Vec<NetClient>>,
+    forwards: AtomicU64,
+    failovers: AtomicU64,
+    no_healthy: AtomicU64,
+}
+
+struct RouterInner {
+    membership: Membership,
+    placement: ClusterPlacement,
+    nodes: Vec<NodeRuntime>,
+    cfg: RouterConfig,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    /// Round-robin cursor rotating the replica set per request.
+    rr: AtomicU64,
+}
+
+/// The routing front end. Cheap to clone (shared inner); see the module
+/// docs for the submission path.
+#[derive(Clone)]
+pub struct RouterServer {
+    inner: Arc<RouterInner>,
+}
+
+impl RouterServer {
+    pub fn new(spec: ClusterSpec, cfg: RouterConfig) -> anyhow::Result<RouterServer> {
+        spec.validate()?;
+        let placement = ClusterPlacement::new(&spec, cfg.replication);
+        let nodes = spec.nodes.iter().map(|_| NodeRuntime::default()).collect();
+        let membership = Membership::new(spec, cfg.breaker);
+        Ok(RouterServer {
+            inner: Arc::new(RouterInner {
+                membership,
+                placement,
+                nodes,
+                cfg,
+                metrics: Arc::new(Metrics::new()),
+                next_id: AtomicU64::new(1),
+                rr: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    pub fn membership(&self) -> &Membership {
+        &self.inner.membership
+    }
+
+    pub fn placement(&self) -> &ClusterPlacement {
+        &self.inner.placement
+    }
+
+    /// Actively probe every node with a bounded TCP connect, feeding the
+    /// health breakers, and report `(node id, reachable)` per node. The
+    /// forward path is the authoritative health signal; this lets an
+    /// idle router notice a dead node before the first real submission
+    /// pays for the discovery.
+    pub fn probe(&self, timeout: Duration) -> Vec<(String, bool)> {
+        let inner = &self.inner;
+        (0..inner.membership.spec().len())
+            .map(|i| {
+                let n = inner.membership.node(i);
+                let ok = n
+                    .addr
+                    .to_socket_addrs()
+                    .ok()
+                    .and_then(|mut it| it.next())
+                    .map(|sa| TcpStream::connect_timeout(&sa, timeout).is_ok())
+                    .unwrap_or(false);
+                let b = inner.membership.breaker(i);
+                if ok {
+                    b.record_success();
+                } else if b.record_failure() {
+                    inner.metrics.record_breaker_open();
+                }
+                (n.id.clone(), ok)
+            })
+            .collect()
+    }
+}
+
+impl RouterInner {
+    /// The candidate order for one request: the deterministic replica
+    /// set, rotated by a per-router round-robin cursor so replicas share
+    /// steady-state load. Element 0 is this request's primary; the rest
+    /// is its failover order.
+    fn candidates(&self, model: &str) -> Vec<usize> {
+        let reps = self.placement.replicas(model);
+        if reps.len() <= 1 {
+            return reps;
+        }
+        let k = (self.rr.fetch_add(1, Ordering::Relaxed) as usize) % reps.len();
+        (0..reps.len()).map(|i| reps[(k + i) % reps.len()]).collect()
+    }
+}
+
+/// Everything one forwarder thread needs, moved in whole.
+struct ForwardJob {
+    inner: Arc<RouterInner>,
+    id: RequestId,
+    class: Priority,
+    model: String,
+    inputs: Vec<Value>,
+    opts: SubmitOptions,
+    tx: std::sync::mpsc::Sender<Response>,
+    cancelled: Arc<AtomicBool>,
+    submitted: Instant,
+    order: Vec<usize>,
+}
+
+impl ForwardJob {
+    fn run(self) {
+        let resp = if self.cancelled.load(Ordering::Acquire) {
+            // cancelled before the forward started: never touch the wire
+            Response::cancelled(self.id)
+        } else {
+            forward(&self.inner, self.id, &self.model, &self.inputs, &self.opts, &self.order)
+        };
+        // ledger: exactly one terminal record per admitted submission,
+        // recorded BEFORE the reply is delivered so a waiter observing
+        // the response also observes a settled snapshot
+        match &resp.status {
+            ResponseStatus::Ok => {
+                let lat = self.submitted.elapsed().as_micros() as u64;
+                self.inner.metrics.record_completion(self.class, lat, resp.queue_us);
+            }
+            ResponseStatus::Error(_) => self.inner.metrics.record_failed(),
+            s @ (ResponseStatus::Expired | ResponseStatus::Cancelled) => {
+                self.inner.metrics.record_shed(s)
+            }
+        }
+        let _ = self.tx.send(resp);
+    }
+}
+
+/// Walk the candidate order: dial (pooled), replay the submission, and
+/// return the first served answer. Transport failures feed the node's
+/// breaker and fall through to the next replica; a typed `Rejected`
+/// frame from a node is an admission verdict, not a health signal — it
+/// also falls through, without dinging the breaker.
+fn forward(
+    inner: &Arc<RouterInner>,
+    id: RequestId,
+    model: &str,
+    inputs: &[Value],
+    opts: &SubmitOptions,
+    order: &[usize],
+) -> Response {
+    let mut last_reject: Option<String> = None;
+    for (pos, &ni) in order.iter().enumerate() {
+        let breaker = inner.membership.breaker(ni);
+        let node = &inner.nodes[ni];
+        let pooled = node.pool.lock().unwrap().pop();
+        let mut client = match pooled {
+            Some(c) => c,
+            None => {
+                let addr = inner.membership.node(ni).addr.as_str();
+                match NetClient::connect_retrying(addr, &inner.cfg.retry, inner.cfg.recv_timeout) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        if breaker.record_failure() {
+                            inner.metrics.record_breaker_open();
+                        }
+                        continue;
+                    }
+                }
+            }
+        };
+        match client.call_with(model, inputs.to_vec(), opts) {
+            Ok(frame) => {
+                breaker.record_success();
+                let mut pool = node.pool.lock().unwrap();
+                if pool.len() < inner.cfg.pool_per_node {
+                    pool.push(client);
+                }
+                drop(pool);
+                if let WireStatus::Rejected(msg) = &frame.status {
+                    last_reject = Some(msg.clone());
+                    continue;
+                }
+                node.forwards.fetch_add(1, Ordering::Relaxed);
+                inner.metrics.record_forward();
+                if pos > 0 {
+                    node.failovers.fetch_add(1, Ordering::Relaxed);
+                    inner.metrics.record_failover();
+                }
+                return response_from_frame(id, frame);
+            }
+            Err(_) => {
+                // suspect connection: drop it rather than pooling it
+                if breaker.record_failure() {
+                    inner.metrics.record_breaker_open();
+                }
+                continue;
+            }
+        }
+    }
+    inner.metrics.record_no_healthy_replica();
+    if let Some(&primary) = order.first() {
+        inner.nodes[primary].no_healthy.fetch_add(1, Ordering::Relaxed);
+    }
+    match last_reject {
+        Some(msg) => Response::error(id, format!("cluster: every replica rejected (retryable): {msg}")),
+        None => Response::error(id, "cluster: no healthy replica answered (retryable)"),
+    }
+}
+
+/// Re-stamp a node's wire answer with the router-minted id; everything
+/// else — outputs, `served_by`, timing, typed status — passes through
+/// verbatim (the transparency the parity test pins bitwise).
+fn response_from_frame(id: RequestId, f: ResponseFrame) -> Response {
+    let status = match f.status {
+        WireStatus::Ok => ResponseStatus::Ok,
+        WireStatus::Error(m) => ResponseStatus::Error(m),
+        WireStatus::Expired => ResponseStatus::Expired,
+        WireStatus::Cancelled => ResponseStatus::Cancelled,
+        // unreachable via forward() (rejects fall through), kept total
+        // for direct callers
+        WireStatus::Rejected(m) => ResponseStatus::Error(format!("rejected by node: {m}")),
+    };
+    Response {
+        id,
+        outputs: f.outputs,
+        served_by: f.served_by.into(),
+        batch_size: f.batch_size as usize,
+        latency_us: f.latency_us,
+        queue_us: f.queue_us,
+        status,
+    }
+}
+
+impl ServingService for RouterServer {
+    fn submit_with(
+        &self,
+        model: &str,
+        inputs: Vec<Value>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, AdmissionDecision> {
+        let inner = &self.inner;
+        let class = opts.priority;
+        let now = Instant::now();
+
+        let order = inner.candidates(model);
+        if order.is_empty() {
+            // no node hosts the model: admitted-and-answered with a
+            // typed error so `answered() == admitted` holds (mirrors the
+            // single-node unroutable-model path rather than inventing a
+            // new rejection kind)
+            let id = RequestId(inner.next_id.fetch_add(1, Ordering::Relaxed));
+            let (tx, rx) = channel();
+            inner.metrics.record_admitted(class);
+            inner.metrics.record_failed();
+            let _ = tx.send(Response::error(id, format!("cluster: no node hosts model `{model}`")));
+            return Ok(Ticket::new(id, class, rx, Arc::new(AtomicBool::new(false)))
+                .with_deadline(opts.deadline.map(|d| now + d)));
+        }
+
+        // health gate: drop candidates whose breaker sheds this class
+        let live: Vec<usize> = order
+            .iter()
+            .copied()
+            .filter(|&i| {
+                !matches!(inner.membership.breaker(i).admit(class), BreakerVerdict::Shed)
+            })
+            .collect();
+        if live.is_empty() {
+            // every replica believed down: typed, retryable shed at the
+            // door — nothing queued, nothing forwarded
+            inner.metrics.record_no_healthy_replica();
+            inner.metrics.record_breaker_shed();
+            inner.nodes[order[0]].no_healthy.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionDecision::RejectUnhealthy(class));
+        }
+
+        let id = RequestId(inner.next_id.fetch_add(1, Ordering::Relaxed));
+        let (tx, rx) = channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        inner.metrics.record_admitted(class);
+        let job = ForwardJob {
+            inner: inner.clone(),
+            id,
+            class,
+            model: model.to_string(),
+            inputs,
+            opts: opts.clone(),
+            tx: tx.clone(),
+            cancelled: cancelled.clone(),
+            submitted: now,
+            order: live,
+        };
+        if let Err(e) =
+            std::thread::Builder::new().name("s4-router-fwd".into()).spawn(move || job.run())
+        {
+            inner.metrics.record_failed();
+            let _ = tx.send(Response::error(id, format!("router: spawn forwarder: {e}")));
+        }
+        Ok(Ticket::new(id, class, rx, cancelled).with_deadline(opts.deadline.map(|d| now + d)))
+    }
+
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let inner = &self.inner;
+        let mut snap = inner.metrics.snapshot();
+        snap.cluster.by_node = inner
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| NodeRouterStats {
+                node: inner.membership.node(i).id.clone(),
+                forwards: n.forwards.load(Ordering::Relaxed),
+                failovers: n.failovers.load(Ordering::Relaxed),
+                no_healthy_replica: n.no_healthy.load(Ordering::Relaxed),
+            })
+            .collect();
+        snap
+    }
+
+    fn shared_metrics(&self) -> Option<Arc<Metrics>> {
+        Some(self.inner.metrics.clone())
+    }
+}
+
+mirror_serving_service!(RouterServer);
+
+/// One in-process cluster node booted by [`spawn_local_cluster`]: a full
+/// coordinator [`Server`] behind its own [`NetServer`] on a loopback
+/// port.
+pub struct LocalNode {
+    pub id: String,
+    pub addr: SocketAddr,
+    server: Option<Server>,
+    net: Arc<NetServer>,
+    /// Direct (router-bypassing) handle into this node's coordinator —
+    /// parity tests and per-node ledger checks use it.
+    pub handle: ServerHandle,
+}
+
+impl LocalNode {
+    /// Kill this node: stop the socket front end, then drain and join
+    /// the coordinator. Idempotent; after this the port refuses
+    /// connections, which is exactly the failure the router's breaker
+    /// tier exists to absorb.
+    pub fn kill(&mut self) {
+        self.net.shutdown();
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+
+    pub fn is_killed(&self) -> bool {
+        self.server.is_none()
+    }
+}
+
+/// An in-process fleet for tests and benches: N [`LocalNode`]s plus the
+/// [`ClusterSpec`] describing them.
+pub struct LocalCluster {
+    pub nodes: Vec<LocalNode>,
+}
+
+impl LocalCluster {
+    /// The spec a [`RouterServer`] fronting this fleet should be built
+    /// from. Every local node hosts every model (empty model list).
+    pub fn spec(&self) -> ClusterSpec {
+        ClusterSpec {
+            nodes: self
+                .nodes
+                .iter()
+                .map(|n| NodeSpec { id: n.id.clone(), addr: n.addr.to_string(), models: Vec::new() })
+                .collect(),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        for n in &mut self.nodes {
+            n.kill();
+        }
+    }
+}
+
+/// Boot `n` in-process serving nodes, each a full coordinator stack
+/// behind its own loopback [`NetServer`] (OS-assigned ports — tests
+/// never race on fixed ones). `mk(i)` supplies node `i`'s stack.
+pub fn spawn_local_cluster(
+    n: usize,
+    mk: impl Fn(usize) -> (ServerConfig, Manifest, NodeRouter, Arc<dyn InferenceBackend>),
+) -> anyhow::Result<LocalCluster> {
+    spawn_local_cluster_cfg(n, NetServerConfig::default(), mk)
+}
+
+/// [`spawn_local_cluster`] with an explicit per-node [`NetServerConfig`]
+/// (benches raise `max_connections` for high-concurrency forwarding).
+pub fn spawn_local_cluster_cfg(
+    n: usize,
+    net_cfg: NetServerConfig,
+    mk: impl Fn(usize) -> (ServerConfig, Manifest, NodeRouter, Arc<dyn InferenceBackend>),
+) -> anyhow::Result<LocalCluster> {
+    anyhow::ensure!(n > 0, "cluster needs at least one node");
+    let mut nodes = Vec::with_capacity(n);
+    for i in 0..n {
+        let (cfg, manifest, router, backend) = mk(i);
+        let server = Server::start(cfg, manifest, router, backend);
+        let handle = server.handle();
+        let net =
+            Arc::new(NetServer::bind("127.0.0.1:0", Arc::new(handle.clone()), net_cfg.clone())?);
+        let addr = net.local_addr();
+        nodes.push(LocalNode { id: format!("n{i}"), addr, server: Some(server), net, handle });
+    }
+    Ok(LocalCluster { nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::EchoBackend;
+    use crate::coordinator::BreakerState;
+    use std::net::TcpListener;
+
+    const MANIFEST: &str = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [1, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b8", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 8, "seq": 32,
+       "inputs": [{"name": "ids", "shape": [8, 32], "dtype": "s32"}],
+       "outputs": [{"shape": [8, 2], "dtype": "f32"}]}
+    ]}"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(std::path::Path::new("/tmp"), MANIFEST).unwrap()
+    }
+
+    fn echo_node(_i: usize) -> (ServerConfig, Manifest, NodeRouter, Arc<dyn InferenceBackend>) {
+        let m = manifest();
+        let backend: Arc<dyn InferenceBackend> = Arc::new(EchoBackend::from_manifest(&m));
+        let router = NodeRouter::new(crate::coordinator::RoutingPolicy::MaxSparsity);
+        (ServerConfig::default(), m, router, backend)
+    }
+
+    /// A loopback port with nothing listening — connects get RST fast.
+    fn dead_addr() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        drop(l);
+        addr.to_string()
+    }
+
+    fn fast_cfg(replication: usize) -> RouterConfig {
+        RouterConfig {
+            replication,
+            retry: RetryPolicy {
+                attempts: 1,
+                connect_timeout: Duration::from_millis(250),
+                ..RetryPolicy::default()
+            },
+            recv_timeout: Duration::from_secs(5),
+            ..RouterConfig::default()
+        }
+    }
+
+    #[test]
+    fn routes_and_round_robins_across_replicas() {
+        let cluster = spawn_local_cluster(2, echo_node).unwrap();
+        let router = RouterServer::new(cluster.spec(), fast_cfg(2)).unwrap();
+        for i in 0..4u64 {
+            let t = router
+                .submit("bert_tiny", vec![Value::tokens(vec![i as i32; 4])])
+                .expect("routable");
+            let r = t.wait().unwrap();
+            assert!(r.is_ok(), "forwarded submission must serve: {:?}", r.status);
+        }
+        let snap = router.metrics_snapshot();
+        assert_eq!(snap.cluster.forwards, 4);
+        assert_eq!(snap.cluster.failovers, 0, "both nodes healthy");
+        assert_eq!(snap.answered(), snap.admitted, "router ledger reconciles");
+        // rotation spreads a single hot model over both replicas
+        for n in &snap.cluster.by_node {
+            assert_eq!(n.forwards, 2, "round-robin must split 4 forwards 2/2: {snap:?}");
+        }
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn fails_over_to_a_live_replica_when_one_node_is_dead() {
+        let cluster = spawn_local_cluster(1, echo_node).unwrap();
+        let mut spec = cluster.spec();
+        spec.nodes.push(NodeSpec { id: "dead".into(), addr: dead_addr(), models: Vec::new() });
+        let router = RouterServer::new(spec, fast_cfg(2)).unwrap();
+        for i in 0..4u64 {
+            let t = router
+                .submit("bert_tiny", vec![Value::tokens(vec![i as i32; 4])])
+                .expect("routable");
+            let r = t.wait().unwrap();
+            assert!(r.is_ok(), "must fail over to the live node: {:?}", r.status);
+        }
+        let snap = router.metrics_snapshot();
+        assert_eq!(snap.cluster.forwards, 4, "every submission served");
+        assert!(
+            snap.cluster.failovers >= 1,
+            "requests whose rotated primary was the dead node must fail over: {snap:?}"
+        );
+        assert_eq!(snap.answered(), snap.admitted);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn all_replicas_open_is_a_typed_retryable_door_shed() {
+        let spec = ClusterSpec::parse_flag(&format!("d0={},d1={}", dead_addr(), dead_addr()))
+            .unwrap();
+        let cfg = RouterConfig {
+            breaker: BreakerConfig { failure_threshold: 1, ..BreakerConfig::default() },
+            ..fast_cfg(2)
+        };
+        let router = RouterServer::new(spec, cfg).unwrap();
+        // first submission is admitted, burns through both dead replicas,
+        // and is answered with a typed retryable error
+        let t = router.submit("bert_tiny", vec![Value::tokens(vec![1; 4])]).expect("admitted");
+        let r = t.wait().unwrap();
+        assert!(
+            r.error_message().map(|m| m.contains("no healthy replica")).unwrap_or(false),
+            "expected the no-healthy-replica error, got {:?}",
+            r.status
+        );
+        assert_eq!(router.membership().breaker(0).state(), BreakerState::Open);
+        assert_eq!(router.membership().breaker(1).state(), BreakerState::Open);
+        // Bulk never probes an open breaker → clean door shed
+        let res = router.submit_with(
+            "bert_tiny",
+            vec![Value::tokens(vec![1; 4])],
+            SubmitOptions::bulk(),
+        );
+        match res {
+            Err(AdmissionDecision::RejectUnhealthy(p)) => assert_eq!(p, Priority::Bulk),
+            other => panic!("expected RejectUnhealthy door shed, got {other:?}"),
+        }
+        let snap = router.metrics_snapshot();
+        assert!(snap.cluster.no_healthy_replica >= 2, "mid-flight + door: {snap:?}");
+        assert_eq!(snap.answered(), snap.admitted, "door shed is not admitted");
+    }
+
+    #[test]
+    fn unhosted_model_is_answered_with_a_typed_error() {
+        let spec = ClusterSpec::parse_flag("a=127.0.0.1:1:only_this").unwrap();
+        let router = RouterServer::new(spec, fast_cfg(1)).unwrap();
+        let t = router.submit("ghost", vec![Value::tokens(vec![1; 4])]).expect("admitted");
+        let r = t.wait().unwrap();
+        assert!(
+            r.error_message().map(|m| m.contains("no node hosts")).unwrap_or(false),
+            "expected unhosted-model error, got {:?}",
+            r.status
+        );
+        let snap = router.metrics_snapshot();
+        assert_eq!(snap.answered(), snap.admitted);
+        assert_eq!(snap.cluster.forwards, 0, "nothing touched the wire");
+    }
+
+    fn bits_of(vals: &[Value]) -> Vec<Vec<u32>> {
+        vals.iter()
+            .map(|v| match v {
+                Value::F32(x) => x.iter().map(|f| f.to_bits()).collect(),
+                Value::I32(x) => x.iter().map(|i| *i as u32).collect(),
+            })
+            .collect()
+    }
+
+    /// Property: forwarding is transparent in both directions — every
+    /// [`SubmitOptions`] field survives the router → node hop bitwise,
+    /// and every response field (outputs, served_by, timing, batch size)
+    /// survives the node → router hop bitwise.
+    #[test]
+    fn prop_forwarding_preserves_options_and_response_bits() {
+        use crate::util::prop::{check, Gen};
+
+        struct Canned {
+            metrics: Arc<Metrics>,
+            next: AtomicU64,
+            seen: Mutex<Vec<(String, Vec<Value>, SubmitOptions)>>,
+            reply: Mutex<Response>,
+        }
+        impl ServingService for Canned {
+            fn submit_with(
+                &self,
+                model: &str,
+                inputs: Vec<Value>,
+                opts: SubmitOptions,
+            ) -> Result<Ticket, AdmissionDecision> {
+                let id = RequestId(self.next.fetch_add(1, Ordering::Relaxed));
+                self.seen.lock().unwrap().push((model.to_string(), inputs, opts.clone()));
+                let (tx, rx) = channel();
+                let mut resp = self.reply.lock().unwrap().clone();
+                resp.id = id;
+                tx.send(resp).unwrap();
+                Ok(Ticket::new(id, opts.priority, rx, Arc::new(AtomicBool::new(false))))
+            }
+            fn metrics_snapshot(&self) -> MetricsSnapshot {
+                self.metrics.snapshot()
+            }
+        }
+
+        let canned = Arc::new(Canned {
+            metrics: Arc::new(Metrics::new()),
+            next: AtomicU64::new(1),
+            seen: Mutex::new(Vec::new()),
+            reply: Mutex::new(Response::error(RequestId(0), "unset")),
+        });
+        let net =
+            NetServer::bind("127.0.0.1:0", canned.clone(), NetServerConfig::default()).unwrap();
+        let spec = ClusterSpec::parse_flag(&format!("n0={}", net.local_addr())).unwrap();
+        let router = RouterServer::new(spec, fast_cfg(1)).unwrap();
+
+        check("router_forwarding_transparency", 40, |g: &mut Gen| {
+            // random QoS surface; deadlines are µs-granular because that
+            // is the wire encoding (and generous, so nothing expires)
+            let mut opts = SubmitOptions::default().with_priority(*g.pick(&Priority::ALL));
+            if g.bool() {
+                opts = opts
+                    .with_deadline(Duration::from_micros(g.usize_in(500_000, 3_000_000) as u64));
+            }
+            if g.bool() {
+                opts = opts.with_client_tag(format!("tag-{}", g.usize_in(0, 9999)));
+            }
+            let inputs = vec![
+                Value::tokens((0..g.usize_in(1, 16)).map(|i| i as i32 * 3 + 1).collect()),
+                Value::F32(g.vec_f32(12)),
+            ];
+            let reply = Response {
+                id: RequestId(0),
+                outputs: vec![Value::F32(g.vec_f32(12))],
+                served_by: Arc::from(format!("artifact_{}", g.usize_in(0, 99)).as_str()),
+                batch_size: g.usize_in(1, 64),
+                latency_us: g.usize_in(0, 1_000_000) as u64,
+                queue_us: g.usize_in(0, 1_000_000) as u64,
+                status: ResponseStatus::Ok,
+            };
+            *canned.reply.lock().unwrap() = reply.clone();
+
+            let t = router
+                .submit_with("any_model", inputs.clone(), opts.clone())
+                .map_err(|d| format!("rejected: {d:?}"))?;
+            let r = t.wait().map_err(|e| format!("wait: {e}"))?;
+
+            // node → router: the answer passes through verbatim
+            crate::prop_assert!(r.status == ResponseStatus::Ok, "status: {:?}", r.status);
+            crate::prop_assert!(
+                *r.served_by == *reply.served_by,
+                "served_by drifted: {} != {}",
+                r.served_by,
+                reply.served_by
+            );
+            crate::prop_assert!(r.batch_size == reply.batch_size, "batch_size drifted");
+            crate::prop_assert!(
+                r.latency_us == reply.latency_us && r.queue_us == reply.queue_us,
+                "timing drifted: {}/{} != {}/{}",
+                r.latency_us,
+                r.queue_us,
+                reply.latency_us,
+                reply.queue_us
+            );
+            crate::prop_assert!(
+                bits_of(&r.outputs) == bits_of(&reply.outputs),
+                "output bits drifted"
+            );
+
+            // router → node: the node saw exactly what the client sent
+            let (model, seen_inputs, seen_opts) = canned
+                .seen
+                .lock()
+                .unwrap()
+                .pop()
+                .ok_or_else(|| "node saw no submission".to_string())?;
+            crate::prop_assert!(model == "any_model", "model drifted: {model}");
+            crate::prop_assert!(
+                bits_of(&seen_inputs) == bits_of(&inputs),
+                "input bits drifted"
+            );
+            crate::prop_assert!(
+                seen_opts.priority == opts.priority,
+                "priority drifted: {:?} != {:?}",
+                seen_opts.priority,
+                opts.priority
+            );
+            crate::prop_assert!(
+                seen_opts.deadline == opts.deadline,
+                "deadline drifted: {:?} != {:?}",
+                seen_opts.deadline,
+                opts.deadline
+            );
+            crate::prop_assert!(
+                seen_opts.client_tag == opts.client_tag,
+                "client_tag drifted: {:?} != {:?}",
+                seen_opts.client_tag,
+                opts.client_tag
+            );
+            Ok(())
+        });
+        net.shutdown();
+    }
+
+    #[test]
+    fn router_ticket_honours_its_own_deadline() {
+        // unreachable-but-not-refusing address keeps the forward pending
+        // long enough for the ticket's own deadline to fire first
+        let spec = ClusterSpec::parse_flag(&format!("d={}", dead_addr())).unwrap();
+        let cfg = RouterConfig {
+            retry: RetryPolicy {
+                attempts: 3,
+                base: Duration::from_millis(200),
+                connect_timeout: Duration::from_millis(500),
+                ..RetryPolicy::default()
+            },
+            ..fast_cfg(1)
+        };
+        let router = RouterServer::new(spec, cfg).unwrap();
+        let t = router
+            .submit_with(
+                "bert_tiny",
+                vec![Value::tokens(vec![1; 4])],
+                SubmitOptions::default().with_deadline(Duration::from_millis(30)),
+            )
+            .expect("admitted");
+        let start = Instant::now();
+        let r = t.wait().unwrap();
+        assert_eq!(r.status, ResponseStatus::Expired, "own deadline, typed");
+        assert!(start.elapsed() < Duration::from_secs(2), "did not wait out the retries");
+    }
+}

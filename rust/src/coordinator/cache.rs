@@ -23,19 +23,25 @@
 //!   reply. Followers hold ordinary [`Ticket`]s with independent cancel
 //!   flags; a follower cancelling never disturbs the leader.
 //!
-//! A coalesced follower's own `SubmitOptions::deadline` is **not**
-//! enforced: the follower never enters the batcher/worker pipeline, so
-//! deadline shedding does not apply to it and `Ticket::wait` resolves
-//! whenever the leader settles, however long that takes. Callers that
-//! need a hard local bound should use [`Ticket::wait_timeout`]. The
-//! converse also holds: a leader shed for *its* cancel/deadline settles
-//! followers with a distinct retryable error rather than a
-//! `Cancelled`/`Expired` they did not cause (see [`SharedReply::settle`]).
+//! A coalesced follower keeps its **own deadline**. The follower never
+//! enters the batcher/worker pipeline, so *server-side* deadline
+//! shedding cannot see it — instead its [`Ticket`] carries the
+//! submission's absolute deadline and [`Ticket::wait`] /
+//! [`Ticket::wait_timeout`] return a typed `Expired` at that instant if
+//! the leader has not settled yet (data wins ties; a settle that
+//! already landed is returned). A follower therefore no longer inherits
+//! the leader's timeline — the PR 8 limitation this paragraph used to
+//! document. The converse still holds: a leader shed for *its*
+//! cancel/deadline settles followers with a distinct retryable error
+//! rather than a `Cancelled`/`Expired` they did not cause (see
+//! [`SharedReply::settle`]).
 //!
 //! Bounded by TTL + `max_entries` (stale entries and settled-non-`Ok`
 //! flights are evicted first — a settled-`Ok` flight is *promoted* to a
-//! resolved entry rather than discarded, then the oldest resolved entry
-//! goes; pending leaders are never evicted — when the map is full of
+//! resolved entry rather than discarded, then the **least-recently-hit**
+//! resolved entry goes: every hit touches its entry's recency stamp, so
+//! hot Zipf-head keys outlive colder-but-newer ones under a full map;
+//! pending leaders are never evicted — when the map is full of
 //! them, a newcomer simply proceeds uncoalesced). Only `Ok` responses
 //! are ever served from the cache: errors, expirations, and
 //! cancellations settle their followers but are dropped from the map, so
@@ -111,7 +117,14 @@ enum Entry {
     /// A leader is executing this key; followers attach here.
     InFlight(Arc<SharedReply>),
     /// A fresh `Ok` response, promoted after the leader settled.
-    Resolved { resp: Response, at: Instant },
+    Resolved {
+        resp: Response,
+        /// When the leader settled — the TTL clock.
+        at: Instant,
+        /// When this entry last served a hit (settle time until then) —
+        /// the LRU eviction clock.
+        last_hit: Instant,
+    },
 }
 
 struct CacheShared {
@@ -166,7 +179,9 @@ impl ResponseCache {
 
     /// Answer immediately with a clone of `template` re-stamped for this
     /// caller: its own fresh id, `served_by` marked `cache:<origin>`,
-    /// zero queue/latency (the whole point of a hit).
+    /// zero queue/latency (the whole point of a hit). The ticket still
+    /// carries the caller's own deadline for uniformity — moot here,
+    /// since the response is already in the channel and data wins.
     fn hit_ticket(&self, template: &Response, req: &IngressRequest<'_>) -> Ticket {
         let id = self.mint_id();
         let mut resp = template.clone();
@@ -174,6 +189,7 @@ impl ResponseCache {
         let (tx, rx) = channel();
         let _ = tx.send(resp);
         Ticket::new(id, req.opts.priority, rx, Arc::new(AtomicBool::new(false)))
+            .with_deadline(req.opts.deadline.map(|d| Instant::now() + d))
     }
 
     /// Rewrite a settled leader response into the resolved-entry
@@ -193,9 +209,10 @@ impl ResponseCache {
     /// just paid to compute — discarding them would gut the hit rate;
     /// they stay TTL-bound and evictable like any resolved entry), while
     /// stale resolved entries and settled-non-`Ok`/aborted flights are
-    /// dropped; then, if still full, the oldest resolved entry goes.
-    /// Pending leaders are never evicted. Returns whether an insert now
-    /// fits.
+    /// dropped; then, if still full, the **least-recently-hit** resolved
+    /// entry goes (LRU — a hot entry that keeps serving hits outlives a
+    /// colder one that merely resolved later). Pending leaders are never
+    /// evicted. Returns whether an insert now fits.
     fn make_room(map: &mut HashMap<CacheKey, Entry>, cfg: &CacheConfig, now: Instant) -> bool {
         if map.len() < cfg.max_entries {
             return true;
@@ -219,20 +236,21 @@ impl ResponseCache {
             }
         });
         for (k, resp, at) in promotions {
-            map.insert(k, Entry::Resolved { resp: Self::promote(&resp), at });
+            // a promotion has never served a hit: recency = settle time
+            map.insert(k, Entry::Resolved { resp: Self::promote(&resp), at, last_hit: at });
         }
         if map.len() < cfg.max_entries {
             return true;
         }
-        let oldest = map
+        let coldest = map
             .iter()
             .filter_map(|(k, e)| match e {
-                Entry::Resolved { at, .. } => Some((k.clone(), *at)),
+                Entry::Resolved { last_hit, .. } => Some((k.clone(), *last_hit)),
                 Entry::InFlight(_) => None,
             })
-            .min_by_key(|(_, at)| *at)
+            .min_by_key(|(_, last_hit)| *last_hit)
             .map(|(k, _)| k);
-        if let Some(k) = oldest {
+        if let Some(k) = coldest {
             map.remove(&k);
         }
         map.len() < cfg.max_entries
@@ -255,9 +273,10 @@ impl IngressStage for ResponseCache {
 
         // Probe. A settled in-flight entry is promoted lazily here — no
         // background thread touches the map.
-        match map.get(&key) {
-            Some(Entry::Resolved { resp, at }) => {
+        match map.get_mut(&key) {
+            Some(Entry::Resolved { resp, at, last_hit }) => {
                 if now.duration_since(*at) < self.inner.cfg.ttl {
+                    *last_hit = now; // LRU touch: hits keep entries warm
                     let t = self.hit_ticket(resp, req);
                     let len = map.len();
                     drop(map);
@@ -276,19 +295,29 @@ impl IngressStage for ResponseCache {
                     AttachOutcome::Attached(rx) => {
                         drop(map);
                         self.inner.metrics.record_coalesced();
-                        return StageOutcome::Answer(Ticket::new(
-                            id,
-                            req.opts.priority,
-                            rx,
-                            Arc::new(AtomicBool::new(false)),
-                        ));
+                        // the follower's ticket enforces the follower's
+                        // own deadline — it waits on the leader's
+                        // schedule but never inherits the leader's
+                        // timeline (see the module docs)
+                        return StageOutcome::Answer(
+                            Ticket::new(
+                                id,
+                                req.opts.priority,
+                                rx,
+                                Arc::new(AtomicBool::new(false)),
+                            )
+                            .with_deadline(req.opts.deadline.map(|d| now + d)),
+                        );
                     }
                     AttachOutcome::Settled(resp, at) => {
                         // leader finished between enqueue and our probe
                         if resp.is_ok() && now.duration_since(at) < self.inner.cfg.ttl {
                             let promoted = Self::promote(&resp);
                             let t = self.hit_ticket(&promoted, req);
-                            map.insert(key, Entry::Resolved { resp: promoted, at });
+                            map.insert(
+                                key,
+                                Entry::Resolved { resp: promoted, at, last_hit: now },
+                            );
                             let len = map.len();
                             drop(map);
                             self.publish_size(len);
@@ -552,6 +581,70 @@ mod tests {
                 assert_eq!(r.logits(), &[2.0]);
             }
             other => panic!("settled-Ok flight must be promoted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coalesced_follower_expires_on_its_own_deadline() {
+        let c = cache(16, Duration::from_secs(60));
+        let inputs = [Value::I32(vec![11])];
+        let sr = lead(&c, "m", &inputs);
+        // follower with a 20ms deadline attaches to a leader that will
+        // not settle for a long time: the old behavior blocked on the
+        // leader's timeline; now the follower sheds itself, typed
+        let opts = SubmitOptions::default().with_deadline(Duration::from_millis(20));
+        let follower = match c.admit(&ireq("m", &inputs, &opts)) {
+            StageOutcome::Answer(t) => t,
+            other => panic!("expected coalesced Answer, got {other:?}"),
+        };
+        let start = Instant::now();
+        let r = follower.wait().unwrap();
+        assert_eq!(r.status, ResponseStatus::Expired, "follower sheds on its OWN deadline");
+        assert_eq!(r.id, follower.id(), "shed keeps the follower's id");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "must not inherit the leader's timeline"
+        );
+        // the leader settling later is unaffected: the next identical
+        // submission is served the promoted response
+        sr.settle(&ok_response(1, vec![3.0]));
+        let opts2 = SubmitOptions::default();
+        match c.admit(&ireq("m", &inputs, &opts2)) {
+            StageOutcome::Answer(t) => assert!(t.wait().unwrap().is_ok()),
+            other => panic!("expected promoted hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_keeps_a_repeatedly_hit_entry_over_a_colder_newer_one() {
+        let c = cache(2, Duration::from_secs(60));
+        let hot = [Value::I32(vec![1])];
+        let cold = [Value::I32(vec![2])];
+        let newcomer = [Value::I32(vec![3])];
+        // hot resolves FIRST (it is the oldest by settle time)...
+        let sr_hot = lead(&c, "m", &hot);
+        sr_hot.settle(&ok_response(1, vec![1.0]));
+        std::thread::sleep(Duration::from_millis(1));
+        let sr_cold = lead(&c, "m", &cold);
+        sr_cold.settle(&ok_response(2, vec![2.0]));
+        std::thread::sleep(Duration::from_millis(1));
+        // ...but keeps serving hits, so its recency stamp is the newest
+        let opts = SubmitOptions::default();
+        match c.admit(&ireq("m", &hot, &opts)) {
+            StageOutcome::Answer(_) => {}
+            other => panic!("expected hot hit, got {other:?}"),
+        }
+        // a new key forces eviction on the full map: the old
+        // oldest-resolved policy would evict hot; LRU evicts cold
+        let _sr_new = lead(&c, "m", &newcomer);
+        assert_eq!(c.len(), 2);
+        match c.admit(&ireq("m", &hot, &opts)) {
+            StageOutcome::Answer(_) => {} // hot survived
+            other => panic!("repeatedly-hit entry must outlive a colder newer one, got {other:?}"),
+        }
+        match c.admit(&ireq("m", &cold, &opts)) {
+            StageOutcome::Continue(_) => {} // cold was evicted → miss
+            other => panic!("expected cold evicted, got {other:?}"),
         }
     }
 

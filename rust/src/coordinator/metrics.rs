@@ -72,6 +72,16 @@ pub struct Metrics {
     pub coalesced: AtomicU64,
     /// gauge: response-cache entries currently held (resolved + in-flight)
     pub cache_size: AtomicU64,
+    /// requests forwarded to a cluster node by the router tier
+    /// ([`RouterServer`](crate::cluster::RouterServer)); zero without one
+    pub router_forwards: AtomicU64,
+    /// forwards served by a non-primary replica — the primary was shed by
+    /// its breaker or failed mid-forward and a replica absorbed the work
+    pub router_failovers: AtomicU64,
+    /// submissions that found no live replica at all: shed at the door
+    /// with a typed retryable reject, or answered with a typed error after
+    /// every replica failed mid-flight
+    pub router_no_healthy: AtomicU64,
     admitted_by_class: [AtomicU64; 3],
     completed_by_class: [AtomicU64; 3],
     lat: Mutex<Latencies>,
@@ -95,6 +105,37 @@ pub struct NetStats {
     pub frames_in: u64,
     pub frames_out: u64,
     pub frames_malformed: u64,
+}
+
+/// Router-tier counters for one cluster node, keyed by its membership
+/// id. Filled by [`RouterServer`](crate::cluster::RouterServer)'s
+/// `metrics_snapshot` — the shared [`Metrics`] sink holds only the
+/// fleet-wide aggregates (it has no notion of node identity).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NodeRouterStats {
+    /// Node id from the [`ClusterSpec`](crate::cluster::ClusterSpec).
+    pub node: String,
+    /// Requests this node served for the router.
+    pub forwards: u64,
+    /// Forwards this node absorbed as a failover target (it was not the
+    /// request's first-choice replica).
+    pub failovers: u64,
+    /// Requests whose *primary* was this node but which found no live
+    /// replica anywhere (shed or errored) — attributes lost work to the
+    /// node that should have taken it.
+    pub no_healthy_replica: u64,
+}
+
+/// Point-in-time router-tier counters: fleet-wide aggregates plus the
+/// per-node breakdown. All zero/empty without a router tier.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RouterStats {
+    pub forwards: u64,
+    pub failovers: u64,
+    pub no_healthy_replica: u64,
+    /// Per-node rows in membership order (empty when the snapshot was
+    /// taken from the bare [`Metrics`] sink rather than a router).
+    pub by_node: Vec<NodeRouterStats>,
 }
 
 /// Typed point-in-time view of [`Metrics`] — what
@@ -132,6 +173,8 @@ pub struct MetricsSnapshot {
     pub by_class: [ClassStats; 3],
     /// socket-boundary counters (all zero without a net front end)
     pub net: NetStats,
+    /// router-tier counters (all zero/empty without a cluster router)
+    pub cluster: RouterStats,
     pub mean_batch_fill: f64,
     pub latency_p50_us: f64,
     pub latency_p99_us: f64,
@@ -208,6 +251,19 @@ impl MetricsSnapshot {
                 self.net.frames_out,
                 self.net.frames_malformed,
             ));
+        }
+        if self.cluster.forwards > 0 || self.cluster.no_healthy_replica > 0 {
+            s.push_str(&format!(
+                " cluster[forwards={} failovers={} no_healthy={}",
+                self.cluster.forwards, self.cluster.failovers, self.cluster.no_healthy_replica,
+            ));
+            for n in &self.cluster.by_node {
+                s.push_str(&format!(
+                    " {}={}/{}/{}",
+                    n.node, n.forwards, n.failovers, n.no_healthy_replica
+                ));
+            }
+            s.push(']');
         }
         s
     }
@@ -351,6 +407,35 @@ impl Metrics {
         self.cache_size.store(n, Ordering::Relaxed);
     }
 
+    /// One admitted request answered with a typed `Error` response (the
+    /// router tier's transport failures land here; in-process serving
+    /// records failures from the worker fence directly).
+    #[inline]
+    pub fn record_failed(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The router tier forwarded one request to a cluster node.
+    #[inline]
+    pub fn record_forward(&self) {
+        self.router_forwards.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A forward was served by a non-primary replica.
+    #[inline]
+    pub fn record_failover(&self) {
+        self.router_failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A submission found no live replica (shed at the door or failed on
+    /// every replica). The door-shed path also records a rejection via
+    /// [`record_rejected`](Self::record_rejected) so `admitted + rejected`
+    /// still covers every submission.
+    #[inline]
+    pub fn record_no_healthy_replica(&self) {
+        self.router_no_healthy.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
         self.lat.lock().unwrap().latency.quantile_us(q)
     }
@@ -425,6 +510,12 @@ impl Metrics {
                 frames_in: self.frames_in.load(Ordering::Relaxed),
                 frames_out: self.frames_out.load(Ordering::Relaxed),
                 frames_malformed: self.frames_malformed.load(Ordering::Relaxed),
+            },
+            cluster: RouterStats {
+                forwards: self.router_forwards.load(Ordering::Relaxed),
+                failovers: self.router_failovers.load(Ordering::Relaxed),
+                no_healthy_replica: self.router_no_healthy.load(Ordering::Relaxed),
+                by_node: Vec::new(),
             },
             mean_batch_fill: self.mean_batch_fill(),
             latency_p50_us: lat_q[0],
@@ -534,6 +625,40 @@ mod tests {
     #[test]
     fn empty_fill_is_zero() {
         assert_eq!(Metrics::new().mean_batch_fill(), 0.0);
+    }
+
+    #[test]
+    fn router_counters_flow_into_snapshot_and_report() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().cluster, RouterStats::default());
+        assert!(!m.report().contains("cluster["), "no cluster line without a router tier");
+        m.record_forward();
+        m.record_forward();
+        m.record_forward();
+        m.record_failover();
+        m.record_no_healthy_replica();
+        m.record_rejected(); // the door-shed path pairs these two
+        let mut s = m.snapshot();
+        assert_eq!(s.cluster.forwards, 3);
+        assert_eq!(s.cluster.failovers, 1);
+        assert_eq!(s.cluster.no_healthy_replica, 1);
+        assert_eq!(s.rejected, 1);
+        assert!(s.cluster.by_node.is_empty(), "bare sink has no node identity");
+        assert!(
+            s.report().contains("cluster[forwards=3 failovers=1 no_healthy=1]"),
+            "{}",
+            s.report()
+        );
+        // the router tier appends its per-node rows to the snapshot
+        s.cluster.by_node = vec![
+            NodeRouterStats { node: "n0".into(), forwards: 2, failovers: 0, no_healthy_replica: 1 },
+            NodeRouterStats { node: "n1".into(), forwards: 1, failovers: 1, no_healthy_replica: 0 },
+        ];
+        assert!(
+            s.report().contains("cluster[forwards=3 failovers=1 no_healthy=1 n0=2/0/1 n1=1/1/0]"),
+            "{}",
+            s.report()
+        );
     }
 
     #[test]

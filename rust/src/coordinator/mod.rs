@@ -34,6 +34,15 @@
 //!  └───▲───────────────────────────────────────────────┬─┘     move || net.shutdown())
 //!      │ length-prefixed frames (wire)                 │
 //!   net::NetClient / net::loadgen  ◀───────────────────┘   remote clients over TCP
+//!      ▲
+//!      │ the same wire protocol, one level up: a cluster router tier
+//!      │ (crate::cluster) is itself a ServingService behind a NetServer,
+//!      │ forwarding each submission to one of N such nodes
+//!  ┌───┴──────────────────────────────────────────────────┐
+//!  │ cluster::RouterServer   placement (hash-by-model, R) │
+//!  │   rotate replicas ─▶ forward over pooled NetClient   │
+//!  │   per-node Breaker ─▶ failover / typed retryable shed│
+//!  └──────────────────────────────────────────────────────┘
 //! ```
 //!
 //! Cache hits and coalesced attaches are answered without being
@@ -95,7 +104,7 @@ pub use ingress::{
     AdmissionGate, BreakerGate, ChainOutcome, IngressChain, IngressRequest, IngressStage,
     ReplyAttachment, StageOutcome,
 };
-pub use metrics::{ClassStats, Metrics, MetricsSnapshot, NetStats};
+pub use metrics::{ClassStats, Metrics, MetricsSnapshot, NetStats, NodeRouterStats, RouterStats};
 pub use request::{
     AttachOutcome, Priority, ReplySlot, Request, RequestId, Response, ResponseStatus, SharedReply,
     SubmitOptions, Ticket, COALESCED_LEADER_CANCELLED, COALESCED_LEADER_EXPIRED,

@@ -447,18 +447,33 @@ impl Response {
 /// Client-side handle for one submitted request — the v2 replacement for
 /// the raw `(RequestId, Receiver<Response>)` tuple.
 ///
-/// Exactly one [`Response`] ever arrives per ticket (the server replies
-/// once on every path: served, failed, expired, or cancelled), so
+/// Exactly one [`Response`] is ever delivered per ticket, so
 /// [`wait`](Ticket::wait) after a racing [`cancel`](Ticket::cancel) still
 /// returns a single coherent outcome: either the completed response (the
 /// cancel lost the race and the work was already done) or
 /// [`ResponseStatus::Cancelled`].
+///
+/// **Own-deadline enforcement.** A ticket minted from a submission with
+/// [`SubmitOptions::deadline`] carries that absolute deadline
+/// ([`with_deadline`](Ticket::with_deadline)); [`wait`](Ticket::wait) and
+/// [`wait_timeout`](Ticket::wait_timeout) then return a *typed*
+/// [`Expired`](ResponseStatus::Expired) (or
+/// [`Cancelled`](ResponseStatus::Cancelled), since cancel wins over
+/// expiry everywhere in this stack) response at that deadline instead of
+/// blocking on the server's timeline. This is what gives a coalesced
+/// follower — whose server-side answer arrives on the *leader's*
+/// schedule — its own deadline back. Data wins ties: a response already
+/// delivered is returned even if the deadline has since passed. After a
+/// deadline-synthesized return the ticket counts as answered; a late
+/// server reply into the channel is dropped with the ticket.
 #[derive(Debug)]
 pub struct Ticket {
     id: RequestId,
     priority: Priority,
     rx: Receiver<Response>,
     cancelled: Arc<AtomicBool>,
+    /// Absolute client-side deadline; `None` waits on the server alone.
+    deadline: Option<Instant>,
 }
 
 impl Ticket {
@@ -468,7 +483,25 @@ impl Ticket {
         rx: Receiver<Response>,
         cancelled: Arc<AtomicBool>,
     ) -> Ticket {
-        Ticket { id, priority, rx, cancelled }
+        Ticket { id, priority, rx, cancelled, deadline: None }
+    }
+
+    /// Attach the submission's absolute deadline (builder-style; used by
+    /// every ticket-minting path that has one).
+    pub(crate) fn with_deadline(mut self, deadline: Option<Instant>) -> Ticket {
+        self.deadline = deadline;
+        self
+    }
+
+    /// The typed shed response synthesized when this ticket's own
+    /// deadline fires before the server answers. Cancel wins over expiry
+    /// (same precedence as the server-side pre-execution shed).
+    fn deadline_shed(&self) -> Response {
+        if self.is_cancelled() {
+            Response::cancelled(self.id)
+        } else {
+            Response::expired(self.id)
+        }
     }
 
     pub fn id(&self) -> RequestId {
@@ -492,16 +525,55 @@ impl Ticket {
         self.cancelled.load(Ordering::Acquire)
     }
 
-    /// Block until the response arrives. Errors only if the server was
-    /// torn down without answering (a bug or a mid-shutdown submit).
+    /// Block until the response arrives — or until this ticket's own
+    /// deadline, which returns a typed [`Expired`](ResponseStatus::Expired)
+    /// response (see the type docs). Errors only if the server was torn
+    /// down without answering (a bug or a mid-shutdown submit).
     pub fn wait(&self) -> anyhow::Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request {:?} without replying", self.id))
+        use std::sync::mpsc::TryRecvError;
+        let Some(deadline) = self.deadline else {
+            return self.rx.recv().map_err(|_| {
+                anyhow::anyhow!("server dropped request {:?} without replying", self.id)
+            });
+        };
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                // data wins: an answer already delivered beats the shed
+                return match self.rx.try_recv() {
+                    Ok(r) => Ok(r),
+                    Err(TryRecvError::Empty) => Ok(self.deadline_shed()),
+                    Err(TryRecvError::Disconnected) => Err(anyhow::anyhow!(
+                        "server dropped request {:?} without replying",
+                        self.id
+                    )),
+                };
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(r) => return Ok(r),
+                Err(RecvTimeoutError::Timeout) => continue, // re-check at the deadline
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow::anyhow!(
+                        "server dropped request {:?} without replying",
+                        self.id
+                    ))
+                }
+            }
+        }
     }
 
-    /// Like [`wait`](Ticket::wait), bounded by `timeout`.
+    /// Like [`wait`](Ticket::wait), additionally bounded by `timeout`.
+    /// The ticket's own deadline still applies: whichever bound fires
+    /// first decides the outcome — the deadline yields the typed
+    /// [`Expired`](ResponseStatus::Expired) response, the caller's
+    /// timeout stays an error (the request may yet be answered).
     pub fn wait_timeout(&self, timeout: Duration) -> anyhow::Result<Response> {
+        let limit = Instant::now() + timeout;
+        if let Some(deadline) = self.deadline {
+            if deadline <= limit {
+                return self.wait(); // own-deadline bound is the tighter one
+            }
+        }
         self.rx.recv_timeout(timeout).map_err(|e| match e {
             RecvTimeoutError::Timeout => {
                 anyhow::anyhow!("request {:?}: no response within {timeout:?}", self.id)
@@ -798,5 +870,67 @@ mod tests {
         assert_eq!(t.try_take().unwrap().unwrap().status, ResponseStatus::Expired);
         drop(tx);
         assert!(t.try_take().is_err(), "abandoned is Err, not a silent None");
+    }
+
+    fn deadline_ticket(id: u64, deadline: Duration) -> (Sender<Response>, Ticket) {
+        let (tx, rx) = channel();
+        let t = Ticket::new(RequestId(id), Priority::Standard, rx, Arc::new(AtomicBool::new(false)))
+            .with_deadline(Some(Instant::now() + deadline));
+        (tx, t)
+    }
+
+    #[test]
+    fn wait_enforces_the_tickets_own_deadline_with_a_typed_expiry() {
+        // no server answer ever: wait() must return Expired AT the
+        // ticket's own deadline, not hang on the (absent) server timeline
+        let (_tx, t) = deadline_ticket(40, Duration::from_millis(20));
+        let start = Instant::now();
+        let r = t.wait().unwrap();
+        assert_eq!(r.status, ResponseStatus::Expired);
+        assert_eq!(r.id, RequestId(40), "shed keeps the ticket's own id");
+        let waited = start.elapsed();
+        assert!(waited >= Duration::from_millis(15), "fired early: {waited:?}");
+        assert!(waited < Duration::from_secs(5), "did not hang: {waited:?}");
+        // an undeadlined ticket is untouched: wait_timeout still errors
+        let (_tx2, rx) = channel::<Response>();
+        let plain =
+            Ticket::new(RequestId(41), Priority::Standard, rx, Arc::new(AtomicBool::new(false)));
+        assert!(plain.wait_timeout(Duration::from_millis(5)).is_err());
+    }
+
+    #[test]
+    fn data_wins_over_an_elapsed_deadline() {
+        let (tx, t) = deadline_ticket(42, Duration::from_millis(1));
+        tx.send(Response::error(RequestId(42), "real")).unwrap();
+        std::thread::sleep(Duration::from_millis(5)); // deadline passes
+        let r = t.wait().unwrap();
+        assert_eq!(r.error_message(), Some("real"), "delivered answer beats the shed");
+    }
+
+    #[test]
+    fn cancel_wins_over_own_deadline_expiry() {
+        let (_tx, t) = deadline_ticket(43, Duration::from_millis(5));
+        t.cancel();
+        let r = t.wait().unwrap();
+        assert_eq!(r.status, ResponseStatus::Cancelled, "cancel beats expiry, as everywhere");
+    }
+
+    #[test]
+    fn wait_timeout_picks_the_tighter_bound() {
+        // deadline tighter than the caller's timeout → typed Expired
+        let (_tx, t) = deadline_ticket(44, Duration::from_millis(10));
+        let r = t.wait_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.status, ResponseStatus::Expired);
+        // caller's timeout tighter than the deadline → plain timeout
+        // error (the request may still be answered later)
+        let (_tx, t) = deadline_ticket(45, Duration::from_secs(30));
+        assert!(t.wait_timeout(Duration::from_millis(5)).is_err());
+    }
+
+    #[test]
+    fn deadlined_wait_still_errors_on_a_dropped_server() {
+        let (tx, t) = deadline_ticket(46, Duration::from_secs(30));
+        drop(tx);
+        assert!(t.wait().is_err(), "torn-down server is an error, not an expiry");
     }
 }

@@ -210,7 +210,11 @@ impl ServingService for ServerHandle {
             }
             return Err(AdmissionDecision::RejectQueueFull(class));
         }
-        Ok(Ticket::new(id, class, rrx, cancelled))
+        // the ticket carries its own absolute deadline (same instant the
+        // batcher sheds against), so Ticket::wait can enforce it even
+        // when the answer arrives on someone else's schedule
+        Ok(Ticket::new(id, class, rrx, cancelled)
+            .with_deadline(opts.deadline.map(|d| now + d)))
     }
 
     fn metrics_snapshot(&self) -> MetricsSnapshot {
@@ -256,6 +260,11 @@ macro_rules! mirror_serving_service {
         }
     };
 }
+
+// Path-import the macro so other in-crate handle types (the cluster
+// router tier) can mirror the same surface without `#[macro_export]`
+// making it public API.
+pub(crate) use mirror_serving_service;
 
 mirror_serving_service!(ServerHandle);
 

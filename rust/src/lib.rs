@@ -76,6 +76,17 @@
 //!   and an open-loop load generator with per-class p50/p99/p999 and
 //!   achieved-vs-offered reporting ([`net::loadgen`], `s4 net-load`,
 //!   `BENCH_net.json`).
+//! * [`cluster`] — multi-node sharded serving over the above: static
+//!   membership ([`cluster::ClusterSpec`], `--nodes` flag or TOML
+//!   subset) with per-node breaker-tracked liveness
+//!   ([`cluster::Membership`]), deterministic hash-by-model placement
+//!   with replication factor R ([`cluster::ClusterPlacement`]), and a
+//!   wire-transparent router tier ([`cluster::RouterServer`],
+//!   `s4 cluster-route`) that forwards each submission to a replica
+//!   over pooled [`net::NetClient`]s, rotates replicas for load spread,
+//!   fails over when a node's breaker opens, and sheds typed-retryable
+//!   when no replica is healthy (`tests/cluster_e2e.rs`,
+//!   `BENCH_cluster.json`).
 //! * [`util`] — in-repo substrates this environment lacks crates for:
 //!   JSON, deterministic RNG, stats, CLI parsing, a bench harness (with
 //!   the `BENCH_<topic>.json` machine-readable perf-trajectory writer —
@@ -137,6 +148,7 @@
 
 pub mod arch;
 pub mod backend;
+pub mod cluster;
 pub mod coordinator;
 pub mod fault;
 pub mod graph;

