@@ -151,6 +151,11 @@ fn main() -> anyhow::Result<()> {
     let mut report = JsonReport::new("pool");
     report.set("smoke", Json::Bool(smoke));
     report.set_effective_workers(pool.participants());
+    if ratios.is_empty() {
+        // still emit BENCH_pool.json: CI treats an absent file as a
+        // broken bench, and a skipped gate should say why
+        report.set_skipped("single-core host: no multi-stripe points measure dispatch");
+    }
     report.set(
         "shape",
         Json::obj(vec![

@@ -7,8 +7,9 @@
 //! magnitude-pruned to the manifest's sparsity via
 //! [`BlockBalanced::from_dense`], packed once with
 //! [`BlockBalanced::pack`], and executed batch-by-batch through the
-//! parallel tiled kernel [`spmm_tiled_into`] with its fused
-//! bias+activation epilogue. Unlike [`SimBackend`](crate::backend::SimBackend)'s hashed
+//! parallel tiled kernel
+//! [`spmm_tiled_into`](crate::sparse::pack::spmm_tiled_into) with its
+//! fused bias+activation epilogue. Unlike [`SimBackend`](crate::backend::SimBackend)'s hashed
 //! pseudo-outputs, logits here are the product of actual sparse
 //! matmuls — so end-to-end tests exercise the numeric hot path, and the
 //! serving benches measure real compute.
@@ -38,7 +39,8 @@
 //! **Precision**: every layer carries both the f32 packed weights and
 //! their INT8 quantized twin (same pruned matrix through
 //! `prune → per-channel calibrate → pack`). [`Precision::Int8`] serves
-//! through [`qspmm_tiled_into`] — i32 accumulation, fused
+//! through [`qspmm_tiled_into`](crate::sparse::pack::qspmm_tiled_into) —
+//! i32 accumulation, fused
 //! `dequant → bias → activation` epilogue — which is the paper's
 //! headline sparsity×quantization composition. The mode is chosen per
 //! artifact by the manifest's `"precision"` field and can be forced
@@ -46,6 +48,21 @@
 //! (`s4 serve --precision int8`). Int8 logits stay within the
 //! [`CpuSparseBackend::int8_tolerance`] bound of the f32 logits and are
 //! just as deterministic (integer accumulation is order-independent).
+//!
+//! **Autotuned dispatch** (PR 10): instead of one fixed tile width and
+//! one fixed `m·k ≥ 2048` worker heuristic for every layer, the backend
+//! can own a per-shape [`TunePlan`] — measured by
+//! [`crate::sparse::tune`]'s grid search over `(tile_n, max_stripes)`,
+//! keyed by `(m-bucket, k, n, keep, precision)`. [`TuneMode::Startup`]
+//! tunes every artifact's layers at construction;
+//! [`TuneMode::Lazy`] tunes a shape class the first time a batch
+//! produces it (single-flighted, memoized); [`TuneMode::Off`] — the
+//! default everywhere except `s4 serve --tune` — reproduces the legacy
+//! fixed dispatch exactly. Plans vary only bitwise-invariant parameters,
+//! so logits are identical at any plan; chosen tile variants are
+//! repacked once at tune time and cached per layer, never on the hot
+//! path. `--tune-plan <path>` persists the plan as JSON so restarts skip
+//! recalibration.
 //!
 //! **Hot-path execution** (the PR-5 dispatch rework): every layer runs
 //! through ONE long-lived [`ExecPool`] held by the backend — constructed
@@ -65,6 +82,7 @@
 //! below.
 
 use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use crate::backend::{validate_inputs, InferenceBackend, TensorSpec, Value};
@@ -72,10 +90,11 @@ use crate::graph::op::OpKind;
 use crate::runtime::manifest::{ArtifactIndex, ArtifactMeta, Manifest, Precision};
 use crate::sparse::matmul::Act;
 use crate::sparse::pack::{
-    qspmm_tiled_into, spmm_tiled_into, PackedBlockBalanced, QPackedBlockBalanced,
+    qspmm_tiled_into_plan, spmm_tiled_into_plan, PackedBlockBalanced, QPackedBlockBalanced,
 };
 use crate::sparse::pool::ExecPool;
-use crate::sparse::tensor::Dense2;
+use crate::sparse::tensor::{DType, Dense2};
+use crate::sparse::tune::{bucket_m, DispatchPlan, ShapeClass, TuneConfig, TunePlan, Tuner};
 use crate::sparse::{BlockBalanced, BLOCK, SUPPORTED_SPARSITIES};
 
 /// Rows in the deterministic embedding table (token ids and element
@@ -89,6 +108,59 @@ const DEPTH: usize = 2;
 /// in the low milliseconds even for ResNet-width (2048) feature layers.
 const MAX_HIDDEN: usize = 512;
 
+/// When the backend measures its dispatch plans (`s4 serve --tune`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TuneMode {
+    /// legacy fixed dispatch: default tile, `m·k ≥ 2048` heuristic
+    #[default]
+    Off,
+    /// tune every artifact's layer shapes at backend construction —
+    /// pays the full calibration cost up front, serves tuned from the
+    /// first request
+    Startup,
+    /// tune a shape class the first time a batch produces it
+    /// (single-flighted; later requests hit the memoized plan)
+    Lazy,
+}
+
+impl TuneMode {
+    /// Parse a `--tune` argument value.
+    pub fn parse(s: &str) -> Option<TuneMode> {
+        match s {
+            "off" => Some(TuneMode::Off),
+            "startup" => Some(TuneMode::Startup),
+            "lazy" => Some(TuneMode::Lazy),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TuneMode::Off => "off",
+            TuneMode::Startup => "startup",
+            TuneMode::Lazy => "lazy",
+        }
+    }
+}
+
+/// Autotuning policy for one backend: mode, measurement effort, and the
+/// optional plan file (`--tune-plan <path>`) that is loaded at
+/// construction (skipping recalibration of already-tuned classes) and
+/// rewritten whenever new classes are tuned.
+#[derive(Clone, Debug, Default)]
+pub struct TuneOptions {
+    pub mode: TuneMode,
+    pub config: TuneConfig,
+    pub plan_path: Option<PathBuf>,
+}
+
+impl TuneOptions {
+    /// No tuning — the legacy fixed dispatch (the default everywhere).
+    pub fn off() -> TuneOptions {
+        TuneOptions::default()
+    }
+}
+
 /// One fused sparse layer: packed f32 weights, optionally their INT8
 /// twin, + bias + activation epilogue. The INT8 side comes from the same
 /// pruned matrix through the `prune → per-channel calibrate → pack`
@@ -101,6 +173,13 @@ struct SparseLayer {
     qw: Option<QPackedBlockBalanced>,
     bias: Vec<f32>,
     act: Act,
+    /// tile-width variants of `w` a [`TunePlan`] selected — materialized
+    /// once (at tune time, or on first dispatch of a loaded plan) and
+    /// reused forever; the default tile never enters this cache, so the
+    /// untuned path takes no lock
+    variants: Mutex<HashMap<usize, Arc<PackedBlockBalanced>>>,
+    /// the INT8 twin of `variants`
+    qvariants: Mutex<HashMap<usize, Arc<QPackedBlockBalanced>>>,
 }
 
 impl SparseLayer {
@@ -117,33 +196,91 @@ impl SparseLayer {
         let mut brng = crate::util::rng::Xoshiro256::seed_from_u64(fnv1a(tag) ^ 0xB1A5);
         let bias = (0..n).map(|_| brng.next_gaussian() as f32 * 0.1).collect();
         let qw = int8.then(|| bb.quantize().pack());
-        SparseLayer { w: bb.pack(), qw, bias, act }
+        SparseLayer {
+            w: bb.pack(),
+            qw,
+            bias,
+            act,
+            variants: Mutex::new(HashMap::new()),
+            qvariants: Mutex::new(HashMap::new()),
+        }
     }
 
-    /// Execute the layer at `prec` through the tiled engine, dispatching
-    /// on `pool` and writing into the arena buffer `out` (`qbuf` stages
-    /// quantized activations on the Int8 path) — no allocation once the
-    /// arena has grown to the layer's footprint.
+    /// The layer's shape class for plan lookup at batch rows `m`.
+    fn shape_class(&self, m: usize, prec: Precision) -> ShapeClass {
+        ShapeClass::of(m, self.w.k, self.w.n, self.w.keep(), dtype_of(prec))
+    }
+
+    /// Fetch (materializing on first touch) the f32 weights repacked at
+    /// `tile_n`. A repack is a one-time pure permute per (layer, tile);
+    /// the lock is uncontended in steady state.
+    fn variant(&self, tile_n: usize) -> Arc<PackedBlockBalanced> {
+        let mut cache = self.variants.lock().unwrap_or_else(|p| p.into_inner());
+        cache
+            .entry(tile_n)
+            .or_insert_with(|| Arc::new(self.w.repacked(tile_n)))
+            .clone()
+    }
+
+    /// The INT8 twin of [`variant`](SparseLayer::variant).
+    fn qvariant(&self, tile_n: usize) -> Arc<QPackedBlockBalanced> {
+        let qw = self.qw.as_ref().expect("net built without int8 weights");
+        let mut cache = self.qvariants.lock().unwrap_or_else(|p| p.into_inner());
+        cache
+            .entry(tile_n)
+            .or_insert_with(|| Arc::new(qw.repacked(tile_n)))
+            .clone()
+    }
+
+    /// Execute the layer at `prec` through the tiled engine on `plan`'s
+    /// dispatch parameters, writing into the arena buffer `out` (`qbuf`
+    /// stages quantized activations on the Int8 path) — no allocation
+    /// once the arena has grown to the layer's footprint. A plan at the
+    /// default tile (every untuned dispatch) runs straight on `self.w`;
+    /// tuned tiles hit the variant cache.
     fn run_into(
         &self,
         pool: &ExecPool,
         x: &Dense2,
         prec: Precision,
-        threads: usize,
+        plan: DispatchPlan,
         qbuf: &mut Vec<i8>,
         out: &mut Dense2,
     ) {
         match prec {
             Precision::F32 => {
-                spmm_tiled_into(pool, x, &self.w, Some(&self.bias), self.act, threads, out)
+                if plan.tile_n == self.w.n_tile {
+                    spmm_tiled_into_plan(pool, x, &self.w, Some(&self.bias), self.act, plan, out)
+                } else {
+                    let wt = self.variant(plan.tile_n);
+                    spmm_tiled_into_plan(pool, x, &wt, Some(&self.bias), self.act, plan, out)
+                }
             }
             Precision::Int8 => {
                 // constructors build qw whenever any artifact can resolve
                 // to Int8, so this is reachable only with it present
                 let qw = self.qw.as_ref().expect("net built without int8 weights");
-                qspmm_tiled_into(pool, x, qw, Some(&self.bias), self.act, threads, qbuf, out)
+                if plan.tile_n == qw.n_tile {
+                    qspmm_tiled_into_plan(
+                        pool, x, qw, Some(&self.bias), self.act, plan, qbuf, out,
+                    )
+                } else {
+                    let qwt = self.qvariant(plan.tile_n);
+                    qspmm_tiled_into_plan(
+                        pool, x, &qwt, Some(&self.bias), self.act, plan, qbuf, out,
+                    )
+                }
             }
         }
+    }
+}
+
+/// Kernel element type a serving precision runs on (the [`TunePlan`]
+/// key's dtype axis).
+fn dtype_of(prec: Precision) -> DType {
+    match prec {
+        Precision::F32 => DType::F32,
+        Precision::Int8 => DType::Int8,
     }
 }
 
@@ -155,7 +292,8 @@ impl SparseLayer {
 struct ActivationArena {
     ping: Dense2,
     pong: Dense2,
-    /// quantized-activation staging for [`qspmm_tiled_into`]
+    /// quantized-activation staging for
+    /// [`qspmm_tiled_into_plan`](crate::sparse::pack::qspmm_tiled_into_plan)
     qbuf: Vec<i8>,
 }
 
@@ -220,6 +358,19 @@ pub struct CpuSparseBackend {
     /// concurrent coordinator workers overlap fully; the list grows to
     /// the peak forward concurrency and is then reused forever
     arenas: Mutex<Vec<ActivationArena>>,
+    /// autotuning policy (mode / grid / plan file); `TuneMode::Off`
+    /// everywhere except `s4 serve --tune` and [`with_tuning`]
+    /// constructions
+    ///
+    /// [`with_tuning`]: CpuSparseBackend::with_tuning
+    tune: TuneOptions,
+    /// the measured shape-class → dispatch-plan table; consulted (briefly
+    /// locked, plans copied out) per batch when tuning is on
+    plan: Mutex<TunePlan>,
+    /// single-flights lazy tuning so concurrent first-sights of a shape
+    /// class microbenchmark once, not once per worker (lock order:
+    /// `tune_gate` before `plan`)
+    tune_gate: Mutex<()>,
 }
 
 /// Largest SPU-supported sparsity ≤ the manifest's tier (manifests may
@@ -302,17 +453,56 @@ impl CpuSparseBackend {
         Self::with_pool(m, threads, precision, ExecPool::global().clone())
     }
 
-    /// Full constructor: explicit thread count, optional precision
-    /// override (`None` = per-artifact from the manifest), and the
-    /// dispatch pool — pass one `Arc<ExecPool>` to several backends to
-    /// share a single worker set (e.g. an F32 and an Int8 backend on one
-    /// machine; the pool serializes their dispatches instead of
-    /// oversubscribing cores).
+    /// Autotuned construction at default threads on the global pool:
+    /// per-artifact manifest precision, dispatch plans per `tune`
+    /// (`s4 serve --tune {off,startup,lazy} [--tune-plan <path>]`).
+    pub fn with_tuning(m: &Manifest, tune: TuneOptions) -> CpuSparseBackend {
+        Self::with_tuning_precision(m, None, tune)
+    }
+
+    /// [`with_tuning`](CpuSparseBackend::with_tuning) with an optional
+    /// process-wide precision override. Precision is *never* a tuned
+    /// parameter — it changes numerics, so it stays manifest-driven (or
+    /// explicitly forced here); the tuner only picks bitwise-invariant
+    /// dispatch shapes within whichever precision serves.
+    pub fn with_tuning_precision(
+        m: &Manifest,
+        precision: Option<Precision>,
+        tune: TuneOptions,
+    ) -> CpuSparseBackend {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(Self::DEFAULT_THREAD_CAP);
+        Self::with_pool_tuning(m, threads, precision, ExecPool::global().clone(), tune)
+    }
+
+    /// Explicit thread count, optional precision override (`None` =
+    /// per-artifact from the manifest), and the dispatch pool — pass one
+    /// `Arc<ExecPool>` to several backends to share a single worker set
+    /// (e.g. an F32 and an Int8 backend on one machine; the pool
+    /// serializes their dispatches instead of oversubscribing cores).
+    /// Tuning off.
     pub fn with_pool(
         m: &Manifest,
         threads: usize,
         precision: Option<Precision>,
         pool: Arc<ExecPool>,
+    ) -> CpuSparseBackend {
+        Self::with_pool_tuning(m, threads, precision, pool, TuneOptions::off())
+    }
+
+    /// Full constructor: [`with_pool`](CpuSparseBackend::with_pool) plus
+    /// the autotuning policy. Loads `tune.plan_path` if the file exists
+    /// (already-tuned classes skip recalibration); under
+    /// [`TuneMode::Startup`] every artifact's layer shapes are then
+    /// measured here, and the merged plan is written back.
+    pub fn with_pool_tuning(
+        m: &Manifest,
+        threads: usize,
+        precision: Option<Precision>,
+        pool: Arc<ExecPool>,
+        tune: TuneOptions,
     ) -> CpuSparseBackend {
         type NetKey = (String, usize, Vec<usize>);
         let net_key = |a: &ArtifactMeta| -> NetKey {
@@ -343,13 +533,143 @@ impl CpuSparseBackend {
                 })
                 .clone()
         });
-        CpuSparseBackend {
+        let mut initial = TunePlan::new();
+        if let Some(path) = &tune.plan_path {
+            if path.exists() {
+                match TunePlan::load(path) {
+                    Ok(p) => initial = p,
+                    // a stale/corrupt plan file must not stop serving —
+                    // fall through to retuning from scratch
+                    Err(e) => eprintln!("s4: ignoring tune plan: {e}"),
+                }
+            }
+        }
+        let backend = CpuSparseBackend {
             nets,
             threads: threads.max(1),
             precision,
             pool,
             arenas: Mutex::new(Vec::new()),
+            tune,
+            plan: Mutex::new(initial),
+            tune_gate: Mutex::new(()),
+        };
+        if backend.tune.mode == TuneMode::Startup {
+            let mut tuned_any = false;
+            for (meta, net) in backend.nets.iter() {
+                let prec = backend.precision.unwrap_or(meta.precision);
+                let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
+                tuned_any |= backend.ensure_net_tuned(net, prec, bucket_m(capacity));
+            }
+            if tuned_any {
+                backend.save_plan();
+            }
         }
+        backend
+    }
+
+    /// Tune every not-yet-planned shape class of `net` at batch-row
+    /// bucket `m` (single-flighted; concurrent callers of the same
+    /// classes measure once). Returns whether anything new was tuned.
+    fn ensure_net_tuned(&self, net: &SparseNet, prec: Precision, m: usize) -> bool {
+        let layers: Vec<&SparseLayer> = net.trunk.iter().chain(&net.heads).collect();
+        let any_missing = {
+            let plan = self.plan.lock().unwrap_or_else(|p| p.into_inner());
+            layers.iter().any(|l| plan.get(&l.shape_class(m, prec)).is_none())
+        };
+        if !any_missing {
+            return false;
+        }
+        // single-flight: the losers of this race re-check per class below
+        // and find the winner's entries (lock order: tune_gate → plan)
+        let _flight = self.tune_gate.lock().unwrap_or_else(|p| p.into_inner());
+        let mut tuned_any = false;
+        for layer in layers {
+            let class = layer.shape_class(m, prec);
+            let have = {
+                let plan = self.plan.lock().unwrap_or_else(|p| p.into_inner());
+                plan.get(&class).is_some()
+            };
+            if have {
+                continue;
+            }
+            let chosen = self.tune_layer(layer, prec, m);
+            self.plan
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .insert(class, chosen);
+            tuned_any = true;
+        }
+        tuned_any
+    }
+
+    /// Microbenchmark one layer's candidate grid at batch rows `m` and
+    /// return the winner. The grid always contains the incumbent default
+    /// configuration (`ensure_tile`/`ensure_stripe` below), so a tuned
+    /// plan can never lose to the fixed dispatch by more than timing
+    /// noise; the chosen tile variant is materialized into the layer's
+    /// cache here so the hot path never repacks.
+    fn tune_layer(&self, layer: &SparseLayer, prec: Precision, m: usize) -> DispatchPlan {
+        let mut cfg = self.tune.config.clone();
+        cfg.ensure_tile(layer.w.n_tile);
+        cfg.ensure_stripe(1);
+        cfg.ensure_stripe(self.threads);
+        let tuner = Tuner::new(&self.pool, cfg);
+        let chosen = match prec {
+            Precision::F32 => tuner.tune_f32(&layer.w, Some(&layer.bias), layer.act, m),
+            Precision::Int8 => {
+                let qw = layer.qw.as_ref().expect("net built without int8 weights");
+                tuner.tune_int8(qw, Some(&layer.bias), layer.act, m)
+            }
+        };
+        match prec {
+            Precision::F32 => {
+                if chosen.tile_n != layer.w.n_tile {
+                    layer.variant(chosen.tile_n);
+                }
+            }
+            Precision::Int8 => {
+                let qw = layer.qw.as_ref().expect("net built without int8 weights");
+                if chosen.tile_n != qw.n_tile {
+                    layer.qvariant(chosen.tile_n);
+                }
+            }
+        }
+        chosen
+    }
+
+    /// Copy each layer's dispatch plan out of the table (trunk order,
+    /// then heads) for one forward at batch rows `m` — cloned under a
+    /// short lock so compute never runs with the table locked. Untuned
+    /// classes fall back to the legacy fixed dispatch.
+    fn dispatch_plans(&self, net: &SparseNet, prec: Precision, m: usize) -> Vec<DispatchPlan> {
+        let plan = self.plan.lock().unwrap_or_else(|p| p.into_inner());
+        net.trunk
+            .iter()
+            .chain(&net.heads)
+            .map(|l| {
+                plan.get(&l.shape_class(m, prec))
+                    .unwrap_or_else(|| DispatchPlan::fixed_default(m, l.w.k, self.threads))
+            })
+            .collect()
+    }
+
+    /// Write the current plan table to `tune.plan_path` (no-op without a
+    /// path). Failures are reported, not fatal — a read-only plan
+    /// directory must not take serving down.
+    fn save_plan(&self) {
+        if let Some(path) = &self.tune.plan_path {
+            let snapshot = self.plan.lock().unwrap_or_else(|p| p.into_inner()).clone();
+            if let Err(e) = snapshot.save(path) {
+                eprintln!("s4: tune plan save failed: {e}");
+            }
+        }
+    }
+
+    /// A copy of the current shape-class → plan table (tests pin
+    /// save/load round trips and lazy memoization through this).
+    pub fn plan_snapshot(&self) -> TunePlan {
+        self.plan.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// Raw data addresses of the parked arena's three buffers `(ping,
@@ -473,8 +793,21 @@ impl InferenceBackend for CpuSparseBackend {
         validate_inputs(artifact, &meta.inputs, inputs)?;
         let prec = self.precision.unwrap_or(meta.precision);
         let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
-        // modest batches don't amortize parallel dispatch — run serial
-        let threads = if capacity * net.hidden >= 2048 { self.threads } else { 1 };
+        // per-layer dispatch plans: Off reproduces the legacy fixed
+        // heuristic inside forward (no plan-table lock at all); Startup
+        // reads the table tuned at construction; Lazy tunes this batch's
+        // shape classes first if they're new (single-flighted, memoized,
+        // persisted when a plan file is configured)
+        let plans = match self.tune.mode {
+            TuneMode::Off => None,
+            TuneMode::Startup => Some(self.dispatch_plans(net, prec, capacity)),
+            TuneMode::Lazy => {
+                if self.ensure_net_tuned(net, prec, bucket_m(capacity)) {
+                    self.save_plan();
+                }
+                Some(self.dispatch_plans(net, prec, capacity))
+            }
+        };
         // steady-state zero-alloc forward: lease an arena off the
         // free-list (a fresh one only when concurrency exceeds anything
         // seen before), featurize into its ping buffer, then ping-pong
@@ -489,7 +822,16 @@ impl InferenceBackend for CpuSparseBackend {
             .unwrap_or_else(|p| p.into_inner())
             .pop()
             .unwrap_or_default();
-        let result = forward(net, meta, inputs, prec, threads, &self.pool, &mut arena);
+        let result = forward(
+            net,
+            meta,
+            inputs,
+            prec,
+            self.threads,
+            &self.pool,
+            &mut arena,
+            plans.as_deref(),
+        );
         // the lease goes back even when the forward errors — an early
         // `?` must not leak a grown arena into per-call allocation
         self.arenas.lock().unwrap_or_else(|p| p.into_inner()).push(arena);
@@ -501,7 +843,11 @@ impl InferenceBackend for CpuSparseBackend {
 /// the leased `arena` (see [`CpuSparseBackend::run_batch`] for the
 /// lease/return discipline — keeping this a separate function means
 /// every exit path, including errors, flows back through the caller's
-/// arena return).
+/// arena return). `plans` carries one tuned [`DispatchPlan`] per layer
+/// (trunk order, then heads); `None` — tuning off — dispatches every
+/// layer on [`DispatchPlan::fixed_default`], which is bit-for-bit the
+/// legacy `m·k ≥ 2048` heuristic at the default tile.
+#[allow(clippy::too_many_arguments)]
 fn forward(
     net: &SparseNet,
     meta: &ArtifactMeta,
@@ -510,21 +856,28 @@ fn forward(
     threads: usize,
     pool: &ExecPool,
     arena: &mut ActivationArena,
+    plans: Option<&[DispatchPlan]>,
 ) -> anyhow::Result<Vec<Value>> {
     let capacity = meta.inputs.first().map(|s| s.batch_dim()).unwrap_or(1);
+    let plan_at = |i: usize, l: &SparseLayer| -> DispatchPlan {
+        match plans {
+            Some(p) => p[i],
+            None => DispatchPlan::fixed_default(capacity, l.w.k, threads),
+        }
+    };
     let ActivationArena { ping, pong, qbuf } = arena;
     let (mut cur, mut nxt) = (ping, pong);
     featurize_into(net, &meta.inputs, inputs, capacity, cur);
-    for layer in &net.trunk {
-        layer.run_into(pool, cur, prec, threads, qbuf, nxt);
+    for (i, layer) in net.trunk.iter().enumerate() {
+        layer.run_into(pool, cur, prec, plan_at(i, layer), qbuf, nxt);
         std::mem::swap(&mut cur, &mut nxt);
     }
     let mut out = Vec::with_capacity(meta.outputs.len());
-    for (spec, head) in meta.outputs.iter().zip(&net.heads) {
+    for (hi, (spec, head)) in meta.outputs.iter().zip(&net.heads).enumerate() {
         let per = spec.sample_elems();
         // every head reads the trunk output in `cur` and reuses the
         // free half of the arena for its logits
-        head.run_into(pool, cur, prec, threads, qbuf, nxt);
+        head.run_into(pool, cur, prec, plan_at(net.trunk.len() + hi, head), qbuf, nxt);
         let y = &*nxt;
         let mut v = Value::empty(&spec.dtype)?;
         for b in 0..spec.batch_dim() {
@@ -737,6 +1090,136 @@ mod tests {
             );
         }
         assert_eq!(pool.workers(), 3, "backends must not resize a shared pool");
+    }
+
+    #[test]
+    fn tune_mode_parse_grammar() {
+        assert_eq!(TuneMode::parse("off"), Some(TuneMode::Off));
+        assert_eq!(TuneMode::parse("startup"), Some(TuneMode::Startup));
+        assert_eq!(TuneMode::parse("lazy"), Some(TuneMode::Lazy));
+        assert_eq!(TuneMode::parse("eager"), None);
+        assert_eq!(TuneMode::parse(""), None);
+        for m in [TuneMode::Off, TuneMode::Startup, TuneMode::Lazy] {
+            assert_eq!(TuneMode::parse(m.name()), Some(m));
+        }
+    }
+
+    fn quick_tune(mode: TuneMode, plan_path: Option<std::path::PathBuf>) -> TuneOptions {
+        TuneOptions { mode, config: TuneConfig::quick(), plan_path }
+    }
+
+    #[test]
+    fn tuned_startup_backend_serves_bitwise_identical_logits() {
+        // the whole point of restricting tuning to bitwise-invariant
+        // parameters: a tuned backend and the untuned default must agree
+        // exactly, at both precisions
+        let m = manifest();
+        let plain = CpuSparseBackend::from_manifest(&m);
+        let tuned = CpuSparseBackend::with_tuning(&m, quick_tune(TuneMode::Startup, None));
+        assert!(!tuned.plan_snapshot().is_empty(), "startup mode must have tuned");
+        let qplain = CpuSparseBackend::with_precision(&m, Precision::Int8);
+        let qtuned = CpuSparseBackend::with_tuning_precision(
+            &m,
+            Some(Precision::Int8),
+            quick_tune(TuneMode::Startup, None),
+        );
+        for i in 0..3 {
+            let inputs = vec![Value::I32(vec![i, 2, 3, 4, 9, 8, 7, 6])];
+            for art in ["bert_tiny_s8_b2", "bert_tiny_s1_b2"] {
+                assert_eq!(
+                    plain.run_batch(art, &inputs).unwrap(),
+                    tuned.run_batch(art, &inputs).unwrap(),
+                    "tuned f32 logits diverged ({art}, i={i})"
+                );
+                assert_eq!(
+                    qplain.run_batch(art, &inputs).unwrap(),
+                    qtuned.run_batch(art, &inputs).unwrap(),
+                    "tuned int8 logits diverged ({art}, i={i})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tune_lazy_memoizes_on_first_batch() {
+        let m = manifest();
+        let b = CpuSparseBackend::with_tuning(&m, quick_tune(TuneMode::Lazy, None));
+        assert!(b.plan_snapshot().is_empty(), "lazy tunes nothing at construction");
+        let plain = CpuSparseBackend::from_manifest(&m);
+        let inputs = vec![Value::I32(vec![1, 2, 3, 4, 5, 6, 7, 8])];
+        let first = b.run_batch("bert_tiny_s8_b2", &inputs).unwrap();
+        let after_first = b.plan_snapshot();
+        assert!(!after_first.is_empty(), "first sight of a shape class must tune it");
+        assert_eq!(first, plain.run_batch("bert_tiny_s8_b2", &inputs).unwrap());
+        // second batch of the same shape: memoized, table unchanged
+        assert_eq!(b.run_batch("bert_tiny_s8_b2", &inputs).unwrap(), first);
+        assert_eq!(b.plan_snapshot(), after_first, "re-tuned an already-planned class");
+    }
+
+    #[test]
+    fn tune_plan_file_round_trips_through_a_backend() {
+        // --tune-plan: a freshly tuned backend persists its plan; a
+        // backend constructed from that file reloads an identical table
+        // (bucket boundaries included) WITHOUT retuning, and serves
+        // bitwise-identical logits
+        let m = manifest();
+        let path = std::env::temp_dir()
+            .join(format!("s4_backend_tune_plan_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let fresh = CpuSparseBackend::with_tuning(
+            &m,
+            quick_tune(TuneMode::Startup, Some(path.clone())),
+        );
+        let saved = TunePlan::load(&path).expect("startup tuning must write the plan file");
+        assert_eq!(saved, fresh.plan_snapshot(), "file differs from the in-memory plan");
+        let mtime = std::fs::metadata(&path).unwrap().modified().unwrap();
+        let reloaded = CpuSparseBackend::with_tuning(
+            &m,
+            quick_tune(TuneMode::Startup, Some(path.clone())),
+        );
+        assert_eq!(
+            reloaded.plan_snapshot(),
+            fresh.plan_snapshot(),
+            "reloaded plan table differs"
+        );
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().modified().unwrap(),
+            mtime,
+            "fully-covered plan file must not be rewritten (recalibration skipped)"
+        );
+        for i in 0..3 {
+            let inputs = vec![Value::I32(vec![i, 7, 5, 3, 2, 4, 6, 8])];
+            assert_eq!(
+                fresh.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+                reloaded.run_batch("bert_tiny_s8_b2", &inputs).unwrap(),
+                "plan-file backend diverged from freshly-tuned backend (i={i})"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn tuned_plans_come_from_the_candidate_grid() {
+        // every recorded plan must be a member of the (extended) grid and
+        // honor the pool's participant bound
+        let m = manifest();
+        let b = CpuSparseBackend::with_tuning(&m, quick_tune(TuneMode::Startup, None));
+        let mut cfg = TuneConfig::quick();
+        cfg.ensure_tile(crate::sparse::N_TILE);
+        cfg.ensure_stripe(1);
+        cfg.ensure_stripe(b.threads);
+        let grid = cfg.candidates();
+        for (class, plan) in b.plan_snapshot().iter() {
+            assert!(
+                grid.iter().any(|c| c.tile_n == plan.tile_n),
+                "{class:?}: tile {} not in grid",
+                plan.tile_n
+            );
+            assert!(
+                plan.max_stripes <= b.pool.participants(),
+                "{class:?}: stripes {} exceed pool", plan.max_stripes
+            );
+        }
     }
 
     #[test]

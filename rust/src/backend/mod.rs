@@ -32,7 +32,7 @@ pub mod sim;
 pub mod value;
 
 pub use crate::runtime::manifest::{Precision, TensorSpec};
-pub use cpu::CpuSparseBackend;
+pub use cpu::{CpuSparseBackend, TuneMode, TuneOptions};
 pub use echo::EchoBackend;
 pub use sim::SimBackend;
 pub use value::Value;

@@ -28,7 +28,13 @@
 //! one multi-stripe job at a time. Raising `workers` overlaps
 //! shed/pack/demux and small forwards with pooled compute; it does not
 //! multiply core usage for the big batches — the pool already owns the
-//! cores — so a handful of workers is enough.
+//! cores — so a handful of workers is enough. How many stripes a given
+//! layer call actually fans out across (and at what tile width) is the
+//! backend's per-shape dispatch plan: the fixed `m·k` heuristic by
+//! default, or a microbenchmarked [`TunePlan`](crate::sparse::TunePlan)
+//! when autotuning is on (`--tune startup|lazy`) — either way the pool
+//! clamps at its participant count, which honors the `S4_POOL_WORKERS`
+//! env override.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};

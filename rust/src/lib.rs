@@ -19,7 +19,11 @@
 //!   ([`sparse::pool`]: [`sparse::ExecPool`] — long-lived parked
 //!   workers, generic `(stripe_fn, out chunks)` dispatch, per-worker
 //!   reusable scratch — the layer every tiled kernel dispatches through
-//!   instead of spawning threads per call).
+//!   instead of spawning threads per call), and roofline-guided kernel
+//!   autotuning ([`sparse::tune`]: per-shape-class microbenchmarked
+//!   `(tile_n, max_stripes)` dispatch plans, deterministic
+//!   [`sparse::TunePlan`] lookup with JSON save/load — both axes are
+//!   bitwise-invariant, so a plan changes speed, never logits).
 //! * [`graph`] — an op-graph IR with per-op FLOPs/bytes accounting plus
 //!   builders for the paper's benchmark models (ResNet-50/152,
 //!   BERT-base/large).

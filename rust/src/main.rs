@@ -65,10 +65,12 @@ fn print_help() {
                      [--default-priority interactive|standard|bulk]\n\
                      [--deadline-ms D]\n\
                      [--cache-entries N] [--cache-ttl-ms T]   (response cache)\n\
+                     [--tune off|startup|lazy] [--tune-plan FILE]  (kernel autotuning)\n\
            net-serve [--addr 127.0.0.1:7450] [--backend cpu|sim|echo]\n\
                      [--precision f32|int8] [--policy max|dense|fixed:S]\n\
                      [--max-conns N] [--duration-s T]    (0 = run until killed)\n\
                      [--cache-entries N] [--cache-ttl-ms T]   (response cache)\n\
+                     [--tune off|startup|lazy] [--tune-plan FILE]  (kernel autotuning)\n\
            net-load  --addr HOST:PORT [--rate RPS] [--duration-s T]\n\
                      [--connections N] [--model M] [--seq LEN] [--seed S]\n\
                      [--mix interactive=0.2,standard=0.5,bulk=0.3]\n\
@@ -222,30 +224,49 @@ fn cache_from_args(args: &Args) -> anyhow::Result<Option<s4::coordinator::CacheC
     Ok(Some(cfg))
 }
 
-/// Backend from `--backend cpu|sim|echo` + `--precision` (shared by
-/// `serve` and `net-serve`).
+/// Kernel-autotuning options from `--tune off|startup|lazy` +
+/// `--tune-plan FILE` (cpu backend only; see [`s4::sparse::tune`]).
+fn tuning_from_args(args: &Args) -> anyhow::Result<s4::backend::TuneOptions> {
+    use s4::backend::{TuneMode, TuneOptions};
+    let mode = match args.get("tune") {
+        Some(m) => TuneMode::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("unknown --tune mode {m:?} (off | startup | lazy)"))?,
+        None => TuneMode::Off,
+    };
+    let plan_path = args.get("tune-plan").map(std::path::PathBuf::from);
+    anyhow::ensure!(
+        plan_path.is_none() || mode != TuneMode::Off,
+        "--tune-plan needs --tune startup|lazy (a plan is never consulted with tuning off)"
+    );
+    Ok(TuneOptions { mode, config: Default::default(), plan_path })
+}
+
+/// Backend from `--backend cpu|sim|echo` + `--precision` + `--tune`
+/// flags (shared by `serve` and `net-serve`).
 fn backend_from_args(
     args: &Args,
     manifest: &s4::runtime::Manifest,
 ) -> anyhow::Result<std::sync::Arc<dyn s4::coordinator::InferenceBackend>> {
+    use s4::backend::TuneMode;
     use s4::coordinator::{CpuSparseBackend, EchoBackend, InferenceBackend, Precision, SimBackend};
     use std::sync::Arc;
     // precision override for the cpu backend: f32 | int8 (default:
     // per-artifact from the manifest)
     let precision = args.get("precision").map(Precision::parse).transpose()?;
+    let tune = tuning_from_args(args)?;
+    let cpu_only_flags = precision.is_some() || tune.mode != TuneMode::Off;
     let backend: Arc<dyn InferenceBackend> = match args.get_or("backend", "cpu") {
         // real sparse compute through the tiled SpMM engine (f32 or the
-        // quantized int8 packed kernel)
-        "cpu" => match precision {
-            Some(p) => Arc::new(CpuSparseBackend::with_precision(manifest, p)),
-            None => Arc::new(CpuSparseBackend::from_manifest(manifest)),
-        },
+        // quantized int8 packed kernel), with optional per-shape kernel
+        // autotuning (startup: calibrate every net now; lazy: on first
+        // batch per shape class)
+        "cpu" => Arc::new(CpuSparseBackend::with_tuning_precision(manifest, precision, tune)),
         // simulator-paced pseudo-outputs (latency realism, no compute)
-        "sim" if precision.is_none() => Arc::new(SimBackend::from_manifest(manifest, 1.0)),
+        "sim" if !cpu_only_flags => Arc::new(SimBackend::from_manifest(manifest, 1.0)),
         // instant reflection (coordinator overhead probing)
-        "echo" if precision.is_none() => Arc::new(EchoBackend::from_manifest(manifest)),
+        "echo" if !cpu_only_flags => Arc::new(EchoBackend::from_manifest(manifest)),
         b @ ("sim" | "echo") => {
-            anyhow::bail!("--precision only applies to --backend cpu (got {b})")
+            anyhow::bail!("--precision/--tune only apply to --backend cpu (got {b})")
         }
         b => anyhow::bail!("unknown backend {b:?} (cpu | sim | echo)"),
     };
@@ -504,5 +525,25 @@ mod tests {
         assert!(cache_from_args(&args("--cache-entries 0 --cache-ttl-ms 250"))
             .unwrap()
             .is_none());
+    }
+
+    #[test]
+    fn tune_flags_parse_modes_and_reject_bad_input() {
+        use s4::backend::TuneMode;
+        // default: tuning off, no plan file
+        let t = tuning_from_args(&args("")).unwrap();
+        assert_eq!(t.mode, TuneMode::Off);
+        assert!(t.plan_path.is_none());
+        // explicit modes
+        assert_eq!(tuning_from_args(&args("--tune off")).unwrap().mode, TuneMode::Off);
+        assert_eq!(tuning_from_args(&args("--tune startup")).unwrap().mode, TuneMode::Startup);
+        let t = tuning_from_args(&args("--tune lazy --tune-plan /tmp/plan.json")).unwrap();
+        assert_eq!(t.mode, TuneMode::Lazy);
+        assert_eq!(t.plan_path.as_deref(), Some(std::path::Path::new("/tmp/plan.json")));
+        // unknown mode is an error, not a silent default
+        assert!(tuning_from_args(&args("--tune eager")).is_err());
+        // a plan file without a tuning mode would never be read — reject
+        assert!(tuning_from_args(&args("--tune-plan /tmp/plan.json")).is_err());
+        assert!(tuning_from_args(&args("--tune off --tune-plan /tmp/plan.json")).is_err());
     }
 }

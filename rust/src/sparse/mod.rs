@@ -6,7 +6,9 @@
 //! simulator and the paper's memory-footprint claims are computed from.
 //!
 //! Execution side: [`pack`] holds the tiled f32/int8 kernels, [`pool`]
-//! the persistent stripe-execution pool ([`ExecPool`]) they dispatch on.
+//! the persistent stripe-execution pool ([`ExecPool`]) they dispatch on,
+//! and [`tune`] the roofline-guided autotuner that picks per-shape
+//! dispatch plans (tile width × stripe cap) from measured points.
 
 pub mod conv;
 pub mod format;
@@ -16,16 +18,18 @@ pub mod pool;
 pub mod prune;
 pub mod quant;
 pub mod tensor;
+pub mod tune;
 
 pub use format::{BlockBalanced, Csr, BLOCK};
 pub use pack::{
-    qspmm_tiled, qspmm_tiled_into, spmm_tiled, spmm_tiled_into, PackedBlockBalanced,
-    QPackedBlockBalanced, N_TILE,
+    qspmm_tiled, qspmm_tiled_into, qspmm_tiled_into_plan, spmm_tiled, spmm_tiled_into,
+    spmm_tiled_into_plan, PackedBlockBalanced, QPackedBlockBalanced, N_TILE,
 };
 pub use pool::{partition_rows, ExecPool};
 pub use prune::{magnitude_prune, PruneSchedule};
 pub use quant::{qspmm, QBlockBalanced};
 pub use tensor::{DType, Dense2};
+pub use tune::{DispatchPlan, TuneConfig, TunePlan, Tuner};
 
 /// Sparsity factors the SPU natively supports (paper: "up to 32x").
 pub const SUPPORTED_SPARSITIES: [usize; 6] = [1, 2, 4, 8, 16, 32];

@@ -41,6 +41,7 @@ use super::matmul::Act;
 use super::pool::{scoped_stripes, with_scratch_f32, with_scratch_i32, ExecPool};
 use super::quant::{QBlockBalanced, QParams};
 use super::tensor::Dense2;
+use super::tune::DispatchPlan;
 
 /// Default output-column tile width: 128 columns × one weight-buffer row
 /// of values+offsets per block keeps a whole per-block slab (`keep × 128`
@@ -84,6 +85,29 @@ impl PackedBlockBalanced {
     pub fn kc(&self) -> usize {
         self.k / self.sparsity
     }
+
+    /// The same weights repacked at a different column tile width — a
+    /// pure storage-order permute (unpack to row-major, re-tile), so the
+    /// result is exactly what `pack_tiled(n_tile)` on the original
+    /// [`BlockBalanced`] would produce. This is the autotuner's tune-time
+    /// operation: the hot path never repacks, it dispatches on a variant
+    /// materialized once here.
+    pub fn repacked(&self, n_tile: usize) -> PackedBlockBalanced {
+        if n_tile == self.n_tile {
+            return self.clone();
+        }
+        let (values, offsets) =
+            unpack_slots(&self.values, &self.offsets, self.kc(), self.n, self.n_tile);
+        let (values, offsets) = pack_slots(&values, &offsets, self.kc(), self.n, n_tile);
+        PackedBlockBalanced {
+            k: self.k,
+            n: self.n,
+            sparsity: self.sparsity,
+            n_tile,
+            values,
+            offsets,
+        }
+    }
 }
 
 /// The tile reorder itself, generic over the value element so the f32
@@ -110,6 +134,34 @@ fn pack_slots<V: Copy>(
         col += tw;
     }
     (pv, po)
+}
+
+/// Inverse of [`pack_slots`]: tile order back to row-major `[kc, n]`.
+/// `pack_slots(unpack_slots(p)) == p` at any pair of tile widths, which
+/// is what makes [`PackedBlockBalanced::repacked`] a pure permute.
+fn unpack_slots<V: Copy + Default>(
+    values: &[V],
+    offsets: &[u8],
+    kc: usize,
+    n: usize,
+    n_tile: usize,
+) -> (Vec<V>, Vec<u8>) {
+    assert!(n_tile > 0, "tile width must be positive");
+    let mut rv = vec![V::default(); kc * n];
+    let mut ro = vec![0u8; kc * n];
+    let mut col = 0;
+    let mut base = 0;
+    while col < n {
+        let tw = n_tile.min(n - col);
+        for cr in 0..kc {
+            let at = base + cr * tw;
+            rv[cr * n + col..cr * n + col + tw].copy_from_slice(&values[at..at + tw]);
+            ro[cr * n + col..cr * n + col + tw].copy_from_slice(&offsets[at..at + tw]);
+        }
+        base += kc * tw;
+        col += tw;
+    }
+    (rv, ro)
 }
 
 impl BlockBalanced {
@@ -182,6 +234,28 @@ impl QPackedBlockBalanced {
             0.0
         } else {
             self.max_error_bound() / (127.0 * smax)
+        }
+    }
+
+    /// The INT8 twin of [`PackedBlockBalanced::repacked`]: same weights,
+    /// different tile order. Scales stay untouched (they are column-
+    /// indexed, not tiled), so dequantization — and therefore the bitwise
+    /// output contract — is unaffected by the permute.
+    pub fn repacked(&self, n_tile: usize) -> QPackedBlockBalanced {
+        if n_tile == self.n_tile {
+            return self.clone();
+        }
+        let (values, offsets) =
+            unpack_slots(&self.values, &self.offsets, self.kc(), self.n, self.n_tile);
+        let (values, offsets) = pack_slots(&values, &offsets, self.kc(), self.n, n_tile);
+        QPackedBlockBalanced {
+            k: self.k,
+            n: self.n,
+            sparsity: self.sparsity,
+            n_tile,
+            values,
+            offsets,
+            scales: self.scales.clone(),
         }
     }
 }
@@ -258,6 +332,30 @@ pub fn spmm_tiled_into(
     pool.run_stripes(&mut out.data, n, threads, |row0, chunk| {
         stripe(x, w, bias, act, row0, chunk)
     });
+}
+
+/// [`spmm_tiled_into`] dispatched on a tuned
+/// [`DispatchPlan`](crate::sparse::tune::DispatchPlan): `w` must already
+/// be packed at the plan's tile width (repacking happened once at tune
+/// time — the hot path only asserts the invariant), and the plan's
+/// stripe cap replaces the caller-chosen `threads`. Plans vary only
+/// bitwise-invariant parameters, so output is identical to the serial
+/// reference at any plan.
+pub fn spmm_tiled_into_plan(
+    pool: &ExecPool,
+    x: &Dense2,
+    w: &PackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    plan: DispatchPlan,
+    out: &mut Dense2,
+) {
+    assert_eq!(
+        w.n_tile, plan.tile_n,
+        "weights packed at tile {} but plan wants {} — repack at tune time",
+        w.n_tile, plan.tile_n
+    );
+    spmm_tiled_into(pool, x, w, bias, act, plan.max_stripes, out);
 }
 
 /// Spawn-per-call variant of [`spmm_tiled`] — the pre-pool dispatch
@@ -457,6 +555,28 @@ pub fn qspmm_tiled_into(
     pool.run_stripes(&mut out.data, n, threads, |row0, chunk| {
         qstripe(xdata, x.cols, xq.scale, w, bias, act, row0, chunk)
     });
+}
+
+/// [`qspmm_tiled_into`] dispatched on a tuned plan — the INT8 twin of
+/// [`spmm_tiled_into_plan`]; same invariant (weights pre-packed at the
+/// plan's tile), same bitwise contract.
+#[allow(clippy::too_many_arguments)]
+pub fn qspmm_tiled_into_plan(
+    pool: &ExecPool,
+    x: &Dense2,
+    w: &QPackedBlockBalanced,
+    bias: Option<&[f32]>,
+    act: Act,
+    plan: DispatchPlan,
+    qbuf: &mut Vec<i8>,
+    out: &mut Dense2,
+) {
+    assert_eq!(
+        w.n_tile, plan.tile_n,
+        "weights packed at tile {} but plan wants {} — repack at tune time",
+        w.n_tile, plan.tile_n
+    );
+    qspmm_tiled_into(pool, x, w, bias, act, plan.max_stripes, qbuf, out);
 }
 
 /// Spawn-per-call variant of [`qspmm_tiled`] — the pre-pool dispatch
@@ -779,6 +899,70 @@ mod tests {
         let p = w.quantize().pack();
         assert!((p.rel_error_bound() - 0.5 / 127.0).abs() < 1e-9);
         assert!(p.max_error_bound() > 0.0);
+    }
+
+    // ------------------------ repack / plan dispatch ------------------------
+
+    #[test]
+    fn repacked_equals_fresh_pack_at_target_tile() {
+        // repacked() must be indistinguishable from having packed at the
+        // target tile in the first place — both value/offset orders and
+        // the recorded n_tile
+        let (_, w) = case(1, 96, 37, 4, 301);
+        let qb = w.quantize();
+        for from in [8usize, 37, 128] {
+            for to in [1usize, 8, 16, 37, 64, 128, 256] {
+                let p = w.pack_tiled(from).repacked(to);
+                assert_eq!(p, w.pack_tiled(to), "f32 {from}->{to}");
+                let q = qb.pack_tiled(from).repacked(to);
+                assert_eq!(q, qb.pack_tiled(to), "int8 {from}->{to}");
+            }
+        }
+    }
+
+    #[test]
+    fn repacked_same_tile_is_identity() {
+        let (_, w) = case(1, 64, 24, 8, 303);
+        let p = w.pack_tiled(16);
+        assert_eq!(p.repacked(16), p);
+        let q = w.quantize().pack_tiled(16);
+        assert_eq!(q.repacked(16), q);
+    }
+
+    #[test]
+    fn plan_dispatch_matches_serial_bitwise() {
+        let pool = ExecPool::new(2);
+        let (x, w) = case(9, 96, 33, 4, 305);
+        let qb = w.quantize();
+        let serial = spmm(&x, &w, None, Act::None);
+        let qserial = qspmm(&x, &qb, None, Act::None);
+        let packed = w.pack();
+        let qpacked = qb.pack();
+        let mut out = Dense2::zeros(0, 0);
+        let mut qout = Dense2::zeros(0, 0);
+        let mut qbuf = Vec::new();
+        for plan in [
+            DispatchPlan { tile_n: 16, max_stripes: 1 },
+            DispatchPlan { tile_n: 33, max_stripes: 2 },
+            DispatchPlan { tile_n: 128, max_stripes: 3 },
+        ] {
+            let wt = packed.repacked(plan.tile_n);
+            spmm_tiled_into_plan(&pool, &x, &wt, None, Act::None, plan, &mut out);
+            assert_eq!(serial.data, out.data, "f32 {plan:?}");
+            let qwt = qpacked.repacked(plan.tile_n);
+            qspmm_tiled_into_plan(&pool, &x, &qwt, None, Act::None, plan, &mut qbuf, &mut qout);
+            assert_eq!(qserial.data, qout.data, "int8 {plan:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "repack at tune time")]
+    fn plan_dispatch_rejects_tile_mismatch() {
+        let pool = ExecPool::new(1);
+        let (x, w) = case(2, 32, 8, 2, 307);
+        let mut out = Dense2::zeros(0, 0);
+        let plan = DispatchPlan { tile_n: 64, max_stripes: 1 };
+        spmm_tiled_into_plan(&pool, &x, &w.pack_tiled(16), None, Act::None, plan, &mut out);
     }
 
     // --------------------- pooled dispatch / _into path ---------------------

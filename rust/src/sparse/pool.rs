@@ -211,19 +211,17 @@ impl ExecPool {
     }
 
     /// The process-wide pool the bare `spmm_tiled`/`qspmm_tiled` wrappers
-    /// dispatch through: `available_parallelism - 1` workers, i.e. total
-    /// parallelism equal to the machine width. Explicit `threads`
-    /// arguments are honored up to that width; beyond it a dispatch is
-    /// capped at [`participants`](ExecPool::participants) (the old
-    /// spawn-per-call path would oversubscribe instead, which never
-    /// helped — callers who really want more stripes than cores can
-    /// build their own [`ExecPool::new`]). Never dropped.
+    /// dispatch through: [`configured_participants`]` - 1` workers, i.e.
+    /// total parallelism equal to the machine width (or the
+    /// `S4_POOL_WORKERS` override). Explicit `threads` arguments are
+    /// honored up to that width; beyond it a dispatch is capped at
+    /// [`participants`](ExecPool::participants) (the old spawn-per-call
+    /// path would oversubscribe instead, which never helped — callers who
+    /// really want more stripes than cores can build their own
+    /// [`ExecPool::new`]). Never dropped.
     pub fn global() -> &'static Arc<ExecPool> {
         static POOL: OnceLock<Arc<ExecPool>> = OnceLock::new();
-        POOL.get_or_init(|| {
-            let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            Arc::new(ExecPool::new(par.saturating_sub(1)))
-        })
+        POOL.get_or_init(|| Arc::new(ExecPool::new(configured_participants().saturating_sub(1))))
     }
 
     /// Background worker count (excludes the dispatching thread).
@@ -322,6 +320,29 @@ impl ExecPool {
         }
         assert!(!panicked, "ExecPool: a worker stripe panicked");
     }
+}
+
+/// Parse an `S4_POOL_WORKERS` value: a positive integer participant
+/// count (whitespace-tolerant), or `None` for anything unusable — an
+/// unset/garbled override silently falls back to machine width rather
+/// than wedging serving at startup.
+pub fn parse_pool_workers(s: &str) -> Option<usize> {
+    s.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Total participant count the process-wide pool is sized to: the
+/// `S4_POOL_WORKERS` env override when set and valid, else
+/// `available_parallelism`. Read once per call (the [`ExecPool::global`]
+/// sizing and the `host.effective_workers` stamp in every
+/// `BENCH_*.json` both consult this, so recorded numbers always name the
+/// parallelism that actually ran).
+pub fn configured_participants() -> usize {
+    std::env::var("S4_POOL_WORKERS")
+        .ok()
+        .and_then(|v| parse_pool_workers(&v))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
 }
 
 impl Drop for ExecPool {
@@ -556,8 +577,31 @@ mod tests {
         let a = ExecPool::global();
         let b = ExecPool::global();
         assert!(Arc::ptr_eq(a, b));
-        let par = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        assert_eq!(a.participants(), par, "global pool spans the machine");
+        // sizing must agree with whatever configured_participants() said
+        // at first touch (machine width, or the S4_POOL_WORKERS override)
+        assert_eq!(
+            a.participants(),
+            configured_participants(),
+            "global pool spans the configured width"
+        );
+    }
+
+    #[test]
+    fn pool_workers_override_parse() {
+        // the S4_POOL_WORKERS grammar: positive integers, whitespace ok
+        assert_eq!(parse_pool_workers("4"), Some(4));
+        assert_eq!(parse_pool_workers(" 12\n"), Some(12));
+        assert_eq!(parse_pool_workers("1"), Some(1));
+        // everything unusable falls back (None), never panics
+        assert_eq!(parse_pool_workers("0"), None, "zero participants is meaningless");
+        assert_eq!(parse_pool_workers(""), None);
+        assert_eq!(parse_pool_workers("-2"), None);
+        assert_eq!(parse_pool_workers("4.5"), None);
+        assert_eq!(parse_pool_workers("all"), None);
+        // env readers can't be unit-tested without racing other tests on
+        // process-global state; configured_participants() is covered by
+        // its invariant instead
+        assert!(configured_participants() >= 1);
     }
 
     #[test]

@@ -7,8 +7,9 @@
 use std::fmt;
 
 /// Element types the S4 datapath supports (paper §2: 944 TOPS INT8,
-/// 472 TFLOPS BF16; f32 is the host/reference type).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// 472 TFLOPS BF16; f32 is the host/reference type). Ordered so it can
+/// key sorted containers (e.g. the autotuner's `TunePlan` BTreeMap).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum DType {
     Int8,
     Bf16,
@@ -31,6 +32,17 @@ impl DType {
             DType::Bf16 => "bf16",
             DType::F32 => "f32",
             DType::Int32 => "int32",
+        }
+    }
+
+    /// Inverse of [`name`](DType::name) — used by plan-file parsing.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "int8" => Some(DType::Int8),
+            "bf16" => Some(DType::Bf16),
+            "f32" => Some(DType::F32),
+            "int32" => Some(DType::Int32),
+            _ => None,
         }
     }
 }
@@ -161,6 +173,14 @@ mod tests {
         assert_eq!(DType::Int8.bytes(), 1);
         assert_eq!(DType::Bf16.bytes(), 2);
         assert_eq!(DType::F32.bytes(), 4);
+    }
+
+    #[test]
+    fn dtype_parse_inverts_name() {
+        for d in [DType::Int8, DType::Bf16, DType::F32, DType::Int32] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f64"), None);
     }
 
     #[test]

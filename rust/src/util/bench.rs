@@ -179,10 +179,21 @@ impl JsonReport {
 
     /// Record the parallelism the bench *actually used* (pool
     /// participants, max thread sweep point, backend thread cap) —
-    /// emitted under `host.effective_workers`. Unset, it defaults to the
-    /// machine's available parallelism.
+    /// emitted under `host.effective_workers`. Unset, it defaults to
+    /// [`configured_participants`](crate::sparse::pool::configured_participants)
+    /// (machine width, or the `S4_POOL_WORKERS` override), so every
+    /// report names the parallelism a default-pooled bench dispatched on.
     pub fn set_effective_workers(&mut self, n: usize) {
         self.effective_workers = Some(n);
+    }
+
+    /// Mark this report as skipped: the bench could not run its
+    /// measurement (single-core host, missing fixture, ...) but still
+    /// emits its `BENCH_<topic>.json` with a `"skipped"` reason — an
+    /// absent file is indistinguishable from a broken bench, and CI
+    /// treats it as exactly that.
+    pub fn set_skipped(&mut self, reason: &str) {
+        self.set("skipped", Json::Str(reason.to_string()));
     }
 
     /// Append one measurement entry.
@@ -196,6 +207,9 @@ impl JsonReport {
         // comparable across machines (a 2-core CI runner's "speedup at 8
         // threads" is not a 64-core box's)
         let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let effective = self
+            .effective_workers
+            .unwrap_or_else(crate::sparse::pool::configured_participants);
         let mut pairs = vec![
             ("schema", Json::Str("s4-bench-v1".into())),
             ("bench", Json::Str(self.topic.clone())),
@@ -203,10 +217,7 @@ impl JsonReport {
                 "host",
                 Json::obj(vec![
                     ("available_parallelism", Json::Num(avail as f64)),
-                    (
-                        "effective_workers",
-                        Json::Num(self.effective_workers.unwrap_or(avail) as f64),
-                    ),
+                    ("effective_workers", Json::Num(effective as f64)),
                 ]),
             ),
         ];
@@ -284,6 +295,24 @@ mod tests {
         r.set_effective_workers(3);
         let j = r.to_json();
         assert_eq!(j.get("host").get("effective_workers").as_u64(), Some(3));
+        // unset, it stamps the configured pool width (S4_POOL_WORKERS
+        // aware) rather than blindly re-deriving available_parallelism
+        let j2 = JsonReport::new("unit_test_workers_default").to_json();
+        assert_eq!(
+            j2.get("host").get("effective_workers").as_u64(),
+            Some(crate::sparse::pool::configured_participants() as u64)
+        );
+    }
+
+    #[test]
+    fn json_report_skipped_field() {
+        let mut r = JsonReport::new("unit_test_skip");
+        r.set_skipped("single-core host");
+        let j = r.to_json();
+        assert_eq!(j.get("skipped").as_str(), Some("single-core host"));
+        // a non-skipped report has no such field
+        let j2 = JsonReport::new("unit_test_noskip").to_json();
+        assert_eq!(*j2.get("skipped"), Json::Null);
     }
 
     #[test]

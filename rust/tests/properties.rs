@@ -403,6 +403,81 @@ fn prop_pooled_matches_scoped_and_serial() {
 }
 
 #[test]
+fn prop_tuned_matches_serial_any_plan() {
+    // the invariance that makes autotuning safe: for random shapes and
+    // EVERY candidate in the default tune grid, dispatching through the
+    // plan-parameterized entry points (weights repacked at the plan's
+    // tile, stripe cap from the plan) is bitwise identical to the serial
+    // f32 and int8 references. A dispatch plan may only change wall
+    // clock, never logits — so whatever the tuner picks is correct by
+    // construction. Also pins `repacked` as a pure storage permute:
+    // repacking equals packing fresh at the target tile.
+    use s4::sparse::pack::{qspmm_tiled_into_plan, spmm_tiled_into_plan};
+    use s4::sparse::pool::ExecPool;
+    use s4::sparse::tune::TuneConfig;
+
+    let pools: Vec<ExecPool> = [1usize, 3].iter().map(|&w| ExecPool::new(w)).collect();
+    let grid = TuneConfig::default().candidates();
+    let tiles: std::collections::BTreeSet<usize> = grid.iter().map(|c| c.tile_n).collect();
+    let mut f32_out = Dense2::zeros(0, 0);
+    let mut int8_out = Dense2::zeros(0, 0);
+    let mut qbuf = Vec::new();
+    check("tuned dispatch differential", 12, |g: &mut Gen| {
+        let m = g.usize_in(1, 24);
+        let kb = g.usize_in(1, 3);
+        let n = g.usize_in(1, 40);
+        let s = *g.pick(&[1usize, 2, 4, 8, 16, 32]);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let pool = &pools[g.usize_in(0, pools.len() - 1)];
+        let x = Dense2::randn(m, kb * BLOCK, seed);
+        let w = BlockBalanced::from_dense(&Dense2::randn(kb * BLOCK, n, seed + 1), s)
+            .map_err(|e| e.to_string())?;
+        let qb = w.quantize();
+        let bias: Option<Vec<f32>> = if g.bool() {
+            Some((0..n).map(|i| (i as f32).sin()).collect())
+        } else {
+            None
+        };
+        let act = *g.pick(&[Act::None, Act::Relu, Act::Gelu]);
+        let serial = spmm(&x, &w, bias.as_deref(), act);
+        let qserial = qspmm(&x, &qb, bias.as_deref(), act);
+        let base = w.pack();
+        let qbase = qb.pack();
+        for &t in &tiles {
+            let wt = base.repacked(t);
+            let qwt = qbase.repacked(t);
+            // repack is a pure permute: identical to packing fresh
+            prop_assert!(wt == w.pack_tiled(t), "repacked(f32) != pack_tiled (t={t})");
+            prop_assert!(qwt == qb.pack_tiled(t), "repacked(int8) != pack_tiled (t={t})");
+            for plan in grid.iter().filter(|c| c.tile_n == t) {
+                spmm_tiled_into_plan(pool, &x, &wt, bias.as_deref(), act, *plan, &mut f32_out);
+                prop_assert!(
+                    serial.data == f32_out.data,
+                    "tuned f32 != serial (m={m} n={n} s={s} plan={plan:?} workers={})",
+                    pool.workers()
+                );
+                qspmm_tiled_into_plan(
+                    pool,
+                    &x,
+                    &qwt,
+                    bias.as_deref(),
+                    act,
+                    *plan,
+                    &mut qbuf,
+                    &mut int8_out,
+                );
+                prop_assert!(
+                    qserial.data == int8_out.data,
+                    "tuned int8 != serial (m={m} n={n} s={s} plan={plan:?} workers={})",
+                    pool.workers()
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_qspmm_tiled_matches_serial_int8_and_tracks_f32() {
     // the differential contract of the quantized engine: for random
     // shapes, every supported sparsity, any thread count and tile width,
